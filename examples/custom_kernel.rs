@@ -1,0 +1,80 @@
+//! Write-your-own-assembler demo: a dot-product reduction kernel built
+//! with the ProgramBuilder API, run on two memory architectures, with the
+//! blocking/non-blocking write trade-off (§III-A) made visible.
+//!
+//! ```sh
+//! cargo run --release --example custom_kernel
+//! ```
+
+use soft_simt::isa::asm::disassemble;
+use soft_simt::isa::program::Program;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::programs::builder::ProgramBuilder;
+use soft_simt::sim::config::MachineConfig;
+use soft_simt::sim::machine::Machine;
+use soft_simt::util::XorShift64;
+
+/// Each thread computes x[i]·y[i] and writes the product to out[i];
+/// `blocking` selects `st` vs `stnb` for the result writeback.
+fn dot_kernel(n: u32, blocking: bool) -> Program {
+    let mut b = ProgramBuilder::new(if blocking { "dot_st" } else { "dot_stnb" }, n);
+    let tid = 0u8;
+    b.tid(tid);
+    let (xa, ya, oa) = (b.alloc(), b.alloc(), b.alloc());
+    let (x, y) = (b.alloc(), b.alloc());
+    // x at 0, y at n, out at 2n.
+    b.iaddi(xa, tid, 0);
+    b.iaddi(ya, tid, n as i32);
+    b.iaddi(oa, tid, 2 * n as i32);
+    b.ld(x, xa);
+    b.ld(y, ya);
+    b.fmul(x, x, y);
+    if blocking {
+        b.st(oa, x);
+    } else {
+        b.stnb(oa, x);
+    }
+    // Post-store ALU work that can hide behind a non-blocking write.
+    for _ in 0..8 {
+        b.fadd(y, y, y);
+    }
+    b.halt();
+    b.build()
+}
+
+fn main() {
+    let n = 4096u32;
+    let mut rng = XorShift64::new(77);
+    let xs = rng.f32_vec(n as usize);
+    let ys = rng.f32_vec(n as usize);
+
+    println!("generated kernel (blocking variant):\n{}", disassemble(&dot_kernel(n, true)));
+
+    for arch in [MemoryArchKind::mp_4r1w(), MemoryArchKind::banked_offset(16)] {
+        for blocking in [true, false] {
+            let program = dot_kernel(n, blocking);
+            let mut m =
+                Machine::new(MachineConfig::for_arch(arch).with_mem_words(16_384));
+            m.load_f32_image(0, &xs);
+            m.load_f32_image(n, &ys);
+            let report = m.run_program(&program).expect("runs");
+            // Verify the products.
+            let out = m.read_f32_image(2 * n, n as usize);
+            for i in 0..n as usize {
+                assert_eq!(out[i], xs[i] * ys[i], "lane {i}");
+            }
+            println!(
+                "{:<18} {:7}  total {:>6} cycles  (store {:>5}, drain-wait {:>4}) ✓",
+                arch.label(),
+                if blocking { "st" } else { "stnb" },
+                report.total_cycles(),
+                report.stats.store_cycles,
+                report.stats.drain_cycles,
+            );
+        }
+    }
+    println!(
+        "\nthe stnb variants hide the 8 trailing FP ops inside the write drain —\n\
+         the paper's §III-A blocking/non-blocking distinction at work"
+    );
+}

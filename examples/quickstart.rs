@@ -1,0 +1,50 @@
+//! Quickstart: build a machine, run one benchmark, read the paper-style
+//! metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use soft_simt::prelude::*;
+
+fn main() {
+    // A 16-bank shared memory with the Offset (complex-data) mapping —
+    // the configuration that wins Table III.
+    let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Offset };
+
+    // Generate the 32x32 transpose program the paper benchmarks, then run
+    // it on a machine with a random memory image.
+    let program = transpose_program(32);
+    println!("program '{}': {} instructions, {} threads", program.name, program.insts.len(), program.threads);
+
+    let mut machine = Machine::new(MachineConfig::for_arch(arch).with_mem_words(4096));
+    let mut rng = soft_simt::util::XorShift64::new(1);
+    let image: Vec<u32> = (0..1024).map(|_| rng.next_u32()).collect();
+    machine.load_image(0, &image);
+
+    let report = machine.run_program(&program).expect("runs");
+    println!("total cycles : {}", report.total_cycles());
+    println!("time         : {:.2} us @ {:.0} MHz", report.time_us(), arch.fmax_mhz());
+    println!("load cycles  : {}", report.stats.d_load_cycles);
+    println!("store cycles : {}", report.stats.store_cycles);
+    if let Some(e) = report.r_bank_eff() {
+        println!("R bank eff.  : {:.1}%", e * 100.0);
+    }
+    if let Some(e) = report.w_bank_eff() {
+        println!("W bank eff.  : {:.1}%", e * 100.0);
+    }
+
+    // Check the result against a host transpose.
+    let out = machine.read_image(1024, 1024);
+    for i in 0..32 {
+        for j in 0..32 {
+            assert_eq!(out[j * 32 + i], image[i * 32 + j]);
+        }
+    }
+    println!("transpose verified against host reference ✓");
+
+    // The same cell through the coordinator (what the table renderers use).
+    let result = BenchJob::new("transpose32", arch).run().unwrap();
+    assert_eq!(result.report.total_cycles(), report.total_cycles());
+    println!("coordinator cell agrees ✓");
+}

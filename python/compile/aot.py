@@ -1,0 +1,105 @@
+"""AOT lowering: JAX model -> HLO *text* -> artifacts/*.hlo.txt.
+
+HLO text, NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids, so text round-trips cleanly. Lowered with
+``return_tuple=True`` so every artifact returns a tuple the Rust loader
+unpacks uniformly (see /opt/xla-example/gen_hlo.py and rust/src/runtime).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Skips unchanged outputs so repeated ``make`` is a
+no-op.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+LANES = 16
+CONFLICT_OPS = 256  # batch rows per conflict-oracle call (fixed shape)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as `constant({...})`, which the Rust side's HLO text parser
+    # (xla_extension 0.5.1) silently reads back as zeros — the DFT and
+    # twiddle constants baked into the butterfly stages would vanish.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def artifact_specs():
+    """(name, fn, example_args) for every artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    specs = [
+        (
+            "fft4096",
+            model.fft4096,
+            (
+                jax.ShapeDtypeStruct((model.FFT_N,), f32),
+                jax.ShapeDtypeStruct((model.FFT_N,), f32),
+            ),
+        ),
+    ]
+    for n in (32, 64, 128):
+        specs.append(
+            (
+                f"transpose{n}",
+                model.transpose_n,
+                (jax.ShapeDtypeStruct((n, n), f32),),
+            )
+        )
+    for banks in (4, 8, 16):
+        specs.append(
+            (
+                f"conflict{banks}",
+                model.conflict_batch(banks),
+                (
+                    jax.ShapeDtypeStruct((CONFLICT_OPS, LANES), i32),
+                    jax.ShapeDtypeStruct((), i32),
+                ),
+            )
+        )
+    return specs
+
+
+def emit(out_dir: str, force: bool = False) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, fn, args in artifact_specs():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if os.path.exists(path) and not force:
+            print(f"  {name}: up to date")
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"  {name}: wrote {len(text)} chars")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rewrite even if present")
+    args = ap.parse_args()
+    print(f"AOT-lowering artifacts to {args.out_dir}")
+    emit(args.out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

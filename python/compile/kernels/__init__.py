@@ -1,0 +1,9 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by compile.aot).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute real-TPU Mosaic custom-calls, so interpret mode is the CPU
+correctness/lowering path; DESIGN.md estimates TPU behaviour from the
+BlockSpec structure instead of wallclock.
+"""
+
+from . import butterfly, conflict, ref, transpose  # noqa: F401

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: one radix-R DIF butterfly stage (the paper's FFT
+compute hot-spot).
+
+A stage reshapes the N-point array to [blocks, R, L/R]; each butterfly
+applies a DFT-R across the R axis and multiplies by the stage twiddles
+W_L^{jk}. The kernel processes one block per grid step: its tile
+(R x L/R complex = L points) is the VMEM working set, and the DFT-R is a
+small constant-matrix contraction — on a real TPU the [R, L/R] x [R, R]
+products ride the MXU while the twiddle multiply is elementwise VPU work.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+SPs execute the same butterfly scalar-by-scalar from banked shared
+memory; the BlockSpec here expresses the HBM->VMEM schedule that banking
+expressed on the FPGA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _dft_consts(radix: int) -> tuple[np.ndarray, np.ndarray]:
+    k = np.arange(radix)
+    ang = -2.0 * np.pi * (k[:, None] * k[None, :]) / radix
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+def _butterfly_kernel(xr_ref, xi_ref, dr_ref, di_ref, twr_ref, twi_ref, yr_ref, yi_ref):
+    xr = xr_ref[...]  # [1, R, Ln]
+    xi = xi_ref[...]
+    dr = dr_ref[...]  # [R, R] DFT matrix (constants must arrive as inputs)
+    di = di_ref[...]
+    # DFT-R along the radix axis: y_k = sum_m W^{km} x_m.
+    yr = jnp.einsum("km,bmj->bkj", dr, xr) - jnp.einsum("km,bmj->bkj", di, xi)
+    yi = jnp.einsum("km,bmj->bkj", dr, xi) + jnp.einsum("km,bmj->bkj", di, xr)
+    # Twiddle W_L^{jk} (identity matrices are passed for the last stage).
+    twr = twr_ref[...]  # [R, Ln]
+    twi = twi_ref[...]
+    yr_ref[...] = yr * twr[None] - yi * twi[None]
+    yi_ref[...] = yr * twi[None] + yi * twr[None]
+
+
+def butterfly_stage(
+    re: jnp.ndarray, im: jnp.ndarray, radix: int, stage: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply DIF stage ``stage`` of a radix-``radix`` FFT to [n] arrays."""
+    n = re.shape[0]
+    L = n // radix**stage
+    Ln = L // radix
+    blocks = n // L
+    xr = re.reshape(blocks, radix, Ln)
+    xi = im.reshape(blocks, radix, Ln)
+    # Stage twiddles (shared across blocks); trivial at the last stage.
+    j = np.arange(Ln)[None, :]
+    k = np.arange(radix)[:, None]
+    ang = -2.0 * np.pi * (j * k) / L
+    twr = jnp.asarray(np.cos(ang).astype(np.float32))
+    twi = jnp.asarray(np.sin(ang).astype(np.float32))
+    dr_np, di_np = _dft_consts(radix)
+    dr = jnp.asarray(dr_np)
+    di = jnp.asarray(di_np)
+    yr, yi = pl.pallas_call(
+        _butterfly_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((1, radix, Ln), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, radix, Ln), lambda b: (b, 0, 0)),
+            pl.BlockSpec((radix, radix), lambda b: (0, 0)),
+            pl.BlockSpec((radix, radix), lambda b: (0, 0)),
+            pl.BlockSpec((radix, Ln), lambda b: (0, 0)),
+            pl.BlockSpec((radix, Ln), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, radix, Ln), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, radix, Ln), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((blocks, radix, Ln), jnp.float32),
+            jax.ShapeDtypeStruct((blocks, radix, Ln), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xr, xi, dr, di, twr, twi)
+    return yr.reshape(n), yi.reshape(n)

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: batched bank-conflict analysis (paper Fig. 2).
+
+The paper's read/write access controllers convert the bank field of each
+of the 16 parallel addresses to a one-hot vector, population-count each
+bank's column and take the maximum — that count is the cycles the
+operation occupies the banked memory. This kernel performs the same
+computation for a whole *batch* of operations at once; the Rust
+coordinator uses its AOT artifact as the analytical timing oracle and
+cross-checks it against the cycle-accurate controller model
+(rust/src/mem/conflict.rs).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on the FPGA this is
+16 popcounts + a sort network per cycle; here a [BLOCK, 16] tile of
+addresses sits in VMEM and the one-hot/count/max pipeline maps onto the
+VPU as dense [BLOCK, 16, BANKS] compares — batch-parallel rather than
+pipelined.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the batch processed per grid step. 256 ops x 16 lanes x int32 =
+# 16 KB in VMEM, plus the [256, 16, 16] one-hot intermediate (256 KB as
+# int8-equivalent mask) — comfortably under a TPU core's ~16 MB VMEM with
+# double buffering.
+BLOCK_OPS = 256
+
+
+def _conflict_kernel(addrs_ref, shift_ref, out_ref, *, n_banks: int):
+    addrs = addrs_ref[...]  # [BLOCK_OPS, 16] int32
+    shift = shift_ref[0]
+    banks = (addrs >> shift) & (n_banks - 1)
+    # One-hot bank matrix, summed along lanes = per-bank popcounts.
+    lanes_onehot = banks[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, n_banks), 2
+    )
+    counts = lanes_onehot.astype(jnp.int32).sum(axis=1)  # [BLOCK_OPS, n_banks]
+    out_ref[...] = counts.max(axis=1)
+
+
+def conflict_cycles(addrs: jnp.ndarray, shift: jnp.ndarray, n_banks: int) -> jnp.ndarray:
+    """Max per-bank access count for each 16-lane operation.
+
+    ``addrs``: int32[ops, 16] (ops a multiple of BLOCK_OPS);
+    ``shift``: int32 scalar — 0 for the LSB map, 2 for the Offset map.
+    """
+    ops, lanes = addrs.shape
+    assert lanes == 16, "the paper's machine is 16-lane"
+    assert ops % BLOCK_OPS == 0, f"ops must be a multiple of {BLOCK_OPS}"
+    kernel = functools.partial(_conflict_kernel, n_banks=n_banks)
+    return pl.pallas_call(
+        kernel,
+        grid=(ops // BLOCK_OPS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_OPS, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_OPS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ops,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(addrs, shift.reshape(1))

@@ -1,0 +1,98 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a twin here written in plain jax.numpy;
+pytest (python/tests/) asserts allclose between the two across shapes and
+seeds. The references are in turn validated against jnp.fft / plain
+transposes, so the chain is: Pallas kernel == ref == numpy ground truth.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def conflict_ref(addrs: jnp.ndarray, shift: jnp.ndarray, n_banks: int) -> jnp.ndarray:
+    """Max bank-conflict count per 16-lane operation.
+
+    The paper's Fig. 2 computation: bank field -> one-hot matrix ->
+    per-bank population count -> max. ``addrs`` is int32[ops, lanes];
+    ``shift`` is the mapping's bit offset (0 = LSB map, 2 = Offset map).
+    Returns int32[ops].
+    """
+    banks = (addrs >> shift) & (n_banks - 1)  # [ops, lanes]
+    onehot = banks[..., None] == jnp.arange(n_banks)[None, None, :]
+    counts = onehot.sum(axis=1)  # [ops, banks] — the popcounts
+    return counts.max(axis=1).astype(jnp.int32)
+
+
+def dft_matrix_ref(radix: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """DFT-R matrix (re, im): W_R^{km} with W = e^{-2 pi i / R}.
+
+    Angles are evaluated in f64 (numpy) before the f32 cast, matching the
+    kernels — evaluating trig in f32 shifts the constants by ~1e-5.
+    """
+    k = np.arange(radix)
+    ang = -2.0 * np.pi * (k[:, None] * k[None, :]) / radix
+    return jnp.asarray(np.cos(ang).astype(np.float32)), jnp.asarray(
+        np.sin(ang).astype(np.float32)
+    )
+
+
+def butterfly_stage_ref(
+    re: jnp.ndarray, im: jnp.ndarray, radix: int, stage: int, n: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One DIF Cooley-Tukey stage over the whole array (pure jnp).
+
+    Stage ``s`` has L = n / radix**s; butterflies gather ``radix`` points
+    spaced L/radix apart, apply a DFT-R, then multiply output k by the
+    twiddle W_L^{jk} (trivial in the last stage, where L == radix).
+    """
+    L = n // radix**stage
+    Ln = L // radix
+    blocks = n // L
+    xr = re.reshape(blocks, radix, Ln)
+    xi = im.reshape(blocks, radix, Ln)
+    dr, di = dft_matrix_ref(radix)
+    yr = jnp.einsum("km,bmj->bkj", dr, xr) - jnp.einsum("km,bmj->bkj", di, xi)
+    yi = jnp.einsum("km,bmj->bkj", dr, xi) + jnp.einsum("km,bmj->bkj", di, xr)
+    if Ln > 1:  # non-trivial twiddles W_L^{jk}
+        j = np.arange(Ln)[None, :]
+        k = np.arange(radix)[:, None]
+        ang = -2.0 * np.pi * (j * k) / L
+        twr = jnp.asarray(np.cos(ang).astype(np.float32))[None]
+        twi = jnp.asarray(np.sin(ang).astype(np.float32))[None]
+        yr, yi = yr * twr - yi * twi, yr * twi + yi * twr
+    return yr.reshape(n), yi.reshape(n)
+
+
+def digit_reverse_indices(n: int, radix: int, stages: int) -> jnp.ndarray:
+    """Permutation p with X_natural[k] = X_dif[p[k]] (p is an involution)."""
+    idx = jnp.arange(n)
+    out = jnp.zeros_like(idx)
+    v = idx
+    for _ in range(stages):
+        out = out * radix + v % radix
+        v = v // radix
+    return out
+
+
+def fft_ref(re: jnp.ndarray, im: jnp.ndarray, radix: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full DIF FFT via ``butterfly_stage_ref`` + digit-reversal unshuffle.
+
+    Returns the spectrum in *natural* order (comparable to jnp.fft.fft).
+    """
+    n = re.shape[0]
+    stages = 0
+    v = 1
+    while v < n:
+        v *= radix
+        stages += 1
+    assert v == n, "n must be a power of the radix"
+    for s in range(stages):
+        re, im = butterfly_stage_ref(re, im, radix, s, n)
+    perm = digit_reverse_indices(n, radix, stages)
+    return re[perm], im[perm]
+
+
+def transpose_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """N x N transpose."""
+    return x.T

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: tiled N x N matrix transpose (the paper's
+memory-intensive benchmark).
+
+Grid cell (i, j) reads the *source* tile (j, i) and writes it transposed
+to the destination tile (i, j): the BlockSpec index maps express exactly
+the across-columns-read / down-columns-write pattern whose bank behaviour
+Table II profiles, with the tile (32 x 32 f32 = 4 KB) as the VMEM unit of
+transfer.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 32
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+def transpose(x: jnp.ndarray) -> jnp.ndarray:
+    """Transpose an [n, n] f32 matrix, n a multiple of the 32-wide tile
+    (or equal to a smaller power of two, handled as a single tile)."""
+    n = x.shape[0]
+    assert x.shape == (n, n), "square matrices only"
+    tile = min(TILE, n)
+    assert n % tile == 0
+    g = n // tile
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(g, g),
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (j, i))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)

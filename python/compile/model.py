@@ -1,0 +1,48 @@
+"""L2 JAX model: the compute graphs that become the AOT artifacts.
+
+Build-time only — the Rust coordinator executes the lowered HLO through
+PJRT; Python never runs on the request path.
+
+Three model families, mirroring the paper's evaluation:
+
+- ``fft4096``: the 4096-point complex FFT composed from Pallas radix-4
+  butterfly stages (natural-order output, comparable to jnp.fft.fft);
+- ``transpose_n``: N x N transpose through the Pallas tiled kernel;
+- ``conflict_batch``: the banked-memory conflict analyzer over operation
+  batches (one artifact per bank count; the mapping shift is a runtime
+  scalar input so one artifact serves both LSB and Offset maps).
+"""
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernels import butterfly, conflict, ref, transpose
+
+FFT_N = 4096
+FFT_RADIX = 4
+FFT_STAGES = 6
+
+
+def fft4096(re: jnp.ndarray, im: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """4096-point complex FFT, natural-order output.
+
+    Six radix-4 DIF stages (each a Pallas kernel call) followed by the
+    digit-reversal unshuffle. XLA fuses the inter-stage reshapes; the
+    stage count is static so the whole pipeline lowers into one module.
+    """
+    for s in range(FFT_STAGES):
+        re, im = butterfly.butterfly_stage(re, im, FFT_RADIX, s)
+    perm = ref.digit_reverse_indices(FFT_N, FFT_RADIX, FFT_STAGES)
+    return re[perm], im[perm]
+
+
+def transpose_n(x: jnp.ndarray) -> jnp.ndarray:
+    """N x N transpose (Pallas tiled kernel)."""
+    return transpose.transpose(x)
+
+
+def conflict_batch(n_banks: int):
+    """Conflict analyzer for a fixed bank count: (addrs[ops,16], shift) ->
+    max-conflict counts int32[ops]."""
+    return functools.partial(conflict.conflict_cycles, n_banks=n_banks)

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp references — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/seeds/parameters; every kernel must match its
+ref.py twin bit-for-bit (integer kernels) or to f32 tolerance (FP).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import butterfly, conflict, ref, transpose
+
+
+# ---------------------------------------------------------------- conflict
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    banks=st.sampled_from([4, 8, 16]),
+    shift=st.sampled_from([0, 2]),
+    blocks=st.integers(1, 3),
+)
+def test_conflict_kernel_matches_ref(seed, banks, shift, blocks):
+    rng = np.random.default_rng(seed)
+    ops = conflict.BLOCK_OPS * blocks
+    addrs = jnp.asarray(rng.integers(0, 1 << 16, size=(ops, 16), dtype=np.int32))
+    shift_arr = jnp.int32(shift)
+    got = conflict.conflict_cycles(addrs, shift_arr, banks)
+    want = ref.conflict_ref(addrs, shift_arr, banks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conflict_extremes():
+    # All lanes on one bank -> 16; consecutive addresses -> 1.
+    same = jnp.zeros((conflict.BLOCK_OPS, 16), jnp.int32)
+    out = conflict.conflict_cycles(same, jnp.int32(0), 16)
+    np.testing.assert_array_equal(np.asarray(out), 16)
+    consec = jnp.tile(jnp.arange(16, dtype=jnp.int32), (conflict.BLOCK_OPS, 1))
+    out = conflict.conflict_cycles(consec, jnp.int32(0), 16)
+    np.testing.assert_array_equal(np.asarray(out), 1)
+
+
+def test_conflict_offset_mapping_spreads_stride4():
+    # Stride-4 addresses: LSB map -> 4 conflicts, Offset map -> 1.
+    addrs = jnp.tile(4 * jnp.arange(16, dtype=jnp.int32), (conflict.BLOCK_OPS, 1))
+    lsb = conflict.conflict_cycles(addrs, jnp.int32(0), 16)
+    off = conflict.conflict_cycles(addrs, jnp.int32(2), 16)
+    assert int(lsb[0]) == 4
+    assert int(off[0]) == 1
+
+
+def test_conflict_fig4_example():
+    # The paper's Fig. 4: 8 lanes on banks [0,1,1,3,1,3,4,5] -> max 3.
+    row = np.zeros(16, np.int32)
+    row[:8] = [0, 1, 1, 3, 1, 3, 4, 5]
+    # Upper lanes spread so no bank exceeds the figure's max of 3.
+    row[8:] = [0, 2, 2, 4, 5, 6, 7, 7]
+    addrs = jnp.asarray(np.tile(row, (conflict.BLOCK_OPS, 1)))
+    out = conflict.conflict_cycles(addrs, jnp.int32(0), 8)
+    assert int(out[0]) == 3
+
+
+# --------------------------------------------------------------- butterfly
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    radix=st.sampled_from([4, 8, 16]),
+    log_n=st.integers(0, 2),
+)
+def test_butterfly_stage_matches_ref(seed, radix, log_n):
+    n = radix ** (log_n + 2)
+    if n > 4096:
+        n = radix**2
+    rng = np.random.default_rng(seed)
+    re = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    stages = int(round(np.log(n) / np.log(radix)))
+    for s in range(stages):
+        got_r, got_i = butterfly.butterfly_stage(re, im, radix, s)
+        want_r, want_i = ref.butterfly_stage_ref(re, im, radix, s, n)
+        # f32 tolerance scaled to the stage's magnitude (a DFT-R sums R
+        # terms, so late radix-16 stages reach |x| ~ 1e2).
+        scale = max(1.0, float(np.abs(np.asarray(want_r)).max()),
+                    float(np.abs(np.asarray(want_i)).max()))
+        np.testing.assert_allclose(np.asarray(got_r), np.asarray(want_r), atol=2e-6 * scale)
+        np.testing.assert_allclose(np.asarray(got_i), np.asarray(want_i), atol=2e-6 * scale)
+        re, im = got_r, got_i
+
+
+@pytest.mark.parametrize("radix,n", [(4, 64), (8, 64), (16, 256), (4, 4096)])
+def test_fft_ref_matches_jnp_fft(radix, n):
+    rng = np.random.default_rng(7)
+    re = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got_r, got_i = ref.fft_ref(re, im, radix)
+    want = jnp.fft.fft(re + 1j * im)
+    scale = float(jnp.abs(want).max())
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want.real), atol=2e-4 * scale)
+    np.testing.assert_allclose(np.asarray(got_i), np.asarray(want.imag), atol=2e-4 * scale)
+
+
+def test_digit_reverse_is_involution():
+    for radix, stages in [(4, 6), (8, 4), (16, 3)]:
+        n = radix**stages
+        perm = np.asarray(ref.digit_reverse_indices(n, radix, stages))
+        assert np.array_equal(perm[perm], np.arange(n))
+
+
+# --------------------------------------------------------------- transpose
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([16, 32, 64, 128]))
+def test_transpose_kernel_matches_ref(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    got = transpose.transpose(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.transpose_ref(x)))
+
+
+def test_transpose_involution():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(transpose.transpose(transpose.transpose(x))), np.asarray(x)
+    )
+
+
+def test_transpose_preserves_dtype_bits():
+    # NaN payloads and -0.0 survive (it is a pure data movement).
+    x = jnp.asarray(np.array([[np.float32(-0.0), 1.0], [np.nan, 2.0]], dtype=np.float32))
+    y = np.asarray(transpose.transpose(jnp.tile(x, (16, 16))))
+    assert np.isnan(y).sum() == 256

@@ -1,0 +1,85 @@
+"""L2 model tests: the composed graphs behave like their ground truths and
+lower cleanly to the HLO text the Rust runtime consumes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_fft4096_matches_jnp_fft():
+    rng = np.random.default_rng(11)
+    re = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    im = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    got_r, got_i = model.fft4096(re, im)
+    want = jnp.fft.fft(re + 1j * im)
+    scale = float(jnp.abs(want).max())
+    np.testing.assert_allclose(np.asarray(got_r), np.asarray(want.real), atol=3e-4 * scale)
+    np.testing.assert_allclose(np.asarray(got_i), np.asarray(want.imag), atol=3e-4 * scale)
+
+
+def test_fft4096_linearity():
+    # FFT(a x) == a FFT(x): a cheap structural invariant of the pipeline.
+    rng = np.random.default_rng(5)
+    re = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    im = jnp.zeros(4096, jnp.float32)
+    r1, i1 = model.fft4096(re, im)
+    r2, i2 = model.fft4096(2.0 * re, im)
+    np.testing.assert_allclose(np.asarray(r2), 2 * np.asarray(r1), atol=1e-2)
+    np.testing.assert_allclose(np.asarray(i2), 2 * np.asarray(i1), atol=1e-2)
+
+
+def test_fft4096_impulse():
+    re = jnp.zeros(4096, jnp.float32).at[0].set(1.0)
+    im = jnp.zeros(4096, jnp.float32)
+    r, i = model.fft4096(re, im)
+    np.testing.assert_allclose(np.asarray(r), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(i), 0.0, atol=1e-5)
+
+
+def test_conflict_batch_shapes():
+    fn = model.conflict_batch(16)
+    addrs = jnp.zeros((256, 16), jnp.int32)
+    out = fn(addrs, jnp.int32(0))
+    assert out.shape == (256,)
+    assert out.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("name", [s[0] for s in aot.artifact_specs()])
+def test_artifacts_lower_to_hlo_text(name):
+    # Every artifact must lower and convert to HLO text (the Rust
+    # interchange format) without touching the filesystem.
+    spec = next(s for s in aot.artifact_specs() if s[0] == name)
+    _, fn, args = spec
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:64]
+    # return_tuple=True: the root computation returns a tuple.
+    assert "ROOT" in text
+
+
+def test_artifact_specs_cover_rust_expectations():
+    names = {s[0] for s in aot.artifact_specs()}
+    assert names == {
+        "fft4096",
+        "transpose32",
+        "transpose64",
+        "transpose128",
+        "conflict4",
+        "conflict8",
+        "conflict16",
+    }
+
+
+def test_emit_skips_up_to_date(tmp_path):
+    # First emit writes everything; second emit is a no-op (the Makefile
+    # contract: `make artifacts` twice does no extra work). Use the
+    # smallest artifact set via monkeypatching would complicate; instead
+    # emit into a temp dir once and compare mtimes.
+    out = tmp_path / "artifacts"
+    written = aot.emit(str(out))
+    assert len(written) == 7
+    again = aot.emit(str(out))
+    assert again == []

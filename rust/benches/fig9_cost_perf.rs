@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig. 9 (cost vs normalized radix-16 FFT performance
+//! at 64/112/168/224 KB) — the paper's §VI "what is the best memory"
+//! figure — plus the perf-per-area ranking its prose draws from it.
+
+use soft_simt::area::fig9::{perf_per_area, SIZES_KB};
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::coordinator::{report, runner::SweepRunner};
+use soft_simt::mem::arch::MemoryArchKind;
+
+fn main() {
+    let jobs: Vec<BenchJob> = MemoryArchKind::table3_nine()
+        .into_iter()
+        .map(|arch| BenchJob::new("fft4096r16", arch))
+        .collect();
+    let results = SweepRunner::default().run(&jobs).expect("sweep");
+    println!("{}", report::render_fig9(&results));
+
+    // Perf-per-area ranking at each size (the "smaller banked memories
+    // are more efficient" observation).
+    let points = report::fig9_points(&results);
+    for &kb in &SIZES_KB {
+        let mut rank: Vec<(String, f64)> = points
+            .iter()
+            .filter(|p| p.size_kb == kb)
+            .filter_map(|p| perf_per_area(p).map(|v| (p.arch.label(), v)))
+            .collect();
+        rank.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        println!("\nperf/area at {kb} KB (higher is better):");
+        for (label, v) in rank {
+            println!("  {label:20} {v:.3}");
+        }
+    }
+
+    let mut b = Bencher::new(1, 5);
+    let s = b.bench("fig9_sweep_and_render", || {
+        let r = SweepRunner::default().run(&jobs).unwrap();
+        report::render_fig9(&r).len()
+    });
+    println!("\n{}", s.line());
+}

@@ -1,0 +1,95 @@
+//! Ablation bench: bank-mapping strategies (LSB vs Offset vs XOR) across
+//! every benchmark — the paper's §VII "varying the bank mapping" future
+//! work, quantified.
+//!
+//! Also ablates the §IV-A half-bank split (+2 cycles of bank latency,
+//! which the paper reports as having "no material impact").
+
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::mem::mapping::BankMapping;
+use soft_simt::programs::library::{program_by_name, program_names, Workload};
+use soft_simt::sim::config::MachineConfig;
+use soft_simt::sim::machine::Machine;
+use soft_simt::util::fmt::TextTable;
+use soft_simt::util::XorShift64;
+
+fn main() {
+    // Mapping ablation table.
+    let mappings = [BankMapping::Lsb, BankMapping::Offset, BankMapping::Xor];
+    let mut t = TextTable::new([
+        "program".to_string(),
+        "banks".into(),
+        "LSB".into(),
+        "Offset".into(),
+        "XOR".into(),
+        "best".into(),
+    ]);
+    for program in program_names() {
+        for banks in [4u32, 8, 16] {
+            let mut cells = Vec::new();
+            for mapping in mappings {
+                let arch = MemoryArchKind::Banked { banks, mapping };
+                let r = BenchJob::new(program, arch).run().expect("runs");
+                cells.push((mapping.label(), r.report.total_cycles()));
+            }
+            let best = cells.iter().min_by_key(|(_, c)| *c).unwrap();
+            t.row([
+                program.to_string(),
+                banks.to_string(),
+                cells[0].1.to_string(),
+                cells[1].1.to_string(),
+                cells[2].1.to_string(),
+                if best.0.is_empty() { "LSB" } else { best.0 }.to_string(),
+            ]);
+        }
+    }
+    println!("Bank-mapping ablation (total cycles; lower is better)\n{}", t.render());
+
+    // Half-bank ablation: the 448 KB node-locked configuration.
+    println!("Half-bank split ablation (§IV-A: expect 'no material impact'):");
+    for program in ["fft4096r16", "transpose128"] {
+        let workload = program_by_name(program).unwrap();
+        let mut totals = Vec::new();
+        for half in [false, true] {
+            let mut cfg = MachineConfig::for_arch(MemoryArchKind::banked_offset(16))
+                .with_mem_words(workload.mem_words())
+                .with_fast_timing();
+            cfg.half_banks = half;
+            if let Some(r) = workload.tw_region() {
+                cfg = cfg.with_tw_region(r);
+            }
+            let mut m = Machine::new(cfg);
+            let mut rng = XorShift64::new(1);
+            match &workload {
+                Workload::Transpose(plan, _) => {
+                    let src: Vec<u32> = (0..plan.n * plan.n).map(|_| rng.next_u32()).collect();
+                    m.load_image(plan.src_base, &src);
+                }
+                Workload::Fft(plan, _) => {
+                    let data = rng.f32_vec(2 * plan.n as usize);
+                    m.load_f32_image(plan.data_base, &data);
+                    m.load_f32_image(plan.tw_base, &plan.twiddles);
+                }
+            }
+            totals.push(m.run_program(workload.program()).unwrap().total_cycles());
+        }
+        let delta = 100.0 * (totals[1] as f64 - totals[0] as f64) / totals[0] as f64;
+        println!("  {program:14} normal {} vs half-banked {}  ({delta:+.2}%)", totals[0], totals[1]);
+    }
+
+    // Timing.
+    let mut b = Bencher::new(1, 5);
+    let s = b.bench("mapping_ablation_full_grid", || {
+        let mut acc = 0u64;
+        for banks in [4u32, 8, 16] {
+            for mapping in mappings {
+                let arch = MemoryArchKind::Banked { banks, mapping };
+                acc += BenchJob::new("transpose32", arch).run().unwrap().report.total_cycles();
+            }
+        }
+        acc
+    });
+    println!("\n{}", s.line());
+}

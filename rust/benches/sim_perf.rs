@@ -1,0 +1,119 @@
+//! Bench: simulator micro-benchmarks — the §Perf optimization targets.
+//!
+//! Measures the L3 hot paths in isolation (conflict analysis, arbiter
+//! stepping, exact-vs-fast banked ops, whole-machine throughput) so the
+//! before/after rows of EXPERIMENTS.md §Perf come from one place.
+
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::mem::arbiter::BankArbiters;
+use soft_simt::mem::arch::{MemoryArchKind, SharedMemory};
+use soft_simt::mem::banked::{BankedMemory, TimingMode};
+use soft_simt::mem::conflict::{analyze, max_conflicts};
+use soft_simt::mem::mapping::{BankMap, BankMapping};
+use soft_simt::mem::{FULL_MASK, LANES};
+use soft_simt::util::XorShift64;
+
+fn random_ops(n: usize, seed: u64) -> Vec<[u32; LANES]> {
+    let mut rng = XorShift64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut a = [0u32; LANES];
+            for x in a.iter_mut() {
+                *x = rng.below(1 << 14);
+            }
+            a
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new(3, 15);
+    let ops = random_ops(10_000, 42);
+    let map = BankMap::new(16, BankMapping::Lsb);
+
+    // Conflict-analysis hot path: full analysis vs closed-form max.
+    b.bench("conflict_analyze_10k_ops", || {
+        ops.iter().map(|op| analyze(op, FULL_MASK, &map).max_conflicts).sum::<u32>()
+    });
+    b.bench("conflict_max_fast_10k_ops", || {
+        ops.iter().map(|op| max_conflicts(op, FULL_MASK, &map)).sum::<u32>()
+    });
+
+    // Arbiter scheduling.
+    b.bench("arbiter_schedule_10k_ops", || {
+        ops.iter()
+            .map(|op| {
+                let info = analyze(op, FULL_MASK, &map);
+                BankArbiters::load(&info.columns).run().len()
+            })
+            .sum::<usize>()
+    });
+
+    // Banked memory: exact (arbiter-stepped) vs fast read ops.
+    let mut exact = BankedMemory::new(16_384, 16, BankMapping::Lsb);
+    let mut fast = BankedMemory::new(16_384, 16, BankMapping::Lsb).with_mode(TimingMode::Fast);
+    b.bench("banked_read_exact_10k_ops", || {
+        ops.iter().map(|op| exact.read_op(op, FULL_MASK).cycles).sum::<u32>()
+    });
+    b.bench("banked_read_fast_10k_ops", || {
+        ops.iter().map(|op| fast.read_op(op, FULL_MASK).cycles).sum::<u32>()
+    });
+
+    // Whole-machine throughput: the radix-16 FFT cell, exact vs fast —
+    // both as the full coordinator cell (codegen + twiddle table + sim)
+    // and as simulation only (machine + program prebuilt; the §Perf
+    // simulator-throughput number).
+    for (label, fast_timing) in [("exact", false), ("fast", true)] {
+        let mut job = BenchJob::new("fft4096r16", MemoryArchKind::banked_offset(16));
+        job.fast_timing = fast_timing;
+        let cycles = job.run().unwrap().report.total_cycles();
+        let s = b.bench(format!("machine_fft_r16_{label}_cell"), || {
+            job.run().unwrap().report.total_cycles()
+        });
+        println!(
+            "{}  ({:.1} Msim-cycles/s incl. codegen)",
+            s.line(),
+            cycles as f64 / s.median().as_secs_f64() / 1e6
+        );
+    }
+    {
+        use soft_simt::programs::fft::fft_program;
+        use soft_simt::sim::config::MachineConfig;
+        use soft_simt::sim::machine::Machine;
+        let (plan, program) = fft_program(16);
+        for (label, fast) in [("exact", false), ("fast", true)] {
+            let mut cfg = MachineConfig::for_arch(MemoryArchKind::banked_offset(16))
+                .with_mem_words(plan.mem_words())
+                .with_tw_region(plan.tw_region());
+            if fast {
+                cfg = cfg.with_fast_timing();
+            }
+            let mut machine = Machine::new(cfg);
+            let mut rng = XorShift64::new(1);
+            let data = rng.f32_vec(2 * plan.n as usize);
+            machine.load_f32_image(plan.data_base, &data);
+            machine.load_f32_image(plan.tw_base, &plan.twiddles);
+            let cycles = machine.run_program(&program).unwrap().total_cycles();
+            let s = b.bench(format!("machine_fft_r16_{label}_sim_only"), || {
+                machine.run_program(&program).unwrap().total_cycles()
+            });
+            println!(
+                "{}  ({:.1} Msim-cycles/s sim-only)",
+                s.line(),
+                cycles as f64 / s.median().as_secs_f64() / 1e6
+            );
+        }
+    }
+
+    // Full 51-cell paper sweep (the end-to-end driver's core).
+    let jobs = BenchJob::paper_sweep();
+    let mut b2 = Bencher::new(1, 5);
+    let s = b2.bench("paper_sweep_51_cells", || {
+        SweepRunner::default().run(&jobs).unwrap().len()
+    });
+    println!("{}", s.line());
+
+    print!("{}", b.report());
+}

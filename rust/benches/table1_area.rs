@@ -1,0 +1,26 @@
+//! Bench: regenerate Table I (resource counts + Fmax model) and time the
+//! area-model queries (they sit on the Fig. 9 sweep path).
+
+use soft_simt::area::footprint;
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::report;
+use soft_simt::mem::arch::MemoryArchKind;
+
+fn main() {
+    println!("{}", report::render_table1());
+
+    let mut b = Bencher::new(3, 20);
+    b.bench("table1_render", report::render_table1);
+    b.bench("footprint_grid_all_archs", || {
+        let mut acc = 0u64;
+        for arch in MemoryArchKind::table3_nine() {
+            for kb in [64u32, 112, 168, 224, 448] {
+                if let Some(f) = footprint::processor_footprint(arch, kb) {
+                    acc += f.total_alms() as u64;
+                }
+            }
+        }
+        acc
+    });
+    print!("{}", b.report());
+}

@@ -1,0 +1,50 @@
+//! Bench: regenerate Table II (transpose profiling over 8 memory
+//! architectures × 3 sizes) and time each simulated cell — the
+//! simulator-throughput numbers feed EXPERIMENTS.md §Perf.
+
+use soft_simt::benchkit::{fmt_duration, Bencher};
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::coordinator::{report, runner::SweepRunner};
+use soft_simt::mem::arch::MemoryArchKind;
+
+fn main() {
+    // The table itself.
+    let jobs: Vec<BenchJob> = [32u32, 64, 128]
+        .iter()
+        .flat_map(|n| {
+            MemoryArchKind::table2_eight()
+                .into_iter()
+                .map(move |arch| BenchJob::new(format!("transpose{n}"), arch))
+        })
+        .collect();
+    let results = SweepRunner::default().run(&jobs).expect("sweep");
+    println!("{}", report::render_table2(&results));
+
+    // Simulator wall-clock per cell (fast-timing path).
+    let mut b = Bencher::new(2, 10);
+    for arch in [
+        MemoryArchKind::mp_4r1w(),
+        MemoryArchKind::banked(16),
+        MemoryArchKind::banked_offset(16),
+    ] {
+        for n in [32u32, 128] {
+            let job = BenchJob::new(format!("transpose{n}"), arch);
+            let s = b.bench(format!("sim transpose{n} on {arch}"), || {
+                job.run().unwrap().report.total_cycles()
+            });
+            let cycles = job.run().unwrap().report.total_cycles();
+            println!(
+                "{}  ({:.1} Msim-cycles/s)",
+                s.line(),
+                cycles as f64 / s.median().as_secs_f64() / 1e6
+            );
+        }
+    }
+    println!("\nfull 24-cell sweep:");
+    let mut b2 = Bencher::new(1, 5);
+    let s = b2.bench("table2_sweep_total", || {
+        SweepRunner::default().run(&jobs).unwrap().len()
+    });
+    println!("{}  ({} cells)", s.line(), jobs.len());
+    let _ = fmt_duration;
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Table III (FFT profiling over 9 memory architectures
+//! × 3 radices) and time the simulated cells.
+
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::coordinator::{report, runner::SweepRunner};
+use soft_simt::mem::arch::MemoryArchKind;
+
+fn main() {
+    let jobs: Vec<BenchJob> = [4u32, 8, 16]
+        .iter()
+        .flat_map(|r| {
+            MemoryArchKind::table3_nine()
+                .into_iter()
+                .map(move |arch| BenchJob::new(format!("fft4096r{r}"), arch))
+        })
+        .collect();
+    let results = SweepRunner::default().run(&jobs).expect("sweep");
+    println!("{}", report::render_table3(&results));
+
+    let mut b = Bencher::new(2, 8);
+    for radix in [4u32, 16] {
+        for arch in [MemoryArchKind::mp_4r1w(), MemoryArchKind::banked_offset(16)] {
+            let job = BenchJob::new(format!("fft4096r{radix}"), arch);
+            let cycles = job.run().unwrap().report.total_cycles();
+            let s = b.bench(format!("sim fft r{radix} on {arch}"), || {
+                job.run().unwrap().report.total_cycles()
+            });
+            println!(
+                "{}  ({:.1} Msim-cycles/s)",
+                s.line(),
+                cycles as f64 / s.median().as_secs_f64() / 1e6
+            );
+        }
+    }
+    println!("\nfull 27-cell sweep:");
+    let mut b2 = Bencher::new(1, 5);
+    let s = b2.bench("table3_sweep_total", || {
+        SweepRunner::default().run(&jobs).unwrap().len()
+    });
+    println!("{}  ({} cells)", s.line(), jobs.len());
+}

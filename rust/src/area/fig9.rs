@@ -1,0 +1,146 @@
+//! Figure 9 generator: cost (ALM footprint) vs normalized radix-16 FFT
+//! performance, across shared-memory sizes of 64/112/168/224 KB.
+//!
+//! Cost comes from [`super::footprint`]; performance (total radix-16 FFT
+//! cycles at each architecture's Fmax) is supplied by the caller — the
+//! coordinator runs the simulator sweep and feeds the times in, keeping
+//! this module free of a circular dependency on the simulator.
+
+use super::footprint::{self, Footprint};
+use crate::mem::arch::MemoryArchKind;
+
+/// The paper's Fig. 9 capacity grid, in KB.
+pub const SIZES_KB: [u32; 4] = [64, 112, 168, 224];
+
+/// One Fig. 9 point: a (architecture, capacity) cell.
+#[derive(Debug, Clone)]
+pub struct Fig9Point {
+    pub arch: MemoryArchKind,
+    pub size_kb: u32,
+    /// Whole-processor footprint, `None` past the capacity roofline.
+    pub footprint: Option<Footprint>,
+    /// Radix-16 FFT execution time in µs.
+    pub time_us: f64,
+    /// Performance normalized to the slowest core (lower is better).
+    pub normalized: f64,
+}
+
+/// Build the Fig. 9 series: `times_us[arch]` is the radix-16 4096-point
+/// FFT time for each architecture (capacity-independent — every size in
+/// the grid fits the 64 KB dataset, as the paper notes).
+pub fn series(times_us: &[(MemoryArchKind, f64)]) -> Vec<Fig9Point> {
+    let slowest = times_us.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
+    let mut out = Vec::new();
+    for &(arch, t) in times_us {
+        for &size_kb in &SIZES_KB {
+            out.push(Fig9Point {
+                arch,
+                size_kb,
+                footprint: footprint::processor_footprint(arch, size_kb),
+                time_us: t,
+                normalized: t / slowest,
+            });
+        }
+    }
+    out
+}
+
+/// Performance per unit area (1 / (normalized time × sectors)), the
+/// paper's "more efficient (performance per unit area)" comparison.
+/// `None` past the roofline.
+pub fn perf_per_area(p: &Fig9Point) -> Option<f64> {
+    p.footprint.map(|f| 1.0 / (p.normalized * f.sectors()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_times() -> Vec<(MemoryArchKind, f64)> {
+        // Shaped like Table III radix-16: multiport fastest, 4-bank slowest.
+        vec![
+            (MemoryArchKind::mp_4r1w(), 64.0),
+            (MemoryArchKind::mp_4r2w(), 62.0),
+            (MemoryArchKind::banked_offset(16), 61.0),
+            (MemoryArchKind::banked(4), 84.0),
+        ]
+    }
+
+    #[test]
+    fn normalization_to_slowest() {
+        let s = series(&fake_times());
+        let slow: Vec<_> = s.iter().filter(|p| p.arch == MemoryArchKind::banked(4)).collect();
+        assert!(slow.iter().all(|p| (p.normalized - 1.0).abs() < 1e-12));
+        assert!(s.iter().all(|p| p.normalized <= 1.0));
+    }
+
+    #[test]
+    fn multiport_hits_roofline_in_grid() {
+        // 4R-1W supports only 112 KB: the 168/224 KB cells must be None.
+        let s = series(&fake_times());
+        for p in &s {
+            if p.arch == MemoryArchKind::mp_4r1w() {
+                assert_eq!(p.footprint.is_none(), p.size_kb > 112, "size {}", p.size_kb);
+            }
+        }
+    }
+
+    #[test]
+    fn banked_cost_flat_multiport_growing() {
+        let s = series(&fake_times());
+        let get = |arch: MemoryArchKind, kb: u32| {
+            s.iter()
+                .find(|p| p.arch == arch && p.size_kb == kb)
+                .and_then(|p| p.footprint)
+                .map(|f| f.total_alms())
+        };
+        assert_eq!(
+            get(MemoryArchKind::banked_offset(16), 64),
+            get(MemoryArchKind::banked_offset(16), 224)
+        );
+        assert!(get(MemoryArchKind::mp_4r2w(), 224) > get(MemoryArchKind::mp_4r2w(), 64));
+    }
+
+    #[test]
+    fn crossover_multiport_small_banked_large() {
+        // The paper's §VI conclusion: multiport cheaper at 64 KB; at
+        // 224 KB the 4R-1W roofline is exceeded entirely and the 8-bank
+        // memory (capacity 224 KB) is cheaper than 4R-2W.
+        let mut times = fake_times();
+        times.push((MemoryArchKind::banked(8), 70.0));
+        let s = series(&times);
+        let alms = |arch: MemoryArchKind, kb: u32| {
+            s.iter()
+                .find(|p| p.arch == arch && p.size_kb == kb)
+                .and_then(|p| p.footprint)
+                .map(|f| f.total_alms())
+                .unwrap()
+        };
+        assert!(alms(MemoryArchKind::mp_4r1w(), 64) < alms(MemoryArchKind::banked_offset(16), 64));
+        assert!(alms(MemoryArchKind::banked(8), 224) < alms(MemoryArchKind::mp_4r2w(), 224));
+        assert!(s
+            .iter()
+            .find(|p| p.arch == MemoryArchKind::mp_4r1w() && p.size_kb == 224)
+            .unwrap()
+            .footprint
+            .is_none());
+    }
+
+    #[test]
+    fn perf_per_area_prefers_small_banked() {
+        // "The smaller banked memories are more efficient (performance per
+        // unit area) than the larger banked memories."
+        let times = vec![
+            (MemoryArchKind::banked_offset(16), 61.0),
+            (MemoryArchKind::banked(4), 84.0),
+        ];
+        let s = series(&times);
+        let ppa = |arch: MemoryArchKind| {
+            s.iter()
+                .find(|p| p.arch == arch && p.size_kb == 64)
+                .map(|p| perf_per_area(p).unwrap())
+                .unwrap()
+        };
+        assert!(ppa(MemoryArchKind::banked(4)) > ppa(MemoryArchKind::banked_offset(16)));
+    }
+}

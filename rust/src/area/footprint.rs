@@ -1,0 +1,203 @@
+//! Sector-equivalent footprint model ("True Cost of a Processor", §IV-A
+//! and §VI).
+//!
+//! Methodology from the paper: memories are node-locked to sectors (one
+//! Agilex sector = 16640 ALMs of footprint); everything else places
+//! unconstrained, where ALMs dominate. Consequences:
+//!
+//! - a 16-bank memory (up to 448 KB, 224 M20Ks) costs exactly **one
+//!   sector**; 8 banks cost 1/2, 4 banks 1/4 — *constant in capacity*;
+//! - a multiport memory is tiny (< 1 K ALMs) up to 64 KB, then needs
+//!   progressively more pipelining to span M20K columns (Fig. 8): we
+//!   model the paper's stated rule — "a 64KB (or smaller) memory would
+//!   require no additional logic, and there would be a linear increase in
+//!   pipelining required up to a full sector of memory";
+//! - capacity rooflines: 4R-1W tops out at 112 KB, 4R-2W (quad-port
+//!   M20Ks) at 224 KB, banked at 448 KB/16 banks (scaled by bank count).
+
+use super::table1;
+use crate::mem::arch::MemoryArchKind;
+
+/// One Agilex sector, in ALM footprint.
+pub const SECTOR_ALMS: u32 = 16_640;
+
+/// An M20K stores 2 KB of 32-bit data (512 × 40 bits incl. ECC bits).
+pub const M20K_KBYTES: u32 = 2;
+
+/// Maximum shared-memory capacity in KB per architecture (§VI).
+pub fn max_capacity_kb(arch: MemoryArchKind) -> u32 {
+    match arch {
+        MemoryArchKind::MultiPort { write_ports: 2, .. } => 224,
+        MemoryArchKind::MultiPort { .. } => 112,
+        // "a 16 bank, 448 KB shared memory ... one sector"; fewer banks
+        // scale down proportionally ("no point in increasing the memory
+        // size of the 4 bank memory beyond 112KB").
+        MemoryArchKind::Banked { banks, .. } => 448 * banks / 16,
+    }
+}
+
+/// Footprint of one processor variant at a given shared-memory capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Footprint {
+    /// Memory subsystem ALM footprint (sector-equivalent).
+    pub memory_alms: u32,
+    /// Rest of the processor (SPs, fetch/decode, access controllers),
+    /// placed unconstrained.
+    pub rest_alms: u32,
+    /// M20Ks consumed by the shared memory (including replication).
+    pub m20k: u32,
+}
+
+impl Footprint {
+    pub fn total_alms(&self) -> u32 {
+        self.memory_alms + self.rest_alms
+    }
+
+    /// Footprint in sector equivalents.
+    pub fn sectors(&self) -> f64 {
+        self.total_alms() as f64 / SECTOR_ALMS as f64
+    }
+}
+
+/// M20Ks needed for `size_kb` of shared memory under `arch` (multiport
+/// replicates data once per read port).
+pub fn m20k_count(arch: MemoryArchKind, size_kb: u32) -> u32 {
+    let per_copy = size_kb.div_ceil(M20K_KBYTES);
+    match arch {
+        MemoryArchKind::MultiPort { read_ports, .. } => per_copy * read_ports,
+        MemoryArchKind::Banked { .. } => per_copy,
+    }
+}
+
+/// Memory-subsystem ALM footprint at `size_kb`. Returns `None` when the
+/// capacity exceeds the architecture's roofline.
+pub fn memory_alms(arch: MemoryArchKind, size_kb: u32) -> Option<u32> {
+    if size_kb > max_capacity_kb(arch) {
+        return None;
+    }
+    match arch {
+        MemoryArchKind::Banked { banks, .. } => {
+            // Constant: a full/half/quarter sector regardless of capacity.
+            Some(SECTOR_ALMS * banks / 16)
+        }
+        MemoryArchKind::MultiPort { .. } => {
+            let base = table1::memory_total(arch).alms; // < 1 K unconstrained
+            if size_kb <= 64 {
+                Some(base)
+            } else {
+                // Linear pipelining growth from the 64 KB base to a full
+                // sector at the capacity roofline (Fig. 8 right).
+                let max = max_capacity_kb(arch);
+                let frac = (size_kb - 64) as f64 / (max - 64) as f64;
+                Some(base + ((SECTOR_ALMS - base) as f64 * frac).round() as u32)
+            }
+        }
+    }
+}
+
+/// Whole-processor footprint at `size_kb` of shared memory.
+pub fn processor_footprint(arch: MemoryArchKind, size_kb: u32) -> Option<Footprint> {
+    let memory = memory_alms(arch, size_kb)?;
+    // Rest of the processor: common core + the variant's access
+    // controllers (banked) or R/W control (multiport), placed
+    // unconstrained.
+    let ctl = match arch {
+        MemoryArchKind::Banked { .. } => {
+            let m = table1::memory_total(arch);
+            let shared = match arch {
+                MemoryArchKind::Banked { banks: 4, .. } => 3225,
+                MemoryArchKind::Banked { banks: 8, .. } => 6526,
+                _ => 13_105,
+            };
+            m.alms - shared // read + write controllers only
+        }
+        MemoryArchKind::MultiPort { .. } => 700, // R/W control row
+    };
+    let rest = table1::core_total().alms + ctl;
+    Some(Footprint { memory_alms: memory, rest_alms: rest, m20k: m20k_count(arch, size_kb) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banked_footprint_constant_in_capacity() {
+        let a = memory_alms(MemoryArchKind::banked(16), 64).unwrap();
+        let b = memory_alms(MemoryArchKind::banked(16), 448).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, SECTOR_ALMS);
+        assert_eq!(memory_alms(MemoryArchKind::banked(8), 100).unwrap(), SECTOR_ALMS / 2);
+        assert_eq!(memory_alms(MemoryArchKind::banked(4), 100).unwrap(), SECTOR_ALMS / 4);
+    }
+
+    #[test]
+    fn multiport_grows_past_64kb() {
+        let mp = MemoryArchKind::mp_4r1w();
+        let small = memory_alms(mp, 64).unwrap();
+        assert!(small < 1000);
+        let mid = memory_alms(mp, 88).unwrap();
+        let max = memory_alms(mp, 112).unwrap();
+        assert!(small < mid && mid < max);
+        // "needed ... a full sector" at the 112 KB roofline.
+        assert_eq!(max, SECTOR_ALMS);
+    }
+
+    #[test]
+    fn capacity_rooflines() {
+        assert_eq!(memory_alms(MemoryArchKind::mp_4r1w(), 113), None);
+        assert!(memory_alms(MemoryArchKind::mp_4r2w(), 224).is_some());
+        assert_eq!(memory_alms(MemoryArchKind::mp_4r2w(), 225), None);
+        assert!(memory_alms(MemoryArchKind::banked(16), 448).is_some());
+        assert_eq!(memory_alms(MemoryArchKind::banked(16), 449), None);
+        assert_eq!(max_capacity_kb(MemoryArchKind::banked(4)), 112);
+    }
+
+    #[test]
+    fn m20k_replication() {
+        // 4R multiport replicates ×4; banked stores data once.
+        assert_eq!(m20k_count(MemoryArchKind::mp_4r1w(), 32), 64); // the paper's example config
+        assert_eq!(m20k_count(MemoryArchKind::banked(16), 448), 224); // the §IV-A sector fill
+        assert_eq!(m20k_count(MemoryArchKind::banked(16), 64), 32);
+    }
+
+    #[test]
+    fn multiport_m20k_cost_prohibitive_at_size() {
+        // The paper's core claim: "the effective footprint cost of the
+        // multiport memories quickly becomes prohibitive as dataset sizes
+        // increase" — at equal capacity the 4R replication costs 4× the
+        // M20Ks, so 112 KB of 4R-1W equals 448 KB of banked memory.
+        let mp = m20k_count(MemoryArchKind::mp_4r1w(), 112);
+        assert_eq!(mp, 4 * m20k_count(MemoryArchKind::banked(16), 112));
+        assert_eq!(mp, m20k_count(MemoryArchKind::banked(16), 448));
+    }
+
+    #[test]
+    fn processor_totals_ordering_at_64kb() {
+        // At 64 KB the multiport processor is *smaller* than the 16-bank
+        // one (the paper's small-dataset conclusion)...
+        let mp = processor_footprint(MemoryArchKind::mp_4r1w(), 64).unwrap();
+        let b16 = processor_footprint(MemoryArchKind::banked(16), 64).unwrap();
+        assert!(mp.total_alms() < b16.total_alms());
+        // ...but the 4-bank memory is smaller still on the memory side.
+        let b4 = processor_footprint(MemoryArchKind::banked(4), 64).unwrap();
+        assert!(b4.memory_alms < b16.memory_alms);
+    }
+
+    #[test]
+    fn rest_of_processor_reasonable() {
+        // §VI: a full sector of memory "is twice the cost of the rest of
+        // the processor" — rest ≈ 8.3 K ALMs for the 16-bank variant.
+        let fp = processor_footprint(MemoryArchKind::banked(16), 224).unwrap();
+        let ratio = fp.memory_alms as f64 / fp.rest_alms as f64;
+        assert!((1.4..2.4).contains(&ratio), "memory/rest ratio {ratio}");
+    }
+
+    #[test]
+    fn sectors_metric() {
+        let fp = processor_footprint(MemoryArchKind::banked(4), 64).unwrap();
+        assert!(fp.sectors() < 1.0);
+        let fp16 = processor_footprint(MemoryArchKind::banked(16), 448).unwrap();
+        assert!(fp16.sectors() > 1.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! FPGA area and footprint models (paper §IV, §VI).
+//!
+//! The paper's central cost argument is that raw resource counts mislead:
+//! a memory's *true* footprint is the sector-equivalent area it occupies
+//! once node-locked and routed ("True Cost of a Processor", §IV-A). This
+//! module carries:
+//!
+//! - the published per-module resource counts (Table I) as data
+//!   ([`table1`]),
+//! - the sector-equivalent footprint model ([`footprint`]): banked
+//!   memories cost a fixed fraction of a sector regardless of capacity;
+//!   multiport memories grow linearly past 64 KB because of the
+//!   pipelining needed to span M20K columns (Fig. 8),
+//! - the Fig. 9 cost-vs-performance series generator ([`fig9`]).
+//!
+//! Fmax values are modelled constants (the one paper quantity that cannot
+//! be reproduced without the FPGA fitter — see DESIGN.md §0).
+
+pub mod fig9;
+pub mod footprint;
+pub mod resources;
+pub mod table1;
+
+pub use footprint::Footprint;
+pub use resources::Resources;

@@ -1,0 +1,70 @@
+//! FPGA resource vectors (ALMs, registers, M20Ks, DSPs).
+
+use std::ops::{Add, AddAssign, Mul};
+
+/// One module's resource usage, Table I column order.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Resources {
+    /// Adaptive logic modules (fracturable 6-LUTs).
+    pub alms: u32,
+    /// Flip-flops.
+    pub regs: u32,
+    /// M20K embedded memories.
+    pub m20k: u32,
+    /// DSP blocks.
+    pub dsp: u32,
+}
+
+impl Resources {
+    pub const fn new(alms: u32, regs: u32, m20k: u32, dsp: u32) -> Self {
+        Self { alms, regs, m20k, dsp }
+    }
+
+    pub const ZERO: Resources = Resources::new(0, 0, 0, 0);
+}
+
+impl Add for Resources {
+    type Output = Resources;
+    fn add(self, o: Resources) -> Resources {
+        Resources {
+            alms: self.alms + o.alms,
+            regs: self.regs + o.regs,
+            m20k: self.m20k + o.m20k,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl AddAssign for Resources {
+    fn add_assign(&mut self, o: Resources) {
+        *self = *self + o;
+    }
+}
+
+impl Mul<u32> for Resources {
+    type Output = Resources;
+    fn mul(self, k: u32) -> Resources {
+        Resources {
+            alms: self.alms * k,
+            regs: self.regs * k,
+            m20k: self.m20k * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(100, 200, 3, 1);
+        let b = Resources::new(10, 20, 1, 0);
+        assert_eq!(a + b, Resources::new(110, 220, 4, 1));
+        assert_eq!(b * 16, Resources::new(160, 320, 16, 0));
+        let mut c = Resources::ZERO;
+        c += a;
+        assert_eq!(c, a);
+    }
+}

@@ -1,0 +1,188 @@
+//! The paper's Table I — per-module resource counts for each processor
+//! variant — as data, with the derived whole-processor sums the paper's
+//! prose quotes ("the 16 bank memory needs about 13K ALMs by itself, and
+//! the cost including the read and write controllers is twice that of the
+//! SIMT core").
+
+use super::resources::Resources;
+use crate::mem::arch::MemoryArchKind;
+
+/// One Table I row.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    /// Processor variant grouping ("Common", "4 Banks", …).
+    pub group: &'static str,
+    /// Module name.
+    pub module: &'static str,
+    /// Module instance count.
+    pub count: u32,
+    /// Whether this row is a submodule (indented in the paper's table and
+    /// already included in its parent's totals).
+    pub submodule: bool,
+    /// Per-instance resources.
+    pub per_instance: Resources,
+}
+
+impl Table1Row {
+    const fn new(
+        group: &'static str,
+        module: &'static str,
+        count: u32,
+        submodule: bool,
+        r: Resources,
+    ) -> Self {
+        Self { group, module, count, submodule, per_instance: r }
+    }
+}
+
+/// Table I verbatim. The 4-bank shared-memory M20K count is printed
+/// garbled in the paper ("2 2 6"); we use 32, consistent with the 8-bank
+/// (64) and 16-bank (128) rows — 8 M20Ks per bank.
+pub fn rows() -> Vec<Table1Row> {
+    use Table1Row as R;
+    vec![
+        R::new("Common", "SP", 16, false, Resources::new(430, 1100, 2, 2)),
+        R::new("Common", "Fetch/Decode", 1, false, Resources::new(233, 508, 2, 0)),
+        R::new("4 Banks", "Read Ctl.", 1, false, Resources::new(342, 1105, 6, 0)),
+        R::new("4 Banks", "Write Ctl.", 1, false, Resources::new(811, 3114, 19, 0)),
+        R::new("4 Banks", "Shared Mem.", 1, false, Resources::new(3225, 10389, 32, 0)),
+        R::new("4 Banks", "Read Arb.", 4, true, Resources::new(135, 372, 0, 0)),
+        R::new("4 Banks", "Write Arb.", 4, true, Resources::new(441, 1166, 0, 0)),
+        R::new("4 Banks", "Output Mux", 16, true, Resources::new(40, 118, 0, 0)),
+        R::new("8 Banks", "Read Ctl.", 1, false, Resources::new(511, 1595, 7, 0)),
+        R::new("8 Banks", "Write Ctl.", 1, false, Resources::new(1094, 4072, 19, 0)),
+        R::new("8 Banks", "Shared Mem.", 1, false, Resources::new(6526, 20324, 64, 0)),
+        R::new("8 Banks", "Read Arb.", 8, true, Resources::new(145, 384, 0, 0)),
+        R::new("8 Banks", "Write Arb.", 8, true, Resources::new(448, 1165, 0, 0)),
+        R::new("8 Banks", "Output Mux", 16, true, Resources::new(80, 188, 0, 0)),
+        R::new("16 Banks", "Read Ctl.", 1, false, Resources::new(789, 2151, 7, 0)),
+        R::new("16 Banks", "Write Ctl.", 1, false, Resources::new(1507, 5245, 20, 0)),
+        R::new("16 Banks", "Shared Mem.", 1, false, Resources::new(13105, 39805, 128, 0)),
+        R::new("16 Banks", "Read Arb.", 16, true, Resources::new(138, 369, 0, 0)),
+        R::new("16 Banks", "Write Arb.", 16, true, Resources::new(438, 1164, 0, 0)),
+        R::new("16 Banks", "Output Mux", 16, true, Resources::new(173, 353, 0, 0)),
+        R::new("Multi-Port", "R/W Control", 1, false, Resources::new(700, 795, 0, 0)),
+        R::new("Multi-Port", "4R-1W Shared Mem.", 1, false, Resources::new(131, 237, 64, 0)),
+    ]
+}
+
+/// The common core (16 SPs + fetch/decode) total.
+pub fn core_total() -> Resources {
+    rows()
+        .iter()
+        .filter(|r| r.group == "Common")
+        .fold(Resources::ZERO, |acc, r| acc + r.per_instance * r.count)
+}
+
+/// Memory-subsystem total (controllers + shared memory, submodules
+/// excluded — they are folded into the shared-memory row) for a variant.
+pub fn memory_total(arch: MemoryArchKind) -> Resources {
+    let group = match arch {
+        MemoryArchKind::Banked { banks: 4, .. } => "4 Banks",
+        MemoryArchKind::Banked { banks: 8, .. } => "8 Banks",
+        MemoryArchKind::Banked { banks: 16, .. } => "16 Banks",
+        MemoryArchKind::MultiPort { .. } => "Multi-Port",
+        MemoryArchKind::Banked { .. } => panic!("no Table I data for this bank count"),
+    };
+    rows()
+        .iter()
+        .filter(|r| r.group == group && !r.submodule)
+        .fold(Resources::ZERO, |acc, r| acc + r.per_instance * r.count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_is_about_7k_alms() {
+        // 16×430 + 233 = 7113 ALMs, 34 M20Ks, 32 DSPs.
+        let c = core_total();
+        assert_eq!(c.alms, 7113);
+        assert_eq!(c.m20k, 34);
+        assert_eq!(c.dsp, 32);
+    }
+
+    #[test]
+    fn sixteen_bank_memory_is_13k_alms() {
+        // "The 16 bank memory needs about 13K ALMs by itself".
+        let m = memory_total(MemoryArchKind::banked(16));
+        assert_eq!(m.alms - 789 - 1507, 13_105);
+        // "...and the cost including the read and write controllers is
+        // twice that of the SIMT core" (15.4K vs 7.1K).
+        assert!(m.alms as f64 > 2.0 * core_total().alms as f64);
+    }
+
+    #[test]
+    fn multiport_memory_under_1k_alms() {
+        // "the multi-port memory (4R-1W, 4R-2W) requires less than 1K ALMs
+        // in an unconstrained placement".
+        let m = memory_total(MemoryArchKind::mp_4r1w());
+        assert!(m.alms < 1000, "{} ALMs", m.alms);
+    }
+
+    #[test]
+    fn controller_logic_scales_linearly_with_banks() {
+        // "The logic area of the read and write access controllers varies
+        // linearly with the number of banks" — check monotone growth and
+        // rough proportionality between 8 and 16 banks.
+        let read_ctl = |g: &str| {
+            rows()
+                .iter()
+                .find(|r| r.group == g && r.module == "Read Ctl.")
+                .unwrap()
+                .per_instance
+                .alms as f64
+        };
+        let (r4, r8, r16) = (read_ctl("4 Banks"), read_ctl("8 Banks"), read_ctl("16 Banks"));
+        assert!(r4 < r8 && r8 < r16);
+        let ratio = r16 / r8;
+        assert!((1.3..2.0).contains(&ratio), "16/8 read-ctl ratio {ratio}");
+    }
+
+    #[test]
+    fn arbiter_cost_constant_per_core() {
+        // "The individual read and write arbitrate cores always use about
+        // the same amount of logic" across bank counts.
+        let arb = |g: &str, m: &str| {
+            rows()
+                .iter()
+                .find(|r| r.group == g && r.module == m)
+                .unwrap()
+                .per_instance
+                .alms as f64
+        };
+        for m in ["Read Arb.", "Write Arb."] {
+            let vals = [arb("4 Banks", m), arb("8 Banks", m), arb("16 Banks", m)];
+            let (lo, hi) = (vals.iter().cloned().fold(f64::MAX, f64::min),
+                            vals.iter().cloned().fold(0.0, f64::max));
+            assert!(hi / lo < 1.1, "{m} varies too much: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn arbiters_and_muxes_dominate_banked_logic() {
+        // "The number of arbitration circuits and the output muxes comprise
+        // about 90% of the logic of the bank memory resources."
+        let rows = rows();
+        let shared = rows
+            .iter()
+            .find(|r| r.group == "16 Banks" && r.module == "Shared Mem.")
+            .unwrap()
+            .per_instance
+            .alms as f64;
+        let parts: f64 = rows
+            .iter()
+            .filter(|r| r.group == "16 Banks" && r.submodule)
+            .map(|r| (r.per_instance.alms * r.count) as f64)
+            .sum();
+        let frac = parts / shared;
+        assert!((0.75..=1.0).contains(&frac), "arbiter+mux fraction {frac}");
+    }
+
+    #[test]
+    fn memory_total_rejects_odd_bank_counts() {
+        let r = std::panic::catch_unwind(|| memory_total(MemoryArchKind::banked(2)));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! A small benchmarking harness (criterion is unavailable in this offline
+//! environment, so the crate carries its own).
+//!
+//! Measures wall-clock over warmup + timed iterations and reports
+//! mean / median / MAD / min; `cargo bench` binaries (`benches/*.rs`,
+//! `harness = false`) use [`Bencher`] and print paper-style tables next to
+//! the timing rows.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration durations, sorted.
+    pub iters: Vec<Duration>,
+}
+
+impl Sample {
+    pub fn min(&self) -> Duration {
+        self.iters[0]
+    }
+
+    pub fn median(&self) -> Duration {
+        self.iters[self.iters.len() / 2]
+    }
+
+    pub fn mean(&self) -> Duration {
+        self.iters.iter().sum::<Duration>() / self.iters.len() as u32
+    }
+
+    /// Median absolute deviation — robust spread.
+    pub fn mad(&self) -> Duration {
+        let med = self.median();
+        let mut devs: Vec<Duration> = self
+            .iters
+            .iter()
+            .map(|&d| if d > med { d - med } else { med - d })
+            .collect();
+        devs.sort_unstable();
+        devs[devs.len() / 2]
+    }
+
+    /// One-line report: `name  median ± mad (n=..)`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} {:>12} ± {:<10} (n={})",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mad()),
+            self.iters.len()
+        )
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// The harness: run closures with warmup and collect samples.
+pub struct Bencher {
+    warmup: u32,
+    iters: u32,
+    samples: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(2, 10)
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        assert!(iters > 0);
+        Self { warmup, iters, samples: Vec::new() }
+    }
+
+    /// Benchmark `f`, which must return something observable (guards
+    /// against the optimizer deleting the work).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: impl Into<String>, mut f: F) -> &Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut iters = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            iters.push(t0.elapsed());
+        }
+        iters.sort_unstable();
+        self.samples.push(Sample { name: name.into(), iters });
+        self.samples.last().unwrap()
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Print every sample line.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for s in &self.samples {
+            out.push_str(&s.line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_requested_iterations() {
+        let mut b = Bencher::new(1, 5);
+        b.bench("noop", || 42);
+        assert_eq!(b.samples().len(), 1);
+        assert_eq!(b.samples()[0].iters.len(), 5);
+    }
+
+    #[test]
+    fn stats_are_ordered() {
+        let mut b = Bencher::new(0, 9);
+        b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        let s = &b.samples()[0];
+        assert!(s.min() <= s.median());
+        assert!(s.median() <= *s.iters.last().unwrap());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+    }
+
+    #[test]
+    fn report_one_line_per_sample() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("a", || 1);
+        b.bench("b", || 2);
+        assert_eq!(b.report().lines().count(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! The memory-architecture advisor: the deployable form of the paper's
+//! conclusion.
+//!
+//! §VII: "The best choice of shared memory architecture is then most
+//! likely determined by the dataset size ... The choice between the two
+//! types of memory will also be influenced by memory access patterns ...
+//! The one advantage of the FPGA is that we will be able to change our
+//! memory architecture to suit our particular design."
+//!
+//! Given a workload (a registered benchmark or a custom program), the
+//! advisor simulates it across every candidate memory — the paper's nine
+//! plus the XOR-mapped extensions — folds in the footprint model at the
+//! workload's dataset size, and ranks by time, area and perf-per-area.
+
+use super::job::BenchJob;
+use crate::area::footprint;
+use crate::mem::arch::MemoryArchKind;
+use crate::mem::mapping::BankMapping;
+use crate::sim::machine::SimError;
+use crate::util::fmt::TextTable;
+
+/// One candidate's scorecard.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub arch: MemoryArchKind,
+    pub total_cycles: u64,
+    pub time_us: f64,
+    /// Whole-processor ALM footprint at the workload's dataset size
+    /// (`None` = the architecture cannot hold the dataset).
+    pub footprint_alms: Option<u32>,
+    /// 1 / (time × sectors); `None` past the capacity roofline.
+    pub perf_per_area: Option<f64>,
+}
+
+/// The advisor's output: candidates sorted by time, plus the two
+/// recommendations the paper's decision rule produces.
+#[derive(Debug, Clone)]
+pub struct Advice {
+    pub program: String,
+    pub dataset_kb: u32,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Candidate set: the paper's nine plus XOR-mapped banked variants.
+pub fn candidate_archs() -> Vec<MemoryArchKind> {
+    let mut v = MemoryArchKind::table3_nine();
+    for banks in [4, 8, 16] {
+        v.push(MemoryArchKind::Banked { banks, mapping: BankMapping::Xor });
+    }
+    v
+}
+
+/// Run the advisor for a registered program.
+pub fn advise(program: &str) -> Result<Advice, SimError> {
+    let workload = crate::programs::library::program_by_name(program)
+        .ok_or_else(|| SimError::BadProgram(format!("unknown program '{program}'")))?;
+    let dataset_kb = (workload.mem_words() * 4 / 1024) as u32;
+    let mut candidates = Vec::new();
+    for arch in candidate_archs() {
+        let result = BenchJob::new(program, arch).run()?;
+        let fp = footprint::processor_footprint(arch, dataset_kb);
+        let time_us = result.report.time_us();
+        candidates.push(Candidate {
+            arch,
+            total_cycles: result.report.total_cycles(),
+            time_us,
+            footprint_alms: fp.map(|f| f.total_alms()),
+            perf_per_area: fp.map(|f| 1.0 / (time_us * f.sectors())),
+        });
+    }
+    candidates.sort_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap());
+    Ok(Advice { program: program.to_string(), dataset_kb, candidates })
+}
+
+impl Advice {
+    /// Fastest architecture that can hold the dataset.
+    pub fn fastest(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .find(|c| c.footprint_alms.is_some())
+            .expect("banked memories always fit the benchmark datasets")
+    }
+
+    /// Best performance per unit area (the paper's efficiency criterion).
+    pub fn most_efficient(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .max_by(|a, b| {
+                a.perf_per_area
+                    .unwrap_or(0.0)
+                    .partial_cmp(&b.perf_per_area.unwrap_or(0.0))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+
+    /// Render the scorecard.
+    pub fn render(&self) -> String {
+        let mut t = TextTable::new([
+            "memory", "cycles", "time (us)", "ALMs", "perf/area",
+        ]);
+        for c in &self.candidates {
+            t.row([
+                c.arch.label(),
+                c.total_cycles.to_string(),
+                format!("{:.2}", c.time_us),
+                c.footprint_alms
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|| "over cap".into()),
+                c.perf_per_area
+                    .map(|v| format!("{v:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        format!(
+            "advisor: {} ({} KB dataset)\n{}\nfastest: {}   most perf/area: {}\n",
+            self.program,
+            self.dataset_kb,
+            t.render(),
+            self.fastest().arch.label(),
+            self.most_efficient().arch.label(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advises_transpose32() {
+        let advice = advise("transpose32").unwrap();
+        assert_eq!(advice.candidates.len(), 12);
+        // Sorted by time.
+        for w in advice.candidates.windows(2) {
+            assert!(w[0].time_us <= w[1].time_us);
+        }
+        let out = advice.render();
+        assert!(out.contains("fastest:"));
+        assert!(out.contains("XOR"));
+    }
+
+    #[test]
+    fn advises_fft_and_prefers_offset16_among_paper_nine() {
+        let advice = advise("fft4096r16").unwrap();
+        // Among the paper's nine, Table III's winner heads the ranking...
+        let paper_nine = MemoryArchKind::table3_nine();
+        let fastest_paper = advice
+            .candidates
+            .iter()
+            .find(|c| paper_nine.contains(&c.arch))
+            .unwrap();
+        assert_eq!(fastest_paper.arch.label(), "16 Banks Offset");
+        // ...and the XOR extension beats it outright (it randomizes the
+        // power-of-two stride conflicts the Offset map only shifts) —
+        // the §VII "varying the bank mapping" headroom, quantified in
+        // EXPERIMENTS.md §Extensions.
+        let fastest = advice.fastest();
+        if let MemoryArchKind::Banked { banks, mapping } = fastest.arch {
+            assert_eq!(banks, 16);
+            assert!(matches!(mapping, BankMapping::Xor | BankMapping::Offset));
+        } else {
+            panic!("a banked memory must win the FFT");
+        }
+        // Smaller banked cores win perf/area (Fig. 9's observation).
+        let eff = advice.most_efficient();
+        if let MemoryArchKind::Banked { banks, .. } = eff.arch {
+            assert!(banks <= 8, "perf/area winner should be a small banked core");
+        }
+    }
+
+    #[test]
+    fn unknown_program_errors() {
+        assert!(advise("nope").is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! One benchmark job: a (program, memory architecture) combination with a
+//! deterministic input seed — one cell of Table II or III.
+
+use crate::mem::arch::MemoryArchKind;
+use crate::programs::library::{program_by_name, Workload};
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::{Machine, SimError};
+use crate::sim::stats::RunReport;
+use crate::util::XorShift64;
+
+/// Job descriptor (cheap to clone and ship to worker threads).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BenchJob {
+    /// Registered program name (see [`crate::programs::library`]).
+    pub program: String,
+    /// Memory architecture.
+    pub arch: MemoryArchKind,
+    /// Input-data seed (the data does not change timing — access patterns
+    /// are address-driven — but determinism keeps validation exact).
+    pub seed: u64,
+    /// Use the fast banked timing path (identical cycles; see
+    /// [`crate::mem::banked::TimingMode`]).
+    pub fast_timing: bool,
+}
+
+impl BenchJob {
+    pub fn new(program: impl Into<String>, arch: MemoryArchKind) -> Self {
+        Self { program: program.into(), arch, seed: 0x5EED, fast_timing: true }
+    }
+
+    /// The full paper sweep: Table II's 24 transpose cells + Table III's
+    /// 27 FFT cells = 51 benchmark combinations.
+    pub fn paper_sweep() -> Vec<BenchJob> {
+        let mut jobs = Vec::new();
+        for n in [32, 64, 128] {
+            for arch in MemoryArchKind::table2_eight() {
+                jobs.push(BenchJob::new(format!("transpose{n}"), arch));
+            }
+        }
+        for r in [4, 8, 16] {
+            for arch in MemoryArchKind::table3_nine() {
+                jobs.push(BenchJob::new(format!("fft4096r{r}"), arch));
+            }
+        }
+        jobs
+    }
+
+    /// Materialize the workload, build the machine, load the input image
+    /// and run. Returns the full report.
+    pub fn run(&self) -> Result<BenchResult, SimError> {
+        let workload = program_by_name(&self.program)
+            .ok_or_else(|| SimError::BadProgram(format!("unknown program '{}'", self.program)))?;
+        let mut cfg = MachineConfig::for_arch(self.arch).with_mem_words(workload.mem_words());
+        if let Some(region) = workload.tw_region() {
+            cfg = cfg.with_tw_region(region);
+        }
+        if self.fast_timing {
+            cfg = cfg.with_fast_timing();
+        }
+        let mut machine = Machine::new(cfg);
+        let mut rng = XorShift64::new(self.seed);
+        match &workload {
+            Workload::Transpose(plan, _) => {
+                let src: Vec<u32> = (0..plan.n * plan.n).map(|_| rng.next_u32()).collect();
+                machine.load_image(plan.src_base, &src);
+            }
+            Workload::Fft(plan, _) => {
+                let data = rng.f32_vec(2 * plan.n as usize);
+                machine.load_f32_image(plan.data_base, &data);
+                machine.load_f32_image(plan.tw_base, &plan.twiddles);
+            }
+        }
+        let report = machine.run_program(workload.program())?;
+        Ok(BenchResult { job: self.clone(), report })
+    }
+}
+
+/// A completed benchmark cell.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub job: BenchJob,
+    pub report: RunReport,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sweep_is_51_combinations() {
+        // "we ... run a total of 51 benchmarks (different combinations of
+        // algorithms, data sizes and processor memories)".
+        assert_eq!(BenchJob::paper_sweep().len(), 51);
+    }
+
+    #[test]
+    fn job_runs_and_reports() {
+        let r = BenchJob::new("transpose32", MemoryArchKind::mp_4r1w())
+            .run()
+            .unwrap();
+        assert_eq!(r.report.stats.d_load_cycles, 256); // Table II row
+        assert_eq!(r.report.stats.store_cycles, 1024);
+    }
+
+    #[test]
+    fn unknown_program_is_error() {
+        assert!(BenchJob::new("nope", MemoryArchKind::mp_4r1w()).run().is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let job = BenchJob::new("fft4096r8", MemoryArchKind::banked_offset(16));
+        let a = job.run().unwrap();
+        let b = job.run().unwrap();
+        assert_eq!(a.report.total_cycles(), b.report.total_cycles());
+        assert_eq!(a.report.stats, b.report.stats);
+    }
+}

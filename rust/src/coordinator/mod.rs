@@ -1,0 +1,12 @@
+//! Benchmark coordination: jobs, the parallel sweep runner, golden
+//! validation and the table/figure renderers that regenerate the paper's
+//! evaluation (Tables I–III, Fig. 9).
+
+pub mod advisor;
+pub mod job;
+pub mod report;
+pub mod runner;
+pub mod validate;
+
+pub use job::{BenchJob, BenchResult};
+pub use runner::SweepRunner;

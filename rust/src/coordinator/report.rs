@@ -1,0 +1,266 @@
+//! Table and figure renderers — each regenerates one artifact of the
+//! paper's evaluation from sweep results (plain text and CSV).
+
+use super::job::BenchResult;
+use crate::area::fig9::{self, Fig9Point};
+use crate::area::table1;
+use crate::mem::arch::MemoryArchKind;
+use crate::mem::timing;
+use crate::util::fmt::{pct, us, TextTable};
+
+/// Find a result cell.
+fn cell<'a>(results: &'a [BenchResult], program: &str, arch: MemoryArchKind) -> &'a BenchResult {
+    results
+        .iter()
+        .find(|r| r.job.program == program && r.job.arch == arch)
+        .unwrap_or_else(|| panic!("missing sweep cell {program}/{arch}"))
+}
+
+fn opt_pct(v: Option<f64>) -> String {
+    v.map(pct).unwrap_or_else(|| "-".into())
+}
+
+/// Render Table I (resource counts) plus the modelled Fmax notes.
+pub fn render_table1() -> String {
+    let mut t = TextTable::new(["Group", "Module", "No.", "ALMs", "Regs", "M20K", "DSP"]);
+    for r in table1::rows() {
+        let name = if r.submodule { format!("  {}", r.module) } else { r.module.to_string() };
+        t.row([
+            r.group.to_string(),
+            name,
+            r.count.to_string(),
+            r.per_instance.alms.to_string(),
+            r.per_instance.regs.to_string(),
+            r.per_instance.m20k.to_string(),
+            r.per_instance.dsp.to_string(),
+        ]);
+    }
+    let core = table1::core_total();
+    format!(
+        "TABLE I: Processor Resources (per-instance; submodules indented)\n{}\n\
+         Common core total: {} ALMs, {} M20K, {} DSP\n\
+         Modelled Fmax: {} MHz (DSP-limited FP32), {} MHz unrestricted, \
+         {} MHz 4R-2W (emulated TDP), {} MHz constrained 448 KB\n",
+        t.render(),
+        core.alms,
+        core.m20k,
+        core.dsp,
+        timing::FMAX_MHZ,
+        timing::FMAX_UNRESTRICTED_MHZ,
+        timing::FMAX_4R2W_MHZ,
+        timing::FMAX_CONSTRAINED_MHZ,
+    )
+}
+
+/// Render Table II (transpose profiling) from sweep results.
+pub fn render_table2(results: &[BenchResult]) -> String {
+    let archs = MemoryArchKind::table2_eight();
+    let mut out = String::from("TABLE II: Transpose Profiling - Different Memory Architectures\n");
+    for n in [32u32, 64, 128] {
+        let program = format!("transpose{n}");
+        let mut t = TextTable::new(
+            std::iter::once("Type".to_string()).chain(archs.iter().map(|a| a.label())),
+        );
+        let c0 = &cell(results, &program, archs[0]).report;
+        out.push_str(&format!(
+            "\n{n}x{n}  (Common Ops — INT: {}, Immediate: {}, FP: {}, Other: {}; Load/Store ops {}/{})\n",
+            c0.stats.int_cycles,
+            c0.stats.imm_cycles,
+            c0.stats.fp_cycles,
+            c0.stats.other_cycles,
+            c0.stats.d_load_ops,
+            c0.stats.store_ops,
+        ));
+        let row = |label: &str, f: &dyn Fn(&BenchResult) -> String| {
+            let mut cells = vec![label.to_string()];
+            for &a in &archs {
+                cells.push(f(cell(results, &program, a)));
+            }
+            cells
+        };
+        t.row(row("Load Cycles", &|r| r.report.stats.d_load_cycles.to_string()));
+        t.row(row("Store Cycles", &|r| r.report.stats.store_cycles.to_string()));
+        t.row(row("Total", &|r| r.report.total_cycles().to_string()));
+        t.row(row("Time (us)", &|r| us(r.report.time_us())));
+        t.row(row("R Bank Eff. (%)", &|r| opt_pct(r.report.r_bank_eff())));
+        t.row(row("W Bank Eff. (%)", &|r| opt_pct(r.report.w_bank_eff())));
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Render Table III (FFT profiling) from sweep results.
+pub fn render_table3(results: &[BenchResult]) -> String {
+    let archs = MemoryArchKind::table3_nine();
+    let mut out = String::from("TABLE III: FFT Profiling - Different Memory Architectures\n");
+    for radix in [4u32, 8, 16] {
+        let program = format!("fft4096r{radix}");
+        let c0 = &cell(results, &program, archs[0]).report;
+        out.push_str(&format!(
+            "\nRadix {radix}  (Common Ops — FP: {}, INT: {}, Immediate: {}, Other: {}; \
+             D Load/Store ops {}/{}; TW Load ops {})\n",
+            c0.stats.fp_cycles,
+            c0.stats.int_cycles,
+            c0.stats.imm_cycles,
+            c0.stats.other_cycles,
+            c0.stats.d_load_ops,
+            c0.stats.store_ops,
+            c0.stats.tw_load_ops,
+        ));
+        let mut t = TextTable::new(
+            std::iter::once("Type".to_string()).chain(archs.iter().map(|a| a.label())),
+        );
+        let row = |label: &str, f: &dyn Fn(&BenchResult) -> String| {
+            let mut cells = vec![label.to_string()];
+            for &a in &archs {
+                cells.push(f(cell(results, &program, a)));
+            }
+            cells
+        };
+        t.row(row("D Load Cycles", &|r| r.report.stats.d_load_cycles.to_string()));
+        t.row(row("W Load Cycles", &|r| r.report.stats.tw_load_cycles.to_string()));
+        t.row(row("Store Cycles", &|r| r.report.stats.store_cycles.to_string()));
+        t.row(row("Total", &|r| r.report.total_cycles().to_string()));
+        t.row(row("Time (us)", &|r| us(r.report.time_us())));
+        t.row(row("Efficiency (%)", &|r| pct(r.report.compute_efficiency())));
+        t.row(row("D Bank Eff. (%)", &|r| opt_pct(r.report.r_bank_eff())));
+        t.row(row("TW Bank Eff. (%)", &|r| opt_pct(r.report.tw_bank_eff())));
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Build the Fig. 9 series from sweep results (radix-16 FFT is the
+/// performance benchmark, §VI).
+pub fn fig9_points(results: &[BenchResult]) -> Vec<Fig9Point> {
+    let times: Vec<(MemoryArchKind, f64)> = MemoryArchKind::table3_nine()
+        .into_iter()
+        .map(|a| (a, cell(results, "fft4096r16", a).report.time_us()))
+        .collect();
+    fig9::series(&times)
+}
+
+/// Render Fig. 9 (cost vs performance) as a table: one row per
+/// architecture, cost columns per capacity, plus normalized performance.
+pub fn render_fig9(results: &[BenchResult]) -> String {
+    let points = fig9_points(results);
+    let mut t = TextTable::new([
+        "Memory".to_string(),
+        "64KB ALMs".into(),
+        "112KB ALMs".into(),
+        "168KB ALMs".into(),
+        "224KB ALMs".into(),
+        "Time (us)".into(),
+        "Norm. perf".into(),
+    ]);
+    for arch in MemoryArchKind::table3_nine() {
+        let per_size: Vec<String> = fig9::SIZES_KB
+            .iter()
+            .map(|&kb| {
+                points
+                    .iter()
+                    .find(|p| p.arch == arch && p.size_kb == kb)
+                    .and_then(|p| p.footprint)
+                    .map(|f| f.total_alms().to_string())
+                    .unwrap_or_else(|| "over cap".into())
+            })
+            .collect();
+        let p0 = points.iter().find(|p| p.arch == arch).unwrap();
+        t.row([
+            arch.label(),
+            per_size[0].clone(),
+            per_size[1].clone(),
+            per_size[2].clone(),
+            per_size[3].clone(),
+            us(p0.time_us),
+            format!("{:.3}", p0.normalized),
+        ]);
+    }
+    format!(
+        "Fig. 9: Cost vs. Performance (lower normalized perf is better; \
+         radix-16 4096-pt FFT)\n{}",
+        t.render()
+    )
+}
+
+/// Everything as CSV rows (program, arch label, metrics) — machine-
+/// readable counterpart of Tables II and III for downstream plotting.
+pub fn sweep_csv(results: &[BenchResult]) -> String {
+    let mut t = TextTable::new([
+        "program", "arch", "threads", "int", "imm", "fp", "other", "d_load_ops", "tw_load_ops",
+        "store_ops", "d_load_cycles", "tw_load_cycles", "store_cycles", "total_cycles", "time_us",
+        "r_bank_eff", "tw_bank_eff", "w_bank_eff", "efficiency",
+    ]);
+    for r in results {
+        let s = &r.report.stats;
+        t.row([
+            r.job.program.clone(),
+            r.job.arch.label(),
+            r.report.threads.to_string(),
+            s.int_cycles.to_string(),
+            s.imm_cycles.to_string(),
+            s.fp_cycles.to_string(),
+            s.other_cycles.to_string(),
+            s.d_load_ops.to_string(),
+            s.tw_load_ops.to_string(),
+            s.store_ops.to_string(),
+            s.d_load_cycles.to_string(),
+            s.tw_load_cycles.to_string(),
+            s.store_cycles.to_string(),
+            r.report.total_cycles().to_string(),
+            format!("{:.3}", r.report.time_us()),
+            r.report.r_bank_eff().map(|v| format!("{v:.4}")).unwrap_or_default(),
+            r.report.tw_bank_eff().map(|v| format!("{v:.4}")).unwrap_or_default(),
+            r.report.w_bank_eff().map(|v| format!("{v:.4}")).unwrap_or_default(),
+            format!("{:.4}", r.report.compute_efficiency()),
+        ]);
+    }
+    t.to_csv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::BenchJob;
+    use crate::coordinator::runner::SweepRunner;
+
+    fn mini_sweep() -> Vec<BenchResult> {
+        // A reduced sweep that still covers every column the renderers
+        // need: all archs for transpose32 and fft4096r16 only (full
+        // paper sweep is exercised in integration tests and benches).
+        let mut jobs = Vec::new();
+        for arch in MemoryArchKind::table2_eight() {
+            jobs.push(BenchJob::new("transpose32", arch));
+            jobs.push(BenchJob::new("transpose64", arch));
+            jobs.push(BenchJob::new("transpose128", arch));
+        }
+        for arch in MemoryArchKind::table3_nine() {
+            jobs.push(BenchJob::new("fft4096r4", arch));
+            jobs.push(BenchJob::new("fft4096r8", arch));
+            jobs.push(BenchJob::new("fft4096r16", arch));
+        }
+        SweepRunner::default().run(&jobs).unwrap()
+    }
+
+    #[test]
+    fn renders_all_tables() {
+        let results = mini_sweep();
+        let t1 = render_table1();
+        assert!(t1.contains("16 Banks") && t1.contains("13105"));
+        let t2 = render_table2(&results);
+        assert!(t2.contains("32x32") && t2.contains("R Bank Eff."));
+        let t3 = render_table3(&results);
+        assert!(t3.contains("Radix 16") && t3.contains("4R-1W-VB"));
+        let f9 = render_fig9(&results);
+        assert!(f9.contains("over cap"), "4R-1W must exceed capacity at 168 KB");
+        let csv = sweep_csv(&results);
+        assert_eq!(csv.lines().count(), results.len() + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing sweep cell")]
+    fn missing_cell_panics_with_context() {
+        let results: Vec<BenchResult> = Vec::new();
+        let _ = render_table2(&results);
+    }
+}

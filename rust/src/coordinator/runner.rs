@@ -1,0 +1,107 @@
+//! Parallel sweep runner: a worker pool over benchmark jobs.
+//!
+//! tokio is unavailable offline, so this is a plain `std::thread` pool
+//! with a shared work queue — ample for a simulator sweep, and the
+//! results arrive in deterministic (input) order regardless of worker
+//! scheduling.
+
+use super::job::{BenchJob, BenchResult};
+use crate::sim::machine::SimError;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Thread-pool sweep runner.
+#[derive(Debug, Clone)]
+pub struct SweepRunner {
+    workers: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self { workers: n.min(16) }
+    }
+}
+
+impl SweepRunner {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Self { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every job; results come back in job order. The first simulator
+    /// error aborts the sweep (the paper's benchmarks never fault; an
+    /// error here is a bug or a bad custom program).
+    pub fn run(&self, jobs: &[BenchJob]) -> Result<Vec<BenchResult>, SimError> {
+        let next = Arc::new(AtomicUsize::new(0));
+        let slots: Arc<Mutex<Vec<Option<Result<BenchResult, SimError>>>>> =
+            Arc::new(Mutex::new((0..jobs.len()).map(|_| None).collect()));
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(jobs.len().max(1)) {
+                let next = Arc::clone(&next);
+                let slots = Arc::clone(&slots);
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let result = jobs[i].run();
+                    slots.lock().unwrap()[i] = Some(result);
+                });
+            }
+        });
+        let slots = Arc::try_unwrap(slots).unwrap().into_inner().unwrap();
+        slots
+            .into_iter()
+            .map(|s| s.expect("every slot filled"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+
+    #[test]
+    fn runs_jobs_in_order() {
+        let jobs = vec![
+            BenchJob::new("transpose32", MemoryArchKind::mp_4r1w()),
+            BenchJob::new("transpose32", MemoryArchKind::banked(16)),
+            BenchJob::new("transpose32", MemoryArchKind::banked_offset(4)),
+        ];
+        let results = SweepRunner::new(2).run(&jobs).unwrap();
+        assert_eq!(results.len(), 3);
+        for (j, r) in jobs.iter().zip(&results) {
+            assert_eq!(&r.job, j);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let jobs = vec![
+            BenchJob::new("transpose32", MemoryArchKind::banked(8)),
+            BenchJob::new("transpose64", MemoryArchKind::banked(8)),
+        ];
+        let par = SweepRunner::new(4).run(&jobs).unwrap();
+        let ser = SweepRunner::new(1).run(&jobs).unwrap();
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.report.total_cycles(), b.report.total_cycles());
+        }
+    }
+
+    #[test]
+    fn error_propagates() {
+        let jobs = vec![BenchJob::new("bogus", MemoryArchKind::mp_4r1w())];
+        assert!(SweepRunner::new(2).run(&jobs).is_err());
+    }
+
+    #[test]
+    fn default_has_workers() {
+        assert!(SweepRunner::default().workers() >= 1);
+    }
+}

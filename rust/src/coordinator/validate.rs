@@ -1,0 +1,220 @@
+//! End-to-end validation: every benchmark program, on every memory
+//! architecture, must compute the same answer — and that answer must match
+//! the golden models (host reference always; PJRT artifacts when built).
+
+use crate::mem::arch::MemoryArchKind;
+use crate::programs::fft::{digit_reverse, fft_program, reference_fft};
+use crate::programs::transpose::{transpose_program, TransposePlan};
+use crate::runtime::golden;
+use crate::runtime::ArtifactRuntime;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::Machine;
+use crate::util::XorShift64;
+
+/// Outcome of one validation check.
+#[derive(Debug, Clone)]
+pub struct Check {
+    pub name: String,
+    pub passed: bool,
+    pub detail: String,
+}
+
+impl Check {
+    fn pass(name: impl Into<String>, detail: impl Into<String>) -> Self {
+        Self { name: name.into(), passed: true, detail: detail.into() }
+    }
+    fn fail(name: impl Into<String>, detail: impl Into<String>) -> Self {
+        Self { name: name.into(), passed: false, detail: detail.into() }
+    }
+}
+
+/// Validate the transpose programs against a host transpose on every
+/// Table II architecture.
+pub fn validate_transposes(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
+    let mut checks = Vec::new();
+    for n in [32u32, 64, 128] {
+        let plan = TransposePlan::new(n);
+        let program = transpose_program(n);
+        let mut rng = XorShift64::new(1000 + n as u64);
+        let src: Vec<f32> = rng.f32_vec((n * n) as usize);
+        for arch in MemoryArchKind::table2_eight() {
+            let cfg = MachineConfig::for_arch(arch)
+                .with_mem_words((plan.words as usize).next_power_of_two())
+                .with_fast_timing();
+            let mut m = Machine::new(cfg);
+            m.load_f32_image(plan.src_base, &src);
+            let name = format!("transpose{n} on {arch}");
+            if let Err(e) = m.run_program(&program) {
+                checks.push(Check::fail(name, e.to_string()));
+                continue;
+            }
+            let out = m.read_f32_image(plan.dst_base, (n * n) as usize);
+            let host_ok = (0..n as usize).all(|i| {
+                (0..n as usize).all(|j| out[j * n as usize + i] == src[i * n as usize + j])
+            });
+            if !host_ok {
+                checks.push(Check::fail(name, "mismatch vs host transpose"));
+                continue;
+            }
+            // Against the PJRT golden artifact, when available.
+            if let Some(rt) = rt.filter(|rt| rt.has_artifact(&format!("transpose{n}"))) {
+                match golden::golden_transpose(rt, n as usize, &src) {
+                    Ok(g) => {
+                        if g == out {
+                            checks.push(Check::pass(name, "host + PJRT golden agree"));
+                        } else {
+                            checks.push(Check::fail(name, "mismatch vs PJRT golden"));
+                        }
+                    }
+                    Err(e) => checks.push(Check::fail(name, format!("golden error: {e:#}"))),
+                }
+            } else {
+                checks.push(Check::pass(name, "host golden agrees (no artifact)"));
+            }
+        }
+    }
+    checks
+}
+
+/// Validate the FFT programs against the host reference FFT (and the PJRT
+/// golden FFT when built) on every Table III architecture.
+pub fn validate_ffts(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
+    let mut checks = Vec::new();
+    for radix in [4u32, 8, 16] {
+        let (plan, program) = fft_program(radix);
+        let mut rng = XorShift64::new(2000 + radix as u64);
+        let n = plan.n as usize;
+        let re: Vec<f32> = rng.f32_vec(n);
+        let im: Vec<f32> = rng.f32_vec(n);
+        let mut interleaved = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            interleaved.push(re[i]);
+            interleaved.push(im[i]);
+        }
+        let (hr, hi) = reference_fft(&re, &im);
+        for arch in MemoryArchKind::table3_nine() {
+            let cfg = MachineConfig::for_arch(arch)
+                .with_mem_words(plan.mem_words())
+                .with_tw_region(plan.tw_region())
+                .with_fast_timing();
+            let mut m = Machine::new(cfg);
+            m.load_f32_image(plan.data_base, &interleaved);
+            m.load_f32_image(plan.tw_base, &plan.twiddles);
+            let name = format!("fft4096r{radix} on {arch}");
+            if let Err(e) = m.run_program(&program) {
+                checks.push(Check::fail(name, e.to_string()));
+                continue;
+            }
+            let out = m.read_f32_image(plan.data_base, 2 * n);
+            let mut max_err = 0.0f64;
+            let mut max_mag = 1e-30f64;
+            for k in 0..n {
+                let p = digit_reverse(k as u32, plan.radix, plan.stages) as usize;
+                let e = ((out[2 * p] as f64 - hr[k]).powi(2)
+                    + (out[2 * p + 1] as f64 - hi[k]).powi(2))
+                .sqrt();
+                max_err = max_err.max(e);
+                max_mag = max_mag.max((hr[k].powi(2) + hi[k].powi(2)).sqrt());
+            }
+            let rel = max_err / max_mag;
+            if rel > 2e-5 {
+                checks.push(Check::fail(name, format!("host rel err {rel:.2e}")));
+                continue;
+            }
+            if let Some(rt) = rt.filter(|rt| rt.has_artifact("fft4096")) {
+                match golden::validate_fft(rt, &m, &plan, &re, &im) {
+                    Ok(rel) if rel < 2e-5 => {
+                        checks.push(Check::pass(name, format!("PJRT golden rel err {rel:.2e}")))
+                    }
+                    Ok(rel) => {
+                        checks.push(Check::fail(name, format!("PJRT golden rel err {rel:.2e}")))
+                    }
+                    Err(e) => checks.push(Check::fail(name, format!("golden error: {e:#}"))),
+                }
+            } else {
+                checks.push(Check::pass(name, format!("host rel err {rel:.2e} (no artifact)")));
+            }
+        }
+    }
+    checks
+}
+
+/// Cross-check the Pallas conflict oracle against the cycle-accurate L3
+/// conflict model on random operation batches.
+pub fn validate_conflict_oracle(rt: &ArtifactRuntime, seed: u64) -> Vec<Check> {
+    use crate::mem::conflict::max_conflicts;
+    use crate::mem::mapping::{BankMap, BankMapping};
+    use crate::mem::{FULL_MASK, LANES};
+    let mut checks = Vec::new();
+    let mut rng = XorShift64::new(seed);
+    for banks in [4u32, 8, 16] {
+        let name = format!("conflict oracle {banks} banks");
+        if !rt.has_artifact(&format!("conflict{banks}")) {
+            checks.push(Check::pass(name, "artifact not built; skipped"));
+            continue;
+        }
+        let ops: Vec<[u32; LANES]> = (0..512)
+            .map(|_| {
+                let mut a = [0u32; LANES];
+                for x in a.iter_mut() {
+                    *x = rng.below(1 << 14);
+                }
+                a
+            })
+            .collect();
+        let mut ok = true;
+        for mapping in [BankMapping::Lsb, BankMapping::Offset] {
+            let map = BankMap::new(banks, mapping);
+            match golden::conflict_oracle(rt, banks, &ops, mapping.shift()) {
+                Ok(oracle) => {
+                    for (op, &o) in ops.iter().zip(&oracle) {
+                        let l3 = max_conflicts(op, FULL_MASK, &map);
+                        if l3 != o {
+                            checks.push(Check::fail(
+                                name.clone(),
+                                format!("{mapping:?}: oracle {o} != simulator {l3}"),
+                            ));
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                Err(e) => {
+                    checks.push(Check::fail(name.clone(), format!("{e:#}")));
+                    ok = false;
+                }
+            }
+        }
+        if ok {
+            checks.push(Check::pass(name, "1024 random ops agree (LSB + Offset)"));
+        }
+    }
+    checks
+}
+
+/// Run the whole validation suite. `rt` enables the PJRT-artifact checks.
+pub fn validate_all(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
+    let mut checks = validate_transposes(rt);
+    checks.extend(validate_ffts(rt));
+    if let Some(rt) = rt {
+        checks.extend(validate_conflict_oracle(rt, 0xC0DE));
+    }
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transposes_validate_without_artifacts() {
+        let checks = validate_transposes(None);
+        assert_eq!(checks.len(), 24);
+        for c in &checks {
+            assert!(c.passed, "{}: {}", c.name, c.detail);
+        }
+    }
+
+    // FFT validation across all nine architectures is covered by
+    // rust/tests/validation.rs (it is the long pole of the unit suite).
+}

@@ -1,0 +1,398 @@
+//! Two-pass text assembler and disassembler.
+//!
+//! Syntax (semicolon or `#` comments, case-insensitive mnemonics):
+//!
+//! ```text
+//! .name  transpose32      ; optional program name
+//! .threads 1024           ; block size (required)
+//!
+//! start:
+//!     tid   r0
+//!     ldi   r1, 32
+//!     iadd  r2, r0, r1
+//!     ld    r3, [r2]      ; shared-memory read
+//!     st    [r2], r3      ; blocking write
+//!     stnb  [r2], r3      ; non-blocking write
+//!     bnz   r4, start     ; uniform branch (label or absolute pc)
+//!     halt
+//! ```
+//!
+//! Immediates accept decimal, hex (`0x..`), binary (`0b..`) and `'-'`
+//! (encoded two's-complement into 16 bits).
+
+use super::inst::{Instruction, NUM_REGS};
+use super::opcode::Opcode;
+use super::program::Program;
+use std::collections::HashMap;
+
+/// Assembly error with line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn err(line: usize, msg: impl Into<String>) -> AsmError {
+    AsmError { line, msg: msg.into() }
+}
+
+/// Strip comments, returning the code part of a line.
+fn strip_comment(line: &str) -> &str {
+    let cut = line.find([';', '#']).unwrap_or(line.len());
+    line[..cut].trim()
+}
+
+/// Parse `rN`.
+fn parse_reg(tok: &str, line: usize) -> Result<u8, AsmError> {
+    let t = tok.trim();
+    let body = t
+        .strip_prefix('r')
+        .or_else(|| t.strip_prefix('R'))
+        .ok_or_else(|| err(line, format!("expected register, got '{t}'")))?;
+    let n: usize = body
+        .parse()
+        .map_err(|_| err(line, format!("bad register '{t}'")))?;
+    if n >= NUM_REGS {
+        return Err(err(line, format!("register r{n} out of range (0..{})", NUM_REGS - 1)));
+    }
+    Ok(n as u8)
+}
+
+/// Parse `[rN]`.
+fn parse_mem_reg(tok: &str, line: usize) -> Result<u8, AsmError> {
+    let t = tok.trim();
+    let inner = t
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| err(line, format!("expected [rN], got '{t}'")))?;
+    parse_reg(inner, line)
+}
+
+/// Parse an immediate (decimal/hex/binary, optionally negative).
+fn parse_imm(tok: &str, line: usize) -> Result<u16, AsmError> {
+    let t = tok.trim();
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, t),
+    };
+    let v: i64 = if let Some(h) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        i64::from_str_radix(h, 16).map_err(|_| err(line, format!("bad immediate '{tok}'")))?
+    } else if let Some(b) = t.strip_prefix("0b").or_else(|| t.strip_prefix("0B")) {
+        i64::from_str_radix(b, 2).map_err(|_| err(line, format!("bad immediate '{tok}'")))?
+    } else {
+        t.parse()
+            .map_err(|_| err(line, format!("bad immediate '{tok}'")))?
+    };
+    let v = if neg { -v } else { v };
+    if !(-(1 << 15)..(1 << 16)).contains(&v) {
+        return Err(err(line, format!("immediate {v} does not fit in 16 bits")));
+    }
+    Ok(v as u16)
+}
+
+/// Split an operand list on commas.
+fn operands(rest: &str) -> Vec<&str> {
+    if rest.trim().is_empty() {
+        vec![]
+    } else {
+        rest.split(',').map(str::trim).collect()
+    }
+}
+
+/// Assemble source text into a [`Program`].
+///
+/// Two passes: the first collects labels and directives; the second encodes
+/// instructions with labels resolved to absolute PCs.
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    let mut labels: HashMap<String, u16> = HashMap::new();
+    let mut name = String::from("program");
+    let mut threads: Option<u32> = None;
+
+    // Pass 1: labels + directives.
+    let mut pc: u16 = 0;
+    for (ln, raw) in src.lines().enumerate() {
+        let line_no = ln + 1;
+        let mut code = strip_comment(raw);
+        if code.is_empty() {
+            continue;
+        }
+        // Labels (possibly followed by an instruction on the same line).
+        while let Some(colon) = code.find(':') {
+            let label = code[..colon].trim();
+            if label.is_empty() || label.contains(char::is_whitespace) {
+                return Err(err(line_no, format!("bad label '{label}'")));
+            }
+            if labels.insert(label.to_string(), pc).is_some() {
+                return Err(err(line_no, format!("duplicate label '{label}'")));
+            }
+            code = code[colon + 1..].trim();
+        }
+        if code.is_empty() {
+            continue;
+        }
+        if let Some(rest) = code.strip_prefix('.') {
+            let mut it = rest.split_whitespace();
+            match it.next() {
+                Some("name") => {
+                    name = it
+                        .next()
+                        .ok_or_else(|| err(line_no, ".name needs a value"))?
+                        .to_string();
+                }
+                Some("threads") => {
+                    let v: u32 = it
+                        .next()
+                        .ok_or_else(|| err(line_no, ".threads needs a value"))?
+                        .parse()
+                        .map_err(|_| err(line_no, "bad .threads value"))?;
+                    threads = Some(v);
+                }
+                Some(d) => return Err(err(line_no, format!("unknown directive '.{d}'"))),
+                None => return Err(err(line_no, "empty directive")),
+            }
+            continue;
+        }
+        pc = pc
+            .checked_add(1)
+            .ok_or_else(|| err(line_no, "program too long (max 65536 instructions)"))?;
+    }
+
+    let threads = threads.ok_or_else(|| err(0, "missing .threads directive"))?;
+
+    // Pass 2: encode.
+    let mut insts = Vec::with_capacity(pc as usize);
+    for (ln, raw) in src.lines().enumerate() {
+        let line_no = ln + 1;
+        let mut code = strip_comment(raw);
+        while let Some(colon) = code.find(':') {
+            code = code[colon + 1..].trim();
+        }
+        if code.is_empty() || code.starts_with('.') {
+            continue;
+        }
+        let (mn, rest) = match code.find(char::is_whitespace) {
+            Some(i) => (&code[..i], code[i..].trim()),
+            None => (code, ""),
+        };
+        let op: Opcode = mn
+            .to_ascii_lowercase()
+            .parse()
+            .map_err(|e: String| err(line_no, e))?;
+        let ops = operands(rest);
+        let imm_or_label = |tok: &str| -> Result<u16, AsmError> {
+            if let Some(&target) = labels.get(tok.trim()) {
+                Ok(target)
+            } else {
+                parse_imm(tok, line_no)
+            }
+        };
+        let need = |n: usize| -> Result<(), AsmError> {
+            if ops.len() == n {
+                Ok(())
+            } else {
+                Err(err(line_no, format!("{mn} expects {n} operand(s), got {}", ops.len())))
+            }
+        };
+        use Opcode::*;
+        let inst = match op {
+            Nop | Halt => {
+                need(0)?;
+                Instruction::z(op)
+            }
+            Tid => {
+                need(1)?;
+                Instruction::i(op, parse_reg(ops[0], line_no)?, 0, 0)
+            }
+            Jmp => {
+                need(1)?;
+                Instruction::i(op, 0, 0, imm_or_label(ops[0])?)
+            }
+            Bnz => {
+                need(2)?;
+                Instruction::i(op, parse_reg(ops[0], line_no)?, 0, imm_or_label(ops[1])?)
+            }
+            Ldi | Lui => {
+                need(2)?;
+                Instruction::i(op, parse_reg(ops[0], line_no)?, 0, parse_imm(ops[1], line_no)?)
+            }
+            Fneg | Itof => {
+                need(2)?;
+                Instruction::r(op, parse_reg(ops[0], line_no)?, parse_reg(ops[1], line_no)?, 0)
+            }
+            Ld => {
+                need(2)?;
+                Instruction::i(op, parse_reg(ops[0], line_no)?, parse_mem_reg(ops[1], line_no)?, 0)
+            }
+            St | Stnb => {
+                need(2)?;
+                Instruction::r(op, 0, parse_mem_reg(ops[0], line_no)?, parse_reg(ops[1], line_no)?)
+            }
+            Iaddi | Imuli | Iandi | Iori | Ixori | Ishli | Ishri => {
+                need(3)?;
+                Instruction::i(
+                    op,
+                    parse_reg(ops[0], line_no)?,
+                    parse_reg(ops[1], line_no)?,
+                    parse_imm(ops[2], line_no)?,
+                )
+            }
+            _ => {
+                need(3)?;
+                Instruction::r(
+                    op,
+                    parse_reg(ops[0], line_no)?,
+                    parse_reg(ops[1], line_no)?,
+                    parse_reg(ops[2], line_no)?,
+                )
+            }
+        };
+        insts.push(inst);
+    }
+
+    Ok(Program::new(name, threads, insts))
+}
+
+/// Disassemble a program back to source text that `assemble` accepts
+/// (round-trip tested).
+pub fn disassemble(p: &Program) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(".name {}\n.threads {}\n\n", p.name, p.threads));
+    for inst in &p.insts {
+        out.push_str("    ");
+        out.push_str(&inst.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::XorShift64;
+
+    const SAMPLE: &str = r#"
+.name sample
+.threads 64
+; add tid to a constant, read and write back
+start:
+    tid   r0
+    ldi   r1, 0x20
+    iadd  r2, r0, r1
+    ld    r3, [r2]
+    st    [r2], r3
+    stnb  [r2], r3
+    bnz   r3, start
+    halt
+"#;
+
+    #[test]
+    fn assembles_sample() {
+        let p = assemble(SAMPLE).unwrap();
+        assert_eq!(p.name, "sample");
+        assert_eq!(p.threads, 64);
+        assert_eq!(p.insts.len(), 8);
+        assert_eq!(p.insts[1], Instruction::i(Opcode::Ldi, 1, 0, 32));
+        // bnz target resolves to pc 0 (the 'start' label).
+        assert_eq!(p.insts[6], Instruction::i(Opcode::Bnz, 3, 0, 0));
+    }
+
+    #[test]
+    fn disassemble_roundtrip_sample() {
+        let p = assemble(SAMPLE).unwrap();
+        let q = assemble(&disassemble(&p)).unwrap();
+        assert_eq!(p.insts, q.insts);
+        assert_eq!(p.threads, q.threads);
+        assert_eq!(p.name, q.name);
+    }
+
+    #[test]
+    fn disassemble_roundtrip_random_programs() {
+        check("asm/disasm roundtrip", 200, |rng: &mut XorShift64| {
+            let n = 1 + rng.below(50) as usize;
+            let mut insts = Vec::new();
+            for _ in 0..n {
+                let op = Opcode::ALL[rng.below(Opcode::ALL.len() as u32) as usize];
+                let r = |rng: &mut XorShift64| rng.below(64) as u8;
+                // Canonical operand forms: fields an instruction's
+                // assembler syntax does not carry stay zero (exactly what
+                // the assembler itself would emit).
+                let inst = match op {
+                    Opcode::Nop | Opcode::Halt => Instruction::z(op),
+                    Opcode::Tid => Instruction::i(op, r(rng), 0, 0),
+                    Opcode::Jmp => Instruction::i(op, 0, 0, rng.below(n as u32) as u16),
+                    Opcode::Bnz => Instruction::i(op, r(rng), 0, rng.below(n as u32) as u16),
+                    Opcode::Ldi | Opcode::Lui => Instruction::i(op, r(rng), 0, rng.next_u32() as u16),
+                    Opcode::Fneg | Opcode::Itof => Instruction::r(op, r(rng), r(rng), 0),
+                    Opcode::Ld => Instruction::i(op, r(rng), r(rng), 0),
+                    Opcode::St | Opcode::Stnb => Instruction::r(op, 0, r(rng), r(rng)),
+                    _ if Instruction::is_i_format(op) => {
+                        Instruction::i(op, r(rng), r(rng), rng.next_u32() as u16)
+                    }
+                    _ => Instruction::r(op, r(rng), r(rng), r(rng)),
+                };
+                insts.push(inst);
+            }
+            let p = Program::new("fuzz", 16, insts);
+            let q = assemble(&disassemble(&p)).expect("disassembly must re-assemble");
+            assert_eq!(p.insts, q.insts);
+        });
+    }
+
+    #[test]
+    fn missing_threads_is_error() {
+        let e = assemble("halt\n").unwrap_err();
+        assert!(e.msg.contains(".threads"));
+    }
+
+    #[test]
+    fn duplicate_label_is_error() {
+        let e = assemble(".threads 1\na:\na:\nhalt\n").unwrap_err();
+        assert!(e.msg.contains("duplicate label"));
+    }
+
+    #[test]
+    fn unknown_mnemonic_reports_line() {
+        let e = assemble(".threads 1\n\nfrob r1\n").unwrap_err();
+        assert_eq!(e.line, 3);
+    }
+
+    #[test]
+    fn register_out_of_range() {
+        let e = assemble(".threads 1\nldi r64, 0\n").unwrap_err();
+        assert!(e.msg.contains("out of range"));
+    }
+
+    #[test]
+    fn operand_count_checked() {
+        let e = assemble(".threads 1\niadd r1, r2\n").unwrap_err();
+        assert!(e.msg.contains("expects 3"));
+    }
+
+    #[test]
+    fn negative_and_binary_immediates() {
+        let p = assemble(".threads 1\niaddi r1, r1, -1\nldi r2, 0b101\nhalt\n").unwrap();
+        assert_eq!(p.insts[0].imm, 0xFFFF);
+        assert_eq!(p.insts[1].imm, 5);
+    }
+
+    #[test]
+    fn label_and_inst_same_line() {
+        let p = assemble(".threads 1\nstart: halt\n").unwrap();
+        assert_eq!(p.insts.len(), 1);
+    }
+
+    #[test]
+    fn hash_comments_accepted() {
+        let p = assemble(".threads 1\nhalt # trailing\n").unwrap();
+        assert_eq!(p.insts.len(), 1);
+    }
+}

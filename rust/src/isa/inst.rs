@@ -1,0 +1,169 @@
+//! Instruction representation and 40-bit binary encoding (stored in u64).
+//!
+//! Encoding layout:
+//!
+//! ```text
+//! 39        34 33   28 27   22 21    16 15        0
+//! +-----------+-------+-------+--------+-----------+
+//! |  opcode   |  rd   |  ra   |   rb   | (unused)  |   R-format
+//! +-----------+-------+-------+--------+-----------+
+//! |  opcode   |  rd   |  ra   |  (0)   |   imm16   |   I-format
+//! +-----------+-------+-------+--------+-----------+
+//! ```
+//!
+//! `Jmp`/`Bnz` store the (absolute) target PC in the imm16 field.
+
+use super::opcode::Opcode;
+use std::fmt;
+
+/// Number of architectural registers per thread. The paper's SP carries
+/// two M20Ks of register file (Table I); at 16 resident threads per SP
+/// that is 64 registers per thread — enough to keep a radix-16 butterfly
+/// (16 complex points) entirely in registers, as the paper's FFT
+/// load/store counts imply.
+pub const NUM_REGS: usize = 64;
+
+/// A decoded instruction. `rd`/`ra`/`rb` index the per-thread register
+/// file; `imm` is a zero-extended 16-bit immediate (or branch target).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instruction {
+    pub op: Opcode,
+    pub rd: u8,
+    pub ra: u8,
+    pub rb: u8,
+    pub imm: u16,
+}
+
+impl Instruction {
+    /// R-format constructor.
+    pub fn r(op: Opcode, rd: u8, ra: u8, rb: u8) -> Self {
+        Self { op, rd, ra, rb, imm: 0 }
+    }
+
+    /// I-format constructor.
+    pub fn i(op: Opcode, rd: u8, ra: u8, imm: u16) -> Self {
+        Self { op, rd, ra, rb: 0, imm }
+    }
+
+    /// Zero-operand constructor (`nop`, `halt`).
+    pub fn z(op: Opcode) -> Self {
+        Self { op, rd: 0, ra: 0, rb: 0, imm: 0 }
+    }
+
+    /// Whether this opcode uses the imm16 field (I-format).
+    pub fn is_i_format(op: Opcode) -> bool {
+        use Opcode::*;
+        matches!(
+            op,
+            Iaddi | Imuli | Iandi | Iori | Ixori | Ishli | Ishri | Ldi | Lui | Jmp | Bnz
+        )
+    }
+
+    /// Encode to the 40-bit binary word (in a u64).
+    pub fn encode(&self) -> u64 {
+        assert!((self.rd as usize) < NUM_REGS, "rd out of range");
+        assert!((self.ra as usize) < NUM_REGS, "ra out of range");
+        assert!((self.rb as usize) < NUM_REGS, "rb out of range");
+        let mut w = (self.op.code() as u64) << 34;
+        w |= (self.rd as u64) << 28;
+        w |= (self.ra as u64) << 22;
+        if Self::is_i_format(self.op) {
+            w |= self.imm as u64;
+        } else {
+            w |= (self.rb as u64) << 16;
+        }
+        w
+    }
+
+    /// Decode a 40-bit word. Returns `None` for an invalid opcode field or
+    /// set bits above bit 39.
+    pub fn decode(w: u64) -> Option<Self> {
+        if w >> 40 != 0 {
+            return None;
+        }
+        let op = Opcode::from_code((w >> 34) as u8)?;
+        let rd = ((w >> 28) & 0x3F) as u8;
+        let ra = ((w >> 22) & 0x3F) as u8;
+        if Self::is_i_format(op) {
+            Some(Self { op, rd, ra, rb: 0, imm: (w & 0xFFFF) as u16 })
+        } else {
+            Some(Self { op, rd, ra, rb: ((w >> 16) & 0x3F) as u8, imm: 0 })
+        }
+    }
+}
+
+impl fmt::Display for Instruction {
+    /// Assembler syntax, e.g. `iadd r2, r0, r1` / `ldi r1, 32` /
+    /// `ld r3, [r2]` / `st [r4], r3`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use Opcode::*;
+        let m = self.op.mnemonic();
+        match self.op {
+            Nop | Halt => write!(f, "{m}"),
+            Jmp => write!(f, "{m} {}", self.imm),
+            Bnz => write!(f, "{m} r{}, {}", self.rd, self.imm),
+            Tid => write!(f, "{m} r{}", self.rd),
+            Fneg | Itof => write!(f, "{m} r{}, r{}", self.rd, self.ra),
+            Ldi | Lui => write!(f, "{m} r{}, {}", self.rd, self.imm),
+            Ld => write!(f, "{m} r{}, [r{}]", self.rd, self.ra),
+            St | Stnb => write!(f, "{m} [r{}], r{}", self.ra, self.rb),
+            _ if Instruction::is_i_format(self.op) => {
+                write!(f, "{m} r{}, r{}, {}", self.rd, self.ra, self.imm)
+            }
+            _ => write!(f, "{m} r{}, r{}, r{}", self.rd, self.ra, self.rb),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::XorShift64;
+
+    fn random_inst(rng: &mut XorShift64) -> Instruction {
+        let op = Opcode::ALL[rng.below(Opcode::ALL.len() as u32) as usize];
+        if Instruction::is_i_format(op) {
+            Instruction::i(op, rng.below(64) as u8, rng.below(64) as u8, rng.next_u32() as u16)
+        } else {
+            Instruction::r(op, rng.below(64) as u8, rng.below(64) as u8, rng.below(64) as u8)
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_property() {
+        check("inst encode/decode roundtrip", 2000, |rng| {
+            let inst = random_inst(rng);
+            let decoded = Instruction::decode(inst.encode()).expect("valid encoding");
+            assert_eq!(decoded, inst);
+        });
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Instruction::r(Opcode::Iadd, 2, 0, 1).to_string(), "iadd r2, r0, r1");
+        assert_eq!(Instruction::i(Opcode::Ldi, 1, 0, 32).to_string(), "ldi r1, 32");
+        assert_eq!(Instruction::i(Opcode::Ld, 3, 2, 0).to_string(), "ld r3, [r2]");
+        assert_eq!(Instruction::r(Opcode::St, 0, 4, 3).to_string(), "st [r4], r3");
+        assert_eq!(Instruction::z(Opcode::Halt).to_string(), "halt");
+        assert_eq!(Instruction::i(Opcode::Tid, 5, 0, 0).to_string(), "tid r5");
+    }
+
+    #[test]
+    fn invalid_opcode_field_decodes_none() {
+        assert_eq!(Instruction::decode(63u64 << 34), None);
+        assert_eq!(Instruction::decode(1u64 << 40), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "rd out of range")]
+    fn encode_checks_register_range() {
+        Instruction { op: Opcode::Iadd, rd: 64, ra: 0, rb: 0, imm: 0 }.encode();
+    }
+
+    #[test]
+    fn imm_survives_full_16_bits() {
+        let i = Instruction::i(Opcode::Ldi, 0, 0, 0xFFFF);
+        assert_eq!(Instruction::decode(i.encode()).unwrap().imm, 0xFFFF);
+    }
+}

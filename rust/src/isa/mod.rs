@@ -1,0 +1,26 @@
+//! The soft SIMT processor's instruction set.
+//!
+//! The paper's benchmarks are "written in assembler" for the eGPU, whose
+//! ISA is not published in full; this module defines a faithful-in-spirit
+//! SIMT ISA with the features the paper's programs need and the cycle
+//! classes its tables report:
+//!
+//! | Table row        | Instruction class                    |
+//! |------------------|--------------------------------------|
+//! | `INT OPs`        | register-register integer ALU        |
+//! | `Immediate OPs`  | any op carrying an immediate operand |
+//! | `FP OPs`         | IEEE-754 single-precision ALU        |
+//! | `Other OPs`      | TID/NOP/HALT/uniform control flow    |
+//! | `Load/Store`     | shared-memory LD / ST / STNB         |
+//!
+//! Sixteen lanes execute each instruction for every thread in the block
+//! (threads/16 *operations* per instruction); see [`crate::sim`].
+
+pub mod asm;
+pub mod inst;
+pub mod opcode;
+pub mod program;
+
+pub use inst::Instruction;
+pub use opcode::{OpClass, Opcode};
+pub use program::Program;

@@ -1,0 +1,236 @@
+//! Opcode definitions and their cycle-accounting classes.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Cycle-accounting class, matching the "Common Ops" rows of the paper's
+/// Tables II and III.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Register-register integer ALU ("INT OPs").
+    Int,
+    /// Ops carrying an immediate operand ("Immediate OPs").
+    Imm,
+    /// IEEE-754 FP32 ALU ("FP OPs").
+    Fp,
+    /// Control / miscellaneous ("Other OPs").
+    Other,
+    /// Shared-memory read.
+    Load,
+    /// Shared-memory write (blocking or non-blocking).
+    Store,
+}
+
+/// Every instruction the soft SIMT core executes.
+///
+/// Format legend: `R` = rd,ra,rb · `RI` = rd,ra,imm16 · `DI` = rd,imm16 ·
+/// `D` = rd · `M` = memory · `J` = label/none.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    // -- integer register-register (class Int) --
+    /// rd = ra + rb
+    Iadd,
+    /// rd = ra - rb
+    Isub,
+    /// rd = ra * rb (low 32 bits)
+    Imul,
+    /// rd = ra & rb
+    Iand,
+    /// rd = ra | rb
+    Ior,
+    /// rd = ra ^ rb
+    Ixor,
+    /// rd = ra << (rb & 31)
+    Ishl,
+    /// rd = ra >> (rb & 31) (logical)
+    Ishr,
+    // -- integer immediate (class Imm) --
+    /// rd = ra + imm
+    Iaddi,
+    /// rd = ra * imm
+    Imuli,
+    /// rd = ra & imm
+    Iandi,
+    /// rd = ra | imm
+    Iori,
+    /// rd = ra ^ imm
+    Ixori,
+    /// rd = ra << imm
+    Ishli,
+    /// rd = ra >> imm (logical)
+    Ishri,
+    /// rd = imm (zero-extended)
+    Ldi,
+    /// rd = imm << 16 | (rd & 0xFFFF) — builds 32-bit constants with Ldi
+    Lui,
+    // -- floating point (class Fp) --
+    /// rd = ra + rb
+    Fadd,
+    /// rd = ra - rb
+    Fsub,
+    /// rd = ra * rb
+    Fmul,
+    /// rd = rd + ra * rb (fused)
+    Fma,
+    /// rd = -ra
+    Fneg,
+    /// rd = f32(int(ra)) — int-to-float convert
+    Itof,
+    // -- memory (classes Load / Store) --
+    /// rd = shared[ra]
+    Ld,
+    /// shared[ra] = rb, blocking (pipeline held until the write drains)
+    St,
+    /// shared[ra] = rb, non-blocking (pipeline continues after issue)
+    Stnb,
+    // -- control / misc (class Other) --
+    /// rd = thread id
+    Tid,
+    /// no-op
+    Nop,
+    /// stop the block
+    Halt,
+    /// uniform unconditional jump
+    Jmp,
+    /// uniform branch if rd != 0 (must be uniform across threads)
+    Bnz,
+}
+
+impl Opcode {
+    /// The cycle-accounting class of this opcode.
+    pub fn class(self) -> OpClass {
+        use Opcode::*;
+        match self {
+            Iadd | Isub | Imul | Iand | Ior | Ixor | Ishl | Ishr => OpClass::Int,
+            Iaddi | Imuli | Iandi | Iori | Ixori | Ishli | Ishri | Ldi | Lui => OpClass::Imm,
+            Fadd | Fsub | Fmul | Fma | Fneg | Itof => OpClass::Fp,
+            Ld => OpClass::Load,
+            St | Stnb => OpClass::Store,
+            Tid | Nop | Halt | Jmp | Bnz => OpClass::Other,
+        }
+    }
+
+    /// Mnemonic in assembler syntax.
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Iadd => "iadd",
+            Isub => "isub",
+            Imul => "imul",
+            Iand => "iand",
+            Ior => "ior",
+            Ixor => "ixor",
+            Ishl => "ishl",
+            Ishr => "ishr",
+            Iaddi => "iaddi",
+            Imuli => "imuli",
+            Iandi => "iandi",
+            Iori => "iori",
+            Ixori => "ixori",
+            Ishli => "ishli",
+            Ishri => "ishri",
+            Ldi => "ldi",
+            Lui => "lui",
+            Fadd => "fadd",
+            Fsub => "fsub",
+            Fmul => "fmul",
+            Fma => "fma",
+            Fneg => "fneg",
+            Itof => "itof",
+            Ld => "ld",
+            St => "st",
+            Stnb => "stnb",
+            Tid => "tid",
+            Nop => "nop",
+            Halt => "halt",
+            Jmp => "jmp",
+            Bnz => "bnz",
+        }
+    }
+
+    /// All opcodes, for exhaustive tests and the assembler's mnemonic map.
+    pub const ALL: [Opcode; 31] = {
+        use Opcode::*;
+        [
+            Iadd, Isub, Imul, Iand, Ior, Ixor, Ishl, Ishr, Iaddi, Imuli, Iandi, Iori, Ixori,
+            Ishli, Ishri, Ldi, Lui, Fadd, Fsub, Fmul, Fma, Fneg, Itof, Ld, St, Stnb, Tid, Nop,
+            Halt, Jmp, Bnz,
+        ]
+    };
+
+    /// Numeric encoding (6-bit field).
+    pub fn code(self) -> u8 {
+        Self::ALL.iter().position(|&o| o == self).unwrap() as u8
+    }
+
+    /// Decode a 6-bit opcode field.
+    pub fn from_code(code: u8) -> Option<Opcode> {
+        Self::ALL.get(code as usize).copied()
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mnemonic())
+    }
+}
+
+impl FromStr for Opcode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Opcode::ALL
+            .iter()
+            .copied()
+            .find(|o| o.mnemonic() == s)
+            .ok_or_else(|| format!("unknown mnemonic '{s}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip() {
+        for op in Opcode::ALL {
+            assert_eq!(Opcode::from_code(op.code()), Some(op));
+        }
+    }
+
+    #[test]
+    fn mnemonics_roundtrip() {
+        for op in Opcode::ALL {
+            assert_eq!(op.mnemonic().parse::<Opcode>().unwrap(), op);
+        }
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for op in Opcode::ALL {
+            assert!(seen.insert(op.mnemonic()), "duplicate {op}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_code_is_none() {
+        assert_eq!(Opcode::from_code(63), None);
+    }
+
+    #[test]
+    fn classes_cover_paper_rows() {
+        use std::collections::HashSet;
+        let classes: HashSet<_> = Opcode::ALL.iter().map(|o| o.class()).collect();
+        assert!(classes.contains(&OpClass::Int));
+        assert!(classes.contains(&OpClass::Imm));
+        assert!(classes.contains(&OpClass::Fp));
+        assert!(classes.contains(&OpClass::Other));
+        assert!(classes.contains(&OpClass::Load));
+        assert!(classes.contains(&OpClass::Store));
+    }
+
+    #[test]
+    fn unknown_mnemonic_errors() {
+        assert!("frobnicate".parse::<Opcode>().is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! A program: instructions plus block metadata (thread count, name) and the
+//! cycle-class census the paper's "Common Ops" rows report.
+
+use super::inst::Instruction;
+use super::opcode::OpClass;
+use std::collections::BTreeMap;
+
+/// An assembled SIMT program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Human-readable name (appears in reports), e.g. `"transpose32"`.
+    pub name: String,
+    /// Number of threads in the block (the paper's examples use 256–4096).
+    pub threads: u32,
+    /// The instruction stream.
+    pub insts: Vec<Instruction>,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>, threads: u32, insts: Vec<Instruction>) -> Self {
+        assert!(threads > 0, "program needs at least one thread");
+        Self { name: name.into(), threads, insts }
+    }
+
+    /// Static census of instructions by cycle class (dynamic counts can
+    /// differ when the program branches; the simulator reports those).
+    pub fn static_census(&self) -> BTreeMap<&'static str, usize> {
+        let mut m = BTreeMap::new();
+        for inst in &self.insts {
+            let k = match inst.op.class() {
+                OpClass::Int => "int",
+                OpClass::Imm => "imm",
+                OpClass::Fp => "fp",
+                OpClass::Other => "other",
+                OpClass::Load => "load",
+                OpClass::Store => "store",
+            };
+            *m.entry(k).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Encode the whole program to binary words (the simulator decodes them
+    /// back — keeping encode/decode on the hot path honest).
+    pub fn encode(&self) -> Vec<u64> {
+        self.insts.iter().map(|i| i.encode()).collect()
+    }
+
+    /// Decode a binary image.
+    pub fn decode(name: impl Into<String>, threads: u32, words: &[u64]) -> Result<Self, String> {
+        let insts = words
+            .iter()
+            .enumerate()
+            .map(|(pc, &w)| {
+                Instruction::decode(w).ok_or_else(|| format!("invalid instruction at pc {pc}"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self::new(name, threads, insts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::opcode::Opcode;
+
+    fn tiny() -> Program {
+        Program::new(
+            "tiny",
+            16,
+            vec![
+                Instruction::i(Opcode::Tid, 0, 0, 0),
+                Instruction::i(Opcode::Ldi, 1, 0, 5),
+                Instruction::r(Opcode::Iadd, 2, 0, 1),
+                Instruction::i(Opcode::Ld, 3, 2, 0),
+                Instruction::z(Opcode::Halt),
+            ],
+        )
+    }
+
+    #[test]
+    fn census_counts_classes() {
+        let c = tiny().static_census();
+        assert_eq!(c["imm"], 1);
+        assert_eq!(c["int"], 1);
+        assert_eq!(c["load"], 1);
+        assert_eq!(c["other"], 2); // tid + halt
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let p = tiny();
+        let words = p.encode();
+        let q = Program::decode("tiny", p.threads, &words).unwrap();
+        assert_eq!(p.insts, q.insts);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Program::decode("bad", 16, &[u64::MAX]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one thread")]
+    fn zero_threads_rejected() {
+        Program::new("z", 0, vec![]);
+    }
+}

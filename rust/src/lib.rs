@@ -1,0 +1,76 @@
+//! # soft-simt — Banked Memories for Soft SIMT Processors
+//!
+//! A cycle-accurate reproduction of *"Banked Memories for Soft SIMT
+//! Processors"* (Langhammer & Constantinides, CS.AR 2025): a 16-lane soft
+//! SIMT (GPGPU-like) processor with nine interchangeable shared-memory
+//! architectures — multi-port (4R-1W, 4R-2W, 4R-1W-VB) and banked
+//! (4/8/16 banks, LSB and Offset mappings) — plus the paper's benchmark
+//! programs (matrix transposes and 4096-point Cooley–Tukey FFTs), area and
+//! footprint models, and report generators that regenerate every table and
+//! figure in the paper's evaluation.
+//!
+//! The original artifact is an FPGA bitstream; this library substitutes a
+//! bit-faithful simulator (see `DESIGN.md §0`). Functional results of
+//! simulated programs are validated against JAX/Pallas golden models that
+//! are AOT-compiled to HLO and executed from Rust through PJRT
+//! ([`runtime`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use soft_simt::prelude::*;
+//!
+//! // Build a 16-bank, offset-mapped machine and run a 32x32 transpose.
+//! let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Offset };
+//! let program = transpose_program(32);
+//! let mut machine = Machine::new(MachineConfig::for_arch(arch));
+//! let report = machine.run_program(&program).unwrap();
+//! println!("total cycles: {}", report.total_cycles());
+//! ```
+//!
+//! ## Layer map (see DESIGN.md)
+//!
+//! - **L3 (this crate)**: simulator, memories, programs, coordinator, CLI.
+//! - **L2/L1 (python/compile, build-time only)**: JAX model + Pallas
+//!   kernels, lowered to `artifacts/*.hlo.txt`.
+//! - **bridge** ([`runtime`]): PJRT loads the artifacts for golden
+//!   validation and the analytical timing oracle.
+
+pub mod area;
+pub mod benchkit;
+pub mod coordinator;
+pub mod isa;
+pub mod mem;
+pub mod programs;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::area::{footprint::Footprint, resources::Resources, table1};
+    pub use crate::coordinator::{
+        job::{BenchJob, BenchResult},
+        report,
+        runner::SweepRunner,
+    };
+    pub use crate::isa::{
+        asm::{assemble, disassemble},
+        inst::Instruction,
+        opcode::Opcode,
+        program::Program,
+    };
+    pub use crate::mem::{
+        arch::{MemoryArchKind, SharedMemory},
+        mapping::BankMapping,
+    };
+    pub use crate::programs::{
+        fft::{fft_program, FftPlan},
+        transpose::transpose_program,
+    };
+    pub use crate::sim::{
+        config::MachineConfig,
+        machine::Machine,
+        stats::{CycleStats, RunReport},
+    };
+}

@@ -1,0 +1,298 @@
+//! `soft-simt` — CLI for the Banked-Memories-for-Soft-SIMT reproduction.
+//!
+//! ```text
+//! soft-simt table1                  # Table I  (resources + Fmax model)
+//! soft-simt table2                  # Table II (transpose profiling)
+//! soft-simt table3                  # Table III (FFT profiling)
+//! soft-simt fig9                    # Fig. 9   (cost vs performance)
+//! soft-simt sweep [--csv PATH]      # all 51 cells, text + optional CSV
+//! soft-simt run -p PROG -m MEM      # one cell, full report
+//! soft-simt validate [--artifacts DIR]   # golden validation suite
+//! soft-simt asm FILE [-m MEM]       # assemble + run a custom program
+//! soft-simt disasm PROG             # disassemble a generated program
+//! soft-simt list                    # programs and memory architectures
+//! ```
+//!
+//! (clap is unavailable offline; parsing is hand-rolled.)
+
+use soft_simt::coordinator::{job::BenchJob, report, runner::SweepRunner, validate};
+use soft_simt::isa::asm;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::programs::library;
+use soft_simt::runtime::ArtifactRuntime;
+use soft_simt::sim::config::MachineConfig;
+use soft_simt::sim::machine::Machine;
+use soft_simt::sim::stats::RunReport;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("table1") => cmd_table1(),
+        Some("table2") => cmd_table("table2", &args[1..]),
+        Some("table3") => cmd_table("table3", &args[1..]),
+        Some("fig9") => cmd_table("fig9", &args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("advise") => cmd_advise(&args[1..]),
+        Some("validate") => cmd_validate(&args[1..]),
+        Some("asm") => cmd_asm(&args[1..]),
+        Some("disasm") => cmd_disasm(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{HELP}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+soft-simt — Banked Memories for Soft SIMT Processors (reproduction)
+
+USAGE:
+  soft-simt table1                      print Table I (resources, Fmax model)
+  soft-simt table2                      run the transpose sweep, print Table II
+  soft-simt table3                      run the FFT sweep, print Table III
+  soft-simt fig9                        print Fig. 9 (cost vs performance)
+  soft-simt sweep [--csv PATH]          run all 51 cells; optionally write CSV
+  soft-simt run -p PROG -m MEM          run one benchmark cell
+  soft-simt advise -p PROG              rank every memory for a workload
+  soft-simt validate [--artifacts DIR]  golden validation (PJRT when built)
+  soft-simt asm FILE [-m MEM]           assemble and run a custom .asm file
+  soft-simt disasm PROG                 print a generated program's assembly
+  soft-simt list                        list programs and memory architectures
+";
+
+fn flag_value<'a>(args: &'a [String], names: &[&str]) -> Option<&'a str> {
+    args.windows(2)
+        .find(|w| names.contains(&w[0].as_str()))
+        .map(|w| w[1].as_str())
+}
+
+fn parse_arch(s: &str) -> Result<MemoryArchKind, String> {
+    MemoryArchKind::parse(s).ok_or_else(|| {
+        format!(
+            "unknown memory '{s}' (try one of: {})",
+            MemoryArchKind::table3_nine()
+                .iter()
+                .map(|a| a.label())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })
+}
+
+fn run_sweep(jobs: &[BenchJob]) -> Option<Vec<soft_simt::coordinator::job::BenchResult>> {
+    let runner = SweepRunner::default();
+    eprintln!("running {} benchmark cells on {} workers...", jobs.len(), runner.workers());
+    match runner.run(jobs) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            None
+        }
+    }
+}
+
+fn cmd_table1() -> i32 {
+    print!("{}", report::render_table1());
+    0
+}
+
+fn cmd_table(which: &str, _rest: &[String]) -> i32 {
+    let jobs = BenchJob::paper_sweep();
+    let Some(results) = run_sweep(&jobs) else { return 1 };
+    match which {
+        "table2" => print!("{}", report::render_table2(&results)),
+        "table3" => print!("{}", report::render_table3(&results)),
+        _ => print!("{}", report::render_fig9(&results)),
+    }
+    0
+}
+
+fn cmd_sweep(rest: &[String]) -> i32 {
+    let jobs = BenchJob::paper_sweep();
+    let Some(results) = run_sweep(&jobs) else { return 1 };
+    print!("{}", report::render_table2(&results));
+    print!("{}", report::render_table3(&results));
+    print!("{}", report::render_fig9(&results));
+    if let Some(path) = flag_value(rest, &["--csv"]) {
+        if let Err(e) = std::fs::write(path, report::sweep_csv(&results)) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("wrote {path}");
+    }
+    0
+}
+
+fn print_report(r: &RunReport) {
+    let s = &r.stats;
+    println!("program      {}", r.program);
+    println!("memory       {}", r.arch);
+    println!("threads      {}", r.threads);
+    println!(
+        "INT / Imm / FP / Other cycles: {} / {} / {} / {}",
+        s.int_cycles, s.imm_cycles, s.fp_cycles, s.other_cycles
+    );
+    println!("D load   {} cycles over {} ops", s.d_load_cycles, s.d_load_ops);
+    if s.tw_load_ops > 0 {
+        println!("TW load  {} cycles over {} ops", s.tw_load_cycles, s.tw_load_ops);
+    }
+    println!("store    {} cycles over {} ops", s.store_cycles, s.store_ops);
+    println!("stalls   write-buffer {} / drain {}", s.wbuf_stall_cycles, s.drain_cycles);
+    println!(
+        "total    {} cycles  ({:.2} us @ {:.0} MHz)",
+        r.total_cycles(),
+        r.time_us(),
+        r.arch.fmax_mhz()
+    );
+    if let Some(e) = r.r_bank_eff() {
+        println!("R bank eff.  {:.1}%", e * 100.0);
+    }
+    if let Some(e) = r.tw_bank_eff() {
+        println!("TW bank eff. {:.1}%", e * 100.0);
+    }
+    if let Some(e) = r.w_bank_eff() {
+        println!("W bank eff.  {:.1}%", e * 100.0);
+    }
+    println!("compute eff. {:.1}%", r.compute_efficiency() * 100.0);
+}
+
+fn cmd_run(rest: &[String]) -> i32 {
+    let Some(program) = flag_value(rest, &["-p", "--program"]) else {
+        eprintln!("run: missing -p PROGRAM");
+        return 2;
+    };
+    let arch = match parse_arch(flag_value(rest, &["-m", "--mem"]).unwrap_or("16-banks-offset")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match BenchJob::new(program, arch).run() {
+        Ok(result) => {
+            print_report(&result.report);
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_advise(rest: &[String]) -> i32 {
+    let Some(program) = flag_value(rest, &["-p", "--program"]) else {
+        eprintln!("advise: missing -p PROGRAM");
+        return 2;
+    };
+    match soft_simt::coordinator::advisor::advise(program) {
+        Ok(advice) => {
+            print!("{}", advice.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("advise failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_validate(rest: &[String]) -> i32 {
+    let dir = flag_value(rest, &["--artifacts"]).unwrap_or("artifacts");
+    let rt = match ArtifactRuntime::new(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e:#}); validating against host references only");
+            None
+        }
+    };
+    let checks = validate::validate_all(rt.as_ref());
+    let mut failed = 0;
+    for c in &checks {
+        println!("[{}] {} — {}", if c.passed { "PASS" } else { "FAIL" }, c.name, c.detail);
+        if !c.passed {
+            failed += 1;
+        }
+    }
+    println!("\n{} checks, {} failed", checks.len(), failed);
+    if failed > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_asm(rest: &[String]) -> i32 {
+    let Some(path) = rest.first() else {
+        eprintln!("asm: missing FILE");
+        return 2;
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    let program = match asm::assemble(&src) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{path}: {e}");
+            return 1;
+        }
+    };
+    let arch = match parse_arch(flag_value(rest, &["-m", "--mem"]).unwrap_or("16-banks")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut machine = Machine::new(MachineConfig::for_arch(arch));
+    match machine.run_program(&program) {
+        Ok(report) => {
+            print_report(&report);
+            0
+        }
+        Err(e) => {
+            eprintln!("simulation failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_disasm(rest: &[String]) -> i32 {
+    let Some(name) = rest.first() else {
+        eprintln!("disasm: missing PROGRAM name");
+        return 2;
+    };
+    match library::program_by_name(name) {
+        Some(w) => {
+            print!("{}", asm::disassemble(w.program()));
+            0
+        }
+        None => {
+            eprintln!("unknown program '{name}' (see `soft-simt list`)");
+            1
+        }
+    }
+}
+
+fn cmd_list() -> i32 {
+    println!("programs:");
+    for p in library::program_names() {
+        println!("  {p}");
+    }
+    println!("\nmemory architectures:");
+    for a in MemoryArchKind::table3_nine() {
+        println!("  {}  (fmax {:.0} MHz)", a.label(), a.fmax_mhz());
+    }
+    0
+}

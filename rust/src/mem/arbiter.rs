@@ -1,0 +1,226 @@
+//! Carry-chain based arbitration (paper §III-C, Figs. 5 and 6).
+//!
+//! Each bank has an arbiter. A vector defining the accesses to that bank is
+//! loaded ('1' = the lane uses this bank). Every cycle the circuit
+//! subtracts one from the current value — on an FPGA this rides the ALM
+//! carry chain — which flips the rightmost '1' to '0' *and* erroneously
+//! re-asserts all lower bits. Transition detection repairs the state:
+//! any 0→1 transition is zeroed, and the single 1→0 transition is emitted
+//! as the one-hot grant (the bank↔lane mux control for that cycle).
+//!
+//! [`CarryChainArbiter`] simulates exactly that structure; the property
+//! tests pin it against the closed form (isolate-lowest-set-bit) and
+//! against the paper's worked example in Fig. 6.
+
+use super::LaneMask;
+
+/// Bit-exact model of the carry-chain arbiter circuit of Fig. 5.
+#[derive(Debug, Clone)]
+pub struct CarryChainArbiter {
+    /// Current lane-marker vector (the register in Fig. 5).
+    state: LaneMask,
+}
+
+impl CarryChainArbiter {
+    /// Load the access vector for this bank (one column of the one-hot
+    /// bank matrix).
+    pub fn load(column: LaneMask) -> Self {
+        Self { state: column }
+    }
+
+    /// Remaining requests.
+    pub fn pending(&self) -> LaneMask {
+        self.state
+    }
+
+    /// True when every request has been granted.
+    pub fn done(&self) -> bool {
+        self.state == 0
+    }
+
+    /// One clock cycle: returns the one-hot grant (`None` when idle —
+    /// this bank is not used by the operation).
+    ///
+    /// Implemented exactly as the hardware: subtract one, detect the 1→0
+    /// transition (grant), zero the 0→1 re-assertion errors.
+    pub fn step(&mut self) -> Option<LaneMask> {
+        if self.state == 0 {
+            return None;
+        }
+        let v = self.state;
+        let sub = v.wrapping_sub(1);
+        // 1→0 transition: was set, now clear — the active lane.
+        let grant = v & !sub;
+        // 0→1 transitions (re-assertion errors) are zeroed; surviving
+        // bits are those set both before and after the subtract.
+        self.state = v & sub;
+        debug_assert!(grant != 0 && grant & (grant - 1) == 0, "grant must be one-hot");
+        Some(grant)
+    }
+
+    /// Run to completion, returning the grant sequence (used by tests and
+    /// the example walkthrough; the simulator steps cycle by cycle).
+    pub fn run(mut self) -> Vec<LaneMask> {
+        let mut grants = Vec::with_capacity(self.state.count_ones() as usize);
+        while let Some(g) = self.step() {
+            grants.push(g);
+        }
+        grants
+    }
+}
+
+/// The whole arbitration stage of Fig. 3: one arbiter per bank, stepped in
+/// lock-step. Produces, per cycle, the bank→lane mux controls; the output
+/// mux controls are the delayed transpose of the same matrix.
+#[derive(Debug, Clone)]
+pub struct BankArbiters {
+    arbiters: Vec<CarryChainArbiter>,
+}
+
+impl BankArbiters {
+    /// Load one arbiter per bank from the one-hot matrix columns.
+    pub fn load(columns: &[LaneMask]) -> Self {
+        Self {
+            arbiters: columns.iter().map(|&c| CarryChainArbiter::load(c)).collect(),
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.arbiters.iter().all(CarryChainArbiter::done)
+    }
+
+    /// One clock: `grants[b]` = one-hot lane granted at bank `b` (0 if
+    /// idle). On any given cycle there is only one mapping from any
+    /// individual memory bank to any individual lane.
+    pub fn step(&mut self) -> Vec<LaneMask> {
+        self.arbiters
+            .iter_mut()
+            .map(|a| a.step().unwrap_or(0))
+            .collect()
+    }
+
+    /// Run all banks to completion; returns the cycle-by-cycle grant
+    /// matrix (`schedule[cycle][bank]`).
+    pub fn run(mut self) -> Vec<Vec<LaneMask>> {
+        let mut schedule = Vec::new();
+        while !self.done() {
+            schedule.push(self.step());
+        }
+        schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::conflict::analyze;
+    use crate::mem::mapping::{BankMap, BankMapping};
+    use crate::mem::LANES;
+    use crate::util::bits::lowest_set_bit;
+    use crate::util::proptest::check;
+
+    /// Paper Fig. 6: bank 1 of the Fig. 4 example is requested by lanes
+    /// 1, 2 and 4 (vector 00010110). The grant sequence is lane 1, then
+    /// lane 2, then lane 4 — three cycles, matching the stored conflict
+    /// count of 3.
+    #[test]
+    fn paper_fig6_walkthrough() {
+        let grants = CarryChainArbiter::load(0b0001_0110).run();
+        assert_eq!(grants, vec![0b0000_0010, 0b0000_0100, 0b0001_0000]);
+    }
+
+    #[test]
+    fn all_ones_takes_sixteen_cycles() {
+        let grants = CarryChainArbiter::load(0xFFFF).run();
+        assert_eq!(grants.len(), 16);
+        for (i, g) in grants.iter().enumerate() {
+            assert_eq!(*g, 1 << i, "equal priority starting from the rightmost lane");
+        }
+    }
+
+    #[test]
+    fn all_zeros_is_idle() {
+        let mut a = CarryChainArbiter::load(0);
+        assert!(a.done());
+        assert_eq!(a.step(), None);
+    }
+
+    #[test]
+    fn grants_one_hot_each_served_once_property() {
+        check("arbiter: one-hot grants, each lane exactly once", 2000, |rng| {
+            let column = rng.next_u32() as u16;
+            let grants = CarryChainArbiter::load(column).run();
+            // Cycle count equals the population count (the conflict count
+            // the controller stored for the operation).
+            assert_eq!(grants.len() as u32, column.count_ones());
+            let mut union = 0u16;
+            for g in &grants {
+                assert!(*g != 0 && g & (g - 1) == 0, "grant {g:#b} not one-hot");
+                assert_eq!(union & g, 0, "lane granted twice");
+                union |= g;
+            }
+            assert_eq!(union, column, "every requesting lane granted exactly once");
+        });
+    }
+
+    #[test]
+    fn matches_lowest_set_bit_closed_form_property() {
+        check("carry-chain == isolate-lowest-set-bit", 2000, |rng| {
+            let column = rng.next_u32() as u16;
+            let mut v = column;
+            let mut arb = CarryChainArbiter::load(column);
+            while v != 0 {
+                let expect = lowest_set_bit(v);
+                assert_eq!(arb.step(), Some(expect));
+                v &= v - 1;
+            }
+            assert!(arb.done());
+        });
+    }
+
+    #[test]
+    fn bank_arbiters_schedule_is_conflict_free_property() {
+        check("per-cycle schedule: ≤1 lane per bank, ≤1 bank per lane", 500, |rng| {
+            let map = BankMap::new(16, BankMapping::Lsb);
+            let mut addrs = [0u32; LANES];
+            for a in addrs.iter_mut() {
+                *a = rng.below(1 << 14);
+            }
+            let mask = rng.next_u32() as u16;
+            let info = analyze(&addrs, mask, &map);
+            let schedule = BankArbiters::load(&info.columns).run();
+            assert_eq!(schedule.len() as u32, info.max_conflicts);
+            for row in &schedule {
+                let mut lanes_this_cycle = 0u16;
+                for &g in row {
+                    assert!(g == 0 || g & (g - 1) == 0);
+                    assert_eq!(lanes_this_cycle & g, 0, "lane mapped to two banks in one cycle");
+                    lanes_this_cycle |= g;
+                }
+            }
+            // Every lane served exactly once across the schedule.
+            let mut total = 0u16;
+            for row in &schedule {
+                for &g in row {
+                    total |= g;
+                }
+            }
+            assert_eq!(total, mask);
+        });
+    }
+
+    #[test]
+    fn fig4_full_schedule() {
+        // The Fig. 4 operation completes in 3 cycles (max conflict = 3);
+        // bank 2 stays idle throughout.
+        let map = BankMap::new(8, BankMapping::Lsb);
+        let mut addrs = [0u32; LANES];
+        for (lane, &b) in [0u32, 1, 1, 3, 1, 3, 4, 5].iter().enumerate() {
+            addrs[lane] = b;
+        }
+        let info = analyze(&addrs, 0x00FF, &map);
+        let schedule = BankArbiters::load(&info.columns).run();
+        assert_eq!(schedule.len(), 3);
+        assert!(schedule.iter().all(|row| row[2] == 0), "bank 2 unused");
+    }
+}

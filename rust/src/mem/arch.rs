@@ -1,0 +1,265 @@
+//! The [`SharedMemory`] trait and the nine paper architectures.
+
+use super::banked::BankedMemory;
+use super::mapping::BankMapping;
+use super::multiport::MultiPortMemory;
+use super::{timing, LaneMask, LANES};
+use std::fmt;
+
+/// Whether an operation reads or writes (controllers differ, §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Read,
+    Write,
+}
+
+/// A 16-lane read operation's result: per-lane data plus the cycles the
+/// operation occupies the memory pipeline.
+#[derive(Debug, Clone)]
+pub struct ReadOp {
+    pub data: [u32; LANES],
+    pub cycles: u32,
+}
+
+/// One of the paper's shared-memory architectures, behind a common
+/// interface: functional word storage plus the *operation cost model*
+/// (cycles a 16-lane operation occupies the issue pipeline).
+pub trait SharedMemory: Send {
+    /// Architecture descriptor.
+    fn arch(&self) -> MemoryArchKind;
+
+    /// Capacity in 32-bit words.
+    fn words(&self) -> usize;
+
+    /// Functional single-word access (test/debug/harness use).
+    fn peek(&self, addr: u32) -> u32;
+    /// Functional single-word write (memory image loading).
+    fn poke(&mut self, addr: u32, value: u32);
+
+    /// Execute one 16-lane read operation: returns lane data and cycles.
+    fn read_op(&mut self, addrs: &[u32; LANES], mask: LaneMask) -> ReadOp;
+
+    /// Execute one 16-lane write operation: returns cycles.
+    fn write_op(&mut self, addrs: &[u32; LANES], data: &[u32; LANES], mask: LaneMask) -> u32;
+
+    /// Fixed per-instruction overhead (initial latency + drain) by kind.
+    fn overhead(&self, kind: OpKind) -> u32;
+
+    /// Write-controller buffer depth in operations.
+    fn write_buffer_ops(&self) -> u32 {
+        timing::WRITE_BUFFER_OPS
+    }
+
+    /// Clock frequency this memory closes timing at.
+    fn fmax_mhz(&self) -> f64 {
+        self.arch().fmax_mhz()
+    }
+
+    /// Snapshot of the full memory image (validation against golden
+    /// models).
+    fn image(&self) -> Vec<u32>;
+}
+
+/// Descriptor for each of the paper's nine memory architectures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemoryArchKind {
+    /// Replicated multi-port memory: `read_ports` read replicas and
+    /// `write_ports` write ports. `vb` enables the 4R-1W-VB mode (§V),
+    /// where an additional instruction lets the four replicas act as four
+    /// separate memories for a dataset, raising write bandwidth.
+    MultiPort {
+        read_ports: u32,
+        write_ports: u32,
+        vb: bool,
+    },
+    /// Banked memory with `banks` banks and the given index mapping.
+    Banked { banks: u32, mapping: BankMapping },
+}
+
+impl MemoryArchKind {
+    /// `4R-1W`.
+    pub fn mp_4r1w() -> Self {
+        Self::MultiPort { read_ports: 4, write_ports: 1, vb: false }
+    }
+    /// `4R-2W`.
+    pub fn mp_4r2w() -> Self {
+        Self::MultiPort { read_ports: 4, write_ports: 2, vb: false }
+    }
+    /// `4R-1W-VB`.
+    pub fn mp_4r1w_vb() -> Self {
+        Self::MultiPort { read_ports: 4, write_ports: 1, vb: true }
+    }
+    /// Banked with LSB mapping.
+    pub fn banked(banks: u32) -> Self {
+        Self::Banked { banks, mapping: BankMapping::Lsb }
+    }
+    /// Banked with Offset mapping.
+    pub fn banked_offset(banks: u32) -> Self {
+        Self::Banked { banks, mapping: BankMapping::Offset }
+    }
+
+    /// The eight architectures of Table II (transpose study; no VB).
+    pub fn table2_eight() -> Vec<Self> {
+        vec![
+            Self::mp_4r1w(),
+            Self::mp_4r2w(),
+            Self::banked(16),
+            Self::banked_offset(16),
+            Self::banked(8),
+            Self::banked_offset(8),
+            Self::banked(4),
+            Self::banked_offset(4),
+        ]
+    }
+
+    /// The nine architectures of Table III (FFT study).
+    pub fn table3_nine() -> Vec<Self> {
+        vec![
+            Self::mp_4r1w(),
+            Self::mp_4r2w(),
+            Self::mp_4r1w_vb(),
+            Self::banked(16),
+            Self::banked_offset(16),
+            Self::banked(8),
+            Self::banked_offset(8),
+            Self::banked(4),
+            Self::banked_offset(4),
+        ]
+    }
+
+    /// Short label matching the paper's column headers.
+    pub fn label(&self) -> String {
+        match *self {
+            Self::MultiPort { read_ports, write_ports, vb } => {
+                if vb {
+                    format!("{read_ports}R-{write_ports}W-VB")
+                } else {
+                    format!("{read_ports}R-{write_ports}W")
+                }
+            }
+            Self::Banked { banks, mapping } => match mapping {
+                BankMapping::Lsb => format!("{banks} Banks"),
+                BankMapping::Offset => format!("{banks} Banks Offset"),
+                BankMapping::Xor => format!("{banks} Banks XOR"),
+            },
+        }
+    }
+
+    /// Parse a label back to a kind (CLI use): accepts the paper-style
+    /// labels case-insensitively and a few shorthands (`banked16`,
+    /// `banked16-offset`, `4r1w`, `4r2w`, `4r1w-vb`).
+    pub fn parse(s: &str) -> Option<Self> {
+        let t = s.to_ascii_lowercase().replace([' ', '_'], "-");
+        match t.as_str() {
+            "4r-1w" | "4r1w" => Some(Self::mp_4r1w()),
+            "4r-2w" | "4r2w" => Some(Self::mp_4r2w()),
+            "4r-1w-vb" | "4r1w-vb" | "4r1wvb" => Some(Self::mp_4r1w_vb()),
+            _ => {
+                let (body, mapping) = if let Some(b) = t.strip_suffix("-offset") {
+                    (b, BankMapping::Offset)
+                } else if let Some(b) = t.strip_suffix("-xor") {
+                    (b, BankMapping::Xor)
+                } else {
+                    (t.as_str(), BankMapping::Lsb)
+                };
+                let banks: u32 = body
+                    .strip_prefix("banked")
+                    .or_else(|| body.strip_suffix("-banks"))?
+                    .trim_matches('-')
+                    .parse()
+                    .ok()?;
+                if ![4, 8, 16].contains(&banks) {
+                    return None;
+                }
+                Some(Self::Banked { banks, mapping })
+            }
+        }
+    }
+
+    /// Clock frequency (MHz) the processor closes timing at with this
+    /// memory (§IV-A; 4R-2W runs its M20Ks in emulated TDP mode).
+    pub fn fmax_mhz(&self) -> f64 {
+        match *self {
+            Self::MultiPort { write_ports: 2, .. } => timing::FMAX_4R2W_MHZ,
+            _ => timing::FMAX_MHZ,
+        }
+    }
+
+    /// Build the memory with `words` 32-bit words of capacity.
+    pub fn build(&self, words: usize) -> Box<dyn SharedMemory> {
+        match *self {
+            Self::MultiPort { read_ports, write_ports, vb } => {
+                Box::new(MultiPortMemory::new(words, read_ports, write_ports, vb))
+            }
+            Self::Banked { banks, mapping } => Box::new(BankedMemory::new(words, banks, mapping)),
+        }
+    }
+
+    /// True for banked kinds.
+    pub fn is_banked(&self) -> bool {
+        matches!(self, Self::Banked { .. })
+    }
+}
+
+impl fmt::Display for MemoryArchKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper_headers() {
+        assert_eq!(MemoryArchKind::mp_4r1w().label(), "4R-1W");
+        assert_eq!(MemoryArchKind::mp_4r2w().label(), "4R-2W");
+        assert_eq!(MemoryArchKind::mp_4r1w_vb().label(), "4R-1W-VB");
+        assert_eq!(MemoryArchKind::banked(16).label(), "16 Banks");
+        assert_eq!(MemoryArchKind::banked_offset(8).label(), "8 Banks Offset");
+    }
+
+    #[test]
+    fn parse_roundtrips_labels() {
+        for k in MemoryArchKind::table3_nine() {
+            assert_eq!(MemoryArchKind::parse(&k.label()), Some(k), "label {}", k.label());
+        }
+    }
+
+    #[test]
+    fn parse_shorthands() {
+        assert_eq!(MemoryArchKind::parse("banked16"), Some(MemoryArchKind::banked(16)));
+        assert_eq!(
+            MemoryArchKind::parse("banked4-offset"),
+            Some(MemoryArchKind::banked_offset(4))
+        );
+        assert_eq!(
+            MemoryArchKind::parse("banked8-xor"),
+            Some(MemoryArchKind::Banked { banks: 8, mapping: BankMapping::Xor })
+        );
+        assert_eq!(MemoryArchKind::parse("4r1w"), Some(MemoryArchKind::mp_4r1w()));
+        assert_eq!(MemoryArchKind::parse("banked5"), None);
+        assert_eq!(MemoryArchKind::parse("weird"), None);
+    }
+
+    #[test]
+    fn xor_label_roundtrip() {
+        let k = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Xor };
+        assert_eq!(k.label(), "16 Banks XOR");
+        assert_eq!(MemoryArchKind::parse(&k.label()), Some(k));
+    }
+
+    #[test]
+    fn table_sets_sizes() {
+        assert_eq!(MemoryArchKind::table2_eight().len(), 8);
+        assert_eq!(MemoryArchKind::table3_nine().len(), 9);
+    }
+
+    #[test]
+    fn fmax_rules() {
+        assert_eq!(MemoryArchKind::mp_4r2w().fmax_mhz(), 600.0);
+        assert_eq!(MemoryArchKind::mp_4r1w().fmax_mhz(), 771.0);
+        assert_eq!(MemoryArchKind::banked(16).fmax_mhz(), 771.0);
+    }
+}

@@ -1,0 +1,358 @@
+//! Banked shared memory (paper §III, Figs. 1–6).
+//!
+//! N single-ported banks (M20Ks are 1R+1W true dual port, so read and
+//! write paths do not contend with each other), a bank-index mapping, and
+//! per-bank carry-chain arbiters. A 16-lane operation costs as many cycles
+//! as the maximum number of lanes landing in one bank.
+//!
+//! Two timing paths are provided and property-tested equal:
+//!
+//! - **exact**: run the per-bank [`BankArbiters`] schedule cycle by cycle,
+//!   routing each granted lane through its bank — the structural model;
+//! - **fast**: the closed form (max per-bank population count), used on
+//!   the simulator hot path after the §Perf pass.
+
+use super::arch::{MemoryArchKind, OpKind, ReadOp, SharedMemory};
+use super::conflict::max_conflicts;
+use super::mapping::{BankMap, BankMapping};
+use super::{timing, LaneMask, LANES};
+
+/// Timing fidelity of the banked model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimingMode {
+    /// Bit-level arbiter schedule (default for tests and validation).
+    Exact,
+    /// Closed-form max-popcount (identical cycle counts, no schedule
+    /// materialization — the optimized hot path).
+    Fast,
+}
+
+/// Banked shared memory.
+#[derive(Debug, Clone)]
+pub struct BankedMemory {
+    /// Per-bank storage: `banks[b][row]`.
+    banks: Vec<Vec<u32>>,
+    map: BankMap,
+    mapping: BankMapping,
+    mode: TimingMode,
+    /// §IV-A half-bank split (448 KB node-locked variant): +2 cycles of
+    /// bank latency, timing otherwise unchanged.
+    half_banked: bool,
+}
+
+impl BankedMemory {
+    pub fn new(words: usize, n_banks: u32, mapping: BankMapping) -> Self {
+        assert!(words.is_power_of_two(), "capacity must be a power of two");
+        assert!(
+            words as u32 % n_banks == 0,
+            "capacity must divide evenly across banks"
+        );
+        let map = BankMap::new(n_banks, mapping);
+        let rows = words / n_banks as usize;
+        Self {
+            banks: vec![vec![0u32; rows]; n_banks as usize],
+            map,
+            mapping,
+            mode: TimingMode::Exact,
+            half_banked: false,
+        }
+    }
+
+    /// Switch the timing path (cycle counts are identical; see the
+    /// `exact_equals_fast` property test).
+    pub fn with_mode(mut self, mode: TimingMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Enable the §IV-A half-bank configuration.
+    pub fn with_half_banks(mut self) -> Self {
+        self.half_banked = true;
+        self
+    }
+
+    pub fn n_banks(&self) -> u32 {
+        self.map.banks()
+    }
+
+    pub fn mode(&self) -> TimingMode {
+        self.mode
+    }
+
+    #[inline]
+    fn load(&self, addr: u32) -> u32 {
+        self.banks[self.map.bank_of(addr) as usize][self.map.row_of(addr) as usize]
+    }
+
+    #[inline]
+    fn store(&mut self, addr: u32, v: u32) {
+        let (b, r) = (self.map.bank_of(addr) as usize, self.map.row_of(addr) as usize);
+        self.banks[b][r] = v;
+    }
+
+    /// Build the one-hot bank-matrix columns on the stack (§Perf: the
+    /// heap-allocating [`analyze`] stayed on the tests/diagnostics path;
+    /// the memory hot path uses this).
+    #[inline]
+    fn columns(&self, addrs: &[u32; LANES], mask: LaneMask) -> [LaneMask; LANES] {
+        let mut columns = [0 as LaneMask; LANES];
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            m &= m - 1;
+            columns[self.map.bank_of(addrs[lane]) as usize] |= 1 << lane;
+        }
+        columns
+    }
+
+    /// Exact path: step the per-bank carry-chain arbiters in lock-step,
+    /// serving one lane per bank per cycle. The arbiter state machine is
+    /// inlined (subtract-one + transition detect, exactly
+    /// [`CarryChainArbiter::step`]) over a stack array of lane vectors.
+    fn read_exact(&mut self, addrs: &[u32; LANES], mask: LaneMask) -> ReadOp {
+        let mut state = self.columns(addrs, mask);
+        let n_banks = self.map.banks() as usize;
+        let mut data = [0u32; LANES];
+        let mut cycles = 0u32;
+        let mut pending = mask != 0;
+        while pending {
+            pending = false;
+            cycles += 1;
+            for (bank, v) in state.iter_mut().enumerate().take(n_banks) {
+                if *v != 0 {
+                    let grant = *v & !v.wrapping_sub(1); // 1→0 transition
+                    *v &= v.wrapping_sub(1); // zero the re-assertions
+                    pending |= *v != 0;
+                    let lane = grant.trailing_zeros() as usize;
+                    debug_assert_eq!(self.map.bank_of(addrs[lane]) as usize, bank);
+                    data[lane] = self.banks[bank][self.map.row_of(addrs[lane]) as usize];
+                }
+            }
+        }
+        ReadOp { data, cycles: cycles.max(1) }
+    }
+
+    fn write_exact(&mut self, addrs: &[u32; LANES], data: &[u32; LANES], mask: LaneMask) -> u32 {
+        let mut state = self.columns(addrs, mask);
+        let n_banks = self.map.banks() as usize;
+        let mut cycles = 0u32;
+        let mut pending = mask != 0;
+        while pending {
+            pending = false;
+            cycles += 1;
+            for (bank, v) in state.iter_mut().enumerate().take(n_banks) {
+                if *v != 0 {
+                    let grant = *v & !v.wrapping_sub(1);
+                    *v &= v.wrapping_sub(1);
+                    pending |= *v != 0;
+                    let lane = grant.trailing_zeros() as usize;
+                    debug_assert_eq!(self.map.bank_of(addrs[lane]) as usize, bank);
+                    let row = self.map.row_of(addrs[lane]) as usize;
+                    self.banks[bank][row] = data[lane];
+                }
+            }
+        }
+        cycles.max(1)
+    }
+}
+
+impl SharedMemory for BankedMemory {
+    fn arch(&self) -> MemoryArchKind {
+        MemoryArchKind::Banked { banks: self.map.banks(), mapping: self.mapping }
+    }
+
+    fn words(&self) -> usize {
+        self.banks.len() * self.banks[0].len()
+    }
+
+    fn peek(&self, addr: u32) -> u32 {
+        self.load(addr)
+    }
+
+    fn poke(&mut self, addr: u32, value: u32) {
+        self.store(addr, value);
+    }
+
+    fn read_op(&mut self, addrs: &[u32; LANES], mask: LaneMask) -> ReadOp {
+        match self.mode {
+            TimingMode::Exact => self.read_exact(addrs, mask),
+            TimingMode::Fast => {
+                let cycles = max_conflicts(addrs, mask, &self.map).max(1);
+                let mut data = [0u32; LANES];
+                let mut m = mask;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    data[lane] = self.load(addrs[lane]);
+                }
+                ReadOp { data, cycles }
+            }
+        }
+    }
+
+    fn write_op(&mut self, addrs: &[u32; LANES], data: &[u32; LANES], mask: LaneMask) -> u32 {
+        match self.mode {
+            TimingMode::Exact => self.write_exact(addrs, data, mask),
+            TimingMode::Fast => {
+                let cycles = max_conflicts(addrs, mask, &self.map).max(1);
+                // Lane order matches the arbiter's rightmost-first grant
+                // order, so address collisions resolve identically: the
+                // *highest* lane writes last and wins in both paths.
+                let mut m = mask;
+                while m != 0 {
+                    let lane = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    self.store(addrs[lane], data[lane]);
+                }
+                cycles
+            }
+        }
+    }
+
+    fn overhead(&self, kind: OpKind) -> u32 {
+        match kind {
+            OpKind::Read => timing::banked_read_overhead(self.half_banked),
+            OpKind::Write => timing::banked_write_overhead(self.half_banked),
+        }
+    }
+
+    fn image(&self) -> Vec<u32> {
+        (0..self.words() as u32).map(|a| self.load(a)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::FULL_MASK;
+    use crate::util::proptest::check;
+
+    fn seq_addrs(base: u32, stride: u32) -> [u32; LANES] {
+        let mut a = [0u32; LANES];
+        for (l, x) in a.iter_mut().enumerate() {
+            *x = base + l as u32 * stride;
+        }
+        a
+    }
+
+    #[test]
+    fn conflict_free_read_is_one_cycle() {
+        let mut m = BankedMemory::new(1024, 16, BankMapping::Lsb);
+        assert_eq!(m.read_op(&seq_addrs(0, 1), FULL_MASK).cycles, 1);
+    }
+
+    #[test]
+    fn same_bank_stride_serializes() {
+        let mut m = BankedMemory::new(1024, 16, BankMapping::Lsb);
+        assert_eq!(m.read_op(&seq_addrs(0, 16), FULL_MASK).cycles, 16);
+        // 8 banks: stride 8 also fully serializes.
+        let mut m8 = BankedMemory::new(1024, 8, BankMapping::Lsb);
+        assert_eq!(m8.read_op(&seq_addrs(0, 8), FULL_MASK).cycles, 16);
+    }
+
+    #[test]
+    fn offset_mapping_spreads_stride4() {
+        // Stride-4 word addresses: LSB map → 4 banks × 4 lanes = 4 cycles;
+        // Offset map (shift 2) → 16 distinct banks = 1 cycle. This is the
+        // complex-data case the paper designed the Offset map for.
+        let mut lsb = BankedMemory::new(1024, 16, BankMapping::Lsb);
+        let mut off = BankedMemory::new(1024, 16, BankMapping::Offset);
+        assert_eq!(lsb.read_op(&seq_addrs(0, 4), FULL_MASK).cycles, 4);
+        assert_eq!(off.read_op(&seq_addrs(0, 4), FULL_MASK).cycles, 1);
+    }
+
+    #[test]
+    fn data_roundtrip_all_mappings() {
+        for mapping in [BankMapping::Lsb, BankMapping::Offset] {
+            for banks in [4u32, 8, 16] {
+                let mut m = BankedMemory::new(256, banks, mapping);
+                let addrs = seq_addrs(32, 3);
+                let mut data = [0u32; LANES];
+                for (l, d) in data.iter_mut().enumerate() {
+                    *d = 0xA000 + l as u32;
+                }
+                m.write_op(&addrs, &data, FULL_MASK);
+                let r = m.read_op(&addrs, FULL_MASK);
+                assert_eq!(r.data, data, "banks={banks} mapping={mapping:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_equals_fast_property() {
+        check("banked exact == fast (cycles and data)", 500, |rng| {
+            let banks = [4u32, 8, 16][rng.below(3) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let mut exact = BankedMemory::new(4096, banks, mapping);
+            let mut fast = BankedMemory::new(4096, banks, mapping).with_mode(TimingMode::Fast);
+            // Seed both with the same image.
+            for a in 0..4096u32 {
+                let v = rng.next_u32();
+                exact.poke(a, v);
+                fast.poke(a, v);
+            }
+            for _ in 0..8 {
+                let mut addrs = [0u32; LANES];
+                for a in addrs.iter_mut() {
+                    *a = rng.below(4096);
+                }
+                let mask = rng.next_u32() as u16;
+                let is_read = rng.chance(0.5);
+                if is_read {
+                    let re = exact.read_op(&addrs, mask);
+                    let rf = fast.read_op(&addrs, mask);
+                    assert_eq!(re.cycles, rf.cycles);
+                    assert_eq!(re.data, rf.data);
+                } else {
+                    let mut data = [0u32; LANES];
+                    for d in data.iter_mut() {
+                        *d = rng.next_u32();
+                    }
+                    let ce = exact.write_op(&addrs, &data, mask);
+                    let cf = fast.write_op(&addrs, &data, mask);
+                    assert_eq!(ce, cf);
+                    assert_eq!(exact.image(), fast.image());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn masked_read_leaves_inactive_lanes_zero() {
+        let mut m = BankedMemory::new(64, 4, BankMapping::Lsb);
+        for a in 0..64 {
+            m.poke(a, a + 1);
+        }
+        let r = m.read_op(&seq_addrs(0, 1), 0x0005); // lanes 0 and 2
+        assert_eq!(r.data[0], 1);
+        assert_eq!(r.data[2], 3);
+        assert_eq!(r.data[1], 0);
+    }
+
+    #[test]
+    fn overheads_match_paper_pipeline() {
+        let m = BankedMemory::new(64, 16, BankMapping::Lsb);
+        assert_eq!(m.overhead(OpKind::Read), 12); // 5 + 3 + 3 + 1
+        assert_eq!(m.overhead(OpKind::Write), 5);
+        let h = BankedMemory::new(64, 16, BankMapping::Lsb).with_half_banks();
+        assert_eq!(h.overhead(OpKind::Read), 14);
+    }
+
+    #[test]
+    fn image_matches_pokes() {
+        let mut m = BankedMemory::new(128, 8, BankMapping::Offset);
+        for a in 0..128 {
+            m.poke(a, a * 7);
+        }
+        let img = m.image();
+        for a in 0..128usize {
+            assert_eq!(img[a], a as u32 * 7);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn capacity_must_be_pow2() {
+        BankedMemory::new(100, 4, BankMapping::Lsb);
+    }
+}

@@ -1,0 +1,196 @@
+//! Bank-conflict computation (paper §III-A, Fig. 2 maths).
+//!
+//! The lower bank-field bits of each of the 16 parallel addresses are
+//! converted to one-hot vectors; each vector forms a row of a 2D matrix
+//! indicating which bank that lane accesses. Each *column* of the matrix
+//! feeds a population counter (a 5-bit result), and the 16 counts are
+//! sorted (a max-reduce in our model) to find the number of clock cycles
+//! the operation needs.
+//!
+//! This module is the L3 twin of the L1 Pallas kernel
+//! `python/compile/kernels/conflict.py`; integration tests assert the two
+//! agree on random batches through the PJRT-loaded artifact.
+
+use super::mapping::BankMap;
+use super::{LaneMask, LANES};
+
+/// The per-operation conflict analysis result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConflictInfo {
+    /// `columns[b]` = lane mask of requests hitting bank `b` (the columns
+    /// of the paper's one-hot matrix).
+    pub columns: Vec<LaneMask>,
+    /// Per-bank access counts (the population-counter outputs).
+    pub counts: Vec<u32>,
+    /// Maximum bank conflict — the cycles the operation occupies the
+    /// memory (0 if no lane is active).
+    pub max_conflicts: u32,
+    /// Number of active lanes.
+    pub active: u32,
+}
+
+/// Build the one-hot bank matrix and conflict counts for one operation
+/// (up to 16 lane addresses, masked).
+pub fn analyze(addrs: &[u32; LANES], mask: LaneMask, map: &BankMap) -> ConflictInfo {
+    let banks = map.banks() as usize;
+    let mut columns = vec![0u16; banks];
+    for lane in 0..LANES {
+        if mask >> lane & 1 == 1 {
+            let b = map.bank_of(addrs[lane]) as usize;
+            columns[b] |= 1 << lane;
+        }
+    }
+    let counts: Vec<u32> = columns.iter().map(|c| c.count_ones()).collect();
+    let max_conflicts = counts.iter().copied().max().unwrap_or(0);
+    ConflictInfo {
+        columns,
+        counts,
+        max_conflicts,
+        active: mask.count_ones(),
+    }
+}
+
+/// Fast path: only the maximum conflict count (the controller's circular
+/// buffer stores exactly this value alongside the request info). Avoids
+/// allocating the column vectors on the simulator hot path.
+///
+/// §Perf: per-bank counters live in a fixed stack array and the running
+/// maximum is tracked *during* accumulation, so no second scan over the
+/// banks is needed (a packed-u128 variant with a trailing scan measured
+/// ~1.8× slower — EXPERIMENTS.md §Perf).
+#[inline]
+pub fn max_conflicts(addrs: &[u32; LANES], mask: LaneMask, map: &BankMap) -> u32 {
+    let mut counts = [0u8; LANES]; // ≥ max bank count (16)
+    let mut max = 0u8;
+    let mut m = mask;
+    while m != 0 {
+        let lane = m.trailing_zeros() as usize;
+        m &= m - 1;
+        let b = map.bank_of(addrs[lane]) as usize;
+        debug_assert!(b < LANES);
+        // SAFETY: bank_of masks to banks-1 < 16 == LANES.
+        let c = unsafe {
+            let slot = counts.get_unchecked_mut(b);
+            *slot += 1;
+            *slot
+        };
+        if c > max {
+            max = c;
+        }
+    }
+    max as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::{BankMap, BankMapping};
+    use crate::mem::FULL_MASK;
+    use crate::util::proptest::check;
+
+    /// The 8-lane / 8-bank example of the paper's Fig. 4: lanes access
+    /// banks [0,1,1,3,1,3,4,5] (reading the figure left to right); bank 1
+    /// has 3 accesses, bank 3 has 2, bank 2 none.
+    #[test]
+    fn paper_fig4_matrix() {
+        let map = BankMap::new(8, BankMapping::Lsb);
+        let mut addrs = [0u32; LANES];
+        let banks_by_lane = [0u32, 1, 1, 3, 1, 3, 4, 5];
+        for (lane, &b) in banks_by_lane.iter().enumerate() {
+            addrs[lane] = 8 + b; // any address with these LSBs
+        }
+        let info = analyze(&addrs, 0x00FF, &map);
+        assert_eq!(info.counts[0], 1);
+        assert_eq!(info.counts[1], 3);
+        assert_eq!(info.counts[2], 0);
+        assert_eq!(info.counts[3], 2);
+        assert_eq!(info.max_conflicts, 3);
+        // Bank 1 is accessed by lanes 1, 2 and 4 (the paper's worked row).
+        assert_eq!(info.columns[1], 0b0001_0110);
+        // "If there is any bank with more than one access, then there must
+        // be a bank with zero accesses."
+        assert!(info.counts.iter().any(|&c| c == 0));
+    }
+
+    #[test]
+    fn no_conflicts_when_addresses_consecutive() {
+        let map = BankMap::new(16, BankMapping::Lsb);
+        let mut addrs = [0u32; LANES];
+        for (l, a) in addrs.iter_mut().enumerate() {
+            *a = 100 + l as u32;
+        }
+        let info = analyze(&addrs, FULL_MASK, &map);
+        assert_eq!(info.max_conflicts, 1);
+        assert!(info.counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn maximal_conflict_all_lanes_one_bank() {
+        let map = BankMap::new(16, BankMapping::Lsb);
+        let addrs = [32u32; LANES]; // all the same address
+        let info = analyze(&addrs, FULL_MASK, &map);
+        assert_eq!(info.max_conflicts, 16);
+        assert_eq!(info.counts[0], 16);
+    }
+
+    #[test]
+    fn empty_mask_is_zero_cycles() {
+        let map = BankMap::new(4, BankMapping::Lsb);
+        let info = analyze(&[0; LANES], 0, &map);
+        assert_eq!(info.max_conflicts, 0);
+        assert_eq!(info.active, 0);
+    }
+
+    #[test]
+    fn stride_pattern_conflicts() {
+        // Stride-16 addresses with 16 LSB banks: every lane hits bank 0.
+        let map = BankMap::new(16, BankMapping::Lsb);
+        let mut addrs = [0u32; LANES];
+        for (l, a) in addrs.iter_mut().enumerate() {
+            *a = (l as u32) * 16;
+        }
+        assert_eq!(analyze(&addrs, FULL_MASK, &map).max_conflicts, 16);
+        // The Offset map (shift 2) spreads the same stride over 4 banks.
+        let map_off = BankMap::new(16, BankMapping::Offset);
+        assert_eq!(analyze(&addrs, FULL_MASK, &map_off).max_conflicts, 4);
+    }
+
+    #[test]
+    fn counts_sum_equals_active_property() {
+        check("conflict counts sum to active lanes", 1000, |rng| {
+            let banks = [4u32, 8, 16][rng.below(3) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let map = BankMap::new(banks, mapping);
+            let mut addrs = [0u32; LANES];
+            for a in addrs.iter_mut() {
+                *a = rng.below(1 << 16);
+            }
+            let mask = rng.next_u32() as u16;
+            let info = analyze(&addrs, mask, &map);
+            assert_eq!(info.counts.iter().sum::<u32>(), mask.count_ones());
+            assert!(info.max_conflicts <= 16);
+            // Union of columns == mask, columns disjoint.
+            let mut seen = 0u16;
+            for &c in &info.columns {
+                assert_eq!(seen & c, 0, "columns must be disjoint");
+                seen |= c;
+            }
+            assert_eq!(seen, mask);
+        });
+    }
+
+    #[test]
+    fn fast_max_matches_full_analysis_property() {
+        check("max_conflicts fast path == analyze", 1000, |rng| {
+            let banks = [4u32, 8, 16][rng.below(3) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let map = BankMap::new(banks, mapping);
+            let mut addrs = [0u32; LANES];
+            for a in addrs.iter_mut() {
+                *a = rng.next_u32() & 0xFFFFF;
+            }
+            let mask = rng.next_u32() as u16;
+            assert_eq!(max_conflicts(&addrs, mask, &map), analyze(&addrs, mask, &map).max_conflicts);
+        });
+    }
+}

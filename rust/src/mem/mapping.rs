@@ -1,0 +1,202 @@
+//! Address→bank mapping (paper §III-B.2).
+//!
+//! The simplest map takes the LSBs of the word address as the bank index.
+//! The **Offset** map shifts the extracted field up — for complex data with
+//! interleaved I/Q components (adjacent addresses), extracting bits
+//! `[shift+b-1 : shift]` instead of `[b-1:0]` spreads strided accesses
+//! across banks and "can provide significant performance advantages"
+//! (the paper's Offset columns in Tables II and III).
+
+use crate::util::bits::log2_exact;
+
+/// How the bank index is extracted from a word address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BankMapping {
+    /// Bank = `addr[b-1:0]` — the default map.
+    Lsb,
+    /// Bank = `addr[shift+b-1:shift]` with `shift = 2` — the paper's
+    /// Offset map (tuned for interleaved complex data, where I/Q pairs
+    /// occupy adjacent addresses).
+    Offset,
+    /// Bank = `addr[b-1:0] ^ addr[2b-1:b]` — XOR interleaving, the
+    /// classic conflict-randomizing map. Not benchmarked in the paper
+    /// (its §VII names "varying the bank mapping" as the FPGA's open
+    /// flexibility); included here as the ablation the mapping advisor
+    /// and `bench mapping_ablation` explore.
+    Xor,
+}
+
+impl BankMapping {
+    /// The bit offset at which the bank field starts (shift-based maps;
+    /// the paper's two benchmark maps are both of this form).
+    pub fn shift(self) -> u32 {
+        match self {
+            BankMapping::Lsb => 0,
+            BankMapping::Offset => 2,
+            BankMapping::Xor => 0,
+        }
+    }
+
+    /// Short label used in table headers ("" / "Offset" / "XOR").
+    pub fn label(self) -> &'static str {
+        match self {
+            BankMapping::Lsb => "",
+            BankMapping::Offset => "Offset",
+            BankMapping::Xor => "XOR",
+        }
+    }
+
+    /// Whether the `conflict{B}` PJRT oracle artifact covers this map
+    /// (the artifact takes a shift parameter; XOR is simulator-only).
+    pub fn oracle_supported(self) -> bool {
+        !matches!(self, BankMapping::Xor)
+    }
+}
+
+/// A concrete bank-index extractor for `banks` banks (power of two).
+#[derive(Debug, Clone, Copy)]
+pub struct BankMap {
+    banks: u32,
+    bits: u32,
+    shift: u32,
+    xor: bool,
+}
+
+impl BankMap {
+    pub fn new(banks: u32, mapping: BankMapping) -> Self {
+        let bits = log2_exact(banks);
+        Self {
+            banks,
+            bits,
+            shift: mapping.shift(),
+            xor: matches!(mapping, BankMapping::Xor),
+        }
+    }
+
+    #[inline]
+    pub fn banks(&self) -> u32 {
+        self.banks
+    }
+
+    /// Bank index of a word address.
+    #[inline]
+    pub fn bank_of(&self, addr: u32) -> u32 {
+        if self.xor {
+            (addr ^ (addr >> self.bits)) & (self.banks - 1)
+        } else {
+            (addr >> self.shift) & (self.banks - 1)
+        }
+    }
+
+    /// Row within the bank. Together with [`Self::bank_of`] this is a
+    /// bijection on addresses: for the shift maps the bank field is
+    /// squeezed out and the remaining bits concatenated; for the XOR map
+    /// the row is simply the upper bits (the XOR is invertible given the
+    /// row).
+    #[inline]
+    pub fn row_of(&self, addr: u32) -> u32 {
+        if self.xor {
+            addr >> self.bits
+        } else {
+            let low = addr & ((1 << self.shift) - 1);
+            let high = addr >> (self.shift + self.bits);
+            (high << self.shift) | low
+        }
+    }
+
+    /// Reconstruct the address from (bank, row) — inverse of the pair
+    /// ([`Self::bank_of`], [`Self::row_of`]).
+    #[inline]
+    pub fn addr_of(&self, bank: u32, row: u32) -> u32 {
+        if self.xor {
+            let low = (bank ^ row) & (self.banks - 1);
+            (row << self.bits) | low
+        } else {
+            let low = row & ((1 << self.shift) - 1);
+            let high = row >> self.shift;
+            (high << (self.shift + self.bits)) | (bank << self.shift) | low
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn lsb_mapping_16_banks() {
+        let m = BankMap::new(16, BankMapping::Lsb);
+        for a in 0..64 {
+            assert_eq!(m.bank_of(a), a % 16);
+        }
+    }
+
+    #[test]
+    fn offset_mapping_16_banks() {
+        // Offset map uses bits [5:2]: consecutive I/Q pairs of the same
+        // point share a bank; points stride across banks.
+        let m = BankMap::new(16, BankMapping::Offset);
+        assert_eq!(m.bank_of(0), 0);
+        assert_eq!(m.bank_of(1), 0);
+        assert_eq!(m.bank_of(4), 1);
+        assert_eq!(m.bank_of(63), 15);
+        assert_eq!(m.bank_of(64), 0);
+    }
+
+    #[test]
+    fn paper_fig4_example() {
+        // Fig. 4: 8-bank system, mapping on the 3 LSBs. Addresses shown
+        // map lane 0→bank 0, lane 1→bank 1, and lanes {1,2,4}→bank 1 in
+        // the conflicted row.
+        let m = BankMap::new(8, BankMapping::Lsb);
+        assert_eq!(m.bank_of(8), 0);
+        assert_eq!(m.bank_of(9), 1);
+        assert_eq!(m.bank_of(17), 1);
+        assert_eq!(m.bank_of(25), 1);
+    }
+
+    #[test]
+    fn bank_row_bijective_property() {
+        check("bank/row bijection", 3000, |rng| {
+            let banks = [4u32, 8, 16][rng.below(3) as usize];
+            let mapping = [BankMapping::Lsb, BankMapping::Offset, BankMapping::Xor]
+                [rng.below(3) as usize];
+            let m = BankMap::new(banks, mapping);
+            let addr = rng.below(1 << 20);
+            let (b, r) = (m.bank_of(addr), m.row_of(addr));
+            assert!(b < banks);
+            assert_eq!(m.addr_of(b, r), addr, "addr {addr} banks {banks} {mapping:?}");
+        });
+    }
+
+    #[test]
+    fn xor_mapping_breaks_power_of_two_strides() {
+        // The XOR map's purpose: stride-16 addresses (all bank 0 under
+        // LSB) spread across all 16 banks.
+        let lsb = BankMap::new(16, BankMapping::Lsb);
+        let xor = BankMap::new(16, BankMapping::Xor);
+        let addrs: Vec<u32> = (0..16).map(|l| l * 16).collect();
+        let lsb_banks: std::collections::HashSet<u32> =
+            addrs.iter().map(|&a| lsb.bank_of(a)).collect();
+        let xor_banks: std::collections::HashSet<u32> =
+            addrs.iter().map(|&a| xor.bank_of(a)).collect();
+        assert_eq!(lsb_banks.len(), 1);
+        assert_eq!(xor_banks.len(), 16);
+    }
+
+    #[test]
+    fn distinct_addrs_distinct_slots_property() {
+        check("no two addresses share a (bank,row) slot", 500, |rng| {
+            let m = BankMap::new(16, BankMapping::Offset);
+            let a = rng.below(1 << 16);
+            let b = rng.below(1 << 16);
+            if a != b {
+                assert!(
+                    (m.bank_of(a), m.row_of(a)) != (m.bank_of(b), m.row_of(b)),
+                    "collision {a} vs {b}"
+                );
+            }
+        });
+    }
+}

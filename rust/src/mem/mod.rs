@@ -1,0 +1,41 @@
+//! Shared-memory architectures for the soft SIMT processor (paper §III).
+//!
+//! Nine architectures sit behind the [`arch::SharedMemory`] trait:
+//!
+//! | Name            | Kind                                    | Fmax    |
+//! |-----------------|-----------------------------------------|---------|
+//! | `4R-1W`         | multi-port, 4 read / 1 write            | 771 MHz |
+//! | `4R-2W`         | multi-port, 4 read / 2 write (emulated TDP M20Ks) | 600 MHz |
+//! | `4R-1W-VB`      | multi-port with the 4-region virtual-bank write mode | 771 MHz |
+//! | `16/8/4 Banks`  | banked, LSB mapping                     | 771 MHz |
+//! | `16/8/4 Banks Offset` | banked, shifted (bit `[shift+b-1:shift]`) mapping | 771 MHz |
+//!
+//! The banked path is modelled at the level the paper describes it:
+//! one-hot bank matrices and population counts ([`conflict`]), per-bank
+//! carry-chain arbiters simulated bit-exactly ([`arbiter`]), access
+//! controllers with a 5-cycle conflict pre-computation pipeline and
+//! circular operation buffers ([`controller`]), 3-cycle memory banks and
+//! 3-stage one-hot output muxes ([`timing`]).
+
+pub mod arbiter;
+pub mod arch;
+pub mod banked;
+pub mod conflict;
+pub mod controller;
+pub mod mapping;
+pub mod multiport;
+pub mod timing;
+
+pub use arch::{MemoryArchKind, OpKind, SharedMemory};
+pub use mapping::BankMapping;
+
+/// Number of SIMT lanes (SPs) — fixed at 16 in the paper's processor; the
+/// memory *operation* width.
+pub const LANES: usize = 16;
+
+/// A lane-request mask: bit `l` set means lane `l` participates in the
+/// operation.
+pub type LaneMask = u16;
+
+/// All 16 lanes active.
+pub const FULL_MASK: LaneMask = 0xFFFF;

@@ -1,0 +1,90 @@
+//! Pipeline latency constants, straight from the paper's prose.
+//!
+//! These are *per-instruction* overheads: the banked access controllers
+//! pre-compute conflicts through a popcount + sort-network pipeline
+//! (5 cycles, §III-A), the memory banks are 3-cycle (§III-B), and the
+//! one-hot address/data muxes are 3-stage pipelines (§III-B). Because a
+//! memory instruction streams hundreds of operations, this initial latency
+//! "only has a minor impact on the performance".
+
+/// Cycles between the controller receiving a read/write instruction and
+/// issuing the first operation (the Fig. 2 sort-network pipeline depth).
+pub const CTRL_INIT_LATENCY: u32 = 5;
+
+/// M20K memory-bank read latency.
+pub const BANK_LATENCY: u32 = 3;
+
+/// One-hot address/data mux pipeline depth (input and output sides each).
+pub const MUX_PIPELINE: u32 = 3;
+
+/// Writeback into the SP register file.
+pub const WRITEBACK_LATENCY: u32 = 1;
+
+/// Extra bank latency when a bank is split into two half-banks (the
+/// 448 KB node-locked configuration of §IV-A: "we had to split each
+/// memory bank into two, with the upper address bit selecting a half
+/// bank. The two additional latency cycles introduced had no material
+/// impact").
+pub const HALF_BANK_EXTRA_LATENCY: u32 = 2;
+
+/// Fixed tail latency of a banked *read* instruction: conflict
+/// pre-computation + bank + output mux + writeback.
+pub const fn banked_read_overhead(half_banked: bool) -> u32 {
+    CTRL_INIT_LATENCY
+        + BANK_LATENCY
+        + MUX_PIPELINE
+        + WRITEBACK_LATENCY
+        + if half_banked { HALF_BANK_EXTRA_LATENCY } else { 0 }
+}
+
+/// Fixed overhead of a banked *write* instruction (input side only —
+/// no output mux or writeback on the write path, §III-B).
+pub const fn banked_write_overhead(half_banked: bool) -> u32 {
+    CTRL_INIT_LATENCY + if half_banked { HALF_BANK_EXTRA_LATENCY } else { 0 }
+}
+
+/// The multiport R/W control block is a thin fixed-function pipeline; the
+/// paper's multiport cycle counts are exactly `ops × ⌈lanes/ports⌉`, i.e.
+/// zero per-instruction overhead in its accounting. We keep that.
+pub const MULTIPORT_OVERHEAD: u32 = 0;
+
+/// Write-controller circular buffer depth, in operations. The paper's
+/// write controllers carry 19–20 M20Ks of request buffering (Table I);
+/// one M20K holds 512 × 40 bits, and a buffered operation is 16 lanes of
+/// address+data spread across the M20K group — 512 operations of depth.
+pub const WRITE_BUFFER_OPS: u32 = 512;
+
+/// Clock frequencies (MHz). The processor closes timing at 771 MHz
+/// (DSP-limited in FP32 mode) for every memory except 4R-2W, whose M20Ks
+/// run in the slower emulated true-dual-port mode (600 MHz, §IV-A).
+pub const FMAX_MHZ: f64 = 771.0;
+/// 4R-2W emulated-TDP clock.
+pub const FMAX_4R2W_MHZ: f64 = 600.0;
+/// Unrestricted critical path outside the DSPs (§IV).
+pub const FMAX_UNRESTRICTED_MHZ: f64 = 775.0;
+/// Tightly-constrained (node-locked 448 KB) compile (§IV-A).
+pub const FMAX_CONSTRAINED_MHZ: f64 = 738.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_overhead_components() {
+        assert_eq!(banked_read_overhead(false), 12);
+        assert_eq!(banked_read_overhead(true), 14);
+    }
+
+    #[test]
+    fn write_overhead_components() {
+        assert_eq!(banked_write_overhead(false), 5);
+        assert_eq!(banked_write_overhead(true), 7);
+    }
+
+    #[test]
+    fn paper_frequencies() {
+        assert_eq!(FMAX_MHZ, 771.0);
+        assert_eq!(FMAX_4R2W_MHZ, 600.0);
+        assert!(FMAX_UNRESTRICTED_MHZ > FMAX_MHZ);
+    }
+}

@@ -1,0 +1,300 @@
+//! A small codegen layer over the ISA: register pool, labels, FP-constant
+//! materialization and complex arithmetic emitters.
+//!
+//! Multiplication by `-i` is handled by *register renaming* (swap re/im
+//! and negate), the trick a hand assembler would use; the emitters
+//! therefore operate on [`CReg`] descriptors rather than fixed register
+//! pairs.
+
+use crate::isa::inst::{Instruction, NUM_REGS};
+use crate::isa::opcode::Opcode;
+use crate::isa::program::Program;
+
+/// A complex value held in two scalar registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CReg {
+    pub re: u8,
+    pub im: u8,
+}
+
+/// Builder for assembler programs.
+pub struct ProgramBuilder {
+    name: String,
+    threads: u32,
+    insts: Vec<Instruction>,
+    /// Registers available for allocation (stack).
+    free: Vec<u8>,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: impl Into<String>, threads: u32) -> Self {
+        Self {
+            name: name.into(),
+            threads,
+            insts: Vec::new(),
+            // r0 is conventionally the tid; allocate from r1 upward.
+            free: (1..NUM_REGS as u8).rev().collect(),
+        }
+    }
+
+    /// Allocate a scalar register.
+    pub fn alloc(&mut self) -> u8 {
+        self.free.pop().expect("register pool exhausted")
+    }
+
+    /// Release a scalar register.
+    pub fn release(&mut self, r: u8) {
+        debug_assert!(!self.free.contains(&r), "double free of r{r}");
+        self.free.push(r);
+    }
+
+    /// Allocate a complex register pair.
+    pub fn alloc_c(&mut self) -> CReg {
+        CReg { re: self.alloc(), im: self.alloc() }
+    }
+
+    /// Release a complex register pair.
+    pub fn release_c(&mut self, c: CReg) {
+        self.release(c.re);
+        self.release(c.im);
+    }
+
+    /// Registers still free (codegen budget assertions).
+    pub fn free_regs(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Current instruction count (next emission PC — label use).
+    pub fn pc(&self) -> u16 {
+        self.insts.len() as u16
+    }
+
+    pub fn emit(&mut self, inst: Instruction) {
+        self.insts.push(inst);
+    }
+
+    // --- scalar helpers ------------------------------------------------
+
+    pub fn tid(&mut self, rd: u8) {
+        self.emit(Instruction::i(Opcode::Tid, rd, 0, 0));
+    }
+
+    pub fn ldi(&mut self, rd: u8, imm: u16) {
+        self.emit(Instruction::i(Opcode::Ldi, rd, 0, imm));
+    }
+
+    /// Materialize an arbitrary 32-bit constant (1 or 2 Imm ops).
+    pub fn const32(&mut self, rd: u8, value: u32) {
+        self.ldi(rd, value as u16);
+        if value >> 16 != 0 {
+            self.emit(Instruction::i(Opcode::Lui, rd, 0, (value >> 16) as u16));
+        }
+    }
+
+    /// Materialize an IEEE-754 f32 constant bit-exactly (2 Imm ops; the
+    /// LUI path is always needed for a non-zero exponent).
+    pub fn fconst(&mut self, rd: u8, value: f32) {
+        let bits = value.to_bits();
+        self.ldi(rd, bits as u16);
+        self.emit(Instruction::i(Opcode::Lui, rd, 0, (bits >> 16) as u16));
+    }
+
+    pub fn iaddi(&mut self, rd: u8, ra: u8, imm: i32) {
+        assert!((-32768..=32767).contains(&imm) || (0..=65535).contains(&imm));
+        self.emit(Instruction::i(Opcode::Iaddi, rd, ra, imm as u16));
+    }
+
+    pub fn imuli(&mut self, rd: u8, ra: u8, imm: u16) {
+        self.emit(Instruction::i(Opcode::Imuli, rd, ra, imm));
+    }
+
+    pub fn iandi(&mut self, rd: u8, ra: u8, imm: u16) {
+        self.emit(Instruction::i(Opcode::Iandi, rd, ra, imm));
+    }
+
+    pub fn ishli(&mut self, rd: u8, ra: u8, imm: u16) {
+        self.emit(Instruction::i(Opcode::Ishli, rd, ra, imm));
+    }
+
+    pub fn ishri(&mut self, rd: u8, ra: u8, imm: u16) {
+        self.emit(Instruction::i(Opcode::Ishri, rd, ra, imm));
+    }
+
+    pub fn iadd(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Iadd, rd, ra, rb));
+    }
+
+    pub fn ld(&mut self, rd: u8, raddr: u8) {
+        self.emit(Instruction::i(Opcode::Ld, rd, raddr, 0));
+    }
+
+    pub fn st(&mut self, raddr: u8, rval: u8) {
+        self.emit(Instruction::r(Opcode::St, 0, raddr, rval));
+    }
+
+    pub fn stnb(&mut self, raddr: u8, rval: u8) {
+        self.emit(Instruction::r(Opcode::Stnb, 0, raddr, rval));
+    }
+
+    pub fn fadd(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Fadd, rd, ra, rb));
+    }
+
+    pub fn fsub(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Fsub, rd, ra, rb));
+    }
+
+    pub fn fmul(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Fmul, rd, ra, rb));
+    }
+
+    pub fn fneg(&mut self, rd: u8, ra: u8) {
+        self.emit(Instruction::r(Opcode::Fneg, rd, ra, 0));
+    }
+
+    pub fn halt(&mut self) {
+        self.emit(Instruction::z(Opcode::Halt));
+    }
+
+    // --- complex helpers (allocate destinations from the pool) ---------
+
+    /// `dst = a + b` (2 FP ops).
+    pub fn cadd(&mut self, dst: CReg, a: CReg, b: CReg) {
+        self.fadd(dst.re, a.re, b.re);
+        self.fadd(dst.im, a.im, b.im);
+    }
+
+    /// `dst = a - b` (2 FP ops).
+    pub fn csub(&mut self, dst: CReg, a: CReg, b: CReg) {
+        self.fsub(dst.re, a.re, b.re);
+        self.fsub(dst.im, a.im, b.im);
+    }
+
+    /// `x *= (c_re, c_im)` in place, with two scratch registers
+    /// (6 FP ops: 4 mul, 1 sub, 1 add).
+    pub fn cmul_inplace(&mut self, x: CReg, c_re: u8, c_im: u8, t0: u8, t1: u8) {
+        self.fmul(t0, x.re, c_im); // t0 = re·ci (cross term, saved)
+        self.fmul(x.re, x.re, c_re); // re = re·cr
+        self.fmul(t1, x.im, c_im); // t1 = im·ci
+        self.fsub(x.re, x.re, t1); // re = re·cr − im·ci
+        self.fmul(t1, x.im, c_re); // t1 = im·cr
+        self.fadd(x.im, t0, t1); // im = re·ci + im·cr
+    }
+
+    /// `x *= -i` — free: rename (re,im) → (im,−re) with one FNEG.
+    pub fn cmul_negi(&mut self, x: CReg) -> CReg {
+        self.fneg(x.re, x.re);
+        CReg { re: x.im, im: x.re }
+    }
+
+    /// Finish: returns the program.
+    pub fn build(mut self) -> Program {
+        assert!(
+            matches!(self.insts.last(), Some(i) if i.op == Opcode::Halt),
+            "program must end with halt"
+        );
+        let insts = std::mem::take(&mut self.insts);
+        Program::new(self.name.clone(), self.threads, insts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_and_read(b: ProgramBuilder, n: usize) -> Vec<f32> {
+        let p = b.build();
+        let mut m =
+            Machine::new(MachineConfig::for_arch(MemoryArchKind::banked(16)).with_mem_words(4096));
+        m.run_program(&p).expect("runs");
+        m.read_f32_image(0, n)
+    }
+
+    #[test]
+    fn fconst_is_bit_exact() {
+        let mut b = ProgramBuilder::new("fc", 16);
+        let c = b.alloc();
+        let a = b.alloc();
+        b.fconst(c, std::f32::consts::FRAC_1_SQRT_2);
+        b.tid(a);
+        b.st(a, c);
+        b.halt();
+        let out = run_and_read(b, 1);
+        assert_eq!(out[0].to_bits(), std::f32::consts::FRAC_1_SQRT_2.to_bits());
+    }
+
+    #[test]
+    fn cmul_matches_complex_arithmetic() {
+        // (3 + 4i) · (0.6 − 0.8i) = (1.8+3.2) + (−2.4+2.4)i = 5 + 0i
+        let mut b = ProgramBuilder::new("cm", 16);
+        let x = b.alloc_c();
+        let (cr, ci) = (b.alloc(), b.alloc());
+        let (t0, t1) = (b.alloc(), b.alloc());
+        let addr = b.alloc();
+        b.fconst(x.re, 3.0);
+        b.fconst(x.im, 4.0);
+        b.fconst(cr, 0.6);
+        b.fconst(ci, -0.8);
+        b.cmul_inplace(x, cr, ci, t0, t1);
+        b.tid(addr);
+        b.ishli(addr, addr, 1);
+        b.st(addr, x.re);
+        b.iaddi(addr, addr, 1);
+        b.st(addr, x.im);
+        b.halt();
+        let out = run_and_read(b, 2);
+        assert!((out[0] - 5.0).abs() < 1e-5, "re = {}", out[0]);
+        assert!(out[1].abs() < 1e-5, "im = {}", out[1]);
+    }
+
+    #[test]
+    fn cmul_negi_renames() {
+        // (2 + 3i)·(−i) = 3 − 2i, via renaming.
+        let mut b = ProgramBuilder::new("negi", 16);
+        let x = b.alloc_c();
+        let addr = b.alloc();
+        b.fconst(x.re, 2.0);
+        b.fconst(x.im, 3.0);
+        let y = b.cmul_negi(x);
+        b.tid(addr);
+        b.ishli(addr, addr, 1);
+        b.st(addr, y.re);
+        b.iaddi(addr, addr, 1);
+        b.st(addr, y.im);
+        b.halt();
+        let out = run_and_read(b, 2);
+        assert_eq!(out[0], 3.0);
+        assert_eq!(out[1], -2.0);
+    }
+
+    #[test]
+    fn alloc_release_reuses() {
+        let mut b = ProgramBuilder::new("a", 16);
+        let before = b.free_regs();
+        let r = b.alloc();
+        assert_eq!(b.free_regs(), before - 1);
+        b.release(r);
+        assert_eq!(b.free_regs(), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "must end with halt")]
+    fn build_requires_halt() {
+        let b = ProgramBuilder::new("nohalt", 16);
+        let _ = b.build();
+    }
+
+    #[test]
+    fn const32_small_is_one_op() {
+        let mut b = ProgramBuilder::new("c", 16);
+        let r = b.alloc();
+        b.const32(r, 42);
+        assert_eq!(b.pc(), 1);
+        b.const32(r, 0x12345);
+        assert_eq!(b.pc(), 3);
+        b.halt();
+    }
+}

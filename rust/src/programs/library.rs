@@ -1,0 +1,109 @@
+//! Named program registry — the benchmark suite by name, for the CLI and
+//! the sweep runner.
+
+use super::fft::{fft_program, FftPlan};
+use super::transpose::{transpose_program, TransposePlan};
+use crate::isa::program::Program;
+
+/// A registered benchmark: the program plus the workload metadata the
+/// harness needs (memory image layout, twiddle region, capacity).
+pub enum Workload {
+    Transpose(TransposePlan, Program),
+    Fft(FftPlan, Program),
+}
+
+impl Workload {
+    pub fn program(&self) -> &Program {
+        match self {
+            Workload::Transpose(_, p) => p,
+            Workload::Fft(_, p) => p,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.program().name
+    }
+
+    /// Shared-memory words required (power of two).
+    pub fn mem_words(&self) -> usize {
+        match self {
+            Workload::Transpose(plan, _) => (plan.words as usize).next_power_of_two(),
+            Workload::Fft(plan, _) => plan.mem_words(),
+        }
+    }
+
+    /// Twiddle region for load classification (FFTs only).
+    pub fn tw_region(&self) -> Option<std::ops::Range<u32>> {
+        match self {
+            Workload::Transpose(..) => None,
+            Workload::Fft(plan, _) => Some(plan.tw_region()),
+        }
+    }
+}
+
+/// The benchmark names of the paper's evaluation.
+pub fn program_names() -> Vec<&'static str> {
+    vec![
+        "transpose32",
+        "transpose64",
+        "transpose128",
+        "fft4096r4",
+        "fft4096r8",
+        "fft4096r16",
+    ]
+}
+
+/// Build a workload by name (`transposeN` for N ∈ {32, 64, 128} and other
+/// powers of two 4..=1024; `fft4096rR` for R ∈ {4, 8, 16}).
+pub fn program_by_name(name: &str) -> Option<Workload> {
+    if let Some(n) = name.strip_prefix("transpose") {
+        let n: u32 = n.parse().ok()?;
+        if !n.is_power_of_two() || !(4..=1024).contains(&n) {
+            return None;
+        }
+        return Some(Workload::Transpose(TransposePlan::new(n), transpose_program(n)));
+    }
+    if let Some(r) = name.strip_prefix("fft4096r") {
+        let r: u32 = r.parse().ok()?;
+        if !matches!(r, 4 | 8 | 16) {
+            return None;
+        }
+        let (plan, program) = fft_program(r);
+        return Some(Workload::Fft(plan, program));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_registered_names_build() {
+        for name in program_names() {
+            let w = program_by_name(name).unwrap_or_else(|| panic!("{name} must build"));
+            assert_eq!(w.name(), name);
+            assert!(w.mem_words().is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn unknown_names_rejected() {
+        assert!(program_by_name("transpose33").is_none());
+        assert!(program_by_name("fft4096r5").is_none());
+        assert!(program_by_name("quicksort").is_none());
+    }
+
+    #[test]
+    fn fft_workloads_have_tw_regions() {
+        assert!(program_by_name("fft4096r4").unwrap().tw_region().is_some());
+        assert!(program_by_name("transpose32").unwrap().tw_region().is_none());
+    }
+
+    #[test]
+    fn non_paper_sizes_also_build() {
+        // The library generalizes beyond the paper's three sizes.
+        assert!(program_by_name("transpose16").is_some());
+        assert!(program_by_name("transpose256").is_some());
+    }
+}

@@ -1,0 +1,18 @@
+//! Benchmark program generators (paper §V: "All benchmarks were written
+//! in assembler").
+//!
+//! The generators emit the same memory-access *patterns* the paper's
+//! hand-written assembler produces — consecutive-address reads and
+//! stride-N writes for the transposes; stride-varying butterfly and
+//! twiddle accesses with interleaved I/Q complex data for the FFTs —
+//! because those patterns are what drive the bank-conflict behaviour the
+//! paper measures.
+
+pub mod builder;
+pub mod fft;
+pub mod library;
+pub mod transpose;
+
+pub use fft::{fft_program, FftPlan};
+pub use library::{program_by_name, program_names};
+pub use transpose::{transpose_program, TransposePlan};

@@ -1,0 +1,215 @@
+//! Matrix-transpose benchmark programs (paper Table II).
+//!
+//! Out-of-place transpose `B[j][i] = A[i][j]` of an N×N matrix of 32-bit
+//! words: `A` at address 0, `B` at `N²`. Threads cover the matrix with
+//! consecutive linear indices, so:
+//!
+//! - **reads** sweep consecutive addresses ("across columns … naturally
+//!   mapped in different banks"),
+//! - **writes** stride by N ("down columns, where individual columns might
+//!   well be mapped to a single bank") — the pattern that pins the paper's
+//!   write bank efficiency at ≈6.1%.
+//!
+//! Thread blocks are capped at 4096 (the paper's example configuration);
+//! larger matrices unroll multiple elements per thread.
+
+use super::builder::ProgramBuilder;
+use crate::isa::program::Program;
+use crate::util::bits::log2_exact;
+
+/// Placement metadata for a transpose run.
+#[derive(Debug, Clone, Copy)]
+pub struct TransposePlan {
+    /// Matrix dimension N (power of two).
+    pub n: u32,
+    /// Word address of the source matrix A.
+    pub src_base: u32,
+    /// Word address of the destination matrix B.
+    pub dst_base: u32,
+    /// Thread-block size used.
+    pub threads: u32,
+    /// Shared-memory words the benchmark touches.
+    pub words: u32,
+}
+
+impl TransposePlan {
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (4..=1024).contains(&n));
+        let threads = (n * n).min(4096);
+        Self { n, src_base: 0, dst_base: n * n, threads, words: 2 * n * n }
+    }
+
+    /// Elements each thread moves.
+    pub fn elems_per_thread(&self) -> u32 {
+        self.n * self.n / self.threads
+    }
+}
+
+/// Generate the transpose program for an N×N matrix.
+pub fn transpose_program(n: u32) -> Program {
+    let plan = TransposePlan::new(n);
+    build(&plan)
+}
+
+/// Generate from an explicit plan (tests use non-default placements).
+pub fn build(plan: &TransposePlan) -> Program {
+    let n = plan.n;
+    let log_n = log2_exact(n) as u16;
+    let mut b = ProgramBuilder::new(format!("transpose{n}"), plan.threads);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let idx = b.alloc();
+    let row = b.alloc();
+    let col = b.alloc();
+    let dst = b.alloc();
+    let val = b.alloc();
+    let dst_base = b.alloc();
+    // Destination base can exceed the 16-bit immediate for large matrices;
+    // materialize it once.
+    b.const32(dst_base, plan.dst_base);
+
+    for e in 0..plan.elems_per_thread() {
+        // idx = tid + e·threads — consecutive addresses across the warp.
+        // Walk incrementally so the stride always fits the immediate.
+        if e == 0 {
+            b.iaddi(idx, tid, plan.src_base as i32);
+        } else {
+            b.iaddi(idx, idx, plan.threads as i32);
+        }
+        // row = idx >> log2(N); col = idx & (N−1).
+        b.ishri(row, idx, log_n);
+        b.iandi(col, idx, (n - 1) as u16);
+        // dst = dst_base + col·N + row.
+        b.ishli(dst, col, log_n);
+        b.iadd(dst, dst, row);
+        b.iadd(dst, dst, dst_base);
+        // Move the element: consecutive-address read, stride-N write.
+        b.ld(val, idx);
+        b.st(dst, val);
+    }
+    b.halt();
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+    use crate::util::XorShift64;
+
+    fn run_transpose(n: u32, arch: MemoryArchKind) -> (Machine, crate::sim::stats::RunReport) {
+        let plan = TransposePlan::new(n);
+        let p = transpose_program(n);
+        let words = (plan.words as usize).next_power_of_two().max(4096);
+        let mut m = Machine::new(MachineConfig::for_arch(arch).with_mem_words(words));
+        let mut rng = XorShift64::new(2025);
+        let src: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+        m.load_image(plan.src_base, &src);
+        let r = m.run_program(&p).expect("transpose runs");
+        (m, r)
+    }
+
+    fn check_functional(n: u32, arch: MemoryArchKind) {
+        let plan = TransposePlan::new(n);
+        let (m, _) = run_transpose(n, arch);
+        let src = m.read_image(plan.src_base, (n * n) as usize);
+        let dst = m.read_image(plan.dst_base, (n * n) as usize);
+        for i in 0..n as usize {
+            for j in 0..n as usize {
+                assert_eq!(
+                    dst[j * n as usize + i],
+                    src[i * n as usize + j],
+                    "B[{j}][{i}] != A[{i}][{j}] (n={n}, arch={arch})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn functional_32_all_paper_archs() {
+        for arch in MemoryArchKind::table2_eight() {
+            check_functional(32, arch);
+        }
+    }
+
+    #[test]
+    fn functional_64_and_128_on_banked16() {
+        check_functional(64, MemoryArchKind::banked(16));
+        check_functional(128, MemoryArchKind::banked_offset(16));
+    }
+
+    #[test]
+    fn plan_thread_caps() {
+        assert_eq!(TransposePlan::new(32).threads, 1024);
+        assert_eq!(TransposePlan::new(32).elems_per_thread(), 1);
+        assert_eq!(TransposePlan::new(64).threads, 4096);
+        assert_eq!(TransposePlan::new(128).threads, 4096);
+        assert_eq!(TransposePlan::new(128).elems_per_thread(), 4);
+    }
+
+    #[test]
+    fn load_store_op_counts_match_paper() {
+        // Table II: 32×32 → 64/64 load/store ops; 64×64 → 256/256;
+        // 128×128 → 1024/1024.
+        for (n, ops) in [(32u32, 64u64), (64, 256), (128, 1024)] {
+            let (_, r) = run_transpose(n, MemoryArchKind::banked(16));
+            assert_eq!(r.stats.d_load_ops, ops, "n={n}");
+            assert_eq!(r.stats.store_ops, ops, "n={n}");
+        }
+    }
+
+    #[test]
+    fn multiport_cycles_match_paper_exactly() {
+        // The deterministic multiport model must reproduce Table II's
+        // load/store cycle rows exactly: loads = ops×4, stores = ops×16
+        // (1W) or ops×8 (2W).
+        for (n, ops) in [(32u32, 64u64), (64, 256), (128, 1024)] {
+            let (_, r1) = run_transpose(n, MemoryArchKind::mp_4r1w());
+            assert_eq!(r1.stats.d_load_cycles, ops * 4, "4R-1W loads n={n}");
+            assert_eq!(r1.stats.store_cycles, ops * 16, "4R-1W stores n={n}");
+            let (_, r2) = run_transpose(n, MemoryArchKind::mp_4r2w());
+            assert_eq!(r2.stats.store_cycles, ops * 8, "4R-2W stores n={n}");
+        }
+    }
+
+    #[test]
+    fn banked_write_efficiency_pinned_low() {
+        // Stride-N writes serialize: W bank eff ≈ 6.1% for 16 banks
+        // (the paper's constant across the whole banked Table II row).
+        let (_, r) = run_transpose(32, MemoryArchKind::banked(16));
+        let eff = r.w_bank_eff().unwrap();
+        assert!((0.055..0.07).contains(&eff), "w eff = {eff}");
+    }
+
+    #[test]
+    fn banked_reads_efficient() {
+        let (_, r) = run_transpose(32, MemoryArchKind::banked(16));
+        assert!(r.r_bank_eff().unwrap() > 0.5, "consecutive reads should be near-ideal");
+    }
+
+    #[test]
+    fn offset_mapping_improves_transpose_total() {
+        // Paper: "The complex bank mapping improves the performance of the
+        // transpose benchmarks by about 10%".
+        let (_, lsb) = run_transpose(32, MemoryArchKind::banked(16));
+        let (_, off) = run_transpose(32, MemoryArchKind::banked_offset(16));
+        assert!(
+            off.total_cycles() < lsb.total_cycles(),
+            "offset {} should beat lsb {}",
+            off.total_cycles(),
+            lsb.total_cycles()
+        );
+    }
+
+    #[test]
+    fn fewer_banks_slower() {
+        let (_, b16) = run_transpose(64, MemoryArchKind::banked(16));
+        let (_, b8) = run_transpose(64, MemoryArchKind::banked(8));
+        let (_, b4) = run_transpose(64, MemoryArchKind::banked(4));
+        assert!(b16.total_cycles() <= b8.total_cycles());
+        assert!(b8.total_cycles() <= b4.total_cycles());
+    }
+}

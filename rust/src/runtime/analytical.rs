@@ -1,0 +1,159 @@
+//! Analytical timing mode: estimate a program's banked-memory cycles from
+//! its memory-operation trace through the **Pallas conflict-kernel
+//! artifact** — the L1 kernel running on the Rust hot path via PJRT.
+//!
+//! This is the batch counterpart of the cycle-accurate controllers: one
+//! PJRT call scores 256 operations at once instead of stepping arbiters
+//! per cycle. Integration tests pin the estimate to the simulator's
+//! attributed load/store cycles exactly (same conflict maths, same
+//! overhead model), which is also the repo's strongest evidence that the
+//! L1 kernel and the L3 controller implement the same architecture.
+
+use super::client::ArtifactRuntime;
+use super::golden::conflict_oracle;
+use crate::mem::arch::{MemoryArchKind, OpKind};
+use crate::mem::timing;
+use crate::mem::{LaneMask, FULL_MASK, LANES};
+use crate::sim::machine::MemTraceInstr;
+use anyhow::{bail, Result};
+
+/// Cycle estimate for one program trace on one banked architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnalyticalEstimate {
+    /// Estimated read-instruction cycles (data + twiddle loads together;
+    /// the oracle has no address-region classifier).
+    pub load_cycles: u64,
+    /// Estimated write-instruction cycles.
+    pub store_cycles: u64,
+    /// Operations scored.
+    pub ops: u64,
+}
+
+impl AnalyticalEstimate {
+    pub fn total_mem_cycles(&self) -> u64 {
+        self.load_cycles + self.store_cycles
+    }
+}
+
+/// Score a memory trace for a banked architecture through the PJRT
+/// conflict oracle.
+///
+/// Requirements: a banked `arch` whose mapping the `conflict{B}` artifact
+/// covers (LSB/Offset; the XOR map is simulator-only), and full lane
+/// masks (the paper's benchmarks always run multiples of 16 threads).
+pub fn estimate_banked(
+    rt: &ArtifactRuntime,
+    arch: MemoryArchKind,
+    trace: &[MemTraceInstr],
+) -> Result<AnalyticalEstimate> {
+    let MemoryArchKind::Banked { banks, mapping } = arch else {
+        bail!("analytical mode scores banked architectures (multiport is closed-form)");
+    };
+    if !mapping.oracle_supported() {
+        bail!("the conflict artifact does not cover the {mapping:?} map");
+    }
+    // Flatten the trace, remembering instruction boundaries and kinds.
+    let mut flat: Vec<[u32; LANES]> = Vec::new();
+    for instr in trace {
+        for &(addrs, mask) in &instr.ops {
+            if mask != FULL_MASK {
+                bail!("analytical mode requires full 16-lane operations");
+            }
+            flat.push(addrs);
+        }
+    }
+    let costs = conflict_oracle(rt, banks, &flat, mapping.shift())?;
+    // Re-apply the §III-A instruction overhead model.
+    let mut est = AnalyticalEstimate { load_cycles: 0, store_cycles: 0, ops: flat.len() as u64 };
+    let mut cursor = 0usize;
+    for instr in trace {
+        let n = instr.ops.len();
+        let spacing: u64 = costs[cursor..cursor + n]
+            .iter()
+            .map(|&c| c.max(1) as u64)
+            .sum();
+        cursor += n;
+        match instr.kind {
+            OpKind::Read => {
+                est.load_cycles += timing::banked_read_overhead(false) as u64 + spacing;
+            }
+            OpKind::Write => {
+                est.store_cycles += timing::banked_write_overhead(false) as u64 + spacing;
+            }
+        }
+    }
+    Ok(est)
+}
+
+/// Closed-form multiport estimate (no oracle needed): ⌈16/R⌉ per read op,
+/// ⌈16/W⌉ per write op — deterministic access is the multiport memory's
+/// defining property.
+pub fn estimate_multiport(arch: MemoryArchKind, trace: &[MemTraceInstr]) -> Result<AnalyticalEstimate> {
+    let MemoryArchKind::MultiPort { read_ports, write_ports, vb } = arch else {
+        bail!("not a multiport architecture");
+    };
+    let mut est = AnalyticalEstimate { load_cycles: 0, store_cycles: 0, ops: 0 };
+    for instr in trace {
+        for &(_, mask) in &instr.ops {
+            let active = (mask as LaneMask).count_ones();
+            est.ops += 1;
+            match instr.kind {
+                OpKind::Read => {
+                    est.load_cycles += crate::util::bits::ceil_div(active, read_ports).max(1) as u64
+                }
+                OpKind::Write => {
+                    let w = if vb { 2 } else { write_ports };
+                    est.store_cycles += crate::util::bits::ceil_div(active, w).max(1) as u64
+                }
+            }
+        }
+    }
+    Ok(est)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::BankMapping;
+
+    fn trace_one(kind: OpKind, ops: usize) -> Vec<MemTraceInstr> {
+        let mut addrs = [0u32; LANES];
+        for (l, a) in addrs.iter_mut().enumerate() {
+            *a = l as u32;
+        }
+        vec![MemTraceInstr { kind, ops: vec![(addrs, FULL_MASK); ops] }]
+    }
+
+    #[test]
+    fn multiport_closed_form() {
+        let est = estimate_multiport(MemoryArchKind::mp_4r1w(), &trace_one(OpKind::Read, 64))
+            .unwrap();
+        assert_eq!(est.load_cycles, 64 * 4);
+        let est = estimate_multiport(MemoryArchKind::mp_4r1w(), &trace_one(OpKind::Write, 64))
+            .unwrap();
+        assert_eq!(est.store_cycles, 64 * 16);
+        let est = estimate_multiport(MemoryArchKind::mp_4r1w_vb(), &trace_one(OpKind::Write, 64))
+            .unwrap();
+        assert_eq!(est.store_cycles, 64 * 8);
+    }
+
+    #[test]
+    fn multiport_rejects_banked() {
+        assert!(estimate_multiport(MemoryArchKind::banked(16), &[]).is_err());
+    }
+
+    #[test]
+    fn banked_rejects_xor_and_partial_masks() {
+        let rt = ArtifactRuntime::new("artifacts").unwrap();
+        let xor = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Xor };
+        assert!(estimate_banked(&rt, xor, &[]).is_err());
+        let partial = vec![MemTraceInstr {
+            kind: OpKind::Read,
+            ops: vec![([0u32; LANES], 0x00FF)],
+        }];
+        assert!(estimate_banked(&rt, MemoryArchKind::banked(16), &partial).is_err());
+    }
+
+    // The oracle-vs-simulator equality is integration-tested in
+    // rust/tests/analytical.rs (needs `make artifacts`).
+}

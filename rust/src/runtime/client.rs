@@ -1,0 +1,119 @@
+//! PJRT CPU client + compiled-executable cache.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Loads `artifacts/<name>.hlo.txt`, compiles on the PJRT CPU client and
+/// caches the executable per artifact name. Compilation happens once; the
+/// request path only executes.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl ArtifactRuntime {
+    /// Create a runtime rooted at an artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$SOFT_SIMT_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("SOFT_SIMT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact file path for a name.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// True if the artifact file exists (lets callers degrade gracefully
+    /// when `make artifacts` has not run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Compile (or fetch from cache) and execute an artifact on `inputs`.
+    /// Returns the flattened output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        // Compile under the lock only on first use.
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if !cache.contains_key(name) {
+                let path = self.artifact_path(name);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("loading HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling artifact '{name}'"))?;
+                cache.insert(name.to_string(), exe);
+            }
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute with f32 vector inputs/outputs (the common case).
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
+        let outs = self.execute(name, &lits)?;
+        outs.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The full PJRT round-trip is exercised by rust/tests/golden.rs (it
+    // needs `make artifacts`); these tests cover the artifact-less paths.
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let rt = ArtifactRuntime::new("/nonexistent-dir").expect("client still builds");
+        assert!(!rt.has_artifact("fft4096"));
+        let err = match rt.execute("fft4096", &[]) {
+            Err(e) => e,
+            Ok(_) => panic!("executing a missing artifact must fail"),
+        };
+        assert!(format!("{err:#}").contains("fft4096"));
+    }
+
+    #[test]
+    fn paths_are_name_mangled() {
+        let rt = ArtifactRuntime::new("artifacts").unwrap();
+        assert_eq!(
+            rt.artifact_path("conflict16"),
+            PathBuf::from("artifacts/conflict16.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn platform_is_cpu() {
+        let rt = ArtifactRuntime::new("artifacts").unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+}

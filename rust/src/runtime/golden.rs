@@ -1,0 +1,120 @@
+//! Golden-model validation through the AOT artifacts.
+//!
+//! Three oracles, all produced by `python/compile/aot.py` from the L2 JAX
+//! model (which itself is pytest-validated against pure-jnp references):
+//!
+//! - `fft4096` — the 4096-point complex FFT (Pallas butterfly stages);
+//!   validates the simulated FFT programs end to end,
+//! - `transposeN` — N×N transpose (Pallas tiled kernel),
+//! - `conflictB` — the batched bank-conflict analyzer (the L1 twin of
+//!   [`crate::mem::conflict`]); powers the *analytical timing mode* and is
+//!   cross-checked against the cycle-accurate controllers.
+
+use super::client::ArtifactRuntime;
+use crate::mem::LANES;
+use crate::programs::fft::{digit_reverse, FftPlan};
+use crate::sim::machine::Machine;
+use anyhow::{bail, Context, Result};
+
+/// Batch rows per conflict-oracle call (fixed in the artifact's shape).
+pub const CONFLICT_BATCH: usize = 256;
+
+/// Run the golden 4096-point FFT on split re/im inputs.
+pub fn golden_fft(rt: &ArtifactRuntime, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    if re.len() != 4096 || im.len() != 4096 {
+        bail!("golden_fft expects 4096-point inputs");
+    }
+    let outs = rt.execute_f32("fft4096", &[re, im])?;
+    if outs.len() != 2 {
+        bail!("fft4096 artifact must return (re, im), got {} outputs", outs.len());
+    }
+    let mut it = outs.into_iter();
+    Ok((it.next().unwrap(), it.next().unwrap()))
+}
+
+/// Run the golden N×N transpose.
+pub fn golden_transpose(rt: &ArtifactRuntime, n: usize, x: &[f32]) -> Result<Vec<f32>> {
+    if x.len() != n * n {
+        bail!("transpose input must be {n}x{n}");
+    }
+    let lit = xla::Literal::vec1(x).reshape(&[n as i64, n as i64])?;
+    let outs = rt.execute(&format!("transpose{n}"), &[lit])?;
+    if outs.len() != 1 {
+        bail!("transpose artifact must return a single output");
+    }
+    Ok(outs[0].to_vec::<f32>()?)
+}
+
+/// Batched bank-conflict oracle: max per-bank access count for each
+/// 16-lane operation, through the Pallas `conflict{banks}` artifact.
+/// `shift` is the mapping's bit offset (0 = LSB, 2 = Offset).
+pub fn conflict_oracle(
+    rt: &ArtifactRuntime,
+    banks: u32,
+    ops: &[[u32; LANES]],
+    shift: u32,
+) -> Result<Vec<u32>> {
+    let name = format!("conflict{banks}");
+    let mut out = Vec::with_capacity(ops.len());
+    for chunk in ops.chunks(CONFLICT_BATCH) {
+        // Pad the final chunk with zero-address rows (conflict 16, sliced
+        // off below).
+        let mut flat: Vec<i32> = Vec::with_capacity(CONFLICT_BATCH * LANES);
+        for row in chunk {
+            flat.extend(row.iter().map(|&a| a as i32));
+        }
+        flat.resize(CONFLICT_BATCH * LANES, 0);
+        let lit = xla::Literal::vec1(&flat).reshape(&[CONFLICT_BATCH as i64, LANES as i64])?;
+        let shift_lit = xla::Literal::scalar(shift as i32);
+        let outs = rt
+            .execute(&name, &[lit, shift_lit])
+            .with_context(|| format!("conflict oracle banks={banks}"))?;
+        let counts = outs[0].to_vec::<i32>()?;
+        out.extend(counts[..chunk.len()].iter().map(|&c| c as u32));
+    }
+    Ok(out)
+}
+
+/// Validate a simulated FFT memory image against the golden FFT.
+/// `machine` must have just run the program of `plan` on inputs `re`/`im`.
+/// Returns the max relative error.
+pub fn validate_fft(
+    rt: &ArtifactRuntime,
+    machine: &Machine,
+    plan: &FftPlan,
+    re: &[f32],
+    im: &[f32],
+) -> Result<f64> {
+    let (gr, gi) = golden_fft(rt, re, im)?;
+    let out = machine.read_f32_image(plan.data_base, 2 * plan.n as usize);
+    let mut max_err = 0.0f64;
+    let mut max_mag = 0.0f64;
+    for k in 0..plan.n as usize {
+        let p = digit_reverse(k as u32, plan.radix, plan.stages) as usize;
+        let (sr, si) = (out[2 * p] as f64, out[2 * p + 1] as f64);
+        let err = ((sr - gr[k] as f64).powi(2) + (si - gi[k] as f64).powi(2)).sqrt();
+        max_err = max_err.max(err);
+        max_mag = max_mag.max(((gr[k] as f64).powi(2) + (gi[k] as f64).powi(2)).sqrt());
+    }
+    Ok(max_err / max_mag.max(1e-30))
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent paths are integration-tested in rust/tests/golden.rs
+    // (they require `make artifacts`). Here: input validation only.
+    use super::*;
+
+    #[test]
+    fn golden_fft_rejects_wrong_size() {
+        let rt = ArtifactRuntime::new("artifacts").unwrap();
+        let v = vec![0.0f32; 8];
+        assert!(golden_fft(&rt, &v, &v).is_err());
+    }
+
+    #[test]
+    fn golden_transpose_rejects_non_square() {
+        let rt = ArtifactRuntime::new("artifacts").unwrap();
+        assert!(golden_transpose(&rt, 32, &[0.0; 10]).is_err());
+    }
+}

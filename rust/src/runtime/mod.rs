@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! Rust (Python never runs at this point — `make artifacts` already did).
+//!
+//! Interchange format is **HLO text**: jax ≥ 0.5 serializes
+//! `HloModuleProto`s with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md` and
+//! `python/compile/aot.py`).
+
+pub mod analytical;
+pub mod client;
+pub mod golden;
+
+pub use client::ArtifactRuntime;

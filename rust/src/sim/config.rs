@@ -1,0 +1,108 @@
+//! Machine configuration.
+
+use crate::mem::arch::MemoryArchKind;
+use crate::mem::LANES;
+use std::ops::Range;
+
+/// Configuration of one simulated soft SIMT processor.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    /// Shared-memory architecture (one of the paper's nine).
+    pub arch: MemoryArchKind,
+    /// Shared-memory capacity in 32-bit words (power of two). The default,
+    /// 64 Ki words = 256 KB, holds every paper benchmark (the 4096-point
+    /// FFT needs "nearly 64KB with the required twiddle coefficients").
+    pub mem_words: usize,
+    /// Use the closed-form banked timing path instead of stepping the
+    /// carry-chain arbiters (identical cycle counts — property-tested —
+    /// but faster simulation; see DESIGN.md §Perf).
+    pub fast_timing: bool,
+    /// §IV-A half-bank configuration (+2 cycles of bank latency).
+    pub half_banks: bool,
+    /// Address range whose loads are classified as twiddle loads
+    /// ("TW Load" rows of Table III). `None` classifies every load as a
+    /// data load.
+    pub tw_region: Option<Range<u32>>,
+    /// Abort threshold for runaway programs (simulated cycles).
+    pub max_cycles: u64,
+    /// Record the per-instruction memory-operation trace (addresses and
+    /// lane masks) during the run — the input to the analytical timing
+    /// oracle ([`crate::runtime::analytical`]).
+    pub collect_mem_trace: bool,
+}
+
+impl MachineConfig {
+    /// Default configuration for a memory architecture.
+    pub fn for_arch(arch: MemoryArchKind) -> Self {
+        Self {
+            arch,
+            mem_words: 65_536,
+            fast_timing: false,
+            half_banks: false,
+            tw_region: None,
+            max_cycles: 2_000_000_000,
+            collect_mem_trace: false,
+        }
+    }
+
+    /// Builder: shared-memory capacity in words.
+    pub fn with_mem_words(mut self, words: usize) -> Self {
+        assert!(words.is_power_of_two());
+        self.mem_words = words;
+        self
+    }
+
+    /// Builder: twiddle address region.
+    pub fn with_tw_region(mut self, region: Range<u32>) -> Self {
+        self.tw_region = Some(region);
+        self
+    }
+
+    /// Builder: fast banked timing.
+    pub fn with_fast_timing(mut self) -> Self {
+        self.fast_timing = true;
+        self
+    }
+
+    /// Builder: record the memory-operation trace.
+    pub fn with_mem_trace(mut self) -> Self {
+        self.collect_mem_trace = true;
+        self
+    }
+
+    /// Number of SIMT lanes (fixed at 16 — the paper's warp).
+    pub const fn lanes(&self) -> usize {
+        LANES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = MachineConfig::for_arch(MemoryArchKind::banked(16));
+        assert_eq!(c.mem_words, 65_536);
+        assert_eq!(c.lanes(), 16);
+        assert!(!c.fast_timing);
+        assert!(c.tw_region.is_none());
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = MachineConfig::for_arch(MemoryArchKind::mp_4r1w())
+            .with_mem_words(16_384)
+            .with_tw_region(8192..10_240)
+            .with_fast_timing();
+        assert_eq!(c.mem_words, 16_384);
+        assert_eq!(c.tw_region, Some(8192..10_240));
+        assert!(c.fast_timing);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_capacity_rejected() {
+        MachineConfig::for_arch(MemoryArchKind::banked(4)).with_mem_words(1000);
+    }
+}

@@ -1,0 +1,862 @@
+//! The SIMT machine: fetch/decode, 16 SPs, and the shared-memory access
+//! path (paper Fig. 1).
+//!
+//! Execution model: one instruction at a time, executed for *every* thread
+//! in the block before the next instruction starts (§III: "an instruction
+//! will typically execute all threads before starting the next
+//! instruction"). With `T` threads and 16 lanes, an instruction issues
+//! `⌈T/16⌉` operations, one per clock for ALU classes; memory instructions
+//! are timed by the configured [`SharedMemory`] and the §III-A controller
+//! model ([`WritePipeline`]).
+//!
+//! Uniform control flow only: `jmp`/`bnz` must take the same direction in
+//! every thread (SIMT divergence is out of the paper's scope and the
+//! simulator reports it as an error rather than silently mis-timing).
+
+use super::config::MachineConfig;
+use super::regfile::RegFile;
+use super::stats::{CycleStats, RunReport};
+use crate::isa::inst::Instruction;
+use crate::isa::opcode::{OpClass, Opcode};
+use crate::isa::program::Program;
+use crate::mem::arch::{OpKind, SharedMemory};
+use crate::mem::banked::{BankedMemory, TimingMode};
+use crate::mem::controller::WritePipeline;
+use crate::mem::{LaneMask, LANES};
+
+/// Simulation errors (all carry the faulting PC).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// A lane addressed past the end of shared memory.
+    InvalidAddress { pc: usize, thread: u32, addr: u32, words: usize },
+    /// Threads disagreed on a branch direction.
+    DivergentBranch { pc: usize },
+    /// Branch target outside the program.
+    BadJumpTarget { pc: usize, target: u16 },
+    /// The run exceeded `max_cycles` (runaway loop guard).
+    CycleLimit { limit: u64 },
+    /// Execution fell off the end of the instruction stream.
+    MissingHalt,
+    /// Program binary failed to decode.
+    BadProgram(String),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::InvalidAddress { pc, thread, addr, words } => write!(
+                f,
+                "pc {pc}: thread {thread} addressed {addr} beyond shared memory ({words} words)"
+            ),
+            SimError::DivergentBranch { pc } => {
+                write!(f, "pc {pc}: divergent branch (threads disagree)")
+            }
+            SimError::BadJumpTarget { pc, target } => {
+                write!(f, "pc {pc}: jump target {target} outside program")
+            }
+            SimError::CycleLimit { limit } => write!(f, "exceeded cycle limit {limit}"),
+            SimError::MissingHalt => write!(f, "execution fell off the end (missing halt)"),
+            SimError::BadProgram(m) => write!(f, "bad program: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Classification of one executed memory instruction, for the Table III
+/// D-load / TW-load split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LoadClass {
+    Data,
+    Twiddle,
+}
+
+/// One memory instruction's recorded operations (for the analytical
+/// timing oracle): the instruction kind and each 16-lane operation's
+/// addresses + active-lane mask.
+#[derive(Debug, Clone)]
+pub struct MemTraceInstr {
+    pub kind: OpKind,
+    pub ops: Vec<([u32; LANES], LaneMask)>,
+}
+
+/// The simulated processor.
+pub struct Machine {
+    cfg: MachineConfig,
+    mem: Box<dyn SharedMemory>,
+    write_pipe: WritePipeline,
+    now: u64,
+    stats: CycleStats,
+    mem_trace: Vec<MemTraceInstr>,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Self {
+        let mem: Box<dyn SharedMemory> = match cfg.arch {
+            crate::mem::arch::MemoryArchKind::Banked { banks, mapping } => {
+                let mut b = BankedMemory::new(cfg.mem_words, banks, mapping);
+                if cfg.fast_timing {
+                    b = b.with_mode(TimingMode::Fast);
+                }
+                if cfg.half_banks {
+                    b = b.with_half_banks();
+                }
+                Box::new(b)
+            }
+            _ => cfg.arch.build(cfg.mem_words),
+        };
+        let write_pipe = WritePipeline::new(mem.write_buffer_ops());
+        Self {
+            cfg,
+            mem,
+            write_pipe,
+            now: 0,
+            stats: CycleStats::default(),
+            mem_trace: Vec::new(),
+        }
+    }
+
+    /// The memory-operation trace of the last run (empty unless
+    /// [`MachineConfig::collect_mem_trace`] is set).
+    pub fn mem_trace(&self) -> &[MemTraceInstr] {
+        &self.mem_trace
+    }
+
+    /// The machine configuration.
+    pub fn config(&self) -> &MachineConfig {
+        &self.cfg
+    }
+
+    /// Direct shared-memory access (image loading / validation).
+    pub fn mem(&self) -> &dyn SharedMemory {
+        self.mem.as_ref()
+    }
+
+    /// Load a word image into shared memory starting at `base`.
+    pub fn load_image(&mut self, base: u32, words: &[u32]) {
+        for (i, &w) in words.iter().enumerate() {
+            self.mem.poke(base + i as u32, w);
+        }
+    }
+
+    /// Load an f32 image (bit-cast) into shared memory starting at `base`.
+    pub fn load_f32_image(&mut self, base: u32, values: &[f32]) {
+        for (i, &v) in values.iter().enumerate() {
+            self.mem.poke(base + i as u32, v.to_bits());
+        }
+    }
+
+    /// Read back `n` f32 words starting at `base`.
+    pub fn read_f32_image(&self, base: u32, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| f32::from_bits(self.mem.peek(base + i as u32)))
+            .collect()
+    }
+
+    /// Read back `n` u32 words starting at `base`.
+    pub fn read_image(&self, base: u32, n: usize) -> Vec<u32> {
+        (0..n).map(|i| self.mem.peek(base + i as u32)).collect()
+    }
+
+    /// Run a program to `halt`, returning the per-class cycle report.
+    ///
+    /// The program is round-tripped through its binary encoding first —
+    /// the simulator consumes what the assembler would produce, keeping
+    /// the decode path honest.
+    pub fn run_program(&mut self, program: &Program) -> Result<RunReport, SimError> {
+        let words = program.encode();
+        let insts: Vec<Instruction> = words
+            .iter()
+            .enumerate()
+            .map(|(pc, &w)| {
+                Instruction::decode(w).ok_or_else(|| SimError::BadProgram(format!("pc {pc}")))
+            })
+            .collect::<Result<_, _>>()?;
+
+        let threads = program.threads;
+        let mut regs = RegFile::new(threads);
+        let start_clock = self.now;
+        self.stats = CycleStats::default();
+        self.mem_trace.clear();
+        let n_ops = (threads as u64 + LANES as u64 - 1) / LANES as u64;
+
+        let mut pc = 0usize;
+        loop {
+            if pc >= insts.len() {
+                return Err(SimError::MissingHalt);
+            }
+            if self.now - start_clock > self.cfg.max_cycles {
+                return Err(SimError::CycleLimit { limit: self.cfg.max_cycles });
+            }
+            let inst = insts[pc];
+            self.stats.instructions += 1;
+            match inst.op.class() {
+                OpClass::Int | OpClass::Imm | OpClass::Fp => {
+                    self.exec_alu(&mut regs, inst, threads);
+                    self.charge_alu(inst.op.class(), n_ops);
+                    pc += 1;
+                }
+                OpClass::Other => match inst.op {
+                    Opcode::Halt => {
+                        self.now += 1;
+                        let drained = self.write_pipe.drain(self.now);
+                        self.stats.drain_cycles += drained - self.now;
+                        self.now = drained;
+                        self.stats.other_cycles += 1;
+                        break;
+                    }
+                    Opcode::Nop => {
+                        self.stats.other_cycles += 1;
+                        self.now += 1;
+                        pc += 1;
+                    }
+                    Opcode::Jmp => {
+                        let target = inst.imm as usize;
+                        if target >= insts.len() {
+                            return Err(SimError::BadJumpTarget { pc, target: inst.imm });
+                        }
+                        self.stats.other_cycles += 1;
+                        self.now += 1;
+                        pc = target;
+                    }
+                    Opcode::Bnz => {
+                        let taken = regs.get(0, inst.rd) != 0;
+                        for t in 1..threads {
+                            if (regs.get(t, inst.rd) != 0) != taken {
+                                return Err(SimError::DivergentBranch { pc });
+                            }
+                        }
+                        self.stats.other_cycles += 1;
+                        self.now += 1;
+                        if taken {
+                            let target = inst.imm as usize;
+                            if target >= insts.len() {
+                                return Err(SimError::BadJumpTarget { pc, target: inst.imm });
+                            }
+                            pc = target;
+                        } else {
+                            pc += 1;
+                        }
+                    }
+                    Opcode::Tid => {
+                        for t in 0..threads {
+                            regs.set(t, inst.rd, t);
+                        }
+                        self.stats.other_cycles += n_ops;
+                        self.stats.operations += n_ops;
+                        self.now += n_ops;
+                        pc += 1;
+                    }
+                    _ => unreachable!("all Other opcodes handled"),
+                },
+                OpClass::Load => {
+                    self.exec_load(&mut regs, inst, threads, pc)?;
+                    pc += 1;
+                }
+                OpClass::Store => {
+                    self.exec_store(&mut regs, inst, threads, pc)?;
+                    pc += 1;
+                }
+            }
+        }
+
+        Ok(RunReport {
+            program: program.name.clone(),
+            arch: self.cfg.arch,
+            threads,
+            stats: self.stats,
+            elapsed_cycles: self.now - start_clock,
+        })
+    }
+
+    fn charge_alu(&mut self, class: OpClass, n_ops: u64) {
+        match class {
+            OpClass::Int => self.stats.int_cycles += n_ops,
+            OpClass::Imm => self.stats.imm_cycles += n_ops,
+            OpClass::Fp => self.stats.fp_cycles += n_ops,
+            _ => unreachable!(),
+        }
+        self.stats.operations += n_ops;
+        self.now += n_ops;
+    }
+
+    /// Execute an ALU instruction for every thread.
+    ///
+    /// §Perf: the opcode dispatch is hoisted *outside* the thread loop
+    /// (one specialized tight loop per opcode) — this function is the
+    /// simulator's hottest path (≈27% before the split; see
+    /// EXPERIMENTS.md §Perf).
+    fn exec_alu(&self, regs: &mut RegFile, inst: Instruction, threads: u32) {
+        use Opcode::*;
+        let imm = inst.imm as u32;
+        let (rd, ra, rb) = (inst.rd, inst.ra, inst.rb);
+        macro_rules! int_rr {
+            ($f:expr) => {
+                for t in 0..threads {
+                    let v = $f(regs.get(t, ra), regs.get(t, rb));
+                    regs.set(t, rd, v);
+                }
+            };
+        }
+        macro_rules! int_ri {
+            ($f:expr) => {
+                for t in 0..threads {
+                    let v = $f(regs.get(t, ra));
+                    regs.set(t, rd, v);
+                }
+            };
+        }
+        macro_rules! fp_rr {
+            ($f:expr) => {
+                for t in 0..threads {
+                    let v = $f(regs.get_f32(t, ra), regs.get_f32(t, rb));
+                    regs.set_f32(t, rd, v);
+                }
+            };
+        }
+        match inst.op {
+            Iadd => int_rr!(|a: u32, b: u32| a.wrapping_add(b)),
+            Isub => int_rr!(|a: u32, b: u32| a.wrapping_sub(b)),
+            Imul => int_rr!(|a: u32, b: u32| a.wrapping_mul(b)),
+            Iand => int_rr!(|a, b| a & b),
+            Ior => int_rr!(|a, b| a | b),
+            Ixor => int_rr!(|a, b| a ^ b),
+            Ishl => int_rr!(|a: u32, b: u32| a << (b & 31)),
+            Ishr => int_rr!(|a: u32, b: u32| a >> (b & 31)),
+            Iaddi => int_ri!(|a: u32| a.wrapping_add(sign_extend(imm))),
+            Imuli => int_ri!(|a: u32| a.wrapping_mul(sign_extend(imm))),
+            Iandi => int_ri!(|a| a & imm),
+            Iori => int_ri!(|a| a | imm),
+            Ixori => int_ri!(|a| a ^ imm),
+            Ishli => int_ri!(|a: u32| a << (imm & 31)),
+            Ishri => int_ri!(|a: u32| a >> (imm & 31)),
+            Ldi => {
+                for t in 0..threads {
+                    regs.set(t, rd, imm);
+                }
+            }
+            Lui => {
+                for t in 0..threads {
+                    let low = regs.get(t, rd) & 0xFFFF;
+                    regs.set(t, rd, (imm << 16) | low);
+                }
+            }
+            Fadd => fp_rr!(|a, b| a + b),
+            Fsub => fp_rr!(|a, b| a - b),
+            Fmul => fp_rr!(|a, b| a * b),
+            Fma => {
+                for t in 0..threads {
+                    let acc = regs.get_f32(t, rd);
+                    let v = regs.get_f32(t, ra).mul_add(regs.get_f32(t, rb), acc);
+                    regs.set_f32(t, rd, v);
+                }
+            }
+            Fneg => {
+                for t in 0..threads {
+                    let v = -regs.get_f32(t, ra);
+                    regs.set_f32(t, rd, v);
+                }
+            }
+            Itof => {
+                for t in 0..threads {
+                    let v = regs.get(t, ra) as i32 as f32;
+                    regs.set_f32(t, rd, v);
+                }
+            }
+            _ => unreachable!("not an ALU opcode"),
+        }
+    }
+
+    /// Gather one warp's addresses from register `ra`, with bounds checks.
+    fn warp_addrs(
+        &self,
+        regs: &RegFile,
+        ra: u8,
+        warp: u32,
+        threads: u32,
+        pc: usize,
+    ) -> Result<([u32; LANES], LaneMask), SimError> {
+        let base_t = warp * LANES as u32;
+        let mut addrs = [0u32; LANES];
+        let mut mask: LaneMask = 0;
+        for lane in 0..LANES {
+            let t = base_t + lane as u32;
+            if t >= threads {
+                break;
+            }
+            let addr = regs.get(t, ra);
+            if addr as usize >= self.cfg.mem_words {
+                return Err(SimError::InvalidAddress {
+                    pc,
+                    thread: t,
+                    addr,
+                    words: self.cfg.mem_words,
+                });
+            }
+            addrs[lane] = addr;
+            mask |= 1 << lane;
+        }
+        Ok((addrs, mask))
+    }
+
+    /// Classify a load by its addresses (Table III splits data loads from
+    /// twiddle loads).
+    fn classify_load(&self, addrs: &[u32; LANES], mask: LaneMask) -> LoadClass {
+        if let Some(region) = &self.cfg.tw_region {
+            if mask != 0 {
+                let lane = mask.trailing_zeros() as usize;
+                if region.contains(&addrs[lane]) {
+                    return LoadClass::Twiddle;
+                }
+            }
+        }
+        LoadClass::Data
+    }
+
+    fn exec_load(
+        &mut self,
+        regs: &mut RegFile,
+        inst: Instruction,
+        threads: u32,
+        pc: usize,
+    ) -> Result<(), SimError> {
+        let n_warps = (threads as usize + LANES - 1) / LANES;
+        let mut attributed = self.mem.overhead(OpKind::Read) as u64;
+        let mut class = LoadClass::Data;
+        let mut trace = self
+            .cfg
+            .collect_mem_trace
+            .then(|| MemTraceInstr { kind: OpKind::Read, ops: Vec::with_capacity(n_warps) });
+        for w in 0..n_warps {
+            let (addrs, mask) = self.warp_addrs(regs, inst.ra, w as u32, threads, pc)?;
+            if let Some(t) = trace.as_mut() {
+                t.ops.push((addrs, mask));
+            }
+            if w == 0 {
+                class = self.classify_load(&addrs, mask);
+            }
+            let op = self.mem.read_op(&addrs, mask);
+            attributed += op.cycles.max(1) as u64;
+            let base_t = w as u32 * LANES as u32;
+            let mut m = mask;
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                regs.set(base_t + lane as u32, inst.rd, op.data[lane]);
+            }
+        }
+        if let Some(t) = trace {
+            self.mem_trace.push(t);
+        }
+        // A read instruction pauses fetch/decode until writeback (§III-A).
+        self.now += attributed;
+        self.stats.operations += n_warps as u64;
+        match class {
+            LoadClass::Data => {
+                self.stats.d_load_cycles += attributed;
+                self.stats.d_load_ops += n_warps as u64;
+            }
+            LoadClass::Twiddle => {
+                self.stats.tw_load_cycles += attributed;
+                self.stats.tw_load_ops += n_warps as u64;
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_store(
+        &mut self,
+        regs: &mut RegFile,
+        inst: Instruction,
+        threads: u32,
+        pc: usize,
+    ) -> Result<(), SimError> {
+        let n_warps = (threads as usize + LANES - 1) / LANES;
+        let blocking = inst.op == Opcode::St;
+        let overhead = self.mem.overhead(OpKind::Write);
+        let start = self.now;
+        let mut iss = self.now;
+        let mut trace = self
+            .cfg
+            .collect_mem_trace
+            .then(|| MemTraceInstr { kind: OpKind::Write, ops: Vec::with_capacity(n_warps) });
+        for w in 0..n_warps {
+            let (addrs, mask) = self.warp_addrs(regs, inst.ra, w as u32, threads, pc)?;
+            if let Some(t) = trace.as_mut() {
+                t.ops.push((addrs, mask));
+            }
+            let base_t = w as u32 * LANES as u32;
+            let mut data = [0u32; LANES];
+            let mut m = mask;
+            while m != 0 {
+                let lane = m.trailing_zeros() as usize;
+                m &= m - 1;
+                data[lane] = regs.get(base_t + lane as u32, inst.rb);
+            }
+            let cost = self.mem.write_op(&addrs, &data, mask);
+            let before = iss;
+            iss = self.write_pipe.issue_nonblocking(iss, cost.max(1), overhead);
+            // Anything beyond the single issue cycle was a buffer-full stall.
+            self.stats.wbuf_stall_cycles += iss - before - 1;
+        }
+        if let Some(t) = trace {
+            self.mem_trace.push(t);
+        }
+        self.stats.operations += n_warps as u64;
+        self.stats.store_ops += n_warps as u64;
+        if blocking {
+            // Blocking write: hold the pipeline until the controller drains.
+            let end = self.write_pipe.drain(iss);
+            self.stats.store_cycles += end - start;
+            self.now = end;
+        } else {
+            // Non-blocking: the pipeline continues after issue; attribute
+            // the background service cost so the Store Cycles row still
+            // reflects the memory work (the paper's accounting).
+            self.stats.store_cycles +=
+                (self.write_pipe.busy_until().saturating_sub(start)).max(iss - start);
+            self.now = iss;
+        }
+        Ok(())
+    }
+}
+
+/// 16-bit immediates are sign-extended for the arithmetic immediates
+/// (`iaddi r, r, -1` must work); logical immediates use them zero-extended.
+#[inline]
+fn sign_extend(imm: u32) -> u32 {
+    imm as u16 as i16 as i32 as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+    use crate::mem::arch::MemoryArchKind;
+
+    fn machine(arch: MemoryArchKind) -> Machine {
+        Machine::new(MachineConfig::for_arch(arch).with_mem_words(4096))
+    }
+
+    fn run(src: &str, arch: MemoryArchKind) -> (Machine, RunReport) {
+        let p = assemble(src).expect("assembles");
+        let mut m = machine(arch);
+        let r = m.run_program(&p).expect("runs");
+        (m, r)
+    }
+
+    #[test]
+    fn tid_and_store_roundtrip() {
+        // Each thread writes its tid to shared[tid].
+        let src = "
+.threads 64
+    tid  r0
+    st   [r0], r0
+    halt
+";
+        let (m, r) = run(src, MemoryArchKind::banked(16));
+        for t in 0..64 {
+            assert_eq!(m.mem().peek(t), t);
+        }
+        assert_eq!(r.stats.store_ops, 4);
+        assert_eq!(r.threads, 64);
+    }
+
+    #[test]
+    fn alu_cycle_accounting() {
+        // 64 threads = 4 operations per instruction.
+        let src = "
+.threads 64
+    tid   r0
+    ldi   r1, 3
+    iadd  r2, r0, r1
+    itof  r3, r2
+    fadd  r4, r3, r3
+    halt
+";
+        let (_, r) = run(src, MemoryArchKind::mp_4r1w());
+        assert_eq!(r.stats.imm_cycles, 4); // ldi
+        assert_eq!(r.stats.int_cycles, 4); // iadd
+        assert_eq!(r.stats.fp_cycles, 8); // itof + fadd
+        assert_eq!(r.stats.other_cycles, 4 + 1); // tid (per-op) + halt
+        assert_eq!(r.total_cycles(), 21);
+        assert_eq!(r.stats.attributed_total(), 21);
+    }
+
+    #[test]
+    fn multiport_load_costs_match_paper_model() {
+        // 64 threads → 4 read ops × ⌈16/4⌉ = 16 cycles, zero overhead.
+        let src = "
+.threads 64
+    tid  r0
+    ld   r1, [r0]
+    halt
+";
+        let (_, r) = run(src, MemoryArchKind::mp_4r1w());
+        assert_eq!(r.stats.d_load_cycles, 16);
+        assert_eq!(r.stats.d_load_ops, 4);
+    }
+
+    #[test]
+    fn banked_conflict_free_load() {
+        // Consecutive tids → conflict-free: 4 ops + 12 overhead.
+        let src = "
+.threads 64
+    tid  r0
+    ld   r1, [r0]
+    halt
+";
+        let (_, r) = run(src, MemoryArchKind::banked(16));
+        assert_eq!(r.stats.d_load_cycles, 12 + 4);
+    }
+
+    #[test]
+    fn banked_full_conflict_store() {
+        // Every thread writes address tid*16 → all lanes hit bank 0:
+        // each op costs 16; blocking store = 5 (overhead) + 64 cycles.
+        let src = "
+.threads 64
+    tid   r0
+    ishli r1, r0, 4
+    st    [r1], r0
+    halt
+";
+        let (_, r) = run(src, MemoryArchKind::banked(16));
+        assert_eq!(r.stats.store_cycles, 5 + 4 * 16);
+    }
+
+    #[test]
+    fn blocking_vs_nonblocking_store_elapsed() {
+        let blocking = "
+.threads 256
+    tid   r0
+    ishli r1, r0, 4
+    st    [r1], r0
+    halt
+";
+        let nonblocking = blocking.replace("st ", "stnb ");
+        let (_, rb) = run(blocking, MemoryArchKind::banked(16));
+        let (_, rn) = run(&nonblocking, MemoryArchKind::banked(16));
+        // Same memory work...
+        assert_eq!(rb.stats.store_ops, rn.stats.store_ops);
+        // ...but the non-blocking variant only pays at the final drain,
+        // which happens at halt here, so elapsed matches (halt waits);
+        // issuing work *between* stnb and halt would overlap. Verify via
+        // an instruction stream that does ALU work after the store.
+        let overlapped = "
+.threads 256
+    tid   r0
+    ishli r1, r0, 4
+    stnb  [r1], r0
+    itof  r2, r0
+    fadd  r2, r2, r2
+    fmul  r2, r2, r2
+    halt
+";
+        let (_, ro) = run(overlapped, MemoryArchKind::banked(16));
+        // The 48 FP cycles hide inside the store drain: elapsed is within
+        // a few cycles of the non-overlapped run.
+        assert!(
+            ro.total_cycles() < rn.total_cycles() + 10,
+            "overlap should hide ALU work: {} vs {}",
+            ro.total_cycles(),
+            rn.total_cycles()
+        );
+        assert!(ro.stats.drain_cycles > 0);
+    }
+
+    #[test]
+    fn uniform_loop_runs() {
+        // Loop 10 times using a uniform counter in r1.
+        let src = "
+.threads 32
+    ldi   r1, 10
+loop:
+    iaddi r1, r1, -1
+    bnz   r1, loop
+    halt
+";
+        let (_, r) = run(src, MemoryArchKind::mp_4r1w());
+        // ldi (2 ops) + 10×(iaddi 2 ops + bnz 1) + halt 1.
+        assert_eq!(r.stats.imm_cycles, 2 + 20);
+        assert_eq!(r.stats.other_cycles, 10 + 1);
+    }
+
+    #[test]
+    fn divergent_branch_detected() {
+        let src = "
+.threads 32
+    tid  r0
+    bnz  r0, 0
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut m = machine(MemoryArchKind::banked(4));
+        assert!(matches!(m.run_program(&p), Err(SimError::DivergentBranch { pc: 1 })));
+    }
+
+    #[test]
+    fn out_of_bounds_address_detected() {
+        let src = "
+.threads 16
+    ldi  r0, 0
+    lui  r0, 1
+    ld   r1, [r0]
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut m = machine(MemoryArchKind::banked(4));
+        match m.run_program(&p) {
+            Err(SimError::InvalidAddress { addr, .. }) => assert_eq!(addr, 65536),
+            other => panic!("expected InvalidAddress, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_halt_detected() {
+        let p = assemble(".threads 16\nnop\n").unwrap();
+        let mut m = machine(MemoryArchKind::mp_4r1w());
+        assert!(matches!(m.run_program(&p), Err(SimError::MissingHalt)));
+    }
+
+    #[test]
+    fn cycle_limit_guards_infinite_loops() {
+        let src = "
+.threads 16
+loop:
+    jmp loop
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut cfg = MachineConfig::for_arch(MemoryArchKind::mp_4r1w());
+        cfg.max_cycles = 10_000;
+        let mut m = Machine::new(cfg);
+        assert!(matches!(m.run_program(&p), Err(SimError::CycleLimit { .. })));
+    }
+
+    #[test]
+    fn sign_extended_immediates() {
+        let src = "
+.threads 16
+    ldi   r0, 5
+    iaddi r0, r0, -1
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut m = machine(MemoryArchKind::mp_4r1w());
+        m.run_program(&p).unwrap();
+        // No architectural way to observe registers directly; store them.
+        let src2 = "
+.threads 16
+    ldi   r0, 5
+    iaddi r0, r0, -1
+    tid   r1
+    st    [r1], r0
+    halt
+";
+        let (m2, _) = run(src2, MemoryArchKind::mp_4r1w());
+        assert_eq!(m2.mem().peek(0), 4);
+    }
+
+    #[test]
+    fn fp_datapath_ieee() {
+        let src = "
+.threads 16
+    tid   r0
+    itof  r1, r0
+    fmul  r2, r1, r1
+    fneg  r3, r2
+    fsub  r4, r2, r3
+    st    [r0], r4
+    halt
+";
+        let (m, _) = run(src, MemoryArchKind::banked(8));
+        for t in 0..16u32 {
+            let expect = 2.0 * (t as f32) * (t as f32);
+            assert_eq!(f32::from_bits(m.mem().peek(t)), expect);
+        }
+    }
+
+    #[test]
+    fn fma_fused() {
+        let src = "
+.threads 16
+    tid   r0
+    itof  r1, r0
+    ldi   r2, 3
+    itof  r3, r2
+    ldi   r4, 0
+    itof  r5, r4
+    fma   r5, r1, r3
+    st    [r0], r5
+    halt
+";
+        let (m, _) = run(src, MemoryArchKind::mp_4r1w());
+        for t in 0..16u32 {
+            assert_eq!(f32::from_bits(m.mem().peek(t)), 3.0 * t as f32);
+        }
+    }
+
+    #[test]
+    fn tw_region_classifies_loads() {
+        let src = "
+.threads 16
+    tid   r0
+    ld    r1, [r0]
+    iaddi r2, r0, 100
+    ld    r3, [r2]
+    halt
+";
+        let p = assemble(src).unwrap();
+        let cfg = MachineConfig::for_arch(MemoryArchKind::banked(16))
+            .with_mem_words(4096)
+            .with_tw_region(100..200);
+        let mut m = Machine::new(cfg);
+        let r = m.run_program(&p).unwrap();
+        assert_eq!(r.stats.d_load_ops, 1);
+        assert_eq!(r.stats.tw_load_ops, 1);
+        assert!(r.stats.tw_load_cycles > 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let src = "
+.threads 128
+    tid   r0
+    ishli r1, r0, 2
+    ld    r2, [r1]
+    iadd  r2, r2, r0
+    st    [r1], r2
+    halt
+";
+        let (_, r1) = run(src, MemoryArchKind::banked_offset(8));
+        let (_, r2) = run(src, MemoryArchKind::banked_offset(8));
+        assert_eq!(r1.total_cycles(), r2.total_cycles());
+        assert_eq!(r1.stats, r2.stats);
+    }
+
+    #[test]
+    fn fast_timing_matches_exact_end_to_end() {
+        let src = "
+.threads 256
+    tid   r0
+    ishli r1, r0, 3
+    iaddi r1, r1, 5
+    iandi r1, r1, 0xFFF
+    ld    r2, [r1]
+    iadd  r2, r2, r0
+    st    [r1], r2
+    halt
+";
+        let p = assemble(src).unwrap();
+        for arch in [MemoryArchKind::banked(16), MemoryArchKind::banked_offset(4)] {
+            let mut exact = Machine::new(MachineConfig::for_arch(arch).with_mem_words(4096));
+            let mut fast =
+                Machine::new(MachineConfig::for_arch(arch).with_mem_words(4096).with_fast_timing());
+            let re = exact.run_program(&p).unwrap();
+            let rf = fast.run_program(&p).unwrap();
+            assert_eq!(re.total_cycles(), rf.total_cycles(), "arch {arch}");
+            assert_eq!(exact.mem().image(), fast.mem().image());
+        }
+    }
+}

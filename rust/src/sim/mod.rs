@@ -1,0 +1,17 @@
+//! The cycle-accurate SIMT machine (paper §III, Fig. 1).
+//!
+//! Sixteen SPs execute every instruction for all threads in the block,
+//! sixteen threads per clock (one memory *operation* per clock, each
+//! carrying up to sixteen *requests*). ALU instructions stream one
+//! operation per cycle; memory instructions go through the shared-memory
+//! access controllers whose timing depends on the configured architecture
+//! ([`crate::mem`]).
+
+pub mod config;
+pub mod machine;
+pub mod regfile;
+pub mod stats;
+
+pub use config::MachineConfig;
+pub use machine::{Machine, SimError};
+pub use stats::{CycleStats, RunReport};

@@ -1,0 +1,217 @@
+//! Cycle accounting, mirroring the row structure of the paper's Tables II
+//! and III.
+
+use crate::mem::arch::MemoryArchKind;
+
+/// Cycle counters by instruction class. ALU classes count one cycle per
+/// 16-thread operation; memory classes count controller-attributed cycles
+/// (fixed overhead + per-operation spacing).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleStats {
+    /// Register-register integer ALU cycles ("INT OPs").
+    pub int_cycles: u64,
+    /// Immediate-op cycles ("Immediate OPs").
+    pub imm_cycles: u64,
+    /// FP32 ALU cycles ("FP OPs").
+    pub fp_cycles: u64,
+    /// Control/misc cycles ("Other OPs").
+    pub other_cycles: u64,
+    /// Data-load cycles ("Load Cycles" / "D Load Cycles").
+    pub d_load_cycles: u64,
+    /// Twiddle-load cycles ("W Load Cycles" in Table III).
+    pub tw_load_cycles: u64,
+    /// Store cycles.
+    pub store_cycles: u64,
+    /// Ideal (one-cycle-per-operation) counts, the floor against which the
+    /// paper's Bank Eff. columns measure.
+    pub d_load_ops: u64,
+    pub tw_load_ops: u64,
+    pub store_ops: u64,
+    /// Dynamic instruction count and total 16-wide operations issued.
+    pub instructions: u64,
+    pub operations: u64,
+    /// Cycles the pipeline stalled because the write circular buffer was
+    /// full (non-blocking writes).
+    pub wbuf_stall_cycles: u64,
+    /// Cycles spent waiting for the write controller to drain at a
+    /// blocking-write boundary or at halt.
+    pub drain_cycles: u64,
+}
+
+impl CycleStats {
+    /// Sum of the "Common Ops" rows (INT + Immediate + FP + Other).
+    pub fn common_cycles(&self) -> u64 {
+        self.int_cycles + self.imm_cycles + self.fp_cycles + self.other_cycles
+    }
+
+    /// All load cycles (data + twiddle).
+    pub fn load_cycles(&self) -> u64 {
+        self.d_load_cycles + self.tw_load_cycles
+    }
+
+    /// Attributed total — the paper's "Total" row is this sum (its tables
+    /// add the category rows); equals the elapsed clock when every write
+    /// is blocking, as in the paper's benchmarks.
+    pub fn attributed_total(&self) -> u64 {
+        self.common_cycles() + self.load_cycles() + self.store_cycles
+    }
+}
+
+/// The result of one program run on one memory architecture: everything a
+/// Table II/III column needs.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Program name (e.g. `transpose32`, `fft4096r16`).
+    pub program: String,
+    /// Memory architecture the run used.
+    pub arch: MemoryArchKind,
+    /// Thread-block size.
+    pub threads: u32,
+    /// Per-class cycle counters.
+    pub stats: CycleStats,
+    /// Elapsed machine clock at halt (includes final write drain; with
+    /// non-blocking writes this can be *less* than the attributed sum).
+    pub elapsed_cycles: u64,
+}
+
+impl RunReport {
+    /// Total cycles — the paper's "Total" row (elapsed clock).
+    pub fn total_cycles(&self) -> u64 {
+        self.elapsed_cycles
+    }
+
+    /// Wall-clock in microseconds at the architecture's Fmax.
+    pub fn time_us(&self) -> f64 {
+        self.elapsed_cycles as f64 / self.arch.fmax_mhz()
+    }
+
+    /// Read bank efficiency: ideal operation count over actual cycles
+    /// (data loads; the paper's "R Bank Eff." / "D Bank Eff.").
+    pub fn r_bank_eff(&self) -> Option<f64> {
+        eff(self.stats.d_load_ops, self.stats.d_load_cycles, self.arch)
+    }
+
+    /// Twiddle-load bank efficiency ("TW Bank Eff.").
+    pub fn tw_bank_eff(&self) -> Option<f64> {
+        eff(self.stats.tw_load_ops, self.stats.tw_load_cycles, self.arch)
+    }
+
+    /// Write bank efficiency ("W Bank Eff.").
+    pub fn w_bank_eff(&self) -> Option<f64> {
+        eff(self.stats.store_ops, self.stats.store_cycles, self.arch)
+    }
+
+    /// FFT efficiency: "the percentage of time that the core is
+    /// calculating the FFT, which does not include address generation or
+    /// shared memory accesses" — FP cycles over total.
+    pub fn compute_efficiency(&self) -> f64 {
+        self.stats.fp_cycles as f64 / self.elapsed_cycles.max(1) as f64
+    }
+}
+
+/// Bank efficiency is only reported for banked architectures (the paper
+/// leaves the multiport columns blank).
+fn eff(ideal: u64, actual: u64, arch: MemoryArchKind) -> Option<f64> {
+    if !arch.is_banked() || actual == 0 {
+        None
+    } else {
+        Some(ideal as f64 / actual as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(stats: CycleStats, arch: MemoryArchKind) -> RunReport {
+        RunReport {
+            program: "t".into(),
+            arch,
+            threads: 1024,
+            elapsed_cycles: stats.attributed_total(),
+            stats,
+        }
+    }
+
+    #[test]
+    fn paper_table2_4r1w_row_arithmetic() {
+        // 32x32 4R-1W: common 391, load 256, store 1024 → total 1671,
+        // time 2.17 µs at 771 MHz.
+        let stats = CycleStats {
+            int_cycles: 256,
+            imm_cycles: 129,
+            other_cycles: 6,
+            d_load_cycles: 256,
+            store_cycles: 1024,
+            d_load_ops: 64,
+            store_ops: 64,
+            ..Default::default()
+        };
+        let r = report(stats, MemoryArchKind::mp_4r1w());
+        assert_eq!(r.total_cycles(), 1671);
+        assert!((r.time_us() - 2.17).abs() < 0.01);
+        assert!(r.r_bank_eff().is_none(), "multiport rows leave eff. blank");
+    }
+
+    #[test]
+    fn paper_table2_16bank_efficiencies() {
+        // 32x32 16 Banks: load 168 (eff 38.1%), store 1054 (eff 6.1%).
+        let stats = CycleStats {
+            d_load_cycles: 168,
+            d_load_ops: 64,
+            store_cycles: 1054,
+            store_ops: 64,
+            ..Default::default()
+        };
+        let r = report(stats, MemoryArchKind::banked(16));
+        assert!((r.r_bank_eff().unwrap() - 0.381).abs() < 0.001);
+        assert!((r.w_bank_eff().unwrap() - 0.0607).abs() < 0.001);
+    }
+
+    #[test]
+    fn paper_table3_efficiency_formula() {
+        // Radix-4 4R-1W: FP 13440 of total 86817 → 15.5%.
+        let stats = CycleStats {
+            fp_cycles: 13_440,
+            ..Default::default()
+        };
+        let r = RunReport {
+            program: "fft".into(),
+            arch: MemoryArchKind::mp_4r1w(),
+            threads: 1024,
+            stats,
+            elapsed_cycles: 86_817,
+        };
+        assert!((r.compute_efficiency() - 0.155).abs() < 0.001);
+    }
+
+    #[test]
+    fn fmax_4r2w_time() {
+        // Radix-4 4R-2W: 62214 cycles at 600 MHz = 103.7 µs.
+        let r = RunReport {
+            program: "fft".into(),
+            arch: MemoryArchKind::mp_4r2w(),
+            threads: 1024,
+            stats: CycleStats::default(),
+            elapsed_cycles: 62_214,
+        };
+        assert!((r.time_us() - 103.69).abs() < 0.05);
+    }
+
+    #[test]
+    fn common_and_attributed_sums() {
+        let s = CycleStats {
+            int_cycles: 10,
+            imm_cycles: 20,
+            fp_cycles: 30,
+            other_cycles: 5,
+            d_load_cycles: 100,
+            tw_load_cycles: 50,
+            store_cycles: 200,
+            ..Default::default()
+        };
+        assert_eq!(s.common_cycles(), 65);
+        assert_eq!(s.load_cycles(), 150);
+        assert_eq!(s.attributed_total(), 415);
+    }
+}

@@ -1,0 +1,90 @@
+//! Bit-level helpers mirroring the FPGA structures the paper builds out of
+//! carry chains and fracturable LUTs.
+
+/// Population count of a 16-lane access mask, as the paper's bank-conflict
+/// counter does per column of the one-hot matrix (a 5-bit result: 0..=16).
+#[inline]
+pub fn popcount16(v: u16) -> u32 {
+    v.count_ones()
+}
+
+/// Isolate the lowest set bit (`v & -v`) — the *software* shortcut that the
+/// paper's carry-chain arbiter computes structurally (`v - 1` plus
+/// transition detection). The arbiter module property-tests its own
+/// hardware-faithful state machine against this closed form.
+#[inline]
+pub fn lowest_set_bit(v: u16) -> u16 {
+    v & v.wrapping_neg()
+}
+
+/// True if `v` is one-hot (exactly one bit set).
+#[inline]
+pub fn is_one_hot(v: u16) -> bool {
+    v != 0 && (v & (v - 1)) == 0
+}
+
+/// Ceiling division, used throughout the multiport timing model
+/// (`ceil(active_lanes / ports)`).
+#[inline]
+pub fn ceil_div(a: u32, b: u32) -> u32 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `log2` of a power of two. Panics on non-powers (bank counts are 4/8/16).
+#[inline]
+pub fn log2_exact(v: u32) -> u32 {
+    assert!(v.is_power_of_two(), "{v} is not a power of two");
+    v.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popcount_matches_naive() {
+        for v in [0u16, 1, 0b1010, 0xFFFF, 0x8001] {
+            let naive = (0..16).filter(|i| v >> i & 1 == 1).count() as u32;
+            assert_eq!(popcount16(v), naive);
+        }
+    }
+
+    #[test]
+    fn lowest_set_bit_examples() {
+        assert_eq!(lowest_set_bit(0b0001_0110), 0b0000_0010); // Fig. 6 row 1
+        assert_eq!(lowest_set_bit(0b0001_0100), 0b0000_0100); // Fig. 6 row 2
+        assert_eq!(lowest_set_bit(0b0001_0000), 0b0001_0000); // Fig. 6 row 3
+        assert_eq!(lowest_set_bit(0), 0);
+    }
+
+    #[test]
+    fn one_hot_detection() {
+        assert!(!is_one_hot(0));
+        assert!(is_one_hot(1));
+        assert!(is_one_hot(0x8000));
+        assert!(!is_one_hot(3));
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(16, 4), 4);
+        assert_eq!(ceil_div(16, 1), 16);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(17, 4), 5);
+    }
+
+    #[test]
+    fn log2_of_bank_counts() {
+        assert_eq!(log2_exact(4), 2);
+        assert_eq!(log2_exact(8), 3);
+        assert_eq!(log2_exact(16), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2_rejects_non_power() {
+        log2_exact(12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small shared utilities: deterministic PRNG, property-test harness,
+//! bit tricks, and formatting helpers.
+//!
+//! `proptest`/`rand` are unavailable in this offline environment, so the
+//! crate carries its own deterministic xorshift generator ([`rng::XorShift64`])
+//! and a tiny property-testing harness ([`proptest`]) used across the test
+//! suite.
+
+pub mod bits;
+pub mod fmt;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::XorShift64;

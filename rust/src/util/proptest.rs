@@ -1,0 +1,88 @@
+//! A minimal property-testing harness (the `proptest` crate is not
+//! available offline).
+//!
+//! Usage (compile-checked here, executed by this module's unit tests —
+//! doctest *execution* binaries land in /tmp without the xla rpath):
+//! ```no_run
+//! use soft_simt::util::proptest::check;
+//! check("addition commutes", 1000, |rng| {
+//!     let a = rng.next_u32() >> 8;
+//!     let b = rng.next_u32() >> 8;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case receives a PRNG derived from a fixed master seed plus the case
+//! index, so failures are reproducible and reported with the case seed.
+
+use super::rng::XorShift64;
+
+/// Master seed for all property tests. Changing it re-rolls every case in
+/// the suite at once (handy for occasional re-fuzzing) while keeping CI
+/// deterministic.
+pub const MASTER_SEED: u64 = 0xC0FF_EE00_2025_0711;
+
+/// Run `cases` random cases of `prop`. Panics (with the failing seed in the
+/// message) if any case panics.
+pub fn check<F: Fn(&mut XorShift64)>(name: &str, cases: u32, prop: F) {
+    for i in 0..cases {
+        let seed = MASTER_SEED ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = XorShift64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed on case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` instead of
+/// panicking — convenient when composing several assertions.
+pub fn check_ok<F: Fn(&mut XorShift64) -> Result<(), String>>(name: &str, cases: u32, prop: F) {
+    check(name, cases, |rng| {
+        if let Err(msg) = prop(rng) {
+            panic!("{msg}");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 100, |rng| {
+            let v = rng.next_u32();
+            assert_eq!(v, v);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_rng| panic!("boom"));
+    }
+
+    #[test]
+    fn check_ok_propagates_err() {
+        let r = std::panic::catch_unwind(|| {
+            check_ok("err prop", 1, |_| Err("nope".to_string()));
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn cases_see_distinct_seeds() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(std::collections::HashSet::new());
+        check("distinct", 50, |rng| {
+            seen.lock().unwrap().insert(rng.next_u64());
+        });
+        assert_eq!(seen.lock().unwrap().len(), 50);
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration: the Rust ⇄ PJRT bridge against the AOT artifacts.
+//!
+//! Requires `make artifacts` (the tests skip politely when the artifacts
+//! are missing, so `cargo test` stays green on a fresh checkout; `make
+//! test` runs the full path).
+
+use soft_simt::mem::conflict::max_conflicts;
+use soft_simt::mem::mapping::{BankMap, BankMapping};
+use soft_simt::mem::{FULL_MASK, LANES};
+use soft_simt::programs::fft::reference_fft;
+use soft_simt::runtime::golden::{conflict_oracle, golden_fft, golden_transpose};
+use soft_simt::runtime::ArtifactRuntime;
+use soft_simt::util::XorShift64;
+
+fn runtime_or_skip(artifact: &str) -> Option<ArtifactRuntime> {
+    let rt = ArtifactRuntime::from_env().expect("PJRT CPU client");
+    if rt.has_artifact(artifact) {
+        Some(rt)
+    } else {
+        eprintln!("skipping: artifacts/{artifact}.hlo.txt not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn golden_fft_matches_host_reference() {
+    let Some(rt) = runtime_or_skip("fft4096") else { return };
+    let mut rng = XorShift64::new(0xFACE);
+    let re = rng.f32_vec(4096);
+    let im = rng.f32_vec(4096);
+    let (gr, gi) = golden_fft(&rt, &re, &im).expect("fft artifact executes");
+    let (hr, hi) = reference_fft(&re, &im);
+    let max_mag = hr
+        .iter()
+        .zip(&hi)
+        .map(|(r, i)| (r * r + i * i).sqrt())
+        .fold(0.0f64, f64::max);
+    for k in 0..4096 {
+        let err = ((gr[k] as f64 - hr[k]).powi(2) + (gi[k] as f64 - hi[k]).powi(2)).sqrt();
+        assert!(
+            err / max_mag < 1e-5,
+            "k={k}: pjrt ({}, {}) vs host ({}, {})",
+            gr[k],
+            gi[k],
+            hr[k],
+            hi[k]
+        );
+    }
+}
+
+#[test]
+fn golden_fft_impulse_is_flat() {
+    let Some(rt) = runtime_or_skip("fft4096") else { return };
+    let mut re = vec![0.0f32; 4096];
+    re[0] = 1.0;
+    let im = vec![0.0f32; 4096];
+    let (gr, gi) = golden_fft(&rt, &re, &im).unwrap();
+    for k in 0..4096 {
+        assert!((gr[k] - 1.0).abs() < 1e-5 && gi[k].abs() < 1e-5, "k={k}");
+    }
+}
+
+#[test]
+fn golden_transposes_match_host() {
+    for n in [32usize, 64, 128] {
+        let Some(rt) = runtime_or_skip(&format!("transpose{n}")) else { return };
+        let mut rng = XorShift64::new(n as u64);
+        let x = rng.f32_vec(n * n);
+        let y = golden_transpose(&rt, n, &x).expect("transpose artifact executes");
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(y[j * n + i], x[i * n + j], "n={n} ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn conflict_oracle_agrees_with_cycle_accurate_model() {
+    // The L1 Pallas kernel and the L3 controller must compute identical
+    // conflict counts — the analytical timing mode depends on it.
+    for banks in [4u32, 8, 16] {
+        let Some(rt) = runtime_or_skip(&format!("conflict{banks}")) else { return };
+        let mut rng = XorShift64::new(banks as u64 * 7919);
+        let ops: Vec<[u32; LANES]> = (0..600) // non-multiple of the batch: exercises padding
+            .map(|_| {
+                let mut a = [0u32; LANES];
+                for x in a.iter_mut() {
+                    *x = rng.below(1 << 16);
+                }
+                a
+            })
+            .collect();
+        for mapping in [BankMapping::Lsb, BankMapping::Offset] {
+            let map = BankMap::new(banks, mapping);
+            let oracle =
+                conflict_oracle(&rt, banks, &ops, mapping.shift()).expect("oracle executes");
+            assert_eq!(oracle.len(), ops.len());
+            for (i, (op, &o)) in ops.iter().zip(&oracle).enumerate() {
+                let l3 = max_conflicts(op, FULL_MASK, &map);
+                assert_eq!(o, l3, "banks={banks} {mapping:?} op {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn conflict_oracle_extremes() {
+    let Some(rt) = runtime_or_skip("conflict16") else { return };
+    // All-same addresses: 16 conflicts. Consecutive: 1.
+    let same = [[7u32; LANES]; 1];
+    let mut consec = [[0u32; LANES]; 1];
+    for (l, a) in consec[0].iter_mut().enumerate() {
+        *a = l as u32;
+    }
+    assert_eq!(conflict_oracle(&rt, 16, &same, 0).unwrap(), vec![16]);
+    assert_eq!(conflict_oracle(&rt, 16, &consec, 0).unwrap(), vec![1]);
+}

@@ -1,0 +1,201 @@
+//! Integration: cross-cutting machine properties — random programs,
+//! failure injection and architecture-equivalence invariants that unit
+//! tests cannot see from inside one module.
+
+use soft_simt::isa::asm::{assemble, disassemble};
+use soft_simt::isa::inst::Instruction;
+use soft_simt::isa::opcode::Opcode;
+use soft_simt::isa::program::Program;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::sim::config::MachineConfig;
+use soft_simt::sim::machine::{Machine, SimError};
+use soft_simt::util::proptest::check;
+use soft_simt::util::XorShift64;
+
+const MEM_WORDS: usize = 4096;
+
+/// Generate a random *memory-safe, divergence-free* program: addresses are
+/// masked into range, branches are never emitted.
+fn random_straightline(rng: &mut XorShift64, max_len: usize) -> Program {
+    let n = 2 + rng.below(max_len as u32) as usize;
+    let mut insts = vec![Instruction::i(Opcode::Tid, 0, 0, 0)];
+    for _ in 0..n {
+        let r = |rng: &mut XorShift64| 1 + rng.below(30) as u8;
+        let inst = match rng.below(10) {
+            0 => Instruction::i(Opcode::Ldi, r(rng), 0, rng.next_u32() as u16),
+            1 => Instruction::r(Opcode::Iadd, r(rng), r(rng), r(rng)),
+            2 => Instruction::i(Opcode::Ishri, r(rng), r(rng), rng.below(8) as u16),
+            3 => Instruction::r(Opcode::Fadd, r(rng), r(rng), r(rng)),
+            4 => Instruction::r(Opcode::Fmul, r(rng), r(rng), r(rng)),
+            5 | 6 => {
+                // Mask an address register into range, then load.
+                let a = r(rng);
+                insts.push(Instruction::i(Opcode::Iandi, a, a, (MEM_WORDS - 1) as u16));
+                Instruction::i(Opcode::Ld, r(rng), a, 0)
+            }
+            7 | 8 => {
+                let a = r(rng);
+                insts.push(Instruction::i(Opcode::Iandi, a, a, (MEM_WORDS - 1) as u16));
+                let op = if rng.chance(0.5) { Opcode::St } else { Opcode::Stnb };
+                Instruction::r(op, 0, a, r(rng))
+            }
+            _ => Instruction::i(Opcode::Iaddi, r(rng), r(rng), rng.next_u32() as u16),
+        };
+        insts.push(inst);
+    }
+    insts.push(Instruction::z(Opcode::Halt));
+    Program::new("fuzz", 16 * (1 + rng.below(8)), insts)
+}
+
+#[test]
+fn all_archs_functionally_identical_on_random_programs() {
+    // Timing differs; memory images and (observable) results must not.
+    check("9 archs agree on random programs", 40, |rng| {
+        let program = random_straightline(rng, 40);
+        let seed = rng.next_u64();
+        let mut images: Vec<Vec<u32>> = Vec::new();
+        for arch in MemoryArchKind::table3_nine() {
+            let mut m =
+                Machine::new(MachineConfig::for_arch(arch).with_mem_words(MEM_WORDS));
+            let mut img_rng = XorShift64::new(seed);
+            let init: Vec<u32> = (0..MEM_WORDS as u32).map(|_| img_rng.next_u32()).collect();
+            m.load_image(0, &init);
+            m.run_program(&program).expect("fuzz program runs");
+            images.push(m.mem().image());
+        }
+        for img in &images[1..] {
+            assert_eq!(img, &images[0], "program:\n{}", disassemble(&program));
+        }
+    });
+}
+
+#[test]
+fn fast_and_exact_timing_agree_on_random_programs() {
+    check("fast == exact banked timing", 40, |rng| {
+        let program = random_straightline(rng, 40);
+        for banks in [4u32, 8, 16] {
+            let arch = if rng.chance(0.5) {
+                MemoryArchKind::banked(banks)
+            } else {
+                MemoryArchKind::banked_offset(banks)
+            };
+            let mut exact =
+                Machine::new(MachineConfig::for_arch(arch).with_mem_words(MEM_WORDS));
+            let mut fast = Machine::new(
+                MachineConfig::for_arch(arch)
+                    .with_mem_words(MEM_WORDS)
+                    .with_fast_timing(),
+            );
+            let re = exact.run_program(&program).unwrap();
+            let rf = fast.run_program(&program).unwrap();
+            assert_eq!(re.total_cycles(), rf.total_cycles());
+            assert_eq!(re.stats, rf.stats);
+        }
+    });
+}
+
+#[test]
+fn elapsed_never_exceeds_attributed_for_blocking_programs() {
+    // With only blocking stores, elapsed == attributed total; with
+    // non-blocking stores elapsed ≤ attributed (overlap only helps).
+    check("elapsed vs attributed bound", 60, |rng| {
+        let program = random_straightline(rng, 30);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked(8)).with_mem_words(MEM_WORDS),
+        );
+        let r = m.run_program(&program).unwrap();
+        assert!(
+            r.total_cycles() <= r.stats.attributed_total() + r.stats.drain_cycles,
+            "elapsed {} attributed {} drain {}",
+            r.total_cycles(),
+            r.stats.attributed_total(),
+            r.stats.drain_cycles,
+        );
+    });
+}
+
+#[test]
+fn asm_binary_text_roundtrip_via_simulation() {
+    // asm text → Program → binary → Program → identical simulation.
+    check("binary roundtrip preserves behaviour", 25, |rng| {
+        let program = random_straightline(rng, 25);
+        let text = disassemble(&program);
+        let reparsed = assemble(&text).expect("roundtrip");
+        let binary = Program::decode("bin", program.threads, &program.encode()).unwrap();
+        let arch = MemoryArchKind::banked_offset(16);
+        let mut runs = Vec::new();
+        for p in [&program, &reparsed, &binary] {
+            let mut m =
+                Machine::new(MachineConfig::for_arch(arch).with_mem_words(MEM_WORDS));
+            runs.push(m.run_program(p).unwrap().total_cycles());
+        }
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+    });
+}
+
+// ---------------------------------------------------------------- failure injection
+
+#[test]
+fn reports_oob_thread_and_address() {
+    let src = "
+.threads 32
+    tid   r0
+    imuli r1, r0, 1000
+    ld    r2, [r1]
+    halt
+";
+    let p = assemble(src).unwrap();
+    let mut m =
+        Machine::new(MachineConfig::for_arch(MemoryArchKind::banked(16)).with_mem_words(4096));
+    match m.run_program(&p) {
+        Err(SimError::InvalidAddress { thread, addr, pc, .. }) => {
+            assert_eq!(pc, 2);
+            assert_eq!(addr, thread * 1000);
+            assert!(addr >= 4096);
+        }
+        other => panic!("expected InvalidAddress, got {other:?}"),
+    }
+}
+
+#[test]
+fn store_address_also_bounds_checked() {
+    let src = "
+.threads 16
+    ldi  r0, 0
+    lui  r0, 2
+    st   [r0], r0
+    halt
+";
+    let p = assemble(src).unwrap();
+    let mut m =
+        Machine::new(MachineConfig::for_arch(MemoryArchKind::mp_4r1w()).with_mem_words(4096));
+    assert!(matches!(m.run_program(&p), Err(SimError::InvalidAddress { .. })));
+}
+
+#[test]
+fn jump_target_validated_at_execution() {
+    let p = Program::new(
+        "badjmp",
+        16,
+        vec![Instruction::i(Opcode::Jmp, 0, 0, 999), Instruction::z(Opcode::Halt)],
+    );
+    let mut m = Machine::new(MachineConfig::for_arch(MemoryArchKind::banked(4)));
+    assert!(matches!(m.run_program(&p), Err(SimError::BadJumpTarget { pc: 0, target: 999 })));
+}
+
+#[test]
+fn machine_reusable_after_error() {
+    // A faulting program must not poison the machine for the next run.
+    let bad = Program::new(
+        "bad",
+        16,
+        vec![Instruction::i(Opcode::Jmp, 0, 0, 999), Instruction::z(Opcode::Halt)],
+    );
+    let good = assemble(".threads 16\ntid r0\nst [r0], r0\nhalt\n").unwrap();
+    let mut m = Machine::new(MachineConfig::for_arch(MemoryArchKind::banked(8)));
+    assert!(m.run_program(&bad).is_err());
+    let r = m.run_program(&good).expect("machine still usable");
+    assert!(r.total_cycles() > 0);
+    assert_eq!(m.mem().peek(5), 5);
+}

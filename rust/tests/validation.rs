@@ -1,0 +1,42 @@
+//! Integration: full validation matrix — every program × every memory
+//! architecture, against host references and (when built) the PJRT golden
+//! models.
+
+use soft_simt::coordinator::validate;
+use soft_simt::runtime::ArtifactRuntime;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let rt = ArtifactRuntime::from_env().ok()?;
+    rt.has_artifact("fft4096").then_some(rt)
+}
+
+#[test]
+fn all_transposes_all_archs() {
+    let rt = runtime();
+    let checks = validate::validate_transposes(rt.as_ref());
+    assert_eq!(checks.len(), 3 * 8);
+    for c in &checks {
+        assert!(c.passed, "{}: {}", c.name, c.detail);
+    }
+}
+
+#[test]
+fn all_ffts_all_archs() {
+    let rt = runtime();
+    let checks = validate::validate_ffts(rt.as_ref());
+    assert_eq!(checks.len(), 3 * 9);
+    for c in &checks {
+        assert!(c.passed, "{}: {}", c.name, c.detail);
+    }
+}
+
+#[test]
+fn conflict_oracle_cross_check() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for c in validate::validate_conflict_oracle(&rt, 0xAB) {
+        assert!(c.passed, "{}: {}", c.name, c.detail);
+    }
+}

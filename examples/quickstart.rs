@@ -15,7 +15,12 @@ fn main() {
     // Generate the 32x32 transpose program the paper benchmarks, then run
     // it on a machine with a random memory image.
     let program = transpose_program(32);
-    println!("program '{}': {} instructions, {} threads", program.name, program.insts.len(), program.threads);
+    println!(
+        "program '{}': {} instructions, {} threads",
+        program.name,
+        program.insts.len(),
+        program.threads
+    );
 
     let mut machine = Machine::new(MachineConfig::for_arch(arch).with_mem_words(4096));
     let mut rng = soft_simt::util::XorShift64::new(1);

@@ -76,7 +76,10 @@ fn main() {
             totals.push(m.run_program(workload.program()).unwrap().total_cycles());
         }
         let delta = 100.0 * (totals[1] as f64 - totals[0] as f64) / totals[0] as f64;
-        println!("  {program:14} normal {} vs half-banked {}  ({delta:+.2}%)", totals[0], totals[1]);
+        println!(
+            "  {program:14} normal {} vs half-banked {}  ({delta:+.2}%)",
+            totals[0], totals[1]
+        );
     }
 
     // Timing.

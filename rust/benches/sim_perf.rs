@@ -107,13 +107,63 @@ fn main() {
         }
     }
 
-    // Full 51-cell paper sweep (the end-to-end driver's core).
+    // Full 51-cell paper sweep (the end-to-end driver's core), per-cell
+    // re-execution vs the trace-cached path the CLI now uses.
     let jobs = BenchJob::paper_sweep();
     let mut b2 = Bencher::new(1, 5);
     let s = b2.bench("paper_sweep_51_cells", || {
         SweepRunner::default().run(&jobs).unwrap().len()
     });
     println!("{}", s.line());
+    let s = b2.bench("paper_sweep_51_cells_cached", || {
+        SweepRunner::default().run_cached(&jobs).unwrap().len()
+    });
+    println!("{}", s.line());
+
+    // Sweep throughput: a 9-architecture sweep with and without the
+    // trace cache, on one worker so the numbers measure total simulation
+    // *work* (the wall-clock win additionally depends on worker count).
+    // Emits BENCH_sweep.json so future PRs can track the trajectory.
+    let sweep_jobs: Vec<BenchJob> = ["transpose128", "fft4096r8", "fft4096r16"]
+        .iter()
+        .flat_map(|p| {
+            MemoryArchKind::table3_nine()
+                .into_iter()
+                .map(move |arch| BenchJob::new(p.to_string(), arch))
+        })
+        .collect();
+    let serial = SweepRunner::new(1);
+    let mut b3 = Bencher::new(1, 7);
+    let base = b3
+        .bench("arch_sweep_9x3_reexecute_1w", || serial.run(&sweep_jobs).unwrap().len())
+        .clone();
+    println!("{}", base.line());
+    let cached = b3
+        .bench("arch_sweep_9x3_trace_cached_1w", || {
+            serial.run_cached(&sweep_jobs).unwrap().len()
+        })
+        .clone();
+    println!("{}", cached.line());
+    let speedup = base.median().as_secs_f64() / cached.median().as_secs_f64();
+    println!("trace-cache speedup (9 archs, total work): {speedup:.2}x");
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\n  \"bench\": \"arch_sweep_9x3\",\n  \"unix_time\": {unix_time},\n  \
+         \"cells\": {cells},\n  \"programs\": 3,\n  \"archs\": 9,\n  \"workers\": 1,\n  \
+         \"reexecute_median_ms\": {base_ms:.3},\n  \"trace_cached_median_ms\": {cached_ms:.3},\n  \
+         \"speedup\": {speedup:.3}\n}}\n",
+        cells = sweep_jobs.len(),
+        base_ms = base.median().as_secs_f64() * 1e3,
+        cached_ms = cached.median().as_secs_f64() * 1e3,
+    );
+    match std::fs::write("BENCH_sweep.json", &json) {
+        Ok(()) => println!("wrote BENCH_sweep.json"),
+        Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
 
     print!("{}", b.report());
 }

@@ -1,12 +1,17 @@
 //! One benchmark job: a (program, memory architecture) combination with a
-//! deterministic input seed — one cell of Table II or III.
+//! deterministic input seed — one cell of Table II or III — plus the
+//! trace cache that lets a sweep execute each program once and replay its
+//! timing on every architecture (DESIGN.md §Trace cache).
 
 use crate::mem::arch::MemoryArchKind;
 use crate::programs::library::{program_by_name, Workload};
 use crate::sim::config::MachineConfig;
+use crate::sim::exec::{self, ExecParams, FlatMemory, MemTrace};
 use crate::sim::machine::{Machine, SimError};
+use crate::sim::replay;
 use crate::sim::stats::RunReport;
-use crate::util::XorShift64;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Job descriptor (cheap to clone and ship to worker threads).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -16,12 +21,18 @@ pub struct BenchJob {
     /// Memory architecture.
     pub arch: MemoryArchKind,
     /// Input-data seed (the data does not change timing — access patterns
-    /// are address-driven — but determinism keeps validation exact).
+    /// are address-driven — but determinism keeps validation exact and
+    /// makes `(program, seed)` a sound trace-cache key).
     pub seed: u64,
     /// Use the fast banked timing path (identical cycles; see
     /// [`crate::mem::banked::TimingMode`]).
     pub fast_timing: bool,
 }
+
+/// Key identifying a functional execution: the program and its input
+/// image. Everything else (architecture, timing mode) only affects
+/// replay.
+pub type TraceKey = (String, u64);
 
 impl BenchJob {
     pub fn new(program: impl Into<String>, arch: MemoryArchKind) -> Self {
@@ -45,11 +56,17 @@ impl BenchJob {
         jobs
     }
 
-    /// Materialize the workload, build the machine, load the input image
-    /// and run. Returns the full report.
-    pub fn run(&self) -> Result<BenchResult, SimError> {
-        let workload = program_by_name(&self.program)
-            .ok_or_else(|| SimError::BadProgram(format!("unknown program '{}'", self.program)))?;
+    /// The cache key of this job's functional execution.
+    pub fn trace_key(&self) -> TraceKey {
+        (self.program.clone(), self.seed)
+    }
+
+    fn workload(&self) -> Result<Workload, SimError> {
+        program_by_name(&self.program)
+            .ok_or_else(|| SimError::BadProgram(format!("unknown program '{}'", self.program)))
+    }
+
+    fn config_for(&self, workload: &Workload) -> MachineConfig {
         let mut cfg = MachineConfig::for_arch(self.arch).with_mem_words(workload.mem_words());
         if let Some(region) = workload.tw_region() {
             cfg = cfg.with_tw_region(region);
@@ -57,20 +74,47 @@ impl BenchJob {
         if self.fast_timing {
             cfg = cfg.with_fast_timing();
         }
-        let mut machine = Machine::new(cfg);
-        let mut rng = XorShift64::new(self.seed);
-        match &workload {
-            Workload::Transpose(plan, _) => {
-                let src: Vec<u32> = (0..plan.n * plan.n).map(|_| rng.next_u32()).collect();
-                machine.load_image(plan.src_base, &src);
-            }
-            Workload::Fft(plan, _) => {
-                let data = rng.f32_vec(2 * plan.n as usize);
-                machine.load_f32_image(plan.data_base, &data);
-                machine.load_f32_image(plan.tw_base, &plan.twiddles);
-            }
-        }
+        cfg
+    }
+
+    /// Materialize the workload, build the machine, load the input image
+    /// and run (execute + replay in lockstep). Returns the full report.
+    pub fn run(&self) -> Result<BenchResult, SimError> {
+        let workload = self.workload()?;
+        let mut machine = Machine::new(self.config_for(&workload));
+        workload.load_input(&mut machine, self.seed);
         let report = machine.run_program(workload.program())?;
+        Ok(BenchResult { job: self.clone(), report })
+    }
+
+    /// Functionally execute this job's program once — against a flat
+    /// memory, with no architecture instantiated — and return the
+    /// complete trace. The result is valid for *every* architecture
+    /// sharing this job's [`Self::trace_key`].
+    pub fn capture_trace(&self) -> Result<MemTrace, SimError> {
+        let workload = self.workload()?;
+        let mut mem = FlatMemory::new(workload.mem_words());
+        workload.load_input(&mut mem, self.seed);
+        let params = ExecParams {
+            tw_region: workload.tw_region(),
+            max_cycles: MachineConfig::DEFAULT_MAX_CYCLES,
+            ..ExecParams::default()
+        };
+        exec::execute(workload.program(), &mut mem, &params)
+    }
+
+    /// Replay a previously captured trace against this job's memory
+    /// architecture. No program execution, no data image, not even a
+    /// workload lookup — the trace is self-describing (capacity rides in
+    /// [`MemTrace::mem_words`]), so the per-cell marginal cost is the
+    /// timing model alone. Cycle-identical to [`Self::run`].
+    pub fn replay_trace(&self, trace: &MemTrace) -> Result<BenchResult, SimError> {
+        let mut cfg = MachineConfig::for_arch(self.arch).with_mem_words(trace.mem_words);
+        if self.fast_timing {
+            cfg = cfg.with_fast_timing();
+        }
+        let mem = cfg.build_memory();
+        let report = replay::replay(trace, mem.as_ref(), cfg.max_cycles)?;
         Ok(BenchResult { job: self.clone(), report })
     }
 }
@@ -80,6 +124,55 @@ impl BenchJob {
 pub struct BenchResult {
     pub job: BenchJob,
     pub report: RunReport,
+}
+
+/// Shared cache of functional-execution traces keyed by
+/// `(program, data-image seed)`. A 9-architecture × N-program sweep hits
+/// the expensive functional simulation once per program and replays
+/// timing 9×.
+#[derive(Debug, Default)]
+pub struct TraceCache {
+    traces: Mutex<HashMap<TraceKey, Arc<MemTrace>>>,
+}
+
+impl TraceCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of cached traces.
+    pub fn len(&self) -> usize {
+        self.traces.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a cached trace.
+    pub fn get(&self, key: &TraceKey) -> Option<Arc<MemTrace>> {
+        self.traces.lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert a trace (first insert wins; concurrent duplicates are
+    /// dropped).
+    pub fn insert(&self, key: TraceKey, trace: Arc<MemTrace>) {
+        self.traces.lock().unwrap().entry(key).or_insert(trace);
+    }
+
+    /// Fetch the job's trace, capturing it on a miss. Callers wanting to
+    /// avoid concurrent duplicate captures should pre-populate the cache
+    /// (as [`crate::coordinator::runner::SweepRunner::run_with_cache`]
+    /// does in its capture phase).
+    pub fn get_or_capture(&self, job: &BenchJob) -> Result<Arc<MemTrace>, SimError> {
+        let key = job.trace_key();
+        if let Some(t) = self.get(&key) {
+            return Ok(t);
+        }
+        let trace = Arc::new(job.capture_trace()?);
+        self.insert(key, Arc::clone(&trace));
+        Ok(trace)
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +198,7 @@ mod tests {
     #[test]
     fn unknown_program_is_error() {
         assert!(BenchJob::new("nope", MemoryArchKind::mp_4r1w()).run().is_err());
+        assert!(BenchJob::new("nope", MemoryArchKind::mp_4r1w()).capture_trace().is_err());
     }
 
     #[test]
@@ -114,5 +208,35 @@ mod tests {
         let b = job.run().unwrap();
         assert_eq!(a.report.total_cycles(), b.report.total_cycles());
         assert_eq!(a.report.stats, b.report.stats);
+    }
+
+    #[test]
+    fn replayed_trace_matches_coupled_run() {
+        // One trace, two architectures: each replay must equal its
+        // coupled run exactly.
+        let base = BenchJob::new("transpose32", MemoryArchKind::banked(16));
+        let trace = base.capture_trace().unwrap();
+        for arch in [MemoryArchKind::banked(16), MemoryArchKind::mp_4r2w()] {
+            let job = BenchJob::new("transpose32", arch);
+            let coupled = job.run().unwrap();
+            let replayed = job.replay_trace(&trace).unwrap();
+            assert_eq!(replayed.report.stats, coupled.report.stats, "{arch}");
+            assert_eq!(replayed.report.total_cycles(), coupled.report.total_cycles());
+        }
+    }
+
+    #[test]
+    fn trace_cache_dedupes_by_program_and_seed() {
+        let cache = TraceCache::new();
+        let a = BenchJob::new("transpose32", MemoryArchKind::banked(16));
+        let b = BenchJob::new("transpose32", MemoryArchKind::mp_4r1w());
+        let ta = cache.get_or_capture(&a).unwrap();
+        let tb = cache.get_or_capture(&b).unwrap();
+        assert!(Arc::ptr_eq(&ta, &tb), "same (program, seed) shares one trace");
+        assert_eq!(cache.len(), 1);
+        let mut c = BenchJob::new("transpose32", MemoryArchKind::banked(16));
+        c.seed = 1234;
+        cache.get_or_capture(&c).unwrap();
+        assert_eq!(cache.len(), 2, "different data image, different trace");
     }
 }

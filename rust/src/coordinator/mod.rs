@@ -8,5 +8,5 @@ pub mod report;
 pub mod runner;
 pub mod validate;
 
-pub use job::{BenchJob, BenchResult};
+pub use job::{BenchJob, BenchResult, TraceCache};
 pub use runner::SweepRunner;

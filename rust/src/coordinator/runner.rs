@@ -1,12 +1,15 @@
-//! Parallel sweep runner: a worker pool over benchmark jobs.
+//! Parallel sweep runner: a worker pool over benchmark jobs, with a
+//! trace-cached fast path that executes each program once and replays
+//! its timing on every architecture.
 //!
 //! tokio is unavailable offline, so this is a plain `std::thread` pool
 //! with a shared work queue — ample for a simulator sweep, and the
 //! results arrive in deterministic (input) order regardless of worker
 //! scheduling.
 
-use super::job::{BenchJob, BenchResult};
+use super::job::{BenchJob, BenchResult, TraceCache};
 use crate::sim::machine::SimError;
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -33,32 +36,88 @@ impl SweepRunner {
         self.workers
     }
 
-    /// Run every job; results come back in job order. The first simulator
-    /// error aborts the sweep (the paper's benchmarks never fault; an
-    /// error here is a bug or a bad custom program).
-    pub fn run(&self, jobs: &[BenchJob]) -> Result<Vec<BenchResult>, SimError> {
-        let next = Arc::new(AtomicUsize::new(0));
-        let slots: Arc<Mutex<Vec<Option<Result<BenchResult, SimError>>>>> =
-            Arc::new(Mutex::new((0..jobs.len()).map(|_| None).collect()));
+    /// Run `f` over every item on the worker pool; results come back in
+    /// input order regardless of scheduling.
+    fn parallel_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
         std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(jobs.len().max(1)) {
-                let next = Arc::clone(&next);
-                let slots = Arc::clone(&slots);
-                scope.spawn(move || loop {
+            for _ in 0..self.workers.min(items.len().max(1)) {
+                scope.spawn(|| loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= jobs.len() {
+                    if i >= items.len() {
                         break;
                     }
-                    let result = jobs[i].run();
+                    let result = f(&items[i]);
                     slots.lock().unwrap()[i] = Some(result);
                 });
             }
         });
-        let slots = Arc::try_unwrap(slots).unwrap().into_inner().unwrap();
         slots
+            .into_inner()
+            .unwrap()
             .into_iter()
             .map(|s| s.expect("every slot filled"))
             .collect()
+    }
+
+    /// Run every job coupled (execute + replay per cell); results come
+    /// back in job order. The first simulator error aborts the sweep (the
+    /// paper's benchmarks never fault; an error here is a bug or a bad
+    /// custom program).
+    pub fn run(&self, jobs: &[BenchJob]) -> Result<Vec<BenchResult>, SimError> {
+        self.parallel_map(jobs, |job| job.run()).into_iter().collect()
+    }
+
+    /// Run every job through a fresh trace cache: each distinct
+    /// `(program, data image)` is functionally executed once, then every
+    /// job replays its architecture's timing from the shared trace.
+    /// Cycle-identical to [`Self::run`] (pinned by
+    /// `rust/tests/replay_parity.rs`), ~`A×` cheaper for an
+    /// `A`-architecture sweep.
+    pub fn run_cached(&self, jobs: &[BenchJob]) -> Result<Vec<BenchResult>, SimError> {
+        let cache = TraceCache::new();
+        self.run_with_cache(jobs, &cache)
+    }
+
+    /// [`Self::run_cached`] against a caller-owned cache, so traces
+    /// survive across sweeps (e.g. re-running the paper sweep while
+    /// exploring hypothetical architectures).
+    pub fn run_with_cache(
+        &self,
+        jobs: &[BenchJob],
+        cache: &TraceCache,
+    ) -> Result<Vec<BenchResult>, SimError> {
+        // Capture phase: each distinct uncached trace key, executed once,
+        // in parallel across programs.
+        let mut seen = HashSet::new();
+        let pending: Vec<&BenchJob> = jobs
+            .iter()
+            .filter(|job| {
+                let key = job.trace_key();
+                cache.get(&key).is_none() && seen.insert(key)
+            })
+            .collect();
+        let captured: Result<Vec<Arc<_>>, SimError> = self
+            .parallel_map(&pending, |job| job.capture_trace().map(Arc::new))
+            .into_iter()
+            .collect();
+        for (job, trace) in pending.iter().zip(captured?) {
+            cache.insert(job.trace_key(), trace);
+        }
+        // Replay phase: every cell, in parallel, against the shared
+        // traces.
+        self.parallel_map(jobs, |job| {
+            let trace = cache.get(&job.trace_key()).expect("trace captured in phase 1");
+            job.replay_trace(&trace)
+        })
+        .into_iter()
+        .collect()
     }
 }
 
@@ -98,10 +157,47 @@ mod tests {
     fn error_propagates() {
         let jobs = vec![BenchJob::new("bogus", MemoryArchKind::mp_4r1w())];
         assert!(SweepRunner::new(2).run(&jobs).is_err());
+        assert!(SweepRunner::new(2).run_cached(&jobs).is_err());
     }
 
     #[test]
     fn default_has_workers() {
         assert!(SweepRunner::default().workers() >= 1);
+    }
+
+    #[test]
+    fn cached_sweep_equals_coupled_sweep() {
+        // Every Table II arch on one program: one functional execution,
+        // eight replays — all cycle-identical to the coupled path.
+        let jobs: Vec<BenchJob> = MemoryArchKind::table2_eight()
+            .into_iter()
+            .map(|arch| BenchJob::new("transpose32", arch))
+            .collect();
+        let runner = SweepRunner::new(4);
+        let coupled = runner.run(&jobs).unwrap();
+        let cache = TraceCache::new();
+        let cached = runner.run_with_cache(&jobs, &cache).unwrap();
+        assert_eq!(cache.len(), 1, "eight cells share one trace");
+        for (a, b) in coupled.iter().zip(&cached) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.report.stats, b.report.stats, "{}", a.job.arch);
+            assert_eq!(a.report.total_cycles(), b.report.total_cycles());
+        }
+    }
+
+    #[test]
+    fn cache_survives_across_sweeps() {
+        let jobs = vec![BenchJob::new("transpose32", MemoryArchKind::banked(4))];
+        let runner = SweepRunner::new(2);
+        let cache = TraceCache::new();
+        runner.run_with_cache(&jobs, &cache).unwrap();
+        assert_eq!(cache.len(), 1);
+        // Second sweep over more architectures reuses the cached trace.
+        let more: Vec<BenchJob> = MemoryArchKind::table3_nine()
+            .into_iter()
+            .map(|arch| BenchJob::new("transpose32", arch))
+            .collect();
+        runner.run_with_cache(&more, &cache).unwrap();
+        assert_eq!(cache.len(), 1);
     }
 }

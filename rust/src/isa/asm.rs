@@ -330,7 +330,9 @@ start:
                     Opcode::Tid => Instruction::i(op, r(rng), 0, 0),
                     Opcode::Jmp => Instruction::i(op, 0, 0, rng.below(n as u32) as u16),
                     Opcode::Bnz => Instruction::i(op, r(rng), 0, rng.below(n as u32) as u16),
-                    Opcode::Ldi | Opcode::Lui => Instruction::i(op, r(rng), 0, rng.next_u32() as u16),
+                    Opcode::Ldi | Opcode::Lui => {
+                        Instruction::i(op, r(rng), 0, rng.next_u32() as u16)
+                    }
                     Opcode::Fneg | Opcode::Itof => Instruction::r(op, r(rng), r(rng), 0),
                     Opcode::Ld => Instruction::i(op, r(rng), r(rng), 0),
                     Opcode::St | Opcode::Stnb => Instruction::r(op, 0, r(rng), r(rng)),

@@ -34,7 +34,19 @@
 //! - **L2/L1 (python/compile, build-time only)**: JAX model + Pallas
 //!   kernels, lowered to `artifacts/*.hlo.txt`.
 //! - **bridge** ([`runtime`]): PJRT loads the artifacts for golden
-//!   validation and the analytical timing oracle.
+//!   validation and the analytical timing oracle (behind the `pjrt`
+//!   feature; the default build ships a stub that degrades to host
+//!   references).
+//!
+//! ## Two-phase simulation (DESIGN.md §Two-phase)
+//!
+//! The simulator is decoupled into an architecture-independent
+//! *functional core* ([`sim::exec`]) that runs a program once and emits a
+//! complete [`sim::exec::MemTrace`], and a *timing replay engine*
+//! ([`sim::replay`]) that charges any memory architecture's cost model
+//! from that trace. [`sim::machine::Machine`] runs both in lockstep; the
+//! sweep path ([`coordinator`]) caches traces so a 9-architecture sweep
+//! executes each program once and replays timing 9×.
 
 pub mod area;
 pub mod benchkit;
@@ -50,7 +62,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::area::{footprint::Footprint, resources::Resources, table1};
     pub use crate::coordinator::{
-        job::{BenchJob, BenchResult},
+        job::{BenchJob, BenchResult, TraceCache},
         report,
         runner::SweepRunner,
     };
@@ -70,7 +82,9 @@ pub mod prelude {
     };
     pub use crate::sim::{
         config::MachineConfig,
+        exec::{execute, ExecMemory, ExecParams, FlatMemory, MemTrace, SimError},
         machine::Machine,
+        replay::replay,
         stats::{CycleStats, RunReport},
     };
 }

@@ -88,8 +88,12 @@ fn parse_arch(s: &str) -> Result<MemoryArchKind, String> {
 
 fn run_sweep(jobs: &[BenchJob]) -> Option<Vec<soft_simt::coordinator::job::BenchResult>> {
     let runner = SweepRunner::default();
-    eprintln!("running {} benchmark cells on {} workers...", jobs.len(), runner.workers());
-    match runner.run(jobs) {
+    eprintln!(
+        "running {} benchmark cells on {} workers (trace-cached: execute once, replay per arch)...",
+        jobs.len(),
+        runner.workers()
+    );
+    match runner.run_cached(jobs) {
         Ok(r) => Some(r),
         Err(e) => {
             eprintln!("sweep failed: {e}");

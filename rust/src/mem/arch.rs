@@ -42,6 +42,16 @@ pub trait SharedMemory: Send {
     /// Execute one 16-lane write operation: returns cycles.
     fn write_op(&mut self, addrs: &[u32; LANES], data: &[u32; LANES], mask: LaneMask) -> u32;
 
+    /// Timing-only cost of one 16-lane operation (the cycles it occupies
+    /// the memory pipeline), computed without moving any data — the
+    /// charge path the timing replayer ([`crate::sim::replay`]) drives.
+    ///
+    /// Contract: must equal the `cycles` that [`Self::read_op`] /
+    /// [`Self::write_op`] would report for the same addresses and mask
+    /// (the replay-parity integration tests pin this across every
+    /// architecture).
+    fn op_cost(&self, kind: OpKind, addrs: &[u32; LANES], mask: LaneMask) -> u32;
+
     /// Fixed per-instruction overhead (initial latency + drain) by kind.
     fn overhead(&self, kind: OpKind) -> u32;
 

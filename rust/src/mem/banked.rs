@@ -105,6 +105,27 @@ impl BankedMemory {
         columns
     }
 
+    /// Cycles-only arbiter schedule: step the per-bank carry-chain
+    /// arbiters exactly as [`Self::read_exact`] does, but without touching
+    /// any bank data — the exact-mode timing charge for the replayer.
+    fn schedule_cycles(&self, addrs: &[u32; LANES], mask: LaneMask) -> u32 {
+        let mut state = self.columns(addrs, mask);
+        let n_banks = self.map.banks() as usize;
+        let mut cycles = 0u32;
+        let mut pending = mask != 0;
+        while pending {
+            pending = false;
+            cycles += 1;
+            for v in state.iter_mut().take(n_banks) {
+                if *v != 0 {
+                    *v &= v.wrapping_sub(1); // grant (and clear) one lane
+                    pending |= *v != 0;
+                }
+            }
+        }
+        cycles.max(1)
+    }
+
     /// Exact path: step the per-bank carry-chain arbiters in lock-step,
     /// serving one lane per bank per cycle. The arbiter state machine is
     /// inlined (subtract-one + transition detect, exactly
@@ -206,6 +227,16 @@ impl SharedMemory for BankedMemory {
                 }
                 cycles
             }
+        }
+    }
+
+    fn op_cost(&self, _kind: OpKind, addrs: &[u32; LANES], mask: LaneMask) -> u32 {
+        // Reads and writes cost the same on the banked path: the max
+        // per-bank population count (true dual-port banks keep the two
+        // streams independent, §III-A).
+        match self.mode {
+            TimingMode::Exact => self.schedule_cycles(addrs, mask),
+            TimingMode::Fast => max_conflicts(addrs, mask, &self.map).max(1),
         }
     }
 
@@ -314,6 +345,27 @@ mod tests {
                     assert_eq!(exact.image(), fast.image());
                 }
             }
+        });
+    }
+
+    #[test]
+    fn op_cost_matches_executed_ops_property() {
+        check("banked op_cost == read_op/write_op cycles", 500, |rng| {
+            let banks = [4u32, 8, 16][rng.below(3) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let mode = if rng.chance(0.5) { TimingMode::Exact } else { TimingMode::Fast };
+            let mut m = BankedMemory::new(4096, banks, mapping).with_mode(mode);
+            let mut addrs = [0u32; LANES];
+            for a in addrs.iter_mut() {
+                *a = rng.below(4096);
+            }
+            let mask = rng.next_u32() as u16;
+            assert_eq!(m.op_cost(OpKind::Read, &addrs, mask), m.read_op(&addrs, mask).cycles);
+            let data = [0u32; LANES];
+            assert_eq!(
+                m.op_cost(OpKind::Write, &addrs, mask),
+                m.write_op(&addrs, &data, mask)
+            );
         });
     }
 

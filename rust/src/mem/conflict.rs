@@ -190,7 +190,10 @@ mod tests {
                 *a = rng.next_u32() & 0xFFFFF;
             }
             let mask = rng.next_u32() as u16;
-            assert_eq!(max_conflicts(&addrs, mask, &map), analyze(&addrs, mask, &map).max_conflicts);
+            assert_eq!(
+                max_conflicts(&addrs, mask, &map),
+                analyze(&addrs, mask, &map).max_conflicts
+            );
         });
     }
 }

@@ -97,6 +97,21 @@ impl SharedMemory for MultiPortMemory {
         cycles
     }
 
+    fn op_cost(&self, kind: OpKind, _addrs: &[u32; LANES], mask: LaneMask) -> u32 {
+        // Deterministic access — the multiport memory's defining property:
+        // cost depends only on the active-lane count, never on addresses.
+        match kind {
+            OpKind::Read => ceil_div(mask.count_ones(), self.read_ports).max(1),
+            OpKind::Write => {
+                if self.vb {
+                    self.vb_write_cycles(mask)
+                } else {
+                    ceil_div(mask.count_ones(), self.write_ports).max(1)
+                }
+            }
+        }
+    }
+
     fn overhead(&self, _kind: OpKind) -> u32 {
         timing::MULTIPORT_OVERHEAD
     }
@@ -181,6 +196,26 @@ mod tests {
     fn vb_reads_unchanged() {
         let mut m = MultiPortMemory::new(1024, 4, 1, true);
         assert_eq!(m.read_op(&full_addrs(0), FULL_MASK).cycles, 4);
+    }
+
+    #[test]
+    fn op_cost_matches_executed_ops() {
+        for (r, w, vb) in [(4u32, 1u32, false), (4, 2, false), (4, 1, true)] {
+            let mut m = MultiPortMemory::new(1024, r, w, vb);
+            let d = [0u32; LANES];
+            for mask in [0u16, 1, 0x000F, 0x00FF, FULL_MASK] {
+                assert_eq!(
+                    m.op_cost(OpKind::Read, &full_addrs(0), mask),
+                    m.read_op(&full_addrs(0), mask).cycles,
+                    "read {r}R{w}W vb={vb} mask={mask:#x}"
+                );
+                assert_eq!(
+                    m.op_cost(OpKind::Write, &full_addrs(0), mask),
+                    m.write_op(&full_addrs(0), &d, mask),
+                    "write {r}R{w}W vb={vb} mask={mask:#x}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use super::fft::{fft_program, FftPlan};
 use super::transpose::{transpose_program, TransposePlan};
 use crate::isa::program::Program;
+use crate::sim::exec::ExecMemory;
+use crate::util::XorShift64;
 
 /// A registered benchmark: the program plus the workload metadata the
 /// harness needs (memory image layout, twiddle region, capacity).
@@ -37,6 +39,33 @@ impl Workload {
         match self {
             Workload::Transpose(..) => None,
             Workload::Fft(plan, _) => Some(plan.tw_region()),
+        }
+    }
+
+    /// Deterministically fill `mem` with this workload's input image
+    /// (source matrix / signal + twiddle table), derived from `seed`.
+    ///
+    /// Input data never changes *timing* (access patterns are
+    /// address-driven), but determinism keeps functional validation and
+    /// trace-cache keys exact: the same `(program, seed)` pair always
+    /// produces the same memory image, hence the same trace.
+    pub fn load_input<M: ExecMemory>(&self, mem: &mut M, seed: u64) {
+        let mut rng = XorShift64::new(seed);
+        match self {
+            Workload::Transpose(plan, _) => {
+                for i in 0..plan.n * plan.n {
+                    mem.write_word(plan.src_base + i, rng.next_u32());
+                }
+            }
+            Workload::Fft(plan, _) => {
+                let data = rng.f32_vec(2 * plan.n as usize);
+                for (i, &v) in data.iter().enumerate() {
+                    mem.write_word(plan.data_base + i as u32, v.to_bits());
+                }
+                for (i, &v) in plan.twiddles.iter().enumerate() {
+                    mem.write_word(plan.tw_base + i as u32, v.to_bits());
+                }
+            }
         }
     }
 }
@@ -98,6 +127,22 @@ mod tests {
     fn fft_workloads_have_tw_regions() {
         assert!(program_by_name("fft4096r4").unwrap().tw_region().is_some());
         assert!(program_by_name("transpose32").unwrap().tw_region().is_none());
+    }
+
+    #[test]
+    fn load_input_agrees_across_memory_backends() {
+        use crate::mem::arch::MemoryArchKind;
+        use crate::sim::config::MachineConfig;
+        use crate::sim::exec::FlatMemory;
+        use crate::sim::machine::Machine;
+        let w = program_by_name("transpose32").unwrap();
+        let mut flat = FlatMemory::new(w.mem_words());
+        w.load_input(&mut flat, 0x5EED);
+        let mut machine = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked(16)).with_mem_words(w.mem_words()),
+        );
+        w.load_input(&mut machine, 0x5EED);
+        assert_eq!(machine.mem().image(), flat.image());
     }
 
     #[test]

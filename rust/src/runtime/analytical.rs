@@ -8,14 +8,19 @@
 //! attributed load/store cycles exactly (same conflict maths, same
 //! overhead model), which is also the repo's strongest evidence that the
 //! L1 kernel and the L3 controller implement the same architecture.
+//!
+//! Since the execution/timing split, both estimators consume the same
+//! [`MemTrace`] the decoupled simulator produces — the analytical oracle
+//! is simply a *third* timing backend for a captured trace, next to the
+//! cycle-accurate replayer ([`crate::sim::replay`]).
 
 use super::client::ArtifactRuntime;
 use super::golden::conflict_oracle;
+use super::{RtError, RtResult};
 use crate::mem::arch::{MemoryArchKind, OpKind};
 use crate::mem::timing;
-use crate::mem::{LaneMask, FULL_MASK, LANES};
-use crate::sim::machine::MemTraceInstr;
-use anyhow::{bail, Result};
+use crate::mem::{FULL_MASK, LANES};
+use crate::sim::exec::MemTrace;
 
 /// Cycle estimate for one program trace on one banked architecture.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,20 +49,24 @@ impl AnalyticalEstimate {
 pub fn estimate_banked(
     rt: &ArtifactRuntime,
     arch: MemoryArchKind,
-    trace: &[MemTraceInstr],
-) -> Result<AnalyticalEstimate> {
+    trace: &MemTrace,
+) -> RtResult<AnalyticalEstimate> {
     let MemoryArchKind::Banked { banks, mapping } = arch else {
-        bail!("analytical mode scores banked architectures (multiport is closed-form)");
+        return Err(RtError::new(
+            "analytical mode scores banked architectures (multiport is closed-form)",
+        ));
     };
     if !mapping.oracle_supported() {
-        bail!("the conflict artifact does not cover the {mapping:?} map");
+        return Err(RtError::new(format!(
+            "the conflict artifact does not cover the {mapping:?} map"
+        )));
     }
     // Flatten the trace, remembering instruction boundaries and kinds.
     let mut flat: Vec<[u32; LANES]> = Vec::new();
-    for instr in trace {
+    for instr in trace.mem_instrs() {
         for &(addrs, mask) in &instr.ops {
             if mask != FULL_MASK {
-                bail!("analytical mode requires full 16-lane operations");
+                return Err(RtError::new("analytical mode requires full 16-lane operations"));
             }
             flat.push(addrs);
         }
@@ -66,14 +75,14 @@ pub fn estimate_banked(
     // Re-apply the §III-A instruction overhead model.
     let mut est = AnalyticalEstimate { load_cycles: 0, store_cycles: 0, ops: flat.len() as u64 };
     let mut cursor = 0usize;
-    for instr in trace {
+    for instr in trace.mem_instrs() {
         let n = instr.ops.len();
         let spacing: u64 = costs[cursor..cursor + n]
             .iter()
             .map(|&c| c.max(1) as u64)
             .sum();
         cursor += n;
-        match instr.kind {
+        match instr.op_kind() {
             OpKind::Read => {
                 est.load_cycles += timing::banked_read_overhead(false) as u64 + spacing;
             }
@@ -88,16 +97,16 @@ pub fn estimate_banked(
 /// Closed-form multiport estimate (no oracle needed): ⌈16/R⌉ per read op,
 /// ⌈16/W⌉ per write op — deterministic access is the multiport memory's
 /// defining property.
-pub fn estimate_multiport(arch: MemoryArchKind, trace: &[MemTraceInstr]) -> Result<AnalyticalEstimate> {
+pub fn estimate_multiport(arch: MemoryArchKind, trace: &MemTrace) -> RtResult<AnalyticalEstimate> {
     let MemoryArchKind::MultiPort { read_ports, write_ports, vb } = arch else {
-        bail!("not a multiport architecture");
+        return Err(RtError::new("not a multiport architecture"));
     };
     let mut est = AnalyticalEstimate { load_cycles: 0, store_cycles: 0, ops: 0 };
-    for instr in trace {
+    for instr in trace.mem_instrs() {
         for &(_, mask) in &instr.ops {
-            let active = (mask as LaneMask).count_ones();
+            let active = mask.count_ones();
             est.ops += 1;
-            match instr.kind {
+            match instr.op_kind() {
                 OpKind::Read => {
                     est.load_cycles += crate::util::bits::ceil_div(active, read_ports).max(1) as u64
                 }
@@ -115,13 +124,22 @@ pub fn estimate_multiport(arch: MemoryArchKind, trace: &[MemTraceInstr]) -> Resu
 mod tests {
     use super::*;
     use crate::mem::mapping::BankMapping;
+    use crate::sim::exec::{LoadClass, MemAccessKind, MemInstr};
 
-    fn trace_one(kind: OpKind, ops: usize) -> Vec<MemTraceInstr> {
+    fn trace_one(kind: OpKind, ops: usize) -> MemTrace {
         let mut addrs = [0u32; LANES];
         for (l, a) in addrs.iter_mut().enumerate() {
             *a = l as u32;
         }
-        vec![MemTraceInstr { kind, ops: vec![(addrs, FULL_MASK); ops] }]
+        let kind = match kind {
+            OpKind::Read => MemAccessKind::Load(LoadClass::Data),
+            OpKind::Write => MemAccessKind::Store { blocking: true },
+        };
+        MemTrace::from_mem_instrs(
+            "synthetic",
+            16 * ops as u32,
+            vec![MemInstr { kind, ops: vec![(addrs, FULL_MASK); ops] }],
+        )
     }
 
     #[test]
@@ -139,21 +157,28 @@ mod tests {
 
     #[test]
     fn multiport_rejects_banked() {
-        assert!(estimate_multiport(MemoryArchKind::banked(16), &[]).is_err());
+        let empty = MemTrace::from_mem_instrs("empty", 16, vec![]);
+        assert!(estimate_multiport(MemoryArchKind::banked(16), &empty).is_err());
     }
 
     #[test]
     fn banked_rejects_xor_and_partial_masks() {
         let rt = ArtifactRuntime::new("artifacts").unwrap();
         let xor = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Xor };
-        assert!(estimate_banked(&rt, xor, &[]).is_err());
-        let partial = vec![MemTraceInstr {
-            kind: OpKind::Read,
-            ops: vec![([0u32; LANES], 0x00FF)],
-        }];
+        let empty = MemTrace::from_mem_instrs("empty", 16, vec![]);
+        assert!(estimate_banked(&rt, xor, &empty).is_err());
+        let partial = MemTrace::from_mem_instrs(
+            "partial",
+            8,
+            vec![MemInstr {
+                kind: MemAccessKind::Load(LoadClass::Data),
+                ops: vec![([0u32; LANES], 0x00FF)],
+            }],
+        );
         assert!(estimate_banked(&rt, MemoryArchKind::banked(16), &partial).is_err());
     }
 
     // The oracle-vs-simulator equality is integration-tested in
-    // rust/tests/analytical.rs (needs `make artifacts`).
+    // rust/tests/analytical.rs (needs `make artifacts` and the `pjrt`
+    // feature).
 }

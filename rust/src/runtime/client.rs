@@ -1,33 +1,38 @@
-//! PJRT CPU client + compiled-executable cache.
+//! PJRT CPU client + compiled-executable cache (real under the `pjrt`
+//! feature; a stub otherwise — see [`crate::runtime`] module docs).
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+use super::RtResult;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 /// Loads `artifacts/<name>.hlo.txt`, compiles on the PJRT CPU client and
 /// caches the executable per artifact name. Compilation happens once; the
 /// request path only executes.
+///
+/// Without the `pjrt` feature this is a stub whose `has_artifact` always
+/// reports `false`, steering every consumer onto its host-reference path.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: std::sync::Mutex<std::collections::HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactRuntime {
     /// Create a runtime rooted at an artifacts directory.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    pub fn new(dir: impl AsRef<Path>) -> RtResult<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| super::rt_err("creating PJRT CPU client", e))?;
         Ok(Self {
             client,
             dir: dir.as_ref().to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
+            cache: std::sync::Mutex::new(std::collections::HashMap::new()),
         })
     }
 
     /// Default artifacts directory: `$SOFT_SIMT_ARTIFACTS` or
     /// `./artifacts`.
-    pub fn from_env() -> Result<Self> {
+    pub fn from_env() -> RtResult<Self> {
         let dir = std::env::var("SOFT_SIMT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         Self::new(dir)
     }
@@ -50,19 +55,19 @@ impl ArtifactRuntime {
 
     /// Compile (or fetch from cache) and execute an artifact on `inputs`.
     /// Returns the flattened output tuple.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> RtResult<Vec<xla::Literal>> {
         // Compile under the lock only on first use.
         {
             let mut cache = self.cache.lock().unwrap();
             if !cache.contains_key(name) {
                 let path = self.artifact_path(name);
                 let proto = xla::HloModuleProto::from_text_file(&path)
-                    .with_context(|| format!("loading HLO text {}", path.display()))?;
+                    .map_err(|e| super::rt_err(format!("loading HLO text {}", path.display()), e))?;
                 let comp = xla::XlaComputation::from_proto(&proto);
                 let exe = self
                     .client
                     .compile(&comp)
-                    .with_context(|| format!("compiling artifact '{name}'"))?;
+                    .map_err(|e| super::rt_err(format!("compiling artifact '{name}'"), e))?;
                 cache.insert(name.to_string(), exe);
             }
         }
@@ -70,17 +75,70 @@ impl ArtifactRuntime {
         let exe = cache.get(name).unwrap();
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing artifact '{name}'"))?[0][0]
-            .to_literal_sync()?;
+            .map_err(|e| super::rt_err(format!("executing artifact '{name}'"), e))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| super::rt_err(format!("fetching result of '{name}'"), e))?;
         // aot.py lowers with return_tuple=True: always a tuple.
-        Ok(result.to_tuple()?)
+        result
+            .to_tuple()
+            .map_err(|e| super::rt_err(format!("untupling result of '{name}'"), e))
     }
 
     /// Execute with f32 vector inputs/outputs (the common case).
-    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> RtResult<Vec<Vec<f32>>> {
         let lits: Vec<xla::Literal> = inputs.iter().map(|v| xla::Literal::vec1(v)).collect();
         let outs = self.execute(name, &lits)?;
-        outs.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+        outs.into_iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| super::rt_err(format!("reading f32 output of '{name}'"), e))
+            })
+            .collect()
+    }
+}
+
+/// Stub runtime: the PJRT bridge is not compiled in (no `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub struct ArtifactRuntime {
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ArtifactRuntime {
+    /// Create a (stub) runtime rooted at an artifacts directory. Always
+    /// succeeds; execution paths report the missing feature.
+    pub fn new(dir: impl AsRef<Path>) -> RtResult<Self> {
+        Ok(Self { dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifacts directory: `$SOFT_SIMT_ARTIFACTS` or
+    /// `./artifacts`.
+    pub fn from_env() -> RtResult<Self> {
+        let dir = std::env::var("SOFT_SIMT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    /// Platform diagnostic string.
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Artifact file path for a name.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Always `false`: without the bridge no artifact can be *executed*,
+    /// so consumers must take their host-reference paths even if the
+    /// file exists on disk.
+    pub fn has_artifact(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub(crate) fn unavailable(&self, what: &str) -> super::RtError {
+        super::RtError::new(format!(
+            "{what}: PJRT bridge not compiled in (rebuild with `--features pjrt`)"
+        ))
     }
 }
 
@@ -88,9 +146,16 @@ impl ArtifactRuntime {
 mod tests {
     use super::*;
 
-    // The full PJRT round-trip is exercised by rust/tests/golden.rs (it
-    // needs `make artifacts`); these tests cover the artifact-less paths.
+    #[test]
+    fn paths_are_name_mangled() {
+        let rt = ArtifactRuntime::new("artifacts").unwrap();
+        assert_eq!(
+            rt.artifact_path("conflict16"),
+            PathBuf::from("artifacts/conflict16.hlo.txt")
+        );
+    }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn missing_artifact_is_reported() {
         let rt = ArtifactRuntime::new("/nonexistent-dir").expect("client still builds");
@@ -102,18 +167,20 @@ mod tests {
         assert!(format!("{err:#}").contains("fft4096"));
     }
 
-    #[test]
-    fn paths_are_name_mangled() {
-        let rt = ArtifactRuntime::new("artifacts").unwrap();
-        assert_eq!(
-            rt.artifact_path("conflict16"),
-            PathBuf::from("artifacts/conflict16.hlo.txt")
-        );
-    }
-
+    #[cfg(feature = "pjrt")]
     #[test]
     fn platform_is_cpu() {
         let rt = ArtifactRuntime::new("artifacts").unwrap();
         assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_never_promises_artifacts() {
+        let rt = ArtifactRuntime::from_env().unwrap();
+        assert!(!rt.has_artifact("fft4096"));
+        assert!(rt.platform().contains("stub"));
+        let err = rt.unavailable("conflict oracle");
+        assert!(format!("{err}").contains("pjrt"));
     }
 }

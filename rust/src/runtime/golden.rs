@@ -9,51 +9,72 @@
 //! - `conflictB` — the batched bank-conflict analyzer (the L1 twin of
 //!   [`crate::mem::conflict`]); powers the *analytical timing mode* and is
 //!   cross-checked against the cycle-accurate controllers.
+//!
+//! Without the `pjrt` feature every function here returns an error; the
+//! stub [`ArtifactRuntime`] reports no artifacts, so callers never reach
+//! these paths (they take their host-reference branches instead).
 
 use super::client::ArtifactRuntime;
+use super::RtResult;
 use crate::mem::LANES;
-use crate::programs::fft::{digit_reverse, FftPlan};
+use crate::programs::fft::FftPlan;
 use crate::sim::machine::Machine;
-use anyhow::{bail, Context, Result};
+
+#[cfg(not(feature = "pjrt"))]
+use super::RtError;
+#[cfg(feature = "pjrt")]
+use super::{rt_err, RtError};
+#[cfg(feature = "pjrt")]
+use crate::programs::fft::digit_reverse;
 
 /// Batch rows per conflict-oracle call (fixed in the artifact's shape).
 pub const CONFLICT_BATCH: usize = 256;
 
 /// Run the golden 4096-point FFT on split re/im inputs.
-pub fn golden_fft(rt: &ArtifactRuntime, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+#[cfg(feature = "pjrt")]
+pub fn golden_fft(rt: &ArtifactRuntime, re: &[f32], im: &[f32]) -> RtResult<(Vec<f32>, Vec<f32>)> {
     if re.len() != 4096 || im.len() != 4096 {
-        bail!("golden_fft expects 4096-point inputs");
+        return Err(RtError::new("golden_fft expects 4096-point inputs"));
     }
     let outs = rt.execute_f32("fft4096", &[re, im])?;
     if outs.len() != 2 {
-        bail!("fft4096 artifact must return (re, im), got {} outputs", outs.len());
+        return Err(RtError::new(format!(
+            "fft4096 artifact must return (re, im), got {} outputs",
+            outs.len()
+        )));
     }
     let mut it = outs.into_iter();
     Ok((it.next().unwrap(), it.next().unwrap()))
 }
 
 /// Run the golden N×N transpose.
-pub fn golden_transpose(rt: &ArtifactRuntime, n: usize, x: &[f32]) -> Result<Vec<f32>> {
+#[cfg(feature = "pjrt")]
+pub fn golden_transpose(rt: &ArtifactRuntime, n: usize, x: &[f32]) -> RtResult<Vec<f32>> {
     if x.len() != n * n {
-        bail!("transpose input must be {n}x{n}");
+        return Err(RtError::new(format!("transpose input must be {n}x{n}")));
     }
-    let lit = xla::Literal::vec1(x).reshape(&[n as i64, n as i64])?;
+    let lit = xla::Literal::vec1(x)
+        .reshape(&[n as i64, n as i64])
+        .map_err(|e| rt_err("reshaping transpose input", e))?;
     let outs = rt.execute(&format!("transpose{n}"), &[lit])?;
     if outs.len() != 1 {
-        bail!("transpose artifact must return a single output");
+        return Err(RtError::new("transpose artifact must return a single output"));
     }
-    Ok(outs[0].to_vec::<f32>()?)
+    outs[0]
+        .to_vec::<f32>()
+        .map_err(|e| rt_err("reading transpose output", e))
 }
 
 /// Batched bank-conflict oracle: max per-bank access count for each
 /// 16-lane operation, through the Pallas `conflict{banks}` artifact.
 /// `shift` is the mapping's bit offset (0 = LSB, 2 = Offset).
+#[cfg(feature = "pjrt")]
 pub fn conflict_oracle(
     rt: &ArtifactRuntime,
     banks: u32,
     ops: &[[u32; LANES]],
     shift: u32,
-) -> Result<Vec<u32>> {
+) -> RtResult<Vec<u32>> {
     let name = format!("conflict{banks}");
     let mut out = Vec::with_capacity(ops.len());
     for chunk in ops.chunks(CONFLICT_BATCH) {
@@ -64,12 +85,16 @@ pub fn conflict_oracle(
             flat.extend(row.iter().map(|&a| a as i32));
         }
         flat.resize(CONFLICT_BATCH * LANES, 0);
-        let lit = xla::Literal::vec1(&flat).reshape(&[CONFLICT_BATCH as i64, LANES as i64])?;
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[CONFLICT_BATCH as i64, LANES as i64])
+            .map_err(|e| rt_err("reshaping conflict batch", e))?;
         let shift_lit = xla::Literal::scalar(shift as i32);
         let outs = rt
             .execute(&name, &[lit, shift_lit])
-            .with_context(|| format!("conflict oracle banks={banks}"))?;
-        let counts = outs[0].to_vec::<i32>()?;
+            .map_err(|e| rt_err(format!("conflict oracle banks={banks}"), e))?;
+        let counts = outs[0]
+            .to_vec::<i32>()
+            .map_err(|e| rt_err("reading conflict counts", e))?;
         out.extend(counts[..chunk.len()].iter().map(|&c| c as u32));
     }
     Ok(out)
@@ -78,13 +103,14 @@ pub fn conflict_oracle(
 /// Validate a simulated FFT memory image against the golden FFT.
 /// `machine` must have just run the program of `plan` on inputs `re`/`im`.
 /// Returns the max relative error.
+#[cfg(feature = "pjrt")]
 pub fn validate_fft(
     rt: &ArtifactRuntime,
     machine: &Machine,
     plan: &FftPlan,
     re: &[f32],
     im: &[f32],
-) -> Result<f64> {
+) -> RtResult<f64> {
     let (gr, gi) = golden_fft(rt, re, im)?;
     let out = machine.read_f32_image(plan.data_base, 2 * plan.n as usize);
     let mut max_err = 0.0f64;
@@ -99,10 +125,54 @@ pub fn validate_fft(
     Ok(max_err / max_mag.max(1e-30))
 }
 
+// ------------------------------------------------------------- stubs
+
+/// Stub: the PJRT bridge is not compiled in.
+#[cfg(not(feature = "pjrt"))]
+pub fn golden_fft(rt: &ArtifactRuntime, re: &[f32], im: &[f32]) -> RtResult<(Vec<f32>, Vec<f32>)> {
+    if re.len() != 4096 || im.len() != 4096 {
+        return Err(RtError::new("golden_fft expects 4096-point inputs"));
+    }
+    Err(rt.unavailable("golden FFT"))
+}
+
+/// Stub: the PJRT bridge is not compiled in.
+#[cfg(not(feature = "pjrt"))]
+pub fn golden_transpose(rt: &ArtifactRuntime, n: usize, x: &[f32]) -> RtResult<Vec<f32>> {
+    if x.len() != n * n {
+        return Err(RtError::new(format!("transpose input must be {n}x{n}")));
+    }
+    Err(rt.unavailable("golden transpose"))
+}
+
+/// Stub: the PJRT bridge is not compiled in.
+#[cfg(not(feature = "pjrt"))]
+pub fn conflict_oracle(
+    rt: &ArtifactRuntime,
+    banks: u32,
+    _ops: &[[u32; LANES]],
+    _shift: u32,
+) -> RtResult<Vec<u32>> {
+    Err(rt.unavailable(&format!("conflict oracle banks={banks}")))
+}
+
+/// Stub: the PJRT bridge is not compiled in.
+#[cfg(not(feature = "pjrt"))]
+pub fn validate_fft(
+    rt: &ArtifactRuntime,
+    _machine: &Machine,
+    _plan: &FftPlan,
+    _re: &[f32],
+    _im: &[f32],
+) -> RtResult<f64> {
+    Err(rt.unavailable("golden FFT validation"))
+}
+
 #[cfg(test)]
 mod tests {
     // PJRT-dependent paths are integration-tested in rust/tests/golden.rs
-    // (they require `make artifacts`). Here: input validation only.
+    // (they require `make artifacts`). Here: input validation only — the
+    // size checks hold in both the real and stub builds.
     use super::*;
 
     #[test]

@@ -1,6 +1,7 @@
 //! Machine configuration.
 
-use crate::mem::arch::MemoryArchKind;
+use crate::mem::arch::{MemoryArchKind, SharedMemory};
+use crate::mem::banked::{BankedMemory, TimingMode};
 use crate::mem::LANES;
 use std::ops::Range;
 
@@ -25,13 +26,19 @@ pub struct MachineConfig {
     pub tw_region: Option<Range<u32>>,
     /// Abort threshold for runaway programs (simulated cycles).
     pub max_cycles: u64,
-    /// Record the per-instruction memory-operation trace (addresses and
-    /// lane masks) during the run — the input to the analytical timing
-    /// oracle ([`crate::runtime::analytical`]).
-    pub collect_mem_trace: bool,
+    /// Companion guard on trace capture *memory*: maximum 16-lane memory
+    /// operations a run may record before aborting with
+    /// [`crate::sim::exec::SimError::TraceLimit`]. Raise it for
+    /// legitimately huge programs (the default, ~16.8M operations, is
+    /// far above any paper workload).
+    pub max_trace_ops: u64,
 }
 
 impl MachineConfig {
+    /// Default runaway-loop guard (simulated cycles). Also used by
+    /// trace capture, which runs before any architecture is chosen.
+    pub const DEFAULT_MAX_CYCLES: u64 = 2_000_000_000;
+
     /// Default configuration for a memory architecture.
     pub fn for_arch(arch: MemoryArchKind) -> Self {
         Self {
@@ -40,8 +47,8 @@ impl MachineConfig {
             fast_timing: false,
             half_banks: false,
             tw_region: None,
-            max_cycles: 2_000_000_000,
-            collect_mem_trace: false,
+            max_cycles: Self::DEFAULT_MAX_CYCLES,
+            max_trace_ops: crate::sim::exec::ExecParams::DEFAULT_MAX_TRACE_OPS,
         }
     }
 
@@ -64,10 +71,30 @@ impl MachineConfig {
         self
     }
 
-    /// Builder: record the memory-operation trace.
-    pub fn with_mem_trace(mut self) -> Self {
-        self.collect_mem_trace = true;
+    /// Builder: trace-capture size guard (see `max_trace_ops`).
+    pub fn with_max_trace_ops(mut self, ops: u64) -> Self {
+        self.max_trace_ops = ops;
         self
+    }
+
+    /// Build the configured shared memory (honouring the banked timing
+    /// mode and half-bank knobs). Used by the [`crate::sim::machine`]
+    /// facade and by the trace replayer, which needs a memory's cost
+    /// model but never its data.
+    pub fn build_memory(&self) -> Box<dyn SharedMemory> {
+        match self.arch {
+            MemoryArchKind::Banked { banks, mapping } => {
+                let mut b = BankedMemory::new(self.mem_words, banks, mapping);
+                if self.fast_timing {
+                    b = b.with_mode(TimingMode::Fast);
+                }
+                if self.half_banks {
+                    b = b.with_half_banks();
+                }
+                Box::new(b)
+            }
+            _ => self.arch.build(self.mem_words),
+        }
     }
 
     /// Number of SIMT lanes (fixed at 16 — the paper's warp).
@@ -79,6 +106,7 @@ impl MachineConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mem::arch::OpKind;
 
     #[test]
     fn defaults() {
@@ -87,6 +115,12 @@ mod tests {
         assert_eq!(c.lanes(), 16);
         assert!(!c.fast_timing);
         assert!(c.tw_region.is_none());
+        assert_eq!(c.max_cycles, MachineConfig::DEFAULT_MAX_CYCLES);
+        assert_eq!(
+            c.max_trace_ops,
+            crate::sim::exec::ExecParams::DEFAULT_MAX_TRACE_OPS
+        );
+        assert_eq!(c.with_max_trace_ops(10).max_trace_ops, 10);
     }
 
     #[test]
@@ -98,6 +132,22 @@ mod tests {
         assert_eq!(c.mem_words, 16_384);
         assert_eq!(c.tw_region, Some(8192..10_240));
         assert!(c.fast_timing);
+    }
+
+    #[test]
+    fn build_memory_honours_knobs() {
+        let mem = MachineConfig::for_arch(MemoryArchKind::banked(16))
+            .with_mem_words(4096)
+            .build_memory();
+        assert_eq!(mem.words(), 4096);
+        assert_eq!(mem.arch(), MemoryArchKind::banked(16));
+        let mut cfg = MachineConfig::for_arch(MemoryArchKind::banked(16)).with_mem_words(4096);
+        cfg.half_banks = true;
+        assert_eq!(cfg.build_memory().overhead(OpKind::Read), 14);
+        let mp = MachineConfig::for_arch(MemoryArchKind::mp_4r1w())
+            .with_mem_words(1024)
+            .build_memory();
+        assert_eq!(mp.arch(), MemoryArchKind::mp_4r1w());
     }
 
     #[test]

@@ -1,0 +1,790 @@
+//! Functional execution core — the architecture-independent half of the
+//! decoupled simulator (DESIGN.md §Two-phase).
+//!
+//! A program's *functional* behaviour (decode, ALU results, the branch
+//! directions taken, and the address stream every memory instruction
+//! emits) is identical across all nine shared-memory architectures — the
+//! `all_archs_functionally_identical_on_random_programs` property test is
+//! the executable statement of that fact. Only memory *timing* differs.
+//!
+//! [`execute`] therefore runs a program **once**, against any word-level
+//! memory ([`ExecMemory`]), and emits a complete [`MemTrace`]: the full
+//! per-instruction memory-operation stream (addresses + lane masks +
+//! load classification + blocking flags) interleaved with the exact
+//! ALU/issue cycle charges accumulated between memory instructions. The
+//! trace is everything the timing replayer ([`crate::sim::replay`]) needs
+//! to reproduce the coupled simulator's [`crate::sim::stats::RunReport`]
+//! bit for bit on *any* architecture — so an N-architecture sweep
+//! executes each program once and replays timing N times.
+
+use super::regfile::RegFile;
+use crate::isa::inst::Instruction;
+use crate::isa::opcode::{OpClass, Opcode};
+use crate::isa::program::Program;
+use crate::mem::arch::{OpKind, SharedMemory};
+use crate::mem::{LaneMask, LANES};
+use std::ops::Range;
+
+/// Simulation errors (all carry the faulting PC where one exists).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// A lane addressed past the end of shared memory.
+    InvalidAddress { pc: usize, thread: u32, addr: u32, words: usize },
+    /// Threads disagreed on a branch direction.
+    DivergentBranch { pc: usize },
+    /// Branch target outside the program.
+    BadJumpTarget { pc: usize, target: u16 },
+    /// The run exceeded `max_cycles` (runaway loop guard).
+    CycleLimit { limit: u64 },
+    /// The trace exceeded `max_trace_ops` memory operations (runaway
+    /// loop guard on capture *memory*: a loop containing a store would
+    /// otherwise buffer operations until the cycle guard trips).
+    TraceLimit { ops: u64 },
+    /// Execution fell off the end of the instruction stream.
+    MissingHalt,
+    /// Program binary failed to decode.
+    BadProgram(String),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::InvalidAddress { pc, thread, addr, words } => write!(
+                f,
+                "pc {pc}: thread {thread} addressed {addr} beyond shared memory ({words} words)"
+            ),
+            SimError::DivergentBranch { pc } => {
+                write!(f, "pc {pc}: divergent branch (threads disagree)")
+            }
+            SimError::BadJumpTarget { pc, target } => {
+                write!(f, "pc {pc}: jump target {target} outside program")
+            }
+            SimError::CycleLimit { limit } => write!(f, "exceeded cycle limit {limit}"),
+            SimError::TraceLimit { ops } => write!(
+                f,
+                "trace exceeded {ops} memory operations (raise ExecParams::max_trace_ops \
+                 for legitimately huge programs)"
+            ),
+            SimError::MissingHalt => write!(f, "execution fell off the end (missing halt)"),
+            SimError::BadProgram(m) => write!(f, "bad program: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Word-addressed functional memory — the only thing the execution core
+/// needs from a memory. Implemented by [`FlatMemory`] (the cheap backing
+/// store for trace capture) and by the architectural memories (so the
+/// [`crate::sim::machine::Machine`] facade executes against the same
+/// image its `mem()` accessor exposes).
+pub trait ExecMemory {
+    /// Capacity in 32-bit words (the bounds-check limit).
+    fn words(&self) -> usize;
+    /// Functional single-word read.
+    fn read_word(&self, addr: u32) -> u32;
+    /// Functional single-word write.
+    fn write_word(&mut self, addr: u32, value: u32);
+}
+
+/// A flat word array: the functional memory used when capturing a trace
+/// without instantiating any shared-memory architecture.
+#[derive(Debug, Clone)]
+pub struct FlatMemory {
+    words: Vec<u32>,
+}
+
+impl FlatMemory {
+    pub fn new(words: usize) -> Self {
+        Self { words: vec![0u32; words] }
+    }
+
+    /// Snapshot of the full image (functional-equivalence checks).
+    pub fn image(&self) -> &[u32] {
+        &self.words
+    }
+}
+
+impl ExecMemory for FlatMemory {
+    fn words(&self) -> usize {
+        self.words.len()
+    }
+
+    fn read_word(&self, addr: u32) -> u32 {
+        self.words[addr as usize]
+    }
+
+    fn write_word(&mut self, addr: u32, value: u32) {
+        self.words[addr as usize] = value;
+    }
+}
+
+impl ExecMemory for Box<dyn SharedMemory> {
+    fn words(&self) -> usize {
+        SharedMemory::words(&**self)
+    }
+
+    fn read_word(&self, addr: u32) -> u32 {
+        (**self).peek(addr)
+    }
+
+    fn write_word(&mut self, addr: u32, value: u32) {
+        (**self).poke(addr, value);
+    }
+}
+
+/// Classification of one executed load, for the Table III D-load /
+/// TW-load split. Decided by the (architecture-independent) twiddle
+/// address region of the workload, so it lives in the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadClass {
+    Data,
+    Twiddle,
+}
+
+/// What one traced memory instruction was.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemAccessKind {
+    /// `ld`, classified against the twiddle region.
+    Load(LoadClass),
+    /// `st` (blocking) or `stnb` (non-blocking).
+    Store { blocking: bool },
+}
+
+/// One executed memory instruction: its kind and each 16-lane operation's
+/// addresses + active-lane mask, in issue order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemInstr {
+    pub kind: MemAccessKind,
+    pub ops: Vec<([u32; LANES], LaneMask)>,
+}
+
+impl MemInstr {
+    /// Read/write direction (what the §III-A controllers care about).
+    pub fn op_kind(&self) -> OpKind {
+        match self.kind {
+            MemAccessKind::Load(_) => OpKind::Read,
+            MemAccessKind::Store { .. } => OpKind::Write,
+        }
+    }
+}
+
+/// Exact ALU/issue cycle charges accumulated between two memory
+/// instructions. These are architecture-independent: ALU classes cost one
+/// cycle per 16-thread operation on every memory.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AluCharges {
+    /// Register-register integer cycles ("INT OPs").
+    pub int_cycles: u64,
+    /// Immediate-op cycles ("Immediate OPs").
+    pub imm_cycles: u64,
+    /// FP32 cycles ("FP OPs").
+    pub fp_cycles: u64,
+    /// Control/misc cycles ("Other OPs") — nop/jmp/bnz/tid.
+    pub other_cycles: u64,
+    /// 16-wide operations issued (ALU classes + tid).
+    pub operations: u64,
+    /// Dynamic instructions executed.
+    pub instructions: u64,
+}
+
+impl AluCharges {
+    /// Clock advance these charges represent.
+    pub fn cycles(&self) -> u64 {
+        self.int_cycles + self.imm_cycles + self.fp_cycles + self.other_cycles
+    }
+}
+
+/// One trace segment: the ALU charges *preceding* a memory instruction,
+/// then the memory instruction itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSegment {
+    pub before: AluCharges,
+    pub mem: MemInstr,
+}
+
+/// The complete, lossless record of one functional execution — the input
+/// to the timing replayer. Unlike the old optional `MemTraceInstr`
+/// capture, a `MemTrace` always carries every memory operation *and* the
+/// interleaved ALU accounting, so timing on any architecture can be
+/// reconstructed without re-executing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemTrace {
+    /// Program name (propagated into replayed reports).
+    pub program: String,
+    /// Thread-block size.
+    pub threads: u32,
+    /// Shared-memory capacity (words) the program executed against —
+    /// part of the functional execution, so replayers can build a
+    /// matching memory without re-materializing the workload.
+    pub mem_words: usize,
+    /// Memory instructions in program order, each with its preceding ALU
+    /// charges.
+    pub segments: Vec<TraceSegment>,
+    /// ALU charges after the last memory instruction, up to (but not
+    /// including) `halt`.
+    pub tail: AluCharges,
+}
+
+impl MemTrace {
+    /// Build a trace from bare memory instructions (no ALU work) — handy
+    /// for synthetic traces in tests and the analytical oracle. Capacity
+    /// defaults to 64 Ki words (the [`crate::sim::config`] default).
+    pub fn from_mem_instrs(
+        program: impl Into<String>,
+        threads: u32,
+        instrs: Vec<MemInstr>,
+    ) -> Self {
+        Self {
+            program: program.into(),
+            threads,
+            mem_words: 65_536,
+            segments: instrs
+                .into_iter()
+                .map(|mem| TraceSegment { before: AluCharges::default(), mem })
+                .collect(),
+            tail: AluCharges::default(),
+        }
+    }
+
+    /// The memory instructions in program order.
+    pub fn mem_instrs(&self) -> impl Iterator<Item = &MemInstr> {
+        self.segments.iter().map(|s| &s.mem)
+    }
+
+    /// Total 16-lane memory operations across the trace.
+    pub fn mem_op_count(&self) -> u64 {
+        self.mem_instrs().map(|i| i.ops.len() as u64).sum()
+    }
+}
+
+/// Architecture-independent execution parameters.
+#[derive(Debug, Clone)]
+pub struct ExecParams {
+    /// Address range whose loads are classified as twiddle loads
+    /// ("TW Load" rows of Table III). `None` classifies every load as a
+    /// data load.
+    pub tw_region: Option<Range<u32>>,
+    /// Runaway-loop guard, checked against an architecture-independent
+    /// *lower bound* on the clock (every architecture charges at least
+    /// one cycle per operation). The replayer re-checks against the real
+    /// clock of its architecture.
+    pub max_cycles: u64,
+    /// Companion guard on trace *memory*: maximum 16-lane memory
+    /// operations the capture may buffer. The cycle guard alone would
+    /// let a runaway loop containing a store allocate
+    /// `O(max_cycles)` trace segments before tripping; this caps the
+    /// capture at a size (~1–2 GB at the default) far above any real
+    /// workload (the paper's largest benchmark records ~4k operations).
+    pub max_trace_ops: u64,
+}
+
+impl ExecParams {
+    /// Default trace-size guard: 2^24 ≈ 16.8M operations.
+    pub const DEFAULT_MAX_TRACE_OPS: u64 = 1 << 24;
+}
+
+impl Default for ExecParams {
+    fn default() -> Self {
+        Self {
+            tw_region: None,
+            max_cycles: 2_000_000_000,
+            max_trace_ops: Self::DEFAULT_MAX_TRACE_OPS,
+        }
+    }
+}
+
+/// Run `program` to `halt` against `mem`, returning the complete trace.
+///
+/// The program is round-tripped through its binary encoding first — the
+/// execution core consumes what the assembler would produce, keeping the
+/// decode path honest.
+pub fn execute<M: ExecMemory>(
+    program: &Program,
+    mem: &mut M,
+    params: &ExecParams,
+) -> Result<MemTrace, SimError> {
+    let words = program.encode();
+    let insts: Vec<Instruction> = words
+        .iter()
+        .enumerate()
+        .map(|(pc, &w)| {
+            Instruction::decode(w).ok_or_else(|| SimError::BadProgram(format!("pc {pc}")))
+        })
+        .collect::<Result<_, _>>()?;
+
+    let threads = program.threads;
+    let mut regs = RegFile::new(threads);
+    let n_ops = (threads as u64).div_ceil(LANES as u64);
+    let mem_words = mem.words();
+
+    let mut segments = Vec::new();
+    let mut charges = AluCharges::default();
+    // Lower bound on the clock of *any* architecture (ALU cycles are
+    // exact; memory operations cost at least one cycle each).
+    let mut clock_floor = 0u64;
+    // Memory operations buffered so far (the capture-size guard).
+    let mut trace_ops = 0u64;
+
+    let mut pc = 0usize;
+    loop {
+        if pc >= insts.len() {
+            return Err(SimError::MissingHalt);
+        }
+        if clock_floor > params.max_cycles {
+            return Err(SimError::CycleLimit { limit: params.max_cycles });
+        }
+        let inst = insts[pc];
+        match inst.op.class() {
+            OpClass::Int | OpClass::Imm | OpClass::Fp => {
+                exec_alu(&mut regs, inst, threads);
+                match inst.op.class() {
+                    OpClass::Int => charges.int_cycles += n_ops,
+                    OpClass::Imm => charges.imm_cycles += n_ops,
+                    OpClass::Fp => charges.fp_cycles += n_ops,
+                    _ => unreachable!(),
+                }
+                charges.operations += n_ops;
+                charges.instructions += 1;
+                clock_floor += n_ops;
+                pc += 1;
+            }
+            OpClass::Other => match inst.op {
+                Opcode::Halt => {
+                    clock_floor += 1;
+                    break;
+                }
+                Opcode::Nop => {
+                    charges.other_cycles += 1;
+                    charges.instructions += 1;
+                    clock_floor += 1;
+                    pc += 1;
+                }
+                Opcode::Jmp => {
+                    let target = inst.imm as usize;
+                    if target >= insts.len() {
+                        return Err(SimError::BadJumpTarget { pc, target: inst.imm });
+                    }
+                    charges.other_cycles += 1;
+                    charges.instructions += 1;
+                    clock_floor += 1;
+                    pc = target;
+                }
+                Opcode::Bnz => {
+                    let taken = regs.get(0, inst.rd) != 0;
+                    for t in 1..threads {
+                        if (regs.get(t, inst.rd) != 0) != taken {
+                            return Err(SimError::DivergentBranch { pc });
+                        }
+                    }
+                    charges.other_cycles += 1;
+                    charges.instructions += 1;
+                    clock_floor += 1;
+                    if taken {
+                        let target = inst.imm as usize;
+                        if target >= insts.len() {
+                            return Err(SimError::BadJumpTarget { pc, target: inst.imm });
+                        }
+                        pc = target;
+                    } else {
+                        pc += 1;
+                    }
+                }
+                Opcode::Tid => {
+                    for t in 0..threads {
+                        regs.set(t, inst.rd, t);
+                    }
+                    charges.other_cycles += n_ops;
+                    charges.operations += n_ops;
+                    charges.instructions += 1;
+                    clock_floor += n_ops;
+                    pc += 1;
+                }
+                _ => unreachable!("all Other opcodes handled"),
+            },
+            OpClass::Load => {
+                let mi = exec_load(&mut regs, inst, threads, pc, mem, mem_words, params)?;
+                clock_floor += mi.ops.len() as u64;
+                trace_ops += mi.ops.len() as u64;
+                if trace_ops > params.max_trace_ops {
+                    return Err(SimError::TraceLimit { ops: trace_ops });
+                }
+                segments.push(TraceSegment { before: std::mem::take(&mut charges), mem: mi });
+                pc += 1;
+            }
+            OpClass::Store => {
+                let mi = exec_store(&mut regs, inst, threads, pc, mem, mem_words)?;
+                clock_floor += mi.ops.len() as u64;
+                trace_ops += mi.ops.len() as u64;
+                if trace_ops > params.max_trace_ops {
+                    return Err(SimError::TraceLimit { ops: trace_ops });
+                }
+                segments.push(TraceSegment { before: std::mem::take(&mut charges), mem: mi });
+                pc += 1;
+            }
+        }
+    }
+
+    Ok(MemTrace { program: program.name.clone(), threads, mem_words, segments, tail: charges })
+}
+
+/// Execute an ALU instruction for every thread.
+///
+/// §Perf: the opcode dispatch is hoisted *outside* the thread loop (one
+/// specialized tight loop per opcode) — this function is the simulator's
+/// hottest path (≈27% before the split; see EXPERIMENTS.md §Perf).
+fn exec_alu(regs: &mut RegFile, inst: Instruction, threads: u32) {
+    use Opcode::*;
+    let imm = inst.imm as u32;
+    let (rd, ra, rb) = (inst.rd, inst.ra, inst.rb);
+    macro_rules! int_rr {
+        ($f:expr) => {
+            for t in 0..threads {
+                let v = $f(regs.get(t, ra), regs.get(t, rb));
+                regs.set(t, rd, v);
+            }
+        };
+    }
+    macro_rules! int_ri {
+        ($f:expr) => {
+            for t in 0..threads {
+                let v = $f(regs.get(t, ra));
+                regs.set(t, rd, v);
+            }
+        };
+    }
+    macro_rules! fp_rr {
+        ($f:expr) => {
+            for t in 0..threads {
+                let v = $f(regs.get_f32(t, ra), regs.get_f32(t, rb));
+                regs.set_f32(t, rd, v);
+            }
+        };
+    }
+    match inst.op {
+        Iadd => int_rr!(|a: u32, b: u32| a.wrapping_add(b)),
+        Isub => int_rr!(|a: u32, b: u32| a.wrapping_sub(b)),
+        Imul => int_rr!(|a: u32, b: u32| a.wrapping_mul(b)),
+        Iand => int_rr!(|a, b| a & b),
+        Ior => int_rr!(|a, b| a | b),
+        Ixor => int_rr!(|a, b| a ^ b),
+        Ishl => int_rr!(|a: u32, b: u32| a << (b & 31)),
+        Ishr => int_rr!(|a: u32, b: u32| a >> (b & 31)),
+        Iaddi => int_ri!(|a: u32| a.wrapping_add(sign_extend(imm))),
+        Imuli => int_ri!(|a: u32| a.wrapping_mul(sign_extend(imm))),
+        Iandi => int_ri!(|a| a & imm),
+        Iori => int_ri!(|a| a | imm),
+        Ixori => int_ri!(|a| a ^ imm),
+        Ishli => int_ri!(|a: u32| a << (imm & 31)),
+        Ishri => int_ri!(|a: u32| a >> (imm & 31)),
+        Ldi => {
+            for t in 0..threads {
+                regs.set(t, rd, imm);
+            }
+        }
+        Lui => {
+            for t in 0..threads {
+                let low = regs.get(t, rd) & 0xFFFF;
+                regs.set(t, rd, (imm << 16) | low);
+            }
+        }
+        Fadd => fp_rr!(|a, b| a + b),
+        Fsub => fp_rr!(|a, b| a - b),
+        Fmul => fp_rr!(|a, b| a * b),
+        Fma => {
+            for t in 0..threads {
+                let acc = regs.get_f32(t, rd);
+                let v = regs.get_f32(t, ra).mul_add(regs.get_f32(t, rb), acc);
+                regs.set_f32(t, rd, v);
+            }
+        }
+        Fneg => {
+            for t in 0..threads {
+                let v = -regs.get_f32(t, ra);
+                regs.set_f32(t, rd, v);
+            }
+        }
+        Itof => {
+            for t in 0..threads {
+                let v = regs.get(t, ra) as i32 as f32;
+                regs.set_f32(t, rd, v);
+            }
+        }
+        _ => unreachable!("not an ALU opcode"),
+    }
+}
+
+/// Gather one warp's addresses from register `ra`, with bounds checks.
+fn warp_addrs(
+    regs: &RegFile,
+    ra: u8,
+    warp: u32,
+    threads: u32,
+    pc: usize,
+    mem_words: usize,
+) -> Result<([u32; LANES], LaneMask), SimError> {
+    let base_t = warp * LANES as u32;
+    let mut addrs = [0u32; LANES];
+    let mut mask: LaneMask = 0;
+    for lane in 0..LANES {
+        let t = base_t + lane as u32;
+        if t >= threads {
+            break;
+        }
+        let addr = regs.get(t, ra);
+        if addr as usize >= mem_words {
+            return Err(SimError::InvalidAddress { pc, thread: t, addr, words: mem_words });
+        }
+        addrs[lane] = addr;
+        mask |= 1 << lane;
+    }
+    Ok((addrs, mask))
+}
+
+/// Classify a load by its addresses (Table III splits data loads from
+/// twiddle loads). Matches the coupled simulator: the first active lane
+/// of the first warp decides.
+fn classify_load(
+    addrs: &[u32; LANES],
+    mask: LaneMask,
+    tw_region: &Option<Range<u32>>,
+) -> LoadClass {
+    if let Some(region) = tw_region {
+        if mask != 0 {
+            let lane = mask.trailing_zeros() as usize;
+            if region.contains(&addrs[lane]) {
+                return LoadClass::Twiddle;
+            }
+        }
+    }
+    LoadClass::Data
+}
+
+fn exec_load<M: ExecMemory>(
+    regs: &mut RegFile,
+    inst: Instruction,
+    threads: u32,
+    pc: usize,
+    mem: &mut M,
+    mem_words: usize,
+    params: &ExecParams,
+) -> Result<MemInstr, SimError> {
+    let n_warps = (threads as usize).div_ceil(LANES);
+    let mut ops = Vec::with_capacity(n_warps);
+    let mut class = LoadClass::Data;
+    for w in 0..n_warps {
+        let (addrs, mask) = warp_addrs(regs, inst.ra, w as u32, threads, pc, mem_words)?;
+        if w == 0 {
+            class = classify_load(&addrs, mask, &params.tw_region);
+        }
+        let base_t = w as u32 * LANES as u32;
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            m &= m - 1;
+            regs.set(base_t + lane as u32, inst.rd, mem.read_word(addrs[lane]));
+        }
+        ops.push((addrs, mask));
+    }
+    Ok(MemInstr { kind: MemAccessKind::Load(class), ops })
+}
+
+fn exec_store<M: ExecMemory>(
+    regs: &mut RegFile,
+    inst: Instruction,
+    threads: u32,
+    pc: usize,
+    mem: &mut M,
+    mem_words: usize,
+) -> Result<MemInstr, SimError> {
+    let n_warps = (threads as usize).div_ceil(LANES);
+    let blocking = inst.op == Opcode::St;
+    let mut ops = Vec::with_capacity(n_warps);
+    for w in 0..n_warps {
+        let (addrs, mask) = warp_addrs(regs, inst.ra, w as u32, threads, pc, mem_words)?;
+        let base_t = w as u32 * LANES as u32;
+        // Lanes commit in ascending order: on address collisions the
+        // highest lane writes last and wins — the same resolution as the
+        // banked arbiters and the multiport port arbitration.
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            m &= m - 1;
+            mem.write_word(addrs[lane], regs.get(base_t + lane as u32, inst.rb));
+        }
+        ops.push((addrs, mask));
+    }
+    Ok(MemInstr { kind: MemAccessKind::Store { blocking }, ops })
+}
+
+/// 16-bit immediates are sign-extended for the arithmetic immediates
+/// (`iaddi r, r, -1` must work); logical immediates use them zero-extended.
+#[inline]
+fn sign_extend(imm: u32) -> u32 {
+    imm as u16 as i16 as i32 as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn run(src: &str) -> (FlatMemory, MemTrace) {
+        let p = assemble(src).expect("assembles");
+        let mut mem = FlatMemory::new(4096);
+        let params = ExecParams { max_cycles: 1_000_000, ..ExecParams::default() };
+        let t = execute(&p, &mut mem, &params).expect("executes");
+        (mem, t)
+    }
+
+    #[test]
+    fn trace_is_complete_and_ordered() {
+        let src = "
+.threads 64
+    tid   r0
+    ld    r1, [r0]
+    iadd  r1, r1, r0
+    st    [r0], r1
+    halt
+";
+        let (_, trace) = run(src);
+        assert_eq!(trace.segments.len(), 2);
+        // Segment 0: tid before the load.
+        let s0 = &trace.segments[0];
+        assert_eq!(s0.before.other_cycles, 4);
+        assert_eq!(s0.before.instructions, 1);
+        assert_eq!(s0.mem.kind, MemAccessKind::Load(LoadClass::Data));
+        assert_eq!(s0.mem.ops.len(), 4);
+        // Segment 1: the iadd before the store.
+        let s1 = &trace.segments[1];
+        assert_eq!(s1.before.int_cycles, 4);
+        assert_eq!(s1.mem.kind, MemAccessKind::Store { blocking: true });
+        assert_eq!(trace.mem_op_count(), 8);
+        assert_eq!(trace.tail, AluCharges::default());
+    }
+
+    #[test]
+    fn functional_results_land_in_memory() {
+        let src = "
+.threads 32
+    tid   r0
+    imuli r1, r0, 3
+    st    [r0], r1
+    halt
+";
+        let (mem, trace) = run(src);
+        for t in 0..32 {
+            assert_eq!(mem.read_word(t), t * 3);
+        }
+        assert_eq!(trace.threads, 32);
+    }
+
+    #[test]
+    fn tw_region_recorded_in_trace() {
+        let src = "
+.threads 16
+    tid   r0
+    iaddi r1, r0, 100
+    ld    r2, [r1]
+    ld    r3, [r0]
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut mem = FlatMemory::new(4096);
+        let params = ExecParams {
+            tw_region: Some(100..200),
+            max_cycles: 1_000_000,
+            ..ExecParams::default()
+        };
+        let trace = execute(&p, &mut mem, &params).unwrap();
+        let kinds: Vec<MemAccessKind> = trace.mem_instrs().map(|i| i.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                MemAccessKind::Load(LoadClass::Twiddle),
+                MemAccessKind::Load(LoadClass::Data)
+            ]
+        );
+    }
+
+    #[test]
+    fn nonblocking_store_flag_recorded() {
+        let src = "
+.threads 16
+    tid  r0
+    stnb [r0], r0
+    halt
+";
+        let (_, trace) = run(src);
+        assert_eq!(trace.segments[0].mem.kind, MemAccessKind::Store { blocking: false });
+    }
+
+    #[test]
+    fn infinite_loop_hits_cycle_limit() {
+        let p = assemble(".threads 16\nloop:\n jmp loop\n halt\n").unwrap();
+        let mut mem = FlatMemory::new(64);
+        let params = ExecParams { max_cycles: 1000, ..ExecParams::default() };
+        assert!(matches!(
+            execute(&p, &mut mem, &params),
+            Err(SimError::CycleLimit { limit: 1000 })
+        ));
+    }
+
+    #[test]
+    fn trace_limit_bounds_runaway_capture_memory() {
+        // A runaway loop *containing a store* must trip the trace-size
+        // guard long before the (huge) cycle guard would — bounded
+        // memory, clean error.
+        let src = "
+.threads 16
+    tid  r0
+loop:
+    st   [r0], r0
+    jmp  loop
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut mem = FlatMemory::new(64);
+        let params = ExecParams {
+            max_cycles: u64::MAX,
+            max_trace_ops: 100,
+            ..ExecParams::default()
+        };
+        assert!(matches!(
+            execute(&p, &mut mem, &params),
+            Err(SimError::TraceLimit { ops }) if ops > 100
+        ));
+    }
+
+    #[test]
+    fn out_of_bounds_reported_with_context() {
+        let src = "
+.threads 16
+    ldi  r0, 0
+    lui  r0, 1
+    ld   r1, [r0]
+    halt
+";
+        let p = assemble(src).unwrap();
+        let mut mem = FlatMemory::new(4096);
+        match execute(&p, &mut mem, &ExecParams { max_cycles: 1000, ..ExecParams::default() }) {
+            Err(SimError::InvalidAddress { addr, pc, .. }) => {
+                assert_eq!(addr, 65536);
+                assert_eq!(pc, 2);
+            }
+            other => panic!("expected InvalidAddress, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn synthetic_trace_constructor() {
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![([0u32; LANES], 0xFFFF)],
+        };
+        let t = MemTrace::from_mem_instrs("synthetic", 16, vec![mi]);
+        assert_eq!(t.segments.len(), 1);
+        assert_eq!(t.mem_op_count(), 1);
+        assert_eq!(t.mem_instrs().next().unwrap().op_kind(), OpKind::Read);
+    }
+}

@@ -1,5 +1,5 @@
-//! The SIMT machine: fetch/decode, 16 SPs, and the shared-memory access
-//! path (paper Fig. 1).
+//! The SIMT machine facade: functional execution + timing replay in
+//! lockstep (paper Fig. 1; DESIGN.md §Two-phase).
 //!
 //! Execution model: one instruction at a time, executed for *every* thread
 //! in the block before the next instruction starts (§III: "an instruction
@@ -7,119 +7,48 @@
 //! instruction"). With `T` threads and 16 lanes, an instruction issues
 //! `⌈T/16⌉` operations, one per clock for ALU classes; memory instructions
 //! are timed by the configured [`SharedMemory`] and the §III-A controller
-//! model ([`WritePipeline`]).
+//! model ([`crate::mem::controller::WritePipeline`]).
+//!
+//! Since the execution/timing split, [`Machine::run_program`] is a thin
+//! facade over the two decoupled halves: the architecture-independent
+//! functional core ([`crate::sim::exec`]) runs the program against this
+//! machine's shared memory and emits a complete [`MemTrace`]; the timing
+//! replay engine ([`crate::sim::replay`]) then charges that trace against
+//! the memory's cost model. The sweep path reuses the same two halves
+//! with a trace cache ([`crate::coordinator::job::TraceCache`]) so one
+//! functional execution times all nine memories.
 //!
 //! Uniform control flow only: `jmp`/`bnz` must take the same direction in
 //! every thread (SIMT divergence is out of the paper's scope and the
 //! simulator reports it as an error rather than silently mis-timing).
 
 use super::config::MachineConfig;
-use super::regfile::RegFile;
-use super::stats::{CycleStats, RunReport};
-use crate::isa::inst::Instruction;
-use crate::isa::opcode::{OpClass, Opcode};
+use super::exec::{self, ExecParams, MemTrace};
+use super::replay;
+use super::stats::RunReport;
 use crate::isa::program::Program;
-use crate::mem::arch::{OpKind, SharedMemory};
-use crate::mem::banked::{BankedMemory, TimingMode};
-use crate::mem::controller::WritePipeline;
-use crate::mem::{LaneMask, LANES};
+use crate::mem::arch::SharedMemory;
 
-/// Simulation errors (all carry the faulting PC).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum SimError {
-    /// A lane addressed past the end of shared memory.
-    InvalidAddress { pc: usize, thread: u32, addr: u32, words: usize },
-    /// Threads disagreed on a branch direction.
-    DivergentBranch { pc: usize },
-    /// Branch target outside the program.
-    BadJumpTarget { pc: usize, target: u16 },
-    /// The run exceeded `max_cycles` (runaway loop guard).
-    CycleLimit { limit: u64 },
-    /// Execution fell off the end of the instruction stream.
-    MissingHalt,
-    /// Program binary failed to decode.
-    BadProgram(String),
-}
-
-impl std::fmt::Display for SimError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SimError::InvalidAddress { pc, thread, addr, words } => write!(
-                f,
-                "pc {pc}: thread {thread} addressed {addr} beyond shared memory ({words} words)"
-            ),
-            SimError::DivergentBranch { pc } => {
-                write!(f, "pc {pc}: divergent branch (threads disagree)")
-            }
-            SimError::BadJumpTarget { pc, target } => {
-                write!(f, "pc {pc}: jump target {target} outside program")
-            }
-            SimError::CycleLimit { limit } => write!(f, "exceeded cycle limit {limit}"),
-            SimError::MissingHalt => write!(f, "execution fell off the end (missing halt)"),
-            SimError::BadProgram(m) => write!(f, "bad program: {m}"),
-        }
-    }
-}
-
-impl std::error::Error for SimError {}
-
-/// Classification of one executed memory instruction, for the Table III
-/// D-load / TW-load split.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum LoadClass {
-    Data,
-    Twiddle,
-}
-
-/// One memory instruction's recorded operations (for the analytical
-/// timing oracle): the instruction kind and each 16-lane operation's
-/// addresses + active-lane mask.
-#[derive(Debug, Clone)]
-pub struct MemTraceInstr {
-    pub kind: OpKind,
-    pub ops: Vec<([u32; LANES], LaneMask)>,
-}
+pub use super::exec::SimError;
 
 /// The simulated processor.
 pub struct Machine {
     cfg: MachineConfig,
     mem: Box<dyn SharedMemory>,
-    write_pipe: WritePipeline,
-    now: u64,
-    stats: CycleStats,
-    mem_trace: Vec<MemTraceInstr>,
+    trace: Option<MemTrace>,
 }
 
 impl Machine {
     pub fn new(cfg: MachineConfig) -> Self {
-        let mem: Box<dyn SharedMemory> = match cfg.arch {
-            crate::mem::arch::MemoryArchKind::Banked { banks, mapping } => {
-                let mut b = BankedMemory::new(cfg.mem_words, banks, mapping);
-                if cfg.fast_timing {
-                    b = b.with_mode(TimingMode::Fast);
-                }
-                if cfg.half_banks {
-                    b = b.with_half_banks();
-                }
-                Box::new(b)
-            }
-            _ => cfg.arch.build(cfg.mem_words),
-        };
-        let write_pipe = WritePipeline::new(mem.write_buffer_ops());
-        Self {
-            cfg,
-            mem,
-            write_pipe,
-            now: 0,
-            stats: CycleStats::default(),
-            mem_trace: Vec::new(),
-        }
+        let mem = cfg.build_memory();
+        Self { cfg, mem, trace: None }
     }
 
-    /// The memory-operation trace of the last run (empty unless
-    /// [`MachineConfig::collect_mem_trace`] is set).
-    pub fn mem_trace(&self) -> &[MemTraceInstr] {
-        &self.mem_trace
+    /// The complete memory-operation trace of the last successful run
+    /// (`None` before the first run). Always captured — the decoupled
+    /// execution core emits it as a by-product.
+    pub fn mem_trace(&self) -> Option<&MemTrace> {
+        self.trace.as_ref()
     }
 
     /// The machine configuration.
@@ -160,372 +89,37 @@ impl Machine {
 
     /// Run a program to `halt`, returning the per-class cycle report.
     ///
-    /// The program is round-tripped through its binary encoding first —
-    /// the simulator consumes what the assembler would produce, keeping
-    /// the decode path honest.
+    /// Execute-then-replay: the functional core runs the program once
+    /// against this machine's memory image and emits the trace; the
+    /// replay engine charges the trace against this memory's timing
+    /// model. The report is bit-identical to the historical coupled
+    /// simulator (the per-instruction charges are applied in the same
+    /// order with the same state).
     pub fn run_program(&mut self, program: &Program) -> Result<RunReport, SimError> {
-        let words = program.encode();
-        let insts: Vec<Instruction> = words
-            .iter()
-            .enumerate()
-            .map(|(pc, &w)| {
-                Instruction::decode(w).ok_or_else(|| SimError::BadProgram(format!("pc {pc}")))
-            })
-            .collect::<Result<_, _>>()?;
-
-        let threads = program.threads;
-        let mut regs = RegFile::new(threads);
-        let start_clock = self.now;
-        self.stats = CycleStats::default();
-        self.mem_trace.clear();
-        let n_ops = (threads as u64 + LANES as u64 - 1) / LANES as u64;
-
-        let mut pc = 0usize;
-        loop {
-            if pc >= insts.len() {
-                return Err(SimError::MissingHalt);
-            }
-            if self.now - start_clock > self.cfg.max_cycles {
-                return Err(SimError::CycleLimit { limit: self.cfg.max_cycles });
-            }
-            let inst = insts[pc];
-            self.stats.instructions += 1;
-            match inst.op.class() {
-                OpClass::Int | OpClass::Imm | OpClass::Fp => {
-                    self.exec_alu(&mut regs, inst, threads);
-                    self.charge_alu(inst.op.class(), n_ops);
-                    pc += 1;
-                }
-                OpClass::Other => match inst.op {
-                    Opcode::Halt => {
-                        self.now += 1;
-                        let drained = self.write_pipe.drain(self.now);
-                        self.stats.drain_cycles += drained - self.now;
-                        self.now = drained;
-                        self.stats.other_cycles += 1;
-                        break;
-                    }
-                    Opcode::Nop => {
-                        self.stats.other_cycles += 1;
-                        self.now += 1;
-                        pc += 1;
-                    }
-                    Opcode::Jmp => {
-                        let target = inst.imm as usize;
-                        if target >= insts.len() {
-                            return Err(SimError::BadJumpTarget { pc, target: inst.imm });
-                        }
-                        self.stats.other_cycles += 1;
-                        self.now += 1;
-                        pc = target;
-                    }
-                    Opcode::Bnz => {
-                        let taken = regs.get(0, inst.rd) != 0;
-                        for t in 1..threads {
-                            if (regs.get(t, inst.rd) != 0) != taken {
-                                return Err(SimError::DivergentBranch { pc });
-                            }
-                        }
-                        self.stats.other_cycles += 1;
-                        self.now += 1;
-                        if taken {
-                            let target = inst.imm as usize;
-                            if target >= insts.len() {
-                                return Err(SimError::BadJumpTarget { pc, target: inst.imm });
-                            }
-                            pc = target;
-                        } else {
-                            pc += 1;
-                        }
-                    }
-                    Opcode::Tid => {
-                        for t in 0..threads {
-                            regs.set(t, inst.rd, t);
-                        }
-                        self.stats.other_cycles += n_ops;
-                        self.stats.operations += n_ops;
-                        self.now += n_ops;
-                        pc += 1;
-                    }
-                    _ => unreachable!("all Other opcodes handled"),
-                },
-                OpClass::Load => {
-                    self.exec_load(&mut regs, inst, threads, pc)?;
-                    pc += 1;
-                }
-                OpClass::Store => {
-                    self.exec_store(&mut regs, inst, threads, pc)?;
-                    pc += 1;
-                }
-            }
-        }
-
-        Ok(RunReport {
-            program: program.name.clone(),
-            arch: self.cfg.arch,
-            threads,
-            stats: self.stats,
-            elapsed_cycles: self.now - start_clock,
-        })
-    }
-
-    fn charge_alu(&mut self, class: OpClass, n_ops: u64) {
-        match class {
-            OpClass::Int => self.stats.int_cycles += n_ops,
-            OpClass::Imm => self.stats.imm_cycles += n_ops,
-            OpClass::Fp => self.stats.fp_cycles += n_ops,
-            _ => unreachable!(),
-        }
-        self.stats.operations += n_ops;
-        self.now += n_ops;
-    }
-
-    /// Execute an ALU instruction for every thread.
-    ///
-    /// §Perf: the opcode dispatch is hoisted *outside* the thread loop
-    /// (one specialized tight loop per opcode) — this function is the
-    /// simulator's hottest path (≈27% before the split; see
-    /// EXPERIMENTS.md §Perf).
-    fn exec_alu(&self, regs: &mut RegFile, inst: Instruction, threads: u32) {
-        use Opcode::*;
-        let imm = inst.imm as u32;
-        let (rd, ra, rb) = (inst.rd, inst.ra, inst.rb);
-        macro_rules! int_rr {
-            ($f:expr) => {
-                for t in 0..threads {
-                    let v = $f(regs.get(t, ra), regs.get(t, rb));
-                    regs.set(t, rd, v);
-                }
-            };
-        }
-        macro_rules! int_ri {
-            ($f:expr) => {
-                for t in 0..threads {
-                    let v = $f(regs.get(t, ra));
-                    regs.set(t, rd, v);
-                }
-            };
-        }
-        macro_rules! fp_rr {
-            ($f:expr) => {
-                for t in 0..threads {
-                    let v = $f(regs.get_f32(t, ra), regs.get_f32(t, rb));
-                    regs.set_f32(t, rd, v);
-                }
-            };
-        }
-        match inst.op {
-            Iadd => int_rr!(|a: u32, b: u32| a.wrapping_add(b)),
-            Isub => int_rr!(|a: u32, b: u32| a.wrapping_sub(b)),
-            Imul => int_rr!(|a: u32, b: u32| a.wrapping_mul(b)),
-            Iand => int_rr!(|a, b| a & b),
-            Ior => int_rr!(|a, b| a | b),
-            Ixor => int_rr!(|a, b| a ^ b),
-            Ishl => int_rr!(|a: u32, b: u32| a << (b & 31)),
-            Ishr => int_rr!(|a: u32, b: u32| a >> (b & 31)),
-            Iaddi => int_ri!(|a: u32| a.wrapping_add(sign_extend(imm))),
-            Imuli => int_ri!(|a: u32| a.wrapping_mul(sign_extend(imm))),
-            Iandi => int_ri!(|a| a & imm),
-            Iori => int_ri!(|a| a | imm),
-            Ixori => int_ri!(|a| a ^ imm),
-            Ishli => int_ri!(|a: u32| a << (imm & 31)),
-            Ishri => int_ri!(|a: u32| a >> (imm & 31)),
-            Ldi => {
-                for t in 0..threads {
-                    regs.set(t, rd, imm);
-                }
-            }
-            Lui => {
-                for t in 0..threads {
-                    let low = regs.get(t, rd) & 0xFFFF;
-                    regs.set(t, rd, (imm << 16) | low);
-                }
-            }
-            Fadd => fp_rr!(|a, b| a + b),
-            Fsub => fp_rr!(|a, b| a - b),
-            Fmul => fp_rr!(|a, b| a * b),
-            Fma => {
-                for t in 0..threads {
-                    let acc = regs.get_f32(t, rd);
-                    let v = regs.get_f32(t, ra).mul_add(regs.get_f32(t, rb), acc);
-                    regs.set_f32(t, rd, v);
-                }
-            }
-            Fneg => {
-                for t in 0..threads {
-                    let v = -regs.get_f32(t, ra);
-                    regs.set_f32(t, rd, v);
-                }
-            }
-            Itof => {
-                for t in 0..threads {
-                    let v = regs.get(t, ra) as i32 as f32;
-                    regs.set_f32(t, rd, v);
-                }
-            }
-            _ => unreachable!("not an ALU opcode"),
-        }
-    }
-
-    /// Gather one warp's addresses from register `ra`, with bounds checks.
-    fn warp_addrs(
-        &self,
-        regs: &RegFile,
-        ra: u8,
-        warp: u32,
-        threads: u32,
-        pc: usize,
-    ) -> Result<([u32; LANES], LaneMask), SimError> {
-        let base_t = warp * LANES as u32;
-        let mut addrs = [0u32; LANES];
-        let mut mask: LaneMask = 0;
-        for lane in 0..LANES {
-            let t = base_t + lane as u32;
-            if t >= threads {
-                break;
-            }
-            let addr = regs.get(t, ra);
-            if addr as usize >= self.cfg.mem_words {
-                return Err(SimError::InvalidAddress {
-                    pc,
-                    thread: t,
-                    addr,
-                    words: self.cfg.mem_words,
-                });
-            }
-            addrs[lane] = addr;
-            mask |= 1 << lane;
-        }
-        Ok((addrs, mask))
-    }
-
-    /// Classify a load by its addresses (Table III splits data loads from
-    /// twiddle loads).
-    fn classify_load(&self, addrs: &[u32; LANES], mask: LaneMask) -> LoadClass {
-        if let Some(region) = &self.cfg.tw_region {
-            if mask != 0 {
-                let lane = mask.trailing_zeros() as usize;
-                if region.contains(&addrs[lane]) {
-                    return LoadClass::Twiddle;
-                }
-            }
-        }
-        LoadClass::Data
-    }
-
-    fn exec_load(
-        &mut self,
-        regs: &mut RegFile,
-        inst: Instruction,
-        threads: u32,
-        pc: usize,
-    ) -> Result<(), SimError> {
-        let n_warps = (threads as usize + LANES - 1) / LANES;
-        let mut attributed = self.mem.overhead(OpKind::Read) as u64;
-        let mut class = LoadClass::Data;
-        let mut trace = self
-            .cfg
-            .collect_mem_trace
-            .then(|| MemTraceInstr { kind: OpKind::Read, ops: Vec::with_capacity(n_warps) });
-        for w in 0..n_warps {
-            let (addrs, mask) = self.warp_addrs(regs, inst.ra, w as u32, threads, pc)?;
-            if let Some(t) = trace.as_mut() {
-                t.ops.push((addrs, mask));
-            }
-            if w == 0 {
-                class = self.classify_load(&addrs, mask);
-            }
-            let op = self.mem.read_op(&addrs, mask);
-            attributed += op.cycles.max(1) as u64;
-            let base_t = w as u32 * LANES as u32;
-            let mut m = mask;
-            while m != 0 {
-                let lane = m.trailing_zeros() as usize;
-                m &= m - 1;
-                regs.set(base_t + lane as u32, inst.rd, op.data[lane]);
-            }
-        }
-        if let Some(t) = trace {
-            self.mem_trace.push(t);
-        }
-        // A read instruction pauses fetch/decode until writeback (§III-A).
-        self.now += attributed;
-        self.stats.operations += n_warps as u64;
-        match class {
-            LoadClass::Data => {
-                self.stats.d_load_cycles += attributed;
-                self.stats.d_load_ops += n_warps as u64;
-            }
-            LoadClass::Twiddle => {
-                self.stats.tw_load_cycles += attributed;
-                self.stats.tw_load_ops += n_warps as u64;
-            }
-        }
-        Ok(())
-    }
-
-    fn exec_store(
-        &mut self,
-        regs: &mut RegFile,
-        inst: Instruction,
-        threads: u32,
-        pc: usize,
-    ) -> Result<(), SimError> {
-        let n_warps = (threads as usize + LANES - 1) / LANES;
-        let blocking = inst.op == Opcode::St;
-        let overhead = self.mem.overhead(OpKind::Write);
-        let start = self.now;
-        let mut iss = self.now;
-        let mut trace = self
-            .cfg
-            .collect_mem_trace
-            .then(|| MemTraceInstr { kind: OpKind::Write, ops: Vec::with_capacity(n_warps) });
-        for w in 0..n_warps {
-            let (addrs, mask) = self.warp_addrs(regs, inst.ra, w as u32, threads, pc)?;
-            if let Some(t) = trace.as_mut() {
-                t.ops.push((addrs, mask));
-            }
-            let base_t = w as u32 * LANES as u32;
-            let mut data = [0u32; LANES];
-            let mut m = mask;
-            while m != 0 {
-                let lane = m.trailing_zeros() as usize;
-                m &= m - 1;
-                data[lane] = regs.get(base_t + lane as u32, inst.rb);
-            }
-            let cost = self.mem.write_op(&addrs, &data, mask);
-            let before = iss;
-            iss = self.write_pipe.issue_nonblocking(iss, cost.max(1), overhead);
-            // Anything beyond the single issue cycle was a buffer-full stall.
-            self.stats.wbuf_stall_cycles += iss - before - 1;
-        }
-        if let Some(t) = trace {
-            self.mem_trace.push(t);
-        }
-        self.stats.operations += n_warps as u64;
-        self.stats.store_ops += n_warps as u64;
-        if blocking {
-            // Blocking write: hold the pipeline until the controller drains.
-            let end = self.write_pipe.drain(iss);
-            self.stats.store_cycles += end - start;
-            self.now = end;
-        } else {
-            // Non-blocking: the pipeline continues after issue; attribute
-            // the background service cost so the Store Cycles row still
-            // reflects the memory work (the paper's accounting).
-            self.stats.store_cycles +=
-                (self.write_pipe.busy_until().saturating_sub(start)).max(iss - start);
-            self.now = iss;
-        }
-        Ok(())
+        let params = ExecParams {
+            tw_region: self.cfg.tw_region.clone(),
+            max_cycles: self.cfg.max_cycles,
+            max_trace_ops: self.cfg.max_trace_ops,
+        };
+        let trace = exec::execute(program, &mut self.mem, &params)?;
+        let report = replay::replay(&trace, self.mem.as_ref(), self.cfg.max_cycles)?;
+        self.trace = Some(trace);
+        Ok(report)
     }
 }
 
-/// 16-bit immediates are sign-extended for the arithmetic immediates
-/// (`iaddi r, r, -1` must work); logical immediates use them zero-extended.
-#[inline]
-fn sign_extend(imm: u32) -> u32 {
-    imm as u16 as i16 as i32 as u32
+impl exec::ExecMemory for Machine {
+    fn words(&self) -> usize {
+        SharedMemory::words(self.mem.as_ref())
+    }
+
+    fn read_word(&self, addr: u32) -> u32 {
+        self.mem.peek(addr)
+    }
+
+    fn write_word(&mut self, addr: u32, value: u32) {
+        self.mem.poke(addr, value);
+    }
 }
 
 #[cfg(test)]
@@ -858,5 +452,16 @@ loop:
             assert_eq!(re.total_cycles(), rf.total_cycles(), "arch {arch}");
             assert_eq!(exact.mem().image(), fast.mem().image());
         }
+    }
+
+    #[test]
+    fn trace_always_captured_by_facade() {
+        let (m, r) = run(
+            ".threads 32\ntid r0\nld r1, [r0]\nst [r0], r1\nhalt\n",
+            MemoryArchKind::banked(16),
+        );
+        let trace = m.mem_trace().expect("trace captured");
+        assert_eq!(trace.segments.len(), 2);
+        assert_eq!(trace.mem_op_count(), r.stats.d_load_ops + r.stats.store_ops);
     }
 }

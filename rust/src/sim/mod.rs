@@ -1,4 +1,5 @@
-//! The cycle-accurate SIMT machine (paper §III, Fig. 1).
+//! The cycle-accurate SIMT machine (paper §III, Fig. 1), decoupled into a
+//! functional-execution core and a timing-replay engine.
 //!
 //! Sixteen SPs execute every instruction for all threads in the block,
 //! sixteen threads per clock (one memory *operation* per clock, each
@@ -6,12 +7,25 @@
 //! operation per cycle; memory instructions go through the shared-memory
 //! access controllers whose timing depends on the configured architecture
 //! ([`crate::mem`]).
+//!
+//! Layering (DESIGN.md §Two-phase):
+//!
+//! - [`exec`] — architecture-independent functional core: runs a program
+//!   once, emits a complete [`exec::MemTrace`];
+//! - [`replay`] — timing replay: charges any [`crate::mem::SharedMemory`]
+//!   cost model from a trace, producing a [`stats::RunReport`];
+//! - [`machine`] — the facade that runs both in lockstep, preserving the
+//!   original coupled-simulator API.
 
 pub mod config;
+pub mod exec;
 pub mod machine;
 pub mod regfile;
+pub mod replay;
 pub mod stats;
 
 pub use config::MachineConfig;
-pub use machine::{Machine, SimError};
+pub use exec::{execute, ExecMemory, ExecParams, FlatMemory, MemTrace, SimError};
+pub use machine::Machine;
+pub use replay::replay;
 pub use stats::{CycleStats, RunReport};

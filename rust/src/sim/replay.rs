@@ -1,0 +1,251 @@
+//! Timing replay engine — the architecture-dependent half of the
+//! decoupled simulator (DESIGN.md §Two-phase).
+//!
+//! [`replay`] charges a [`MemTrace`] against any [`SharedMemory`]'s
+//! controller/arbiter/bank timing model — the per-operation
+//! [`SharedMemory::op_cost`] charge path, the §III-A per-instruction
+//! overheads, and the write controller's circular buffer
+//! ([`WritePipeline`]) — without touching data or registers. The result
+//! is a [`RunReport`] bit-identical to running the program coupled on
+//! that architecture ([`crate::sim::machine::Machine::run_program`] *is*
+//! execute-then-replay, and `rust/tests/replay_parity.rs` pins the
+//! cached-trace path to it across all nine architectures).
+//!
+//! The timing contract replayed here, from the paper:
+//!
+//! - ALU classes stream one 16-thread operation per clock;
+//! - a **read** instruction pauses fetch/decode for its fixed overhead
+//!   plus the conflict-spaced operation stream;
+//! - a **blocking write** (`st`) holds the pipeline until the write
+//!   controller drains; a **non-blocking write** (`stnb`) continues after
+//!   one issue cycle per operation, stalling only when the circular
+//!   buffer fills;
+//! - `halt` waits for the write controller to drain (charged as
+//!   `drain_cycles`).
+
+use super::exec::{AluCharges, LoadClass, MemAccessKind, MemTrace, SimError};
+use super::stats::{CycleStats, RunReport};
+use crate::mem::arch::{OpKind, SharedMemory};
+use crate::mem::controller::WritePipeline;
+
+/// Replay `trace` against `mem`'s timing model.
+///
+/// `max_cycles` is the same runaway guard the coupled simulator applies:
+/// the replayed clock is checked at every instruction boundary (a slow
+/// architecture can exceed the limit even when functional execution
+/// finished).
+pub fn replay(
+    trace: &MemTrace,
+    mem: &dyn SharedMemory,
+    max_cycles: u64,
+) -> Result<RunReport, SimError> {
+    let mut stats = CycleStats::default();
+    let mut now = 0u64;
+    let mut write_pipe = WritePipeline::new(mem.write_buffer_ops());
+
+    for seg in &trace.segments {
+        charge_alu(&mut stats, &mut now, &seg.before);
+        let n_ops = seg.mem.ops.len() as u64;
+        match seg.mem.kind {
+            MemAccessKind::Load(class) => {
+                // A read instruction pauses fetch/decode until writeback
+                // (§III-A): fixed overhead + conflict-spaced operations.
+                let mut attributed = mem.overhead(OpKind::Read) as u64;
+                for (addrs, mask) in &seg.mem.ops {
+                    attributed += mem.op_cost(OpKind::Read, addrs, *mask).max(1) as u64;
+                }
+                now += attributed;
+                stats.operations += n_ops;
+                match class {
+                    LoadClass::Data => {
+                        stats.d_load_cycles += attributed;
+                        stats.d_load_ops += n_ops;
+                    }
+                    LoadClass::Twiddle => {
+                        stats.tw_load_cycles += attributed;
+                        stats.tw_load_ops += n_ops;
+                    }
+                }
+            }
+            MemAccessKind::Store { blocking } => {
+                let overhead = mem.overhead(OpKind::Write);
+                let start = now;
+                let mut iss = now;
+                for (addrs, mask) in &seg.mem.ops {
+                    let cost = mem.op_cost(OpKind::Write, addrs, *mask);
+                    let before = iss;
+                    iss = write_pipe.issue_nonblocking(iss, cost.max(1), overhead);
+                    // Anything beyond the single issue cycle was a
+                    // buffer-full stall.
+                    stats.wbuf_stall_cycles += iss - before - 1;
+                }
+                stats.operations += n_ops;
+                stats.store_ops += n_ops;
+                if blocking {
+                    // Blocking write: hold the pipeline until the
+                    // controller drains.
+                    let end = write_pipe.drain(iss);
+                    stats.store_cycles += end - start;
+                    now = end;
+                } else {
+                    // Non-blocking: the pipeline continues after issue;
+                    // attribute the background service cost so the Store
+                    // Cycles row still reflects the memory work (the
+                    // paper's accounting).
+                    stats.store_cycles +=
+                        (write_pipe.busy_until().saturating_sub(start)).max(iss - start);
+                    now = iss;
+                }
+            }
+        }
+        stats.instructions += 1;
+        if now > max_cycles {
+            return Err(SimError::CycleLimit { limit: max_cycles });
+        }
+    }
+
+    charge_alu(&mut stats, &mut now, &trace.tail);
+    if now > max_cycles {
+        return Err(SimError::CycleLimit { limit: max_cycles });
+    }
+    // Halt: one issue cycle, then wait out the write controller.
+    stats.instructions += 1;
+    now += 1;
+    let drained = write_pipe.drain(now);
+    stats.drain_cycles += drained - now;
+    now = drained;
+    stats.other_cycles += 1;
+
+    Ok(RunReport {
+        program: trace.program.clone(),
+        arch: mem.arch(),
+        threads: trace.threads,
+        stats,
+        elapsed_cycles: now,
+    })
+}
+
+/// Apply the ALU charges accumulated between memory instructions: each
+/// class advances the clock by its cycle count (one cycle per 16-thread
+/// operation, on every architecture).
+fn charge_alu(stats: &mut CycleStats, now: &mut u64, charges: &AluCharges) {
+    stats.int_cycles += charges.int_cycles;
+    stats.imm_cycles += charges.imm_cycles;
+    stats.fp_cycles += charges.fp_cycles;
+    stats.other_cycles += charges.other_cycles;
+    stats.operations += charges.operations;
+    stats.instructions += charges.instructions;
+    *now += charges.cycles();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::mem::{FULL_MASK, LANES};
+    use crate::sim::exec::{LoadClass, MemInstr, MemTrace};
+
+    fn seq_addrs(stride: u32) -> [u32; LANES] {
+        let mut a = [0u32; LANES];
+        for (l, x) in a.iter_mut().enumerate() {
+            *x = l as u32 * stride;
+        }
+        a
+    }
+
+    fn replay_on(arch: MemoryArchKind, instrs: Vec<MemInstr>) -> RunReport {
+        let trace = MemTrace::from_mem_instrs("synthetic", 256, instrs);
+        let mem = arch.build(4096);
+        replay(&trace, mem.as_ref(), u64::MAX).unwrap()
+    }
+
+    #[test]
+    fn banked_load_overhead_plus_spacing() {
+        // Conflict-free 16-bank load: 12 overhead + 1 cycle per op.
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(1), FULL_MASK); 4],
+        };
+        let r = replay_on(MemoryArchKind::banked(16), vec![mi]);
+        assert_eq!(r.stats.d_load_cycles, 12 + 4);
+        assert_eq!(r.stats.d_load_ops, 4);
+        // Full conflict: stride 16 lands every lane in bank 0.
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(16), FULL_MASK)],
+        };
+        let r = replay_on(MemoryArchKind::banked(16), vec![mi]);
+        assert_eq!(r.stats.d_load_cycles, 12 + 16);
+    }
+
+    #[test]
+    fn multiport_costs_closed_form() {
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(1), FULL_MASK); 4],
+        };
+        let r = replay_on(MemoryArchKind::mp_4r1w(), vec![mi]);
+        assert_eq!(r.stats.d_load_cycles, 16); // 4 ops × ⌈16/4⌉, zero overhead
+    }
+
+    #[test]
+    fn blocking_store_drains() {
+        // 16-bank blocking store, full conflict: 5 overhead + 4 × 16.
+        let mi = MemInstr {
+            kind: MemAccessKind::Store { blocking: true },
+            ops: vec![(seq_addrs(16), FULL_MASK); 4],
+        };
+        let r = replay_on(MemoryArchKind::banked(16), vec![mi]);
+        assert_eq!(r.stats.store_cycles, 5 + 4 * 16);
+        assert_eq!(r.stats.drain_cycles, 0);
+    }
+
+    #[test]
+    fn nonblocking_store_defers_to_halt_drain() {
+        let mi = MemInstr {
+            kind: MemAccessKind::Store { blocking: false },
+            ops: vec![(seq_addrs(16), FULL_MASK); 4],
+        };
+        let r = replay_on(MemoryArchKind::banked(16), vec![mi]);
+        // Same attributed store work as the blocking variant...
+        assert_eq!(r.stats.store_cycles, 5 + 4 * 16);
+        // ...but the clock only pays at the final halt drain.
+        assert!(r.stats.drain_cycles > 0);
+    }
+
+    #[test]
+    fn twiddle_loads_split_out() {
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Twiddle),
+            ops: vec![(seq_addrs(1), FULL_MASK)],
+        };
+        let r = replay_on(MemoryArchKind::banked(8), vec![mi]);
+        assert_eq!(r.stats.tw_load_ops, 1);
+        assert!(r.stats.tw_load_cycles > 0);
+        assert_eq!(r.stats.d_load_ops, 0);
+    }
+
+    #[test]
+    fn cycle_limit_enforced_on_slow_archs() {
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(16), FULL_MASK); 64],
+        };
+        let trace = MemTrace::from_mem_instrs("slow", 1024, vec![mi]);
+        let mem = MemoryArchKind::banked(16).build(4096);
+        assert!(matches!(
+            replay(&trace, mem.as_ref(), 100),
+            Err(SimError::CycleLimit { limit: 100 })
+        ));
+    }
+
+    #[test]
+    fn empty_trace_is_just_halt() {
+        let trace = MemTrace::from_mem_instrs("empty", 16, vec![]);
+        let mem = MemoryArchKind::mp_4r1w().build(64);
+        let r = replay(&trace, mem.as_ref(), 1000).unwrap();
+        assert_eq!(r.total_cycles(), 1);
+        assert_eq!(r.stats.instructions, 1);
+        assert_eq!(r.stats.other_cycles, 1);
+    }
+}

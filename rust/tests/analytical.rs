@@ -1,15 +1,18 @@
 //! Integration: the analytical timing mode (L1 Pallas conflict kernel via
 //! PJRT) must reproduce the cycle-accurate simulator's attributed memory
 //! cycles exactly — same conflict maths, same §III-A overhead model.
+//!
+//! Since the execution/timing split the oracle consumes the same
+//! [`soft_simt::sim::exec::MemTrace`] the decoupled simulator replays,
+//! and every facade run captures it — no opt-in tracing flag.
 
 use soft_simt::coordinator::job::BenchJob;
 use soft_simt::mem::arch::MemoryArchKind;
-use soft_simt::programs::library::{program_by_name, Workload};
+use soft_simt::programs::library::program_by_name;
 use soft_simt::runtime::analytical::{estimate_banked, estimate_multiport};
 use soft_simt::runtime::ArtifactRuntime;
 use soft_simt::sim::config::MachineConfig;
 use soft_simt::sim::machine::Machine;
-use soft_simt::util::XorShift64;
 
 fn traced_run(
     program: &str,
@@ -18,24 +21,12 @@ fn traced_run(
     let workload = program_by_name(program).unwrap();
     let mut cfg = MachineConfig::for_arch(arch)
         .with_mem_words(workload.mem_words())
-        .with_fast_timing()
-        .with_mem_trace();
+        .with_fast_timing();
     if let Some(region) = workload.tw_region() {
         cfg = cfg.with_tw_region(region);
     }
     let mut m = Machine::new(cfg);
-    let mut rng = XorShift64::new(0x5EED);
-    match &workload {
-        Workload::Transpose(plan, _) => {
-            let src: Vec<u32> = (0..plan.n * plan.n).map(|_| rng.next_u32()).collect();
-            m.load_image(plan.src_base, &src);
-        }
-        Workload::Fft(plan, _) => {
-            let data = rng.f32_vec(2 * plan.n as usize);
-            m.load_f32_image(plan.data_base, &data);
-            m.load_f32_image(plan.tw_base, &plan.twiddles);
-        }
-    }
+    workload.load_input(&mut m, 0x5EED);
     let r = m.run_program(workload.program()).unwrap();
     (m, r)
 }
@@ -44,7 +35,7 @@ fn traced_run(
 fn analytical_banked_equals_simulator() {
     let rt = ArtifactRuntime::from_env().unwrap();
     if !rt.has_artifact("conflict16") {
-        eprintln!("skipping: artifacts not built");
+        eprintln!("skipping: artifacts not built (or the `pjrt` feature is off)");
         return;
     }
     for program in ["transpose32", "fft4096r16"] {
@@ -55,7 +46,8 @@ fn analytical_banked_equals_simulator() {
             MemoryArchKind::banked_offset(8),
         ] {
             let (m, report) = traced_run(program, arch);
-            let est = estimate_banked(&rt, arch, m.mem_trace()).expect("oracle scores trace");
+            let trace = m.mem_trace().expect("trace captured");
+            let est = estimate_banked(&rt, arch, trace).expect("oracle scores trace");
             assert_eq!(
                 est.load_cycles,
                 report.stats.load_cycles(),
@@ -78,7 +70,8 @@ fn analytical_multiport_equals_simulator() {
             MemoryArchKind::mp_4r1w_vb(),
         ] {
             let (m, report) = traced_run(program, arch);
-            let est = estimate_multiport(arch, m.mem_trace()).unwrap();
+            let trace = m.mem_trace().expect("trace captured");
+            let est = estimate_multiport(arch, trace).unwrap();
             assert_eq!(est.load_cycles, report.stats.load_cycles(), "{program} on {arch}");
             assert_eq!(est.store_cycles, report.stats.store_cycles, "{program} on {arch}");
         }
@@ -88,24 +81,32 @@ fn analytical_multiport_equals_simulator() {
 #[test]
 fn trace_shapes_match_op_counts() {
     let (m, report) = traced_run("fft4096r8", MemoryArchKind::banked(8));
-    let trace = m.mem_trace();
-    let total_ops: u64 = trace.iter().map(|t| t.ops.len() as u64).sum();
+    let trace = m.mem_trace().expect("trace captured");
     assert_eq!(
-        total_ops,
+        trace.mem_op_count(),
         report.stats.d_load_ops + report.stats.tw_load_ops + report.stats.store_ops
     );
+    assert_eq!(trace.segments.len() as u64 + 1, report.stats.instructions - alu_count(trace));
+}
+
+/// ALU/other instruction count recorded in a trace (everything except the
+/// memory instructions themselves and the final halt).
+fn alu_count(trace: &soft_simt::sim::exec::MemTrace) -> u64 {
+    trace.segments.iter().map(|s| s.before.instructions).sum::<u64>() + trace.tail.instructions
 }
 
 #[test]
-fn trace_disabled_by_default() {
+fn trace_always_captured() {
+    // The decoupled core emits the complete trace on every run — the old
+    // `collect_mem_trace` opt-in is gone.
     let r = BenchJob::new("transpose32", MemoryArchKind::banked(16)).run().unwrap();
-    // BenchJob does not enable tracing; nothing to assert on it directly,
-    // but a fresh machine without the flag must keep the trace empty.
     let mut m = Machine::new(
         MachineConfig::for_arch(MemoryArchKind::banked(16)).with_mem_words(4096),
     );
+    assert!(m.mem_trace().is_none(), "no trace before the first run");
     let p = soft_simt::isa::asm::assemble(".threads 16\ntid r0\nld r1, [r0]\nhalt\n").unwrap();
     m.run_program(&p).unwrap();
-    assert!(m.mem_trace().is_empty());
+    let trace = m.mem_trace().expect("trace captured without any flag");
+    assert_eq!(trace.mem_op_count(), 1);
     let _ = r;
 }

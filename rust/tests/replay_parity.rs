@@ -1,0 +1,121 @@
+//! Integration: replay parity — the core guarantee of the decoupled
+//! simulator. A trace captured once (functionally, on a flat memory) and
+//! replayed against an architecture's timing model must be
+//! cycle-identical to the coupled `Machine::run_program` path on that
+//! architecture, for every one of the paper's nine memories, on the
+//! paper's benchmarks.
+
+use soft_simt::coordinator::job::{BenchJob, TraceCache};
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::sim::replay::replay;
+
+/// The ISSUE's parity matrix: 9 architectures × {32×32 transpose,
+/// 4096-point FFT}. One trace per program; every cell replayed from it.
+#[test]
+fn replay_is_cycle_identical_across_all_nine_architectures() {
+    for program in ["transpose32", "fft4096r16"] {
+        let trace = BenchJob::new(program, MemoryArchKind::mp_4r1w())
+            .capture_trace()
+            .expect("functional execution succeeds");
+        for arch in MemoryArchKind::table3_nine() {
+            let job = BenchJob::new(program, arch);
+            let coupled = job.run().expect("coupled run succeeds").report;
+            let replayed = job.replay_trace(&trace).expect("replay succeeds").report;
+            assert_eq!(
+                replayed.total_cycles(),
+                coupled.total_cycles(),
+                "{program} on {arch}: elapsed"
+            );
+            assert_eq!(replayed.stats, coupled.stats, "{program} on {arch}: stats");
+            assert_eq!(replayed.threads, coupled.threads);
+            assert_eq!(replayed.arch, coupled.arch);
+        }
+    }
+}
+
+/// Parity must also hold on the exact (arbiter-stepped) banked timing
+/// path, not just the closed-form fast path.
+#[test]
+fn replay_parity_holds_in_exact_timing_mode() {
+    for arch in [
+        MemoryArchKind::banked(16),
+        MemoryArchKind::banked_offset(8),
+        MemoryArchKind::banked(4),
+    ] {
+        let mut job = BenchJob::new("transpose64", arch);
+        job.fast_timing = false;
+        let trace = job.capture_trace().unwrap();
+        let coupled = job.run().unwrap().report;
+        let replayed = job.replay_trace(&trace).unwrap().report;
+        assert_eq!(replayed.stats, coupled.stats, "{arch} (exact mode)");
+        assert_eq!(replayed.total_cycles(), coupled.total_cycles());
+    }
+}
+
+/// The cached sweep path (execute once, replay per architecture) must
+/// reproduce the per-cell coupled sweep bit for bit, and must actually
+/// share traces.
+#[test]
+fn cached_sweep_matches_coupled_sweep_on_paper_cells() {
+    let mut jobs = Vec::new();
+    for program in ["transpose32", "transpose128", "fft4096r8"] {
+        for arch in MemoryArchKind::table3_nine() {
+            jobs.push(BenchJob::new(program, arch));
+        }
+    }
+    let runner = SweepRunner::default();
+    let coupled = runner.run(&jobs).expect("coupled sweep");
+    let cache = TraceCache::new();
+    let cached = runner.run_with_cache(&jobs, &cache).expect("cached sweep");
+    assert_eq!(cache.len(), 3, "27 cells must share 3 traces");
+    assert_eq!(coupled.len(), cached.len());
+    for (a, b) in coupled.iter().zip(&cached) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(
+            a.report.total_cycles(),
+            b.report.total_cycles(),
+            "{} on {}",
+            a.job.program,
+            a.job.arch
+        );
+        assert_eq!(a.report.stats, b.report.stats, "{} on {}", a.job.program, a.job.arch);
+    }
+}
+
+/// A trace is portable across *capture* backends too: executing on a
+/// banked or multiport machine's memory yields exactly the trace the
+/// flat-memory capture produces (functional behaviour is
+/// architecture-independent), and replaying a flat-captured trace
+/// against a machine's own memory reproduces that machine's report.
+#[test]
+fn trace_capture_is_architecture_independent() {
+    use soft_simt::programs::library::program_by_name;
+    use soft_simt::sim::config::MachineConfig;
+    use soft_simt::sim::machine::Machine;
+
+    let job = BenchJob::new("fft4096r4", MemoryArchKind::mp_4r1w());
+    let reference = job.capture_trace().unwrap();
+    let workload = program_by_name("fft4096r4").unwrap();
+    for arch in [MemoryArchKind::banked_offset(16), MemoryArchKind::mp_4r1w_vb()] {
+        let mut cfg = MachineConfig::for_arch(arch)
+            .with_mem_words(workload.mem_words())
+            .with_fast_timing();
+        if let Some(region) = workload.tw_region() {
+            cfg = cfg.with_tw_region(region);
+        }
+        let mut machine = Machine::new(cfg.clone());
+        workload.load_input(&mut machine, job.seed);
+        let report = machine.run_program(workload.program()).unwrap();
+        let as_run = machine.mem_trace().expect("facade captures the trace");
+        assert_eq!(
+            as_run, &reference,
+            "trace must not depend on the memory it was captured on ({arch})"
+        );
+        // Replaying the flat-captured trace on this machine's memory
+        // model reproduces the machine's own report.
+        let replayed = replay(&reference, cfg.build_memory().as_ref(), cfg.max_cycles).unwrap();
+        assert_eq!(replayed.total_cycles(), report.total_cycles(), "{arch}");
+        assert_eq!(replayed.stats, report.stats, "{arch}");
+    }
+}

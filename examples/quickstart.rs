@@ -10,7 +10,7 @@ use soft_simt::prelude::*;
 fn main() {
     // A 16-bank shared memory with the Offset (complex-data) mapping —
     // the configuration that wins Table III.
-    let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Offset };
+    let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::offset() };
 
     // Generate the 32x32 transpose program the paper benchmarks, then run
     // it on a machine with a random memory image.

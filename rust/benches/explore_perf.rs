@@ -1,0 +1,80 @@
+//! Bench: design-space explorer throughput on the smallest transpose
+//! workload — emits `BENCH_explore.json` (points-evaluated/sec) so CI
+//! can track the explorer's trajectory across PRs, next to
+//! `BENCH_sweep.json`.
+
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::job::TraceCache;
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::explore::{explore, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
+use soft_simt::programs::library::program_by_name;
+
+fn main() {
+    let program = "transpose32"; // smallest registered transpose workload
+    let dataset_kb = program_by_name(program).unwrap().dataset_kb();
+    let space = DesignSpace::parametric(dataset_kb);
+    let n_points = space.points().len();
+    let runner = SweepRunner::default();
+    println!(
+        "explorer bench: {program}, {n_points} design points, {} architectures, {} workers",
+        space.arch_count(),
+        runner.workers()
+    );
+
+    let mut b = Bencher::new(1, 7);
+    let mut summaries = Vec::new();
+    let strategies: [(&str, &dyn SearchStrategy); 2] = [
+        ("exhaustive", &Exhaustive),
+        ("halving", &SuccessiveHalving { min_wave: 8 }),
+    ];
+    for (name, strategy) in strategies {
+        // Cold cache each iteration: the measured unit is capture +
+        // full search, the explorer's end-to-end cost.
+        let result = {
+            let cache = TraceCache::new();
+            explore(program, &space, strategy, &runner, &cache).unwrap()
+        };
+        assert_eq!(result.captures, 1);
+        let s = b
+            .bench(format!("explore_{program}_{name}_cold"), || {
+                let cache = TraceCache::new();
+                explore(program, &space, strategy, &runner, &cache).unwrap().points_scored
+            })
+            .clone();
+        let scored_per_sec = result.points_scored as f64 / s.median().as_secs_f64();
+        println!(
+            "{}  ({} scored, {} culled, {:.0} points-evaluated/s)",
+            s.line(),
+            result.points_scored,
+            result.points_culled,
+            scored_per_sec
+        );
+        summaries.push((name, result, s));
+    }
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (ex_name, ex_res, ex_s) = &summaries[0];
+    let (ha_name, ha_res, ha_s) = &summaries[1];
+    debug_assert_eq!((*ex_name, *ha_name), ("exhaustive", "halving"));
+    let json = format!(
+        "{{\n  \"bench\": \"explore_{program}\",\n  \"unix_time\": {unix_time},\n  \
+         \"points\": {n_points},\n  \"archs\": {archs},\n  \
+         \"exhaustive_median_ms\": {ex_ms:.3},\n  \"exhaustive_points_per_sec\": {ex_pps:.1},\n  \
+         \"halving_median_ms\": {ha_ms:.3},\n  \"halving_scored\": {ha_scored},\n  \
+         \"halving_culled\": {ha_culled},\n  \"captures_per_explore\": 1\n}}\n",
+        archs = space.arch_count(),
+        ex_ms = ex_s.median().as_secs_f64() * 1e3,
+        ex_pps = ex_res.points_scored as f64 / ex_s.median().as_secs_f64(),
+        ha_ms = ha_s.median().as_secs_f64() * 1e3,
+        ha_scored = ha_res.points_scored,
+        ha_culled = ha_res.points_culled,
+    );
+    match std::fs::write("BENCH_explore.json", &json) {
+        Ok(()) => println!("wrote BENCH_explore.json"),
+        Err(e) => eprintln!("could not write BENCH_explore.json: {e}"),
+    }
+    print!("{}", b.report());
+}

@@ -9,15 +9,14 @@ use soft_simt::benchkit::Bencher;
 use soft_simt::coordinator::job::BenchJob;
 use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::mem::mapping::BankMapping;
-use soft_simt::programs::library::{program_by_name, program_names, Workload};
+use soft_simt::programs::library::{program_by_name, program_names};
 use soft_simt::sim::config::MachineConfig;
 use soft_simt::sim::machine::Machine;
 use soft_simt::util::fmt::TextTable;
-use soft_simt::util::XorShift64;
 
 fn main() {
     // Mapping ablation table.
-    let mappings = [BankMapping::Lsb, BankMapping::Offset, BankMapping::Xor];
+    let mappings = [BankMapping::Lsb, BankMapping::offset(), BankMapping::Xor];
     let mut t = TextTable::new([
         "program".to_string(),
         "banks".into(),
@@ -41,7 +40,7 @@ fn main() {
                 cells[0].1.to_string(),
                 cells[1].1.to_string(),
                 cells[2].1.to_string(),
-                if best.0.is_empty() { "LSB" } else { best.0 }.to_string(),
+                if best.0.is_empty() { "LSB".to_string() } else { best.0.clone() },
             ]);
         }
     }
@@ -61,18 +60,7 @@ fn main() {
                 cfg = cfg.with_tw_region(r);
             }
             let mut m = Machine::new(cfg);
-            let mut rng = XorShift64::new(1);
-            match &workload {
-                Workload::Transpose(plan, _) => {
-                    let src: Vec<u32> = (0..plan.n * plan.n).map(|_| rng.next_u32()).collect();
-                    m.load_image(plan.src_base, &src);
-                }
-                Workload::Fft(plan, _) => {
-                    let data = rng.f32_vec(2 * plan.n as usize);
-                    m.load_f32_image(plan.data_base, &data);
-                    m.load_f32_image(plan.tw_base, &plan.twiddles);
-                }
-            }
+            workload.load_input(&mut m, 1);
             totals.push(m.run_program(workload.program()).unwrap().total_cycles());
         }
         let delta = 100.0 * (totals[1] as f64 - totals[0] as f64) / totals[0] as f64;

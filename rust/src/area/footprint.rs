@@ -21,14 +21,27 @@ use crate::mem::arch::MemoryArchKind;
 /// One Agilex sector, in ALM footprint.
 pub const SECTOR_ALMS: u32 = 16_640;
 
+/// Table I's Multi-Port "R/W Control" row — pure logic, placed
+/// unconstrained with the rest of the processor. Counted once, in
+/// [`processor_footprint`]'s rest-of-processor term; the sector-side
+/// [`memory_alms`] carries only the shared-memory wrapper.
+const MP_RW_CONTROL_ALMS: u32 = 700;
+
 /// An M20K stores 2 KB of 32-bit data (512 × 40 bits incl. ECC bits).
 pub const M20K_KBYTES: u32 = 2;
 
 /// Maximum shared-memory capacity in KB per architecture (§VI).
 pub fn max_capacity_kb(arch: MemoryArchKind) -> u32 {
     match arch {
-        MemoryArchKind::MultiPort { write_ports: 2, .. } => 224,
-        MemoryArchKind::MultiPort { .. } => 112,
+        // A sector holds 224 M20Ks = 448 KB of data. A multiport memory
+        // replicates once per read port, and emulated multi-port M20K
+        // modes serve `write_ports` copies' worth per primitive — the
+        // paper's anchors fall out: 4R-1W fills the sector at 112 KB,
+        // 4R-2W (quad-port M20Ks) at 224 KB. The explorer's 2R/8R
+        // variants scale the same way (2R-1W: 224 KB, 8R-1W: 56 KB).
+        MemoryArchKind::MultiPort { read_ports, write_ports, .. } => {
+            448 * write_ports / read_ports
+        }
         // "a 16 bank, 448 KB shared memory ... one sector"; fewer banks
         // scale down proportionally ("no point in increasing the memory
         // size of the 4 bank memory beyond 112KB").
@@ -59,12 +72,16 @@ impl Footprint {
     }
 }
 
-/// M20Ks needed for `size_kb` of shared memory under `arch` (multiport
-/// replicates data once per read port).
+/// M20Ks needed for `size_kb` of shared memory under `arch`: multiport
+/// replicates data once per read port, and emulated multi-port M20K
+/// modes (4R-2W's quad-port primitives) serve `write_ports` copies per
+/// M20K — the same model [`max_capacity_kb`]'s rooflines derive from.
 pub fn m20k_count(arch: MemoryArchKind, size_kb: u32) -> u32 {
     let per_copy = size_kb.div_ceil(M20K_KBYTES);
     match arch {
-        MemoryArchKind::MultiPort { read_ports, .. } => per_copy * read_ports,
+        MemoryArchKind::MultiPort { read_ports, write_ports, .. } => {
+            (per_copy * read_ports).div_ceil(write_ports)
+        }
         MemoryArchKind::Banked { .. } => per_copy,
     }
 }
@@ -81,17 +98,46 @@ pub fn memory_alms(arch: MemoryArchKind, size_kb: u32) -> Option<u32> {
             Some(SECTOR_ALMS * banks / 16)
         }
         MemoryArchKind::MultiPort { .. } => {
-            let base = table1::memory_total(arch).alms; // < 1 K unconstrained
-            if size_kb <= 64 {
+            // Shared-memory wrapper only (131 ALMs); the R/W control row
+            // is logic and lives in `processor_footprint`'s rest term.
+            let base = table1::memory_total(arch).alms - MP_RW_CONTROL_ALMS;
+            // The paper's rule for 4R-1W: no additional logic up to
+            // 64 KB, then linear pipelining growth to a full sector at
+            // the 112 KB roofline (Fig. 8 right). Pipelining is driven
+            // by M20K-column *occupancy*, so for other port configs the
+            // ramp scales with the roofline (same 64/112 = 4/7 sector
+            // fraction): an 8R-1W memory filling its sector at 56 KB
+            // pays the full-sector cost there, not the flat base.
+            let max = max_capacity_kb(arch);
+            let ramp_start = max * 4 / 7; // = 64 KB for 4R-1W
+            if size_kb <= ramp_start {
                 Some(base)
             } else {
-                // Linear pipelining growth from the 64 KB base to a full
-                // sector at the capacity roofline (Fig. 8 right).
-                let max = max_capacity_kb(arch);
-                let frac = (size_kb - 64) as f64 / (max - 64) as f64;
+                let frac = (size_kb - ramp_start) as f64 / (max - ramp_start) as f64;
                 Some(base + ((SECTOR_ALMS - base) as f64 * frac).round() as u32)
             }
         }
+    }
+}
+
+/// Read + write access-controller ALMs for a banked variant, as a
+/// function of bank count. Anchored exactly on the paper's Table I rows
+/// (4 → 1153, 8 → 1605, 16 → 2296 ALMs = Read Ctl. + Write Ctl.);
+/// between anchors it interpolates linearly, and past them it
+/// extrapolates with the nearest segment's slope — the paper's own
+/// scaling claim ("the logic area of the read and write access
+/// controllers varies linearly with the number of banks") applied to the
+/// 2–32-bank space the design explorer sweeps.
+pub fn banked_ctl_alms(banks: u32) -> u32 {
+    const ANCHORS: [(u32, u32); 3] = [(4, 1153), (8, 1605), (16, 2296)];
+    let lerp = |(x0, y0): (u32, u32), (x1, y1): (u32, u32), x: u32| -> u32 {
+        let slope = (y1 as f64 - y0 as f64) / (x1 as f64 - x0 as f64);
+        (y0 as f64 + slope * (x as f64 - x0 as f64)).round().max(0.0) as u32
+    };
+    if banks <= ANCHORS[1].0 {
+        lerp(ANCHORS[0], ANCHORS[1], banks)
+    } else {
+        lerp(ANCHORS[1], ANCHORS[2], banks)
     }
 }
 
@@ -102,16 +148,8 @@ pub fn processor_footprint(arch: MemoryArchKind, size_kb: u32) -> Option<Footpri
     // controllers (banked) or R/W control (multiport), placed
     // unconstrained.
     let ctl = match arch {
-        MemoryArchKind::Banked { .. } => {
-            let m = table1::memory_total(arch);
-            let shared = match arch {
-                MemoryArchKind::Banked { banks: 4, .. } => 3225,
-                MemoryArchKind::Banked { banks: 8, .. } => 6526,
-                _ => 13_105,
-            };
-            m.alms - shared // read + write controllers only
-        }
-        MemoryArchKind::MultiPort { .. } => 700, // R/W control row
+        MemoryArchKind::Banked { banks, .. } => banked_ctl_alms(banks),
+        MemoryArchKind::MultiPort { .. } => MP_RW_CONTROL_ALMS,
     };
     let rest = table1::core_total().alms + ctl;
     Some(Footprint { memory_alms: memory, rest_alms: rest, m20k: m20k_count(arch, size_kb) })
@@ -191,6 +229,67 @@ mod tests {
         let fp = processor_footprint(MemoryArchKind::banked(16), 224).unwrap();
         let ratio = fp.memory_alms as f64 / fp.rest_alms as f64;
         assert!((1.4..2.4).contains(&ratio), "memory/rest ratio {ratio}");
+    }
+
+    #[test]
+    fn parametric_multiport_rooflines_scale_with_replication() {
+        let mp = |r, w| MemoryArchKind::MultiPort { read_ports: r, write_ports: w, vb: false };
+        assert_eq!(max_capacity_kb(mp(2, 1)), 224);
+        assert_eq!(max_capacity_kb(mp(8, 1)), 56);
+        assert_eq!(max_capacity_kb(mp(1, 1)), 448);
+        // At its roofline each variant's replicated copies fill one
+        // sector of M20Ks, same as 4R-1W at 112 KB...
+        assert_eq!(m20k_count(mp(8, 1), 56), 224);
+        assert_eq!(m20k_count(mp(2, 1), 224), 224);
+        assert_eq!(m20k_count(MemoryArchKind::mp_4r2w(), 224), 224);
+        assert_eq!(memory_alms(mp(8, 1), 57), None);
+        // ...and the pipelining ramp reaches a full sector of ALMs at
+        // sector fill, whatever the roofline (the ramp scales with it).
+        assert_eq!(memory_alms(mp(8, 1), 56), Some(SECTOR_ALMS));
+        assert_eq!(memory_alms(mp(2, 1), 224), Some(SECTOR_ALMS));
+        assert!(memory_alms(mp(8, 1), 32).unwrap() < 1000, "flat base below the ramp");
+    }
+
+    #[test]
+    fn multiport_control_counted_once() {
+        // The Table I Multi-Port group (R/W Control 700 + Shared Mem.
+        // 131) must appear exactly once in the whole-processor total.
+        let fp = processor_footprint(MemoryArchKind::mp_4r1w(), 64).unwrap();
+        assert_eq!(
+            fp.total_alms(),
+            table1::core_total().alms + table1::memory_total(MemoryArchKind::mp_4r1w()).alms
+        );
+        assert_eq!(fp.memory_alms, 131);
+    }
+
+    #[test]
+    fn banked_ctl_exact_at_table1_anchors() {
+        // Table I: Read Ctl. + Write Ctl. ALMs.
+        assert_eq!(banked_ctl_alms(4), 342 + 811);
+        assert_eq!(banked_ctl_alms(8), 511 + 1094);
+        assert_eq!(banked_ctl_alms(16), 789 + 1507);
+    }
+
+    #[test]
+    fn banked_ctl_monotone_across_explorer_range() {
+        let vals: Vec<u32> = [2u32, 4, 8, 16, 32].iter().map(|&b| banked_ctl_alms(b)).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1], "controller ALMs must grow with banks: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn parametric_bank_counts_have_footprints() {
+        // The explorer's 2- and 32-bank points are placeable: 1/8 and 2
+        // sectors of memory respectively.
+        let b2 = processor_footprint(MemoryArchKind::banked(2), 32).unwrap();
+        assert_eq!(b2.memory_alms, SECTOR_ALMS / 8);
+        let b32 = processor_footprint(MemoryArchKind::banked(32), 512).unwrap();
+        assert_eq!(b32.memory_alms, 2 * SECTOR_ALMS);
+        assert_eq!(max_capacity_kb(MemoryArchKind::banked(32)), 896);
+        assert_eq!(max_capacity_kb(MemoryArchKind::banked(2)), 56);
+        // Rooflines still bind.
+        assert_eq!(processor_footprint(MemoryArchKind::banked(2), 57), None);
     }
 
     #[test]

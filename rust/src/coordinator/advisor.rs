@@ -8,12 +8,24 @@
 //! memory architecture to suit our particular design."
 //!
 //! Given a workload (a registered benchmark or a custom program), the
-//! advisor simulates it across every candidate memory — the paper's nine
-//! plus the XOR-mapped extensions — folds in the footprint model at the
-//! workload's dataset size, and ranks by time, area and perf-per-area.
+//! advisor ranks every candidate memory — the paper's nine plus the
+//! XOR-mapped extensions — by time, area and perf-per-area.
+//!
+//! Since PR 2 the advisor is a thin consumer of the design-space
+//! explorer ([`crate::explore`]): its candidate set is one small
+//! [`DesignSpace`] pinned at the workload's dataset capacity, evaluated
+//! by exhaustive cached-trace replay (one functional execution for all
+//! twelve candidates). Cycle counts, time ranking and the `fastest`
+//! recommendation are unchanged from the coupled per-candidate
+//! simulation this replaced (replay parity pins the cycles). The area
+//! columns use the shared footprint model, which the same PR *corrects*
+//! for multiport candidates (a 700-ALM R/W-control double count —
+//! see [`crate::area::footprint`]), so perf-per-area figures are lower
+//! by that amount for multiport entries than in earlier releases.
 
-use super::job::BenchJob;
-use crate::area::footprint;
+use super::job::TraceCache;
+use super::runner::SweepRunner;
+use crate::explore::{explore, DesignSpace, Exhaustive};
 use crate::mem::arch::MemoryArchKind;
 use crate::mem::mapping::BankMapping;
 use crate::sim::machine::SimError;
@@ -50,24 +62,34 @@ pub fn candidate_archs() -> Vec<MemoryArchKind> {
     v
 }
 
-/// Run the advisor for a registered program.
+/// The advisor's candidate design space: the candidate architectures at
+/// exactly the workload's dataset capacity, order-preserving and without
+/// a roofline filter (over-capacity candidates stay visible, marked).
+pub fn candidate_space(dataset_kb: u32) -> DesignSpace {
+    DesignSpace::from_archs(candidate_archs(), dataset_kb)
+}
+
+/// Run the advisor for a registered program: one exhaustive exploration
+/// of the candidate space (single functional execution, one timing
+/// replay per candidate).
 pub fn advise(program: &str) -> Result<Advice, SimError> {
     let workload = crate::programs::library::program_by_name(program)
         .ok_or_else(|| SimError::BadProgram(format!("unknown program '{program}'")))?;
-    let dataset_kb = (workload.mem_words() * 4 / 1024) as u32;
-    let mut candidates = Vec::new();
-    for arch in candidate_archs() {
-        let result = BenchJob::new(program, arch).run()?;
-        let fp = footprint::processor_footprint(arch, dataset_kb);
-        let time_us = result.report.time_us();
-        candidates.push(Candidate {
-            arch,
-            total_cycles: result.report.total_cycles(),
-            time_us,
-            footprint_alms: fp.map(|f| f.total_alms()),
-            perf_per_area: fp.map(|f| 1.0 / (time_us * f.sectors())),
-        });
-    }
+    let dataset_kb = workload.dataset_kb();
+    let space = candidate_space(dataset_kb);
+    let cache = TraceCache::new();
+    let result = explore(program, &space, &Exhaustive, &SweepRunner::default(), &cache)?;
+    let mut candidates: Vec<Candidate> = result
+        .scored
+        .iter()
+        .map(|s| Candidate {
+            arch: s.point.arch,
+            total_cycles: s.cycles,
+            time_us: s.time_us,
+            footprint_alms: s.footprint_alms,
+            perf_per_area: s.perf_per_area,
+        })
+        .collect();
     candidates.sort_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap());
     Ok(Advice { program: program.to_string(), dataset_kb, candidates })
 }
@@ -158,7 +180,7 @@ mod tests {
         let fastest = advice.fastest();
         if let MemoryArchKind::Banked { banks, mapping } = fastest.arch {
             assert_eq!(banks, 16);
-            assert!(matches!(mapping, BankMapping::Xor | BankMapping::Offset));
+            assert!(matches!(mapping, BankMapping::Xor | BankMapping::Offset { .. }));
         } else {
             panic!("a banked memory must win the FFT");
         }

@@ -56,6 +56,16 @@ impl BenchJob {
         jobs
     }
 
+    /// The paper sweep plus the reduction workload's nine Table III
+    /// cells (51 + 9 = 60 combinations) — the `sweep --all` set.
+    pub fn extended_sweep() -> Vec<BenchJob> {
+        let mut jobs = Self::paper_sweep();
+        for arch in MemoryArchKind::table3_nine() {
+            jobs.push(BenchJob::new("reduction4096", arch));
+        }
+        jobs
+    }
+
     /// The cache key of this job's functional execution.
     pub fn trace_key(&self) -> TraceKey {
         (self.program.clone(), self.seed)
@@ -184,6 +194,13 @@ mod tests {
         // "we ... run a total of 51 benchmarks (different combinations of
         // algorithms, data sizes and processor memories)".
         assert_eq!(BenchJob::paper_sweep().len(), 51);
+    }
+
+    #[test]
+    fn extended_sweep_adds_reduction_cells() {
+        let jobs = BenchJob::extended_sweep();
+        assert_eq!(jobs.len(), 60);
+        assert_eq!(jobs.iter().filter(|j| j.program == "reduction4096").count(), 9);
     }
 
     #[test]

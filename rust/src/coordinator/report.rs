@@ -130,6 +130,50 @@ pub fn render_table3(results: &[BenchResult]) -> String {
     out
 }
 
+/// Render the reduction extension table (`sweep --all`): the strided
+/// tree-sum's profile on the Table III architecture set — the third
+/// access pattern, beyond the paper's own tables.
+pub fn render_reduction(results: &[BenchResult]) -> String {
+    let program = "reduction4096";
+    let archs: Vec<MemoryArchKind> = MemoryArchKind::table3_nine()
+        .into_iter()
+        .filter(|a| results.iter().any(|r| r.job.program == program && r.job.arch == *a))
+        .collect();
+    if archs.is_empty() {
+        return String::new();
+    }
+    let mut out =
+        String::from("REDUCTION: Strided Tree-Sum Profiling - Different Memory Architectures\n");
+    let c0 = &cell(results, program, archs[0]).report;
+    out.push_str(&format!(
+        "\n4096 elems, stride 4  (Common Ops — INT: {}, Immediate: {}, Other: {}; \
+         Load/Store ops {}/{})\n",
+        c0.stats.int_cycles,
+        c0.stats.imm_cycles,
+        c0.stats.other_cycles,
+        c0.stats.d_load_ops,
+        c0.stats.store_ops,
+    ));
+    let mut t = TextTable::new(
+        std::iter::once("Type".to_string()).chain(archs.iter().map(|a| a.label())),
+    );
+    let row = |label: &str, f: &dyn Fn(&BenchResult) -> String| {
+        let mut cells = vec![label.to_string()];
+        for &a in &archs {
+            cells.push(f(cell(results, program, a)));
+        }
+        cells
+    };
+    t.row(row("Load Cycles", &|r| r.report.stats.d_load_cycles.to_string()));
+    t.row(row("Store Cycles", &|r| r.report.stats.store_cycles.to_string()));
+    t.row(row("Total", &|r| r.report.total_cycles().to_string()));
+    t.row(row("Time (us)", &|r| us(r.report.time_us())));
+    t.row(row("R Bank Eff. (%)", &|r| opt_pct(r.report.r_bank_eff())));
+    t.row(row("W Bank Eff. (%)", &|r| opt_pct(r.report.w_bank_eff())));
+    out.push_str(&t.render());
+    out
+}
+
 /// Build the Fig. 9 series from sweep results (radix-16 FFT is the
 /// performance benchmark, §VI).
 pub fn fig9_points(results: &[BenchResult]) -> Vec<Fig9Point> {
@@ -255,6 +299,20 @@ mod tests {
         assert!(f9.contains("over cap"), "4R-1W must exceed capacity at 168 KB");
         let csv = sweep_csv(&results);
         assert_eq!(csv.lines().count(), results.len() + 1);
+    }
+
+    #[test]
+    fn renders_reduction_extension() {
+        let jobs: Vec<BenchJob> = MemoryArchKind::table3_nine()
+            .into_iter()
+            .map(|arch| BenchJob::new("reduction4096", arch))
+            .collect();
+        let results = SweepRunner::default().run_cached(&jobs).unwrap();
+        let out = render_reduction(&results);
+        assert!(out.contains("Strided Tree-Sum"));
+        assert!(out.contains("16 Banks Offset"));
+        // Without reduction cells the renderer degrades to empty.
+        assert_eq!(render_reduction(&[]), "");
     }
 
     #[test]

@@ -66,6 +66,19 @@ impl SweepRunner {
             .collect()
     }
 
+    /// Run `f` over arbitrary items on the worker pool (public for the
+    /// design-space explorer, whose units of work are architecture
+    /// replays rather than [`BenchJob`]s); results come back in input
+    /// order regardless of scheduling.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        self.parallel_map(items, f)
+    }
+
     /// Run every job coupled (execute + replay per cell); results come
     /// back in job order. The first simulator error aborts the sweep (the
     /// paper's benchmarks never fault; an error here is a bug or a bad

@@ -139,6 +139,47 @@ pub fn validate_ffts(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
     checks
 }
 
+/// Validate the strided tree-sum reductions against the host wrapping
+/// sum, on the paper's nine architectures plus the parametric extremes
+/// the explorer sweeps (2 and 32 banks, XOR mapping). Purely host-side:
+/// the reduction has no PJRT artifact.
+pub fn validate_reductions(_rt: Option<&ArtifactRuntime>) -> Vec<Check> {
+    use crate::programs::library::program_by_name;
+    let mut checks = Vec::new();
+    for n in [256u32, 4096] {
+        let name_base = format!("reduction{n}");
+        let Some(workload) = program_by_name(&name_base) else {
+            checks.push(Check::fail(name_base, "workload failed to build"));
+            continue;
+        };
+        let seed = 3000 + n as u64;
+        let expected = workload.expected_scalar(seed).expect("reductions have a scalar result");
+        let mut archs = MemoryArchKind::table3_nine();
+        archs.push(MemoryArchKind::banked(2));
+        archs.push(MemoryArchKind::banked(32));
+        archs.push(MemoryArchKind::banked_xor(16));
+        for arch in archs {
+            let cfg = MachineConfig::for_arch(arch)
+                .with_mem_words(workload.mem_words())
+                .with_fast_timing();
+            let mut m = Machine::new(cfg);
+            workload.load_input(&mut m, seed);
+            let name = format!("{name_base} on {arch}");
+            if let Err(e) = m.run_program(workload.program()) {
+                checks.push(Check::fail(name, e.to_string()));
+                continue;
+            }
+            let got = m.read_image(0, 1)[0];
+            if got == expected {
+                checks.push(Check::pass(name, "host wrapping sum agrees"));
+            } else {
+                checks.push(Check::fail(name, format!("sum {got:#x} != host {expected:#x}")));
+            }
+        }
+    }
+    checks
+}
+
 /// Cross-check the Pallas conflict oracle against the cycle-accurate L3
 /// conflict model on random operation batches.
 pub fn validate_conflict_oracle(rt: &ArtifactRuntime, seed: u64) -> Vec<Check> {
@@ -163,7 +204,7 @@ pub fn validate_conflict_oracle(rt: &ArtifactRuntime, seed: u64) -> Vec<Check> {
             })
             .collect();
         let mut ok = true;
-        for mapping in [BankMapping::Lsb, BankMapping::Offset] {
+        for mapping in [BankMapping::Lsb, BankMapping::offset()] {
             let map = BankMap::new(banks, mapping);
             match golden::conflict_oracle(rt, banks, &ops, mapping.shift()) {
                 Ok(oracle) => {
@@ -196,6 +237,7 @@ pub fn validate_conflict_oracle(rt: &ArtifactRuntime, seed: u64) -> Vec<Check> {
 pub fn validate_all(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
     let mut checks = validate_transposes(rt);
     checks.extend(validate_ffts(rt));
+    checks.extend(validate_reductions(rt));
     if let Some(rt) = rt {
         checks.extend(validate_conflict_oracle(rt, 0xC0DE));
     }
@@ -210,6 +252,15 @@ mod tests {
     fn transposes_validate_without_artifacts() {
         let checks = validate_transposes(None);
         assert_eq!(checks.len(), 24);
+        for c in &checks {
+            assert!(c.passed, "{}: {}", c.name, c.detail);
+        }
+    }
+
+    #[test]
+    fn reductions_validate_without_artifacts() {
+        let checks = validate_reductions(None);
+        assert_eq!(checks.len(), 24, "2 sizes × (9 paper + 3 parametric) archs");
         for c in &checks {
             assert!(c.passed, "{}: {}", c.name, c.detail);
         }

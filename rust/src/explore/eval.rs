@@ -1,0 +1,322 @@
+//! Point evaluation: cached trace replay + footprint model.
+//!
+//! One [`Evaluator`] owns one workload's [`MemTrace`] (fetched through
+//! the shared [`TraceCache`], so a workload is functionally executed at
+//! most **once** no matter how many points are scored — the counter
+//! [`Evaluator::captures`] is the executable statement of that
+//! guarantee). Per-architecture timing is a pure trace replay, memoized
+//! across the design points that share an architecture; capacity only
+//! enters through the ALM footprint model.
+//!
+//! For pruning strategies the evaluator also offers a **lower bound** on
+//! replay cycles, computed in O(1) per architecture from a popcount
+//! histogram of the trace: every memory operation costs at least
+//! ⌈active/banks⌉ (banked; the true cost is the max per-bank count) or
+//! exactly ⌈active/ports⌉ (multiport), stores issue at least one cycle
+//! per operation, and the fixed §III-A per-instruction overheads always
+//! apply. `lower_bound_cycles(arch) <= replay cycles` is property-tested
+//! (`lower_bound_is_sound_property` in `rust/tests/explore.rs`).
+
+use super::pareto::Cost;
+use super::space::DesignPoint;
+use crate::area::footprint::{self, Footprint};
+use crate::coordinator::job::{BenchJob, TraceCache};
+use crate::mem::arch::MemoryArchKind;
+use crate::mem::{timing, LANES};
+use crate::sim::config::MachineConfig;
+use crate::sim::exec::{MemAccessKind, MemTrace, SimError};
+use crate::sim::replay;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The two objectives plus derived metrics for one scored point.
+#[derive(Debug, Clone, Copy)]
+pub struct PointCost {
+    /// Total replayed cycles (architecture-dependent, capacity-free).
+    pub cycles: u64,
+    /// Wall time at the architecture's Fmax.
+    pub time_us: f64,
+    /// Whole-processor footprint at the point's capacity; `None` when
+    /// the capacity exceeds the architecture's roofline.
+    pub footprint: Option<Footprint>,
+}
+
+impl PointCost {
+    pub fn alms(&self) -> Option<u32> {
+        self.footprint.map(|f| f.total_alms())
+    }
+
+    pub fn sectors(&self) -> Option<f64> {
+        self.footprint.map(|f| f.sectors())
+    }
+
+    /// The paper's efficiency criterion: 1 / (time × sectors).
+    pub fn perf_per_area(&self) -> Option<f64> {
+        self.footprint.map(|f| 1.0 / (self.time_us * f.sectors()))
+    }
+
+    /// Objective-space position; `None` when the point is unplaceable
+    /// (over the roofline) and therefore never enters a frontier.
+    pub fn objective(&self) -> Option<Cost> {
+        self.alms().map(|alms| Cost { cycles: self.cycles, alms })
+    }
+}
+
+/// Popcount histogram of the trace — everything the lower-bound model
+/// needs, precomputed once so each per-architecture bound is O(LANES).
+#[derive(Debug, Clone, Default)]
+struct TraceProfile {
+    alu_cycles: u64,
+    load_instrs: u64,
+    load_hist: [u64; LANES + 1],
+    blocking_store_instrs: u64,
+    blocking_hist: [u64; LANES + 1],
+    nonblocking_ops: u64,
+}
+
+impl TraceProfile {
+    fn from_trace(trace: &MemTrace) -> Self {
+        let mut p = TraceProfile { alu_cycles: trace.tail.cycles(), ..Default::default() };
+        for seg in &trace.segments {
+            p.alu_cycles += seg.before.cycles();
+            match seg.mem.kind {
+                MemAccessKind::Load(_) => {
+                    p.load_instrs += 1;
+                    for (_, mask) in &seg.mem.ops {
+                        p.load_hist[mask.count_ones() as usize] += 1;
+                    }
+                }
+                MemAccessKind::Store { blocking: true } => {
+                    p.blocking_store_instrs += 1;
+                    for (_, mask) in &seg.mem.ops {
+                        p.blocking_hist[mask.count_ones() as usize] += 1;
+                    }
+                }
+                MemAccessKind::Store { blocking: false } => {
+                    p.nonblocking_ops += seg.mem.ops.len() as u64;
+                }
+            }
+        }
+        p
+    }
+}
+
+/// Workload-bound evaluator shared across strategies and worker threads.
+pub struct Evaluator {
+    program: String,
+    dataset_kb: u32,
+    trace: Arc<MemTrace>,
+    profile: TraceProfile,
+    captures: u64,
+    /// Per-architecture replay memo. The outer lock only guards the map
+    /// shape; each architecture gets its own slot lock, so concurrent
+    /// scores of the *same* architecture serialize on one replay (the
+    /// counter stays exact) while different architectures replay in
+    /// parallel on the worker pool.
+    replays: Mutex<HashMap<MemoryArchKind, Arc<Mutex<Option<u64>>>>>,
+    replay_count: AtomicU64,
+    scored: AtomicU64,
+}
+
+impl Evaluator {
+    /// Fetch (or capture) the workload's trace through `cache`. The
+    /// capture runs at most once per `(program, seed)` — reusing a warm
+    /// cache records zero captures.
+    pub fn new(program: &str, cache: &TraceCache) -> Result<Self, SimError> {
+        // Arch is irrelevant for capture; BenchJob only needs a valid one.
+        let probe = BenchJob::new(program, MemoryArchKind::banked(16));
+        let warm = cache.get(&probe.trace_key()).is_some();
+        let trace = cache.get_or_capture(&probe)?;
+        let profile = TraceProfile::from_trace(&trace);
+        // Same figure as `Workload::dataset_kb()` — the trace carries the
+        // workload's capacity, so no workload re-materialization is
+        // needed here.
+        let dataset_kb = (trace.mem_words * 4 / 1024) as u32;
+        Ok(Self {
+            program: program.to_string(),
+            dataset_kb,
+            trace,
+            profile,
+            captures: u64::from(!warm),
+            replays: Mutex::new(HashMap::new()),
+            replay_count: AtomicU64::new(0),
+            scored: AtomicU64::new(0),
+        })
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    /// Workload dataset size in KB (the capacity floor).
+    pub fn dataset_kb(&self) -> u32 {
+        self.dataset_kb
+    }
+
+    /// Functional executions this evaluator triggered: 0 (warm cache) or
+    /// 1 — never more, regardless of how many points were scored.
+    pub fn captures(&self) -> u64 {
+        self.captures
+    }
+
+    /// Distinct architecture replays performed so far.
+    pub fn replays(&self) -> u64 {
+        self.replay_count.load(Ordering::Relaxed)
+    }
+
+    /// Points scored so far (exact evaluations, shared replays included).
+    pub fn points_scored(&self) -> u64 {
+        self.scored.load(Ordering::Relaxed)
+    }
+
+    /// Replay the trace on `arch`'s timing model (memoized). Zero
+    /// functional execution: the trace is charged against the cost model
+    /// only, exactly as `BenchJob::replay_trace` does on the sweep path.
+    pub fn replay_arch(&self, arch: MemoryArchKind) -> Result<u64, SimError> {
+        let slot = Arc::clone(self.replays.lock().unwrap().entry(arch).or_default());
+        let mut slot = slot.lock().unwrap();
+        if let Some(cycles) = *slot {
+            return Ok(cycles);
+        }
+        let cfg = MachineConfig::for_arch(arch)
+            .with_mem_words(self.trace.mem_words)
+            .with_fast_timing();
+        let mem = cfg.build_memory();
+        let cycles = replay::replay(&self.trace, mem.as_ref(), cfg.max_cycles)?.total_cycles();
+        self.replay_count.fetch_add(1, Ordering::Relaxed);
+        *slot = Some(cycles);
+        Ok(cycles)
+    }
+
+    /// Exact score of one design point: memoized replay + footprint at
+    /// the point's capacity.
+    pub fn score(&self, point: &DesignPoint) -> Result<PointCost, SimError> {
+        let cycles = self.replay_arch(point.arch)?;
+        self.scored.fetch_add(1, Ordering::Relaxed);
+        Ok(PointCost {
+            cycles,
+            time_us: cycles as f64 / point.arch.fmax_mhz(),
+            footprint: footprint::processor_footprint(point.arch, point.capacity_kb),
+        })
+    }
+
+    /// Footprint ALMs without any replay (the cheap objective — known
+    /// exactly up front). `u32::MAX` for unplaceable points so they are
+    /// trivially dominated and never survive to a frontier.
+    pub fn alms_bound(&self, point: &DesignPoint) -> u32 {
+        footprint::processor_footprint(point.arch, point.capacity_kb)
+            .map(|f| f.total_alms())
+            .unwrap_or(u32::MAX)
+    }
+
+    /// Cheap lower bound on `replay_arch(point.arch)` — see the module
+    /// docs for the argument. Used by pruning strategies to cull points
+    /// whose *best possible* cost is already dominated.
+    pub fn lower_bound_cycles(&self, arch: MemoryArchKind) -> u64 {
+        let (read_div, write_div, read_ovh, write_ovh) = match arch {
+            MemoryArchKind::Banked { banks, .. } => (
+                banks,
+                banks,
+                timing::banked_read_overhead(false),
+                timing::banked_write_overhead(false),
+            ),
+            MemoryArchKind::MultiPort { read_ports, write_ports, vb } => {
+                (read_ports, if vb { 2 } else { write_ports }, 0, 0)
+            }
+        };
+        let p = &self.profile;
+        let mut lb = p.alu_cycles
+            + p.load_instrs * read_ovh as u64
+            + p.blocking_store_instrs * write_ovh as u64
+            + p.nonblocking_ops // at least one issue cycle each
+            + 1; // halt
+        for pop in 0..=LANES {
+            let read_cost = (pop as u64).div_ceil(read_div as u64).max(1);
+            let write_cost = (pop as u64).div_ceil(write_div as u64).max(1);
+            lb += p.load_hist[pop] * read_cost;
+            lb += p.blocking_hist[pop] * write_cost;
+        }
+        lb
+    }
+
+    /// The lower-bound position of a point in objective space (exact on
+    /// the area axis, a lower bound on the time axis).
+    pub fn lower_bound(&self, point: &DesignPoint) -> Cost {
+        Cost { cycles: self.lower_bound_cycles(point.arch), alms: self.alms_bound(point) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::space::DesignSpace;
+
+    #[test]
+    fn capture_runs_once_across_many_scores() {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("transpose32", &cache).unwrap();
+        assert_eq!(eval.captures(), 1);
+        for p in DesignSpace::parametric(eval.dataset_kb()).points() {
+            eval.score(&p).unwrap();
+        }
+        assert_eq!(eval.captures(), 1, "no functional re-execution per point");
+        assert_eq!(cache.len(), 1);
+        // A second evaluator on the warm cache captures nothing.
+        let again = Evaluator::new("transpose32", &cache).unwrap();
+        assert_eq!(again.captures(), 0);
+    }
+
+    #[test]
+    fn replays_memoized_per_arch() {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("transpose32", &cache).unwrap();
+        let a = DesignPoint { arch: MemoryArchKind::banked(16), capacity_kb: 8 };
+        let b = DesignPoint { arch: MemoryArchKind::banked(16), capacity_kb: 16 };
+        let ca = eval.score(&a).unwrap();
+        let cb = eval.score(&b).unwrap();
+        assert_eq!(eval.replays(), 1, "capacity variants share one replay");
+        assert_eq!(ca.cycles, cb.cycles);
+        assert!(ca.alms() <= cb.alms(), "banked footprint constant in capacity");
+    }
+
+    #[test]
+    fn score_matches_bench_job_cycles() {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("transpose32", &cache).unwrap();
+        for arch in MemoryArchKind::table3_nine() {
+            let p = DesignPoint { arch, capacity_kb: eval.dataset_kb() };
+            let scored = eval.score(&p).unwrap();
+            let coupled = BenchJob::new("transpose32", arch).run().unwrap();
+            assert_eq!(scored.cycles, coupled.report.total_cycles(), "{arch}");
+        }
+    }
+
+    #[test]
+    fn lower_bound_below_exact_on_paper_archs() {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("fft4096r8", &cache).unwrap();
+        for arch in MemoryArchKind::table3_nine() {
+            let lb = eval.lower_bound_cycles(arch);
+            let exact = eval.replay_arch(arch).unwrap();
+            assert!(lb <= exact, "{arch}: lb {lb} > exact {exact}");
+            assert!(lb > 0);
+        }
+    }
+
+    #[test]
+    fn unplaceable_point_has_max_alms_bound() {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("transpose32", &cache).unwrap();
+        let over = DesignPoint { arch: MemoryArchKind::mp_4r1w(), capacity_kb: 500 };
+        assert_eq!(eval.alms_bound(&over), u32::MAX);
+        let c = eval.score(&over).unwrap();
+        assert!(c.footprint.is_none());
+        assert!(c.objective().is_none());
+    }
+
+    #[test]
+    fn unknown_program_errors() {
+        assert!(Evaluator::new("nope", &TraceCache::new()).is_err());
+    }
+}

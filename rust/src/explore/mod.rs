@@ -1,0 +1,136 @@
+//! Trace-driven design-space exploration (DESIGN.md §Explore).
+//!
+//! The paper's conclusion (§VII) is that the right memory architecture
+//! depends on dataset size and access pattern, and that the FPGA's one
+//! structural advantage is being able to *change* the memory to suit the
+//! design. This subsystem operationalizes that: given a workload, it
+//! functionally executes it **once** (through the shared
+//! [`crate::coordinator::job::TraceCache`]), then searches a parametric
+//! space of memory architectures — bank count 2–32 × bank mapping
+//! (LSB / shifted-Offset family / XOR) × multiport port configurations ×
+//! capacity — by charging the captured trace against each candidate's
+//! timing model and folding in the [`crate::area::footprint`] ALM model.
+//! The output is the Pareto frontier of cycles × footprint plus ranked
+//! scorecards ([`result::ExploreResult`]).
+//!
+//! Components:
+//!
+//! - [`space::DesignSpace`] — ordered parametric space builder with
+//!   named constraint predicates (capacity rooflines, dataset floor);
+//! - [`eval::Evaluator`] — cached-trace point scoring (memoized per-arch
+//!   replay; a capture counter proves single functional execution) and
+//!   the O(1)-per-arch lower-bound cost model;
+//! - [`strategy`] — the [`strategy::SearchStrategy`] contract with
+//!   [`strategy::Exhaustive`] grid search and dominance-based
+//!   [`strategy::SuccessiveHalving`] pruning (provably frontier-exact);
+//! - [`pareto::ParetoFront`] — incremental two-objective frontier;
+//! - [`result::ExploreResult`] — scorecards, frontier, text + JSON.
+//!
+//! The advisor ([`crate::coordinator::advisor`]) is a thin consumer: the
+//! paper's nine architectures plus the XOR extensions are just one small
+//! `DesignSpace`.
+
+pub mod eval;
+pub mod pareto;
+pub mod result;
+pub mod space;
+pub mod strategy;
+
+pub use eval::{Evaluator, PointCost};
+pub use pareto::{Cost, ParetoFront};
+pub use result::{ExploreResult, ScoredPoint};
+pub use space::{DesignPoint, DesignSpace};
+pub use strategy::{Exhaustive, SearchStrategy, SuccessiveHalving};
+
+use crate::coordinator::job::TraceCache;
+use crate::coordinator::runner::SweepRunner;
+use crate::sim::exec::SimError;
+
+/// Explore `space` for the named workload: one functional execution (at
+/// most — zero on a warm `cache`), one trace replay per distinct
+/// architecture the strategy pays for, one footprint lookup per point.
+pub fn explore(
+    program: &str,
+    space: &DesignSpace,
+    strategy: &dyn SearchStrategy,
+    runner: &SweepRunner,
+    cache: &TraceCache,
+) -> Result<ExploreResult, SimError> {
+    let points = space.points();
+    if points.is_empty() {
+        return Err(SimError::BadProgram(format!(
+            "design space for '{program}' is empty (constraints: {:?})",
+            space.constraint_names()
+        )));
+    }
+    let eval = Evaluator::new(program, cache)?;
+    let outcome = strategy.search(&points, &eval, runner)?;
+    // The subsystem's defining invariant: scoring N points never costs
+    // more than one functional execution.
+    assert!(
+        eval.captures() <= 1,
+        "explore must functionally execute at most once (got {})",
+        eval.captures()
+    );
+    let scored: Vec<ScoredPoint> = outcome
+        .scored
+        .iter()
+        .map(|(p, c)| ScoredPoint::new(*p, c))
+        .collect();
+    let front = ExploreResult::frontier_of(&scored);
+    Ok(ExploreResult {
+        program: program.to_string(),
+        dataset_kb: eval.dataset_kb(),
+        strategy: strategy.name().to_string(),
+        points_total: points.len(),
+        points_scored: scored.len(),
+        points_culled: outcome.culled,
+        replays: eval.replays(),
+        captures: eval.captures(),
+        scored,
+        front,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explore_end_to_end_small() {
+        let space = DesignSpace::from_archs(
+            [
+                crate::mem::arch::MemoryArchKind::mp_4r1w(),
+                crate::mem::arch::MemoryArchKind::banked(16),
+                crate::mem::arch::MemoryArchKind::banked(4),
+            ],
+            8,
+        );
+        let cache = TraceCache::new();
+        let r = explore("transpose32", &space, &Exhaustive, &SweepRunner::new(2), &cache).unwrap();
+        assert_eq!(r.points_total, 3);
+        assert_eq!(r.points_scored, 3);
+        assert_eq!(r.captures, 1);
+        assert_eq!(r.replays, 3);
+        assert!(!r.front.is_empty());
+    }
+
+    #[test]
+    fn empty_space_is_error() {
+        let space = DesignSpace::new().constraint("nothing", |_| false).capacities_kb([8]);
+        let cache = TraceCache::new();
+        assert!(explore("transpose32", &space, &Exhaustive, &SweepRunner::new(1), &cache).is_err());
+    }
+
+    #[test]
+    fn warm_cache_reports_zero_captures() {
+        let cache = TraceCache::new();
+        let space = DesignSpace::from_archs([crate::mem::arch::MemoryArchKind::banked(8)], 8);
+        let runner = SweepRunner::new(1);
+        let a = explore("transpose32", &space, &Exhaustive, &runner, &cache).unwrap();
+        assert_eq!(a.captures, 1);
+        let b = explore("transpose32", &space, &Exhaustive, &runner, &cache).unwrap();
+        assert_eq!(b.captures, 0, "trace reused across explorations");
+        assert_eq!(a.front[0].cycles, b.front[0].cycles);
+    }
+}

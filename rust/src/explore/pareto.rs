@@ -1,0 +1,160 @@
+//! Pareto-frontier container for the two-objective (cycles × ALMs)
+//! design space.
+//!
+//! The dominance rule (DESIGN.md §Explore): point A **dominates** point B
+//! when A is no worse on both objectives and strictly better on at least
+//! one. The frontier keeps every non-dominated point; exact ties (equal
+//! on both objectives) are all retained, which keeps the frontier a
+//! well-defined *set* that search strategies can be compared against
+//! (`pruning_front_equals_exhaustive_front` in `rust/tests/explore.rs`).
+
+/// A point's position in objective space: total cycles (time) × total
+/// processor ALMs (area). Both minimized. Integer-valued on purpose —
+/// frontier membership must be exactly reproducible across strategies
+/// and platforms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Cost {
+    pub cycles: u64,
+    pub alms: u32,
+}
+
+impl Cost {
+    /// Strict Pareto dominance: `self` no worse on both objectives,
+    /// strictly better on at least one.
+    pub fn dominates(self, other: Cost) -> bool {
+        self.cycles <= other.cycles
+            && self.alms <= other.alms
+            && (self.cycles < other.cycles || self.alms < other.alms)
+    }
+}
+
+/// A Pareto frontier with incremental insert.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront<T> {
+    entries: Vec<(Cost, T)>,
+}
+
+impl<T> ParetoFront<T> {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// Offer a point. Rejected (returns `false`) when an existing entry
+    /// dominates it; otherwise it is admitted and every entry it
+    /// dominates is evicted.
+    pub fn insert(&mut self, cost: Cost, item: T) -> bool {
+        if self.dominated(cost) {
+            return false;
+        }
+        self.entries.retain(|(c, _)| !cost.dominates(*c));
+        self.entries.push((cost, item));
+        true
+    }
+
+    /// Whether some entry strictly dominates `cost`. The pruning search
+    /// uses this against a point's *lower-bound* cost: a lower bound that
+    /// is already dominated proves the exact point is dominated too.
+    pub fn dominated(&self, cost: Cost) -> bool {
+        self.entries.iter().any(|(c, _)| c.dominates(cost))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Frontier entries sorted by (cycles, alms) ascending.
+    pub fn into_sorted(mut self) -> Vec<(Cost, T)> {
+        self.entries.sort_by_key(|(c, _)| (c.cycles, c.alms));
+        self.entries
+    }
+
+    /// Iterate entries in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = &(Cost, T)> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(cycles: u64, alms: u32) -> Cost {
+        Cost { cycles, alms }
+    }
+
+    #[test]
+    fn dominance_rule() {
+        assert!(c(10, 10).dominates(c(11, 10)));
+        assert!(c(10, 10).dominates(c(10, 11)));
+        assert!(c(10, 10).dominates(c(11, 11)));
+        assert!(!c(10, 10).dominates(c(10, 10)), "ties do not dominate");
+        assert!(!c(10, 12).dominates(c(11, 11)), "trade-offs do not dominate");
+        assert!(!c(11, 11).dominates(c(10, 12)));
+    }
+
+    #[test]
+    fn insert_evicts_dominated() {
+        let mut f = ParetoFront::new();
+        assert!(f.insert(c(100, 50), "slow-small"));
+        assert!(f.insert(c(50, 100), "fast-big"));
+        assert_eq!(f.len(), 2, "trade-off pair coexists");
+        // A point dominating both replaces both.
+        assert!(f.insert(c(40, 40), "winner"));
+        assert_eq!(f.len(), 1);
+        // A dominated offer is rejected.
+        assert!(!f.insert(c(41, 41), "loser"));
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn exact_ties_are_kept() {
+        let mut f = ParetoFront::new();
+        assert!(f.insert(c(10, 10), "a"));
+        assert!(f.insert(c(10, 10), "b"));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn sorted_by_cycles_then_alms() {
+        let mut f = ParetoFront::new();
+        f.insert(c(30, 10), 0);
+        f.insert(c(10, 30), 1);
+        f.insert(c(20, 20), 2);
+        let sorted = f.into_sorted();
+        let order: Vec<u64> = sorted.iter().map(|(c, _)| c.cycles).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn incremental_equals_batch() {
+        // Insertion order must not change the final frontier.
+        let pts = [
+            c(5, 90),
+            c(10, 50),
+            c(10, 50),
+            c(20, 40),
+            c(30, 45),
+            c(50, 10),
+            c(60, 9),
+        ];
+        let mut orders = vec![pts.to_vec()];
+        let mut rev = pts.to_vec();
+        rev.reverse();
+        orders.push(rev);
+        let fronts: Vec<Vec<Cost>> = orders
+            .into_iter()
+            .map(|order| {
+                let mut f = ParetoFront::new();
+                for p in order {
+                    f.insert(p, ());
+                }
+                f.into_sorted().into_iter().map(|(c, _)| c).collect()
+            })
+            .collect();
+        assert_eq!(fronts[0], fronts[1]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Exploration results: ranked scorecards, the Pareto frontier, text
+//! rendering and a dependency-free JSON serialization.
+
+use super::eval::PointCost;
+use super::pareto::{Cost, ParetoFront};
+use super::space::DesignPoint;
+use crate::util::fmt::{with_commas, TextTable};
+
+/// One exactly-evaluated design point.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoredPoint {
+    pub point: DesignPoint,
+    pub cycles: u64,
+    pub time_us: f64,
+    pub footprint_alms: Option<u32>,
+    pub sectors: Option<f64>,
+    pub perf_per_area: Option<f64>,
+}
+
+impl ScoredPoint {
+    pub fn new(point: DesignPoint, cost: &PointCost) -> Self {
+        Self {
+            point,
+            cycles: cost.cycles,
+            time_us: cost.time_us,
+            footprint_alms: cost.alms(),
+            sectors: cost.sectors(),
+            perf_per_area: cost.perf_per_area(),
+        }
+    }
+}
+
+/// The explorer's output for one workload.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    pub program: String,
+    pub dataset_kb: u32,
+    pub strategy: String,
+    /// Points in the constrained space.
+    pub points_total: usize,
+    /// Points exactly evaluated (scorecard size).
+    pub points_scored: usize,
+    /// Points proved dominated from their lower bound, never scored.
+    pub points_culled: usize,
+    /// Distinct architecture replays performed.
+    pub replays: u64,
+    /// Functional executions triggered (0 on a warm trace cache, else 1).
+    pub captures: u64,
+    /// Exact scores in strategy evaluation order.
+    pub scored: Vec<ScoredPoint>,
+    /// The cycles × ALMs Pareto frontier, sorted by cycles ascending.
+    pub front: Vec<ScoredPoint>,
+}
+
+impl ExploreResult {
+    /// Build the frontier from a scorecard (unplaceable points — no
+    /// footprint — never enter it).
+    pub fn frontier_of(scored: &[ScoredPoint]) -> Vec<ScoredPoint> {
+        let mut front: ParetoFront<ScoredPoint> = ParetoFront::new();
+        for s in scored {
+            if let Some(alms) = s.footprint_alms {
+                front.insert(Cost { cycles: s.cycles, alms }, *s);
+            }
+        }
+        front.into_sorted().into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Scorecard ranked by wall time, fastest first (cycles are scaled
+    /// by each architecture's Fmax, so cycle order and time order can
+    /// differ — e.g. 4R-2W's 600 MHz clock); ties break by area.
+    pub fn ranked(&self) -> Vec<ScoredPoint> {
+        let mut v = self.scored.clone();
+        v.sort_by(|a, b| {
+            let area_a = a.footprint_alms.unwrap_or(u32::MAX);
+            let area_b = b.footprint_alms.unwrap_or(u32::MAX);
+            a.time_us.partial_cmp(&b.time_us).unwrap().then(area_a.cmp(&area_b))
+        });
+        v
+    }
+
+    fn row_of(s: &ScoredPoint) -> [String; 6] {
+        [
+            s.point.arch.label(),
+            s.point.capacity_kb.to_string(),
+            with_commas(s.cycles),
+            format!("{:.2}", s.time_us),
+            s.footprint_alms.map(|a| a.to_string()).unwrap_or_else(|| "over cap".into()),
+            s.perf_per_area.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+        ]
+    }
+
+    /// Full text report: summary, frontier, top of the ranked scorecard.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "explore: {} ({} KB dataset, strategy {})\n\
+             space: {} points, {} scored, {} culled — {} arch replays, \
+             {} functional execution(s)\n\nPareto frontier (cycles × ALMs):\n",
+            self.program,
+            self.dataset_kb,
+            self.strategy,
+            self.points_total,
+            self.points_scored,
+            self.points_culled,
+            self.replays,
+            self.captures,
+        );
+        let mut t =
+            TextTable::new(["memory", "cap KB", "cycles", "time (us)", "ALMs", "perf/area"]);
+        for s in &self.front {
+            t.row(Self::row_of(s));
+        }
+        out.push_str(&t.render());
+        let ranked = self.ranked();
+        let top = ranked.len().min(10);
+        out.push_str(&format!("\ntop {top} of {} scored points by time:\n", ranked.len()));
+        let mut t =
+            TextTable::new(["memory", "cap KB", "cycles", "time (us)", "ALMs", "perf/area"]);
+        for s in &ranked[..top] {
+            t.row(Self::row_of(s));
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    /// Serialize to JSON (hand-rolled; the crate is dependency-free).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"program\": {},\n", json_str(&self.program)));
+        out.push_str(&format!("  \"dataset_kb\": {},\n", self.dataset_kb));
+        out.push_str(&format!("  \"strategy\": {},\n", json_str(&self.strategy)));
+        out.push_str(&format!("  \"points_total\": {},\n", self.points_total));
+        out.push_str(&format!("  \"points_scored\": {},\n", self.points_scored));
+        out.push_str(&format!("  \"points_culled\": {},\n", self.points_culled));
+        out.push_str(&format!("  \"replays\": {},\n", self.replays));
+        out.push_str(&format!("  \"captures\": {},\n", self.captures));
+        out.push_str("  \"front\": ");
+        out.push_str(&json_points(&self.front, "  "));
+        out.push_str(",\n  \"scorecard\": ");
+        out.push_str(&json_points(&self.scored, "  "));
+        out.push_str("\n}\n");
+        out
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_points(points: &[ScoredPoint], indent: &str) -> String {
+    if points.is_empty() {
+        return "[]".to_string();
+    }
+    let rows: Vec<String> = points
+        .iter()
+        .map(|s| {
+            format!(
+                "{indent}  {{\"memory\": {}, \"capacity_kb\": {}, \"cycles\": {}, \
+                 \"time_us\": {:.4}, \"alms\": {}, \"sectors\": {}, \"perf_per_area\": {}}}",
+                json_str(&s.point.arch.label()),
+                s.point.capacity_kb,
+                s.cycles,
+                s.time_us,
+                s.footprint_alms.map(|a| a.to_string()).unwrap_or_else(|| "null".into()),
+                s.sectors.map(|v| format!("{v:.4}")).unwrap_or_else(|| "null".into()),
+                s.perf_per_area.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into()),
+            )
+        })
+        .collect();
+    format!("[\n{}\n{indent}]", rows.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+
+    fn sp(arch: MemoryArchKind, cap: u32, cycles: u64, alms: Option<u32>) -> ScoredPoint {
+        ScoredPoint {
+            point: DesignPoint { arch, capacity_kb: cap },
+            cycles,
+            time_us: cycles as f64 / arch.fmax_mhz(),
+            footprint_alms: alms,
+            sectors: alms.map(|a| a as f64 / 16_640.0),
+            perf_per_area: alms.map(|a| 1.0 / (cycles as f64 * a as f64)),
+        }
+    }
+
+    fn sample() -> ExploreResult {
+        let scored = vec![
+            sp(MemoryArchKind::banked(16), 64, 1000, Some(20_000)),
+            sp(MemoryArchKind::banked(4), 64, 3000, Some(12_000)),
+            sp(MemoryArchKind::banked(8), 64, 2000, Some(30_000)), // dominated
+            sp(MemoryArchKind::mp_4r1w(), 500, 900, None),         // unplaceable
+        ];
+        let front = ExploreResult::frontier_of(&scored);
+        ExploreResult {
+            program: "transpose32".into(),
+            dataset_kb: 8,
+            strategy: "exhaustive".into(),
+            points_total: 4,
+            points_scored: 4,
+            points_culled: 0,
+            replays: 4,
+            captures: 1,
+            scored,
+            front,
+        }
+    }
+
+    #[test]
+    fn frontier_excludes_dominated_and_unplaceable() {
+        let r = sample();
+        assert_eq!(r.front.len(), 2);
+        let labels: Vec<String> = r.front.iter().map(|s| s.point.arch.label()).collect();
+        assert_eq!(labels, vec!["16 Banks", "4 Banks"]);
+        // Sorted by cycles ascending.
+        assert!(r.front[0].cycles <= r.front[1].cycles);
+    }
+
+    #[test]
+    fn render_mentions_summary_and_frontier() {
+        let out = sample().render();
+        assert!(out.contains("Pareto frontier"));
+        assert!(out.contains("1 functional execution"));
+        assert!(out.contains("16 Banks"));
+        assert!(out.contains("over cap"));
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let j = sample().to_json();
+        assert!(j.starts_with("{\n"));
+        assert!(j.trim_end().ends_with('}'));
+        assert!(j.contains("\"points_total\": 4"));
+        assert!(j.contains("\"alms\": null"), "unplaceable point serializes null");
+        assert_eq!(j.matches("\"memory\":").count(), 2 + 4);
+        // Balanced braces/brackets (cheap structural check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_string_escaping() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+    }
+
+    #[test]
+    fn ranked_orders_by_time() {
+        let r = sample();
+        let ranked = r.ranked();
+        for w in ranked.windows(2) {
+            assert!(w[0].time_us <= w[1].time_us);
+        }
+    }
+}

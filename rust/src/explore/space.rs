@@ -1,0 +1,272 @@
+//! Parametric design-space definition.
+//!
+//! A [`DesignSpace`] is an ordered set of memory-architecture descriptors
+//! crossed with candidate capacities, filtered by named constraint
+//! predicates. The paper evaluates 9 fixed architectures; this builder
+//! spans the space its §VII names as the FPGA's real advantage — bank
+//! count 2–32 × bank mapping (LSB / shifted Offset family / XOR) ×
+//! multiport read/write-port configurations × memory capacity.
+
+use crate::area::footprint;
+use crate::mem::arch::MemoryArchKind;
+use crate::mem::mapping::BankMapping;
+
+/// One candidate configuration: an architecture at a concrete shared
+/// memory capacity. Timing depends only on the architecture (replayed
+/// from the workload trace); capacity feeds the footprint model and the
+/// capacity constraints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DesignPoint {
+    pub arch: MemoryArchKind,
+    pub capacity_kb: u32,
+}
+
+impl DesignPoint {
+    /// Human label, e.g. `16 Banks Offset @ 64 KB`.
+    pub fn label(&self) -> String {
+        format!("{} @ {} KB", self.arch.label(), self.capacity_kb)
+    }
+}
+
+/// A named constraint predicate over design points.
+pub struct Constraint {
+    pub name: &'static str,
+    pred: Box<dyn Fn(&DesignPoint) -> bool + Send + Sync>,
+}
+
+impl std::fmt::Debug for Constraint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Constraint({})", self.name)
+    }
+}
+
+/// Builder for a parametric design space.
+#[derive(Debug, Default)]
+pub struct DesignSpace {
+    archs: Vec<MemoryArchKind>,
+    capacities_kb: Vec<u32>,
+    constraints: Vec<Constraint>,
+}
+
+impl DesignSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one architecture (deduplicated, insertion-ordered). Panics on
+    /// a descriptor [`MemoryArchKind::is_valid`] rejects — the explorer
+    /// never builds memories outside the constructible space.
+    pub fn arch(mut self, kind: MemoryArchKind) -> Self {
+        assert!(kind.is_valid(), "invalid architecture descriptor {kind:?}");
+        if !self.archs.contains(&kind) {
+            self.archs.push(kind);
+        }
+        self
+    }
+
+    /// Add the full banked grid: every bank count × every mapping.
+    pub fn banked_grid(
+        mut self,
+        banks: impl IntoIterator<Item = u32>,
+        mappings: impl IntoIterator<Item = BankMapping> + Clone,
+    ) -> Self {
+        for b in banks {
+            for m in mappings.clone() {
+                self = self.arch(MemoryArchKind::Banked { banks: b, mapping: m });
+            }
+        }
+        self
+    }
+
+    /// Add one multiport configuration.
+    pub fn multiport(self, read_ports: u32, write_ports: u32, vb: bool) -> Self {
+        self.arch(MemoryArchKind::MultiPort { read_ports, write_ports, vb })
+    }
+
+    /// Candidate shared-memory capacities in KB (deduplicated, sorted).
+    pub fn capacities_kb(mut self, kbs: impl IntoIterator<Item = u32>) -> Self {
+        for kb in kbs {
+            if !self.capacities_kb.contains(&kb) {
+                self.capacities_kb.push(kb);
+            }
+        }
+        self.capacities_kb.sort_unstable();
+        self
+    }
+
+    /// Attach a named constraint predicate.
+    pub fn constraint(
+        mut self,
+        name: &'static str,
+        pred: impl Fn(&DesignPoint) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        self.constraints.push(Constraint { name, pred: Box::new(pred) });
+        self
+    }
+
+    /// Constraint: capacity must not exceed the architecture's roofline
+    /// (§VI — 112 KB for 4R-1W, 224 KB for 4R-2W, 28 KB × banks banked).
+    pub fn with_capacity_roofline(self) -> Self {
+        self.constraint("capacity <= roofline", |p| {
+            p.capacity_kb <= footprint::max_capacity_kb(p.arch)
+        })
+    }
+
+    /// Constraint: capacity must hold the workload's dataset.
+    pub fn fits_dataset(self, dataset_kb: u32) -> Self {
+        self.constraint("capacity >= dataset", move |p| p.capacity_kb >= dataset_kb)
+    }
+
+    /// Number of distinct architectures before capacity crossing.
+    pub fn arch_count(&self) -> usize {
+        self.archs.len()
+    }
+
+    /// Constraint names, for reports.
+    pub fn constraint_names(&self) -> Vec<&'static str> {
+        self.constraints.iter().map(|c| c.name).collect()
+    }
+
+    /// Enumerate the constrained points, insertion-ordered by
+    /// architecture then capacity. A space with no configured capacities
+    /// yields no points (and `explore()` reports the empty space as an
+    /// error) rather than fabricating a 0 KB memory.
+    pub fn points(&self) -> Vec<DesignPoint> {
+        let mut out = Vec::new();
+        for &arch in &self.archs {
+            for &capacity_kb in &self.capacities_kb {
+                let p = DesignPoint { arch, capacity_kb };
+                if self.constraints.iter().all(|c| (c.pred)(&p)) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+
+    /// The default CLI space: bank counts 2–32 × {LSB, Offset shifts
+    /// 1–3, XOR} × the multiport family × three capacities from the
+    /// dataset size up, under the roofline and fits-dataset constraints.
+    /// On the small benchmarks this is a 90-point space served by 30
+    /// trace replays and **one** functional execution.
+    pub fn parametric(dataset_kb: u32) -> Self {
+        let d = dataset_kb.max(1);
+        Self::new()
+            .banked_grid(
+                [2u32, 4, 8, 16, 32],
+                [
+                    BankMapping::Lsb,
+                    BankMapping::Offset { shift: 1 },
+                    BankMapping::offset(),
+                    BankMapping::Offset { shift: 3 },
+                    BankMapping::Xor,
+                ],
+            )
+            .multiport(4, 1, false)
+            .multiport(4, 2, false)
+            .multiport(4, 1, true)
+            .multiport(2, 1, false)
+            .multiport(8, 1, false)
+            .capacities_kb([d, 2 * d, 4 * d])
+            .with_capacity_roofline()
+            .fits_dataset(d)
+    }
+
+    /// The advisor's candidate set: a fixed arch list at exactly the
+    /// dataset capacity, order-preserving and **without** the roofline
+    /// constraint — over-roofline candidates stay in the scorecard (with
+    /// no footprint) exactly as the paper's comparison tables keep them.
+    pub fn from_archs(archs: impl IntoIterator<Item = MemoryArchKind>, capacity_kb: u32) -> Self {
+        let mut s = Self::new().capacities_kb([capacity_kb]);
+        for a in archs {
+            s = s.arch(a);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parametric_space_shape() {
+        let s = DesignSpace::parametric(8);
+        assert_eq!(s.arch_count(), 30, "25 banked + 5 multiport");
+        let pts = s.points();
+        assert_eq!(pts.len(), 90, "3 capacities all under every roofline at 8 KB");
+        assert!(pts.len() > 50, "acceptance: >50-point space");
+        // Points are unique.
+        let set: std::collections::HashSet<_> = pts.iter().collect();
+        assert_eq!(set.len(), pts.len());
+    }
+
+    #[test]
+    fn roofline_constraint_prunes() {
+        // At a 128 KB dataset the 2- and 4-bank memories (56/112 KB
+        // rooflines) and the 4R-1W multiport (112 KB) drop out entirely.
+        let pts = DesignSpace::parametric(128).points();
+        assert!(pts
+            .iter()
+            .all(|p| p.capacity_kb <= footprint::max_capacity_kb(p.arch)));
+        assert!(!pts.iter().any(|p| p.arch == MemoryArchKind::banked(2)));
+        assert!(!pts.iter().any(|p| p.arch == MemoryArchKind::mp_4r1w()));
+        assert!(pts.iter().any(|p| p.arch == MemoryArchKind::banked(32)));
+    }
+
+    #[test]
+    fn from_archs_preserves_order_and_skips_roofline() {
+        let archs = vec![
+            MemoryArchKind::mp_4r1w(),
+            MemoryArchKind::banked(16),
+            MemoryArchKind::banked_offset(4),
+        ];
+        let s = DesignSpace::from_archs(archs.clone(), 400);
+        let pts = s.points();
+        // 400 KB exceeds every roofline except 16 banks — all kept anyway.
+        assert_eq!(pts.len(), 3);
+        for (p, a) in pts.iter().zip(&archs) {
+            assert_eq!(p.arch, *a);
+            assert_eq!(p.capacity_kb, 400);
+        }
+    }
+
+    #[test]
+    fn custom_constraints_and_dedup() {
+        let s = DesignSpace::new()
+            .arch(MemoryArchKind::banked(8))
+            .arch(MemoryArchKind::banked(8))
+            .capacities_kb([16, 32, 16])
+            .constraint("even capacity only", |p| p.capacity_kb % 32 == 0);
+        assert_eq!(s.arch_count(), 1);
+        assert_eq!(s.points().len(), 1);
+        assert_eq!(s.constraint_names(), vec!["even capacity only"]);
+    }
+
+    #[test]
+    fn no_capacities_means_no_points() {
+        let s = DesignSpace::new().arch(MemoryArchKind::banked(16));
+        assert!(s.points().is_empty(), "no fabricated 0 KB points");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid architecture")]
+    fn invalid_arch_rejected() {
+        let _ = DesignSpace::new().arch(MemoryArchKind::Banked {
+            banks: 64,
+            mapping: BankMapping::Lsb,
+        });
+    }
+
+    #[test]
+    fn point_labels_parse_back() {
+        for p in DesignSpace::parametric(8).points() {
+            assert_eq!(
+                MemoryArchKind::parse(&p.arch.label()),
+                Some(p.arch),
+                "explorer-generated label '{}' must parse back",
+                p.arch.label()
+            );
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Pluggable search strategies over a design space.
+//!
+//! The contract (DESIGN.md §Explore): a strategy receives the enumerated
+//! points and the shared [`Evaluator`] and returns exact scores for a
+//! subset of points that is guaranteed to contain the full Pareto
+//! frontier of the *whole* space. Exhaustive search scores everything;
+//! the successive-halving strategy culls points whose cheap
+//! **lower-bound** cost is already strictly dominated by an exactly
+//! evaluated point — sound because a dominated lower bound proves the
+//! exact cost (which can only be worse on the time axis, and is known
+//! exactly on the area axis) is dominated too. The two strategies
+//! therefore produce identical frontiers, property-tested in
+//! `rust/tests/explore.rs`.
+
+use super::eval::{Evaluator, PointCost};
+use super::pareto::ParetoFront;
+use super::space::DesignPoint;
+use crate::coordinator::runner::SweepRunner;
+use crate::mem::arch::MemoryArchKind;
+use crate::sim::exec::SimError;
+
+/// What a strategy hands back: exact scores (in evaluation order) plus
+/// how many points it proved dominated without scoring them.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub scored: Vec<(DesignPoint, PointCost)>,
+    pub culled: usize,
+}
+
+/// A search strategy over an enumerated design space.
+pub trait SearchStrategy: Sync {
+    fn name(&self) -> &'static str;
+
+    fn search(
+        &self,
+        points: &[DesignPoint],
+        eval: &Evaluator,
+        runner: &SweepRunner,
+    ) -> Result<SearchOutcome, SimError>;
+}
+
+/// Replay every distinct architecture on the worker pool, then score the
+/// architectures of `points` that have not been replayed yet.
+fn replay_batch(
+    points: &[DesignPoint],
+    eval: &Evaluator,
+    runner: &SweepRunner,
+) -> Result<(), SimError> {
+    let mut archs: Vec<MemoryArchKind> = Vec::new();
+    for p in points {
+        if !archs.contains(&p.arch) {
+            archs.push(p.arch);
+        }
+    }
+    runner
+        .map(&archs, |arch| eval.replay_arch(*arch).map(|_| ()))
+        .into_iter()
+        .collect()
+}
+
+/// Exhaustive grid search: every point scored.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Exhaustive;
+
+impl SearchStrategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn search(
+        &self,
+        points: &[DesignPoint],
+        eval: &Evaluator,
+        runner: &SweepRunner,
+    ) -> Result<SearchOutcome, SimError> {
+        replay_batch(points, eval, runner)?;
+        let scored = points
+            .iter()
+            .map(|p| eval.score(p).map(|c| (*p, c)))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SearchOutcome { scored, culled: 0 })
+    }
+}
+
+/// Dominance-based successive halving.
+///
+/// Points are ranked by their cheap lower-bound cost (best first), then
+/// evaluated in waves of half the surviving population. After each wave
+/// the frontier of exactly-scored points culls every pending point whose
+/// lower bound it strictly dominates — the promising half is always
+/// paid for exactly, the doomed tail is proved doomed for free.
+#[derive(Debug, Clone, Copy)]
+pub struct SuccessiveHalving {
+    /// Smallest wave size (avoids long tails of tiny waves).
+    pub min_wave: usize,
+}
+
+impl Default for SuccessiveHalving {
+    fn default() -> Self {
+        Self { min_wave: 8 }
+    }
+}
+
+impl SearchStrategy for SuccessiveHalving {
+    fn name(&self) -> &'static str {
+        "successive-halving"
+    }
+
+    fn search(
+        &self,
+        points: &[DesignPoint],
+        eval: &Evaluator,
+        runner: &SweepRunner,
+    ) -> Result<SearchOutcome, SimError> {
+        let bounds: Vec<_> = points.iter().map(|p| eval.lower_bound(p)).collect();
+        let mut pending: Vec<usize> = (0..points.len()).collect();
+        // Best lower bound first, index as the deterministic tie-break.
+        pending.sort_by_key(|&i| (bounds[i].cycles, bounds[i].alms, i));
+
+        let mut front: ParetoFront<()> = ParetoFront::new();
+        let mut scored = Vec::with_capacity(points.len());
+        let mut culled = 0usize;
+        while !pending.is_empty() {
+            let take = pending.len().div_ceil(2).max(self.min_wave).min(pending.len());
+            let wave: Vec<DesignPoint> =
+                pending.drain(..take).map(|i| points[i]).collect();
+            replay_batch(&wave, eval, runner)?;
+            for p in wave {
+                let cost = eval.score(&p)?;
+                if let Some(obj) = cost.objective() {
+                    front.insert(obj, ());
+                }
+                scored.push((p, cost));
+            }
+            pending.retain(|&i| {
+                let doomed = front.dominated(bounds[i]);
+                culled += doomed as usize;
+                !doomed
+            });
+        }
+        Ok(SearchOutcome { scored, culled })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::TraceCache;
+    use crate::explore::space::DesignSpace;
+
+    fn run(strategy: &dyn SearchStrategy, space: &DesignSpace) -> SearchOutcome {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("transpose32", &cache).unwrap();
+        let runner = SweepRunner::new(2);
+        strategy.search(&space.points(), &eval, &runner).unwrap()
+    }
+
+    #[test]
+    fn exhaustive_scores_everything() {
+        let space = DesignSpace::parametric(8);
+        let out = run(&Exhaustive, &space);
+        assert_eq!(out.scored.len(), space.points().len());
+        assert_eq!(out.culled, 0);
+    }
+
+    #[test]
+    fn halving_covers_or_culls_everything() {
+        let space = DesignSpace::parametric(8);
+        let out = run(&SuccessiveHalving { min_wave: 4 }, &space);
+        assert_eq!(out.scored.len() + out.culled, space.points().len());
+    }
+
+    #[test]
+    fn strategy_error_propagates() {
+        let cache = TraceCache::new();
+        assert!(Evaluator::new("bogus", &cache).is_err());
+    }
+}

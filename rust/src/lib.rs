@@ -21,7 +21,7 @@
 //! use soft_simt::prelude::*;
 //!
 //! // Build a 16-bank, offset-mapped machine and run a 32x32 transpose.
-//! let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::Offset };
+//! let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::offset() };
 //! let program = transpose_program(32);
 //! let mut machine = Machine::new(MachineConfig::for_arch(arch));
 //! let report = machine.run_program(&program).unwrap();
@@ -46,11 +46,16 @@
 //! ([`sim::replay`]) that charges any memory architecture's cost model
 //! from that trace. [`sim::machine::Machine`] runs both in lockstep; the
 //! sweep path ([`coordinator`]) caches traces so a 9-architecture sweep
-//! executes each program once and replays timing 9×.
+//! executes each program once and replays timing 9×. The design-space
+//! explorer ([`explore`]) pushes that to its conclusion: a parametric
+//! space of hypothetical memories (banks 2–32 × mapping × ports ×
+//! capacity), Pareto-searched from a single functional execution per
+//! workload (DESIGN.md §Explore).
 
 pub mod area;
 pub mod benchkit;
 pub mod coordinator;
+pub mod explore;
 pub mod isa;
 pub mod mem;
 pub mod programs;
@@ -65,6 +70,10 @@ pub mod prelude {
         job::{BenchJob, BenchResult, TraceCache},
         report,
         runner::SweepRunner,
+    };
+    pub use crate::explore::{
+        explore, DesignPoint, DesignSpace, Exhaustive, ExploreResult, ParetoFront, SearchStrategy,
+        SuccessiveHalving,
     };
     pub use crate::isa::{
         asm::{assemble, disassemble},

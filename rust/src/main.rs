@@ -15,7 +15,8 @@
 //!
 //! (clap is unavailable offline; parsing is hand-rolled.)
 
-use soft_simt::coordinator::{job::BenchJob, report, runner::SweepRunner, validate};
+use soft_simt::coordinator::{job::BenchJob, job::TraceCache, report, runner::SweepRunner, validate};
+use soft_simt::explore::{self, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
 use soft_simt::isa::asm;
 use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::programs::library;
@@ -34,6 +35,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
         Some("advise") => cmd_advise(&args[1..]),
+        Some("explore") => cmd_explore(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
         Some("asm") => cmd_asm(&args[1..]),
         Some("disasm") => cmd_disasm(&args[1..]),
@@ -58,9 +60,13 @@ USAGE:
   soft-simt table2                      run the transpose sweep, print Table II
   soft-simt table3                      run the FFT sweep, print Table III
   soft-simt fig9                        print Fig. 9 (cost vs performance)
-  soft-simt sweep [--csv PATH]          run all 51 cells; optionally write CSV
+  soft-simt sweep [--csv PATH] [--all]  run all 51 cells (+reduction with --all)
   soft-simt run -p PROG -m MEM          run one benchmark cell
   soft-simt advise -p PROG              rank every memory for a workload
+  soft-simt explore -p PROG [--strategy exhaustive|halving] [--json PATH]
+                                        search the parametric memory design
+                                        space (banks 2-32 x mappings x ports x
+                                        capacity); print the Pareto frontier
   soft-simt validate [--artifacts DIR]  golden validation (PJRT when built)
   soft-simt asm FILE [-m MEM]           assemble and run a custom .asm file
   soft-simt disasm PROG                 print a generated program's assembly
@@ -119,10 +125,14 @@ fn cmd_table(which: &str, _rest: &[String]) -> i32 {
 }
 
 fn cmd_sweep(rest: &[String]) -> i32 {
-    let jobs = BenchJob::paper_sweep();
+    let all = rest.iter().any(|a| a == "--all");
+    let jobs = if all { BenchJob::extended_sweep() } else { BenchJob::paper_sweep() };
     let Some(results) = run_sweep(&jobs) else { return 1 };
     print!("{}", report::render_table2(&results));
     print!("{}", report::render_table3(&results));
+    if all {
+        print!("{}", report::render_reduction(&results));
+    }
     print!("{}", report::render_fig9(&results));
     if let Some(path) = flag_value(rest, &["--csv"]) {
         if let Err(e) = std::fs::write(path, report::sweep_csv(&results)) {
@@ -203,6 +213,55 @@ fn cmd_advise(rest: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("advise failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_explore(rest: &[String]) -> i32 {
+    let Some(program) = flag_value(rest, &["-p", "--program"]) else {
+        eprintln!("explore: missing -p PROGRAM");
+        return 2;
+    };
+    let Some(workload) = library::program_by_name(program) else {
+        eprintln!("unknown program '{program}' (see `soft-simt list`)");
+        return 2;
+    };
+    let strategy_name = flag_value(rest, &["--strategy"]).unwrap_or("halving");
+    let strategy: Box<dyn SearchStrategy> = match strategy_name {
+        "exhaustive" | "grid" => Box::new(Exhaustive),
+        "halving" | "pruning" => Box::new(SuccessiveHalving::default()),
+        other => {
+            eprintln!("unknown strategy '{other}' (try: exhaustive, halving)");
+            return 2;
+        }
+    };
+    let space = DesignSpace::parametric(workload.dataset_kb());
+    let runner = SweepRunner::default();
+    let cache = TraceCache::new();
+    eprintln!(
+        "exploring {} design points ({} architectures) for {program} on {} workers...",
+        space.points().len(),
+        space.arch_count(),
+        runner.workers()
+    );
+    match explore::explore(program, &space, strategy.as_ref(), &runner, &cache) {
+        Ok(result) => {
+            // The subsystem's guarantee, asserted where the user can see
+            // it: the whole space was served by one functional execution.
+            assert_eq!(result.captures, 1, "explore must execute the workload exactly once");
+            print!("{}", result.render());
+            if let Some(path) = flag_value(rest, &["--json"]) {
+                if let Err(e) = std::fs::write(path, result.to_json()) {
+                    eprintln!("writing {path}: {e}");
+                    return 1;
+                }
+                eprintln!("wrote {path}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("explore failed: {e}");
             1
         }
     }
@@ -294,9 +353,14 @@ fn cmd_list() -> i32 {
     for p in library::program_names() {
         println!("  {p}");
     }
-    println!("\nmemory architectures:");
+    println!("\nmemory architectures (paper set):");
     for a in MemoryArchKind::table3_nine() {
         println!("  {}  (fmax {:.0} MHz)", a.label(), a.fmax_mhz());
     }
+    println!(
+        "\nparametric space (see `explore`): banked 2-32 banks x {{lsb, offsetN, xor}} \
+         mappings, multiport {{1,2,4,8}}R x {{1,2}}W [-VB];\nlabels like 'banked8-offset3', \
+         '2r-1w' parse anywhere a memory is accepted"
+    );
     0
 }

@@ -103,9 +103,35 @@ impl MemoryArchKind {
     pub fn banked(banks: u32) -> Self {
         Self::Banked { banks, mapping: BankMapping::Lsb }
     }
-    /// Banked with Offset mapping.
+    /// Banked with the paper's Offset (shift-2) mapping.
     pub fn banked_offset(banks: u32) -> Self {
-        Self::Banked { banks, mapping: BankMapping::Offset }
+        Self::Banked { banks, mapping: BankMapping::offset() }
+    }
+
+    /// Banked with XOR mapping.
+    pub fn banked_xor(banks: u32) -> Self {
+        Self::Banked { banks, mapping: BankMapping::Xor }
+    }
+
+    /// Whether this descriptor is constructible: power-of-two bank counts
+    /// within 2..=[`crate::mem::MAX_BANKS`] and a valid mapping on the
+    /// banked side; 1/2/4/8 read ports, 1 or 2 write ports, and VB only
+    /// in its 1W form on the multiport side. `parse` accepts exactly the
+    /// valid descriptors, and the design-space explorer enumerates within
+    /// them.
+    pub fn is_valid(&self) -> bool {
+        match *self {
+            Self::MultiPort { read_ports, write_ports, vb } => {
+                matches!(read_ports, 1 | 2 | 4 | 8)
+                    && matches!(write_ports, 1 | 2)
+                    && (!vb || write_ports == 1)
+            }
+            Self::Banked { banks, mapping } => {
+                banks.is_power_of_two()
+                    && (2..=crate::mem::MAX_BANKS as u32).contains(&banks)
+                    && mapping.is_valid()
+            }
+        }
     }
 
     /// The eight architectures of Table II (transpose study; no VB).
@@ -147,43 +173,64 @@ impl MemoryArchKind {
                     format!("{read_ports}R-{write_ports}W")
                 }
             }
-            Self::Banked { banks, mapping } => match mapping {
-                BankMapping::Lsb => format!("{banks} Banks"),
-                BankMapping::Offset => format!("{banks} Banks Offset"),
-                BankMapping::Xor => format!("{banks} Banks XOR"),
-            },
+            Self::Banked { banks, mapping } => {
+                let m = mapping.label();
+                if m.is_empty() {
+                    format!("{banks} Banks")
+                } else {
+                    format!("{banks} Banks {m}")
+                }
+            }
         }
     }
 
-    /// Parse a label back to a kind (CLI use): accepts the paper-style
-    /// labels case-insensitively and a few shorthands (`banked16`,
-    /// `banked16-offset`, `4r1w`, `4r2w`, `4r1w-vb`).
+    /// Parse a label back to a kind (CLI and explorer use): accepts the
+    /// paper-style labels case-insensitively and shorthands (`banked16`,
+    /// `banked16-offset`, `banked8-offset3`, `4r1w`, `2r-1w`, `4r1w-vb`).
+    /// Round-trips `label()` for **every** valid descriptor — pinned by
+    /// the `parse_label_roundtrip_property` test.
     pub fn parse(s: &str) -> Option<Self> {
         let t = s.to_ascii_lowercase().replace([' ', '_'], "-");
-        match t.as_str() {
-            "4r-1w" | "4r1w" => Some(Self::mp_4r1w()),
-            "4r-2w" | "4r2w" => Some(Self::mp_4r2w()),
-            "4r-1w-vb" | "4r1w-vb" | "4r1wvb" => Some(Self::mp_4r1w_vb()),
-            _ => {
-                let (body, mapping) = if let Some(b) = t.strip_suffix("-offset") {
-                    (b, BankMapping::Offset)
-                } else if let Some(b) = t.strip_suffix("-xor") {
-                    (b, BankMapping::Xor)
-                } else {
-                    (t.as_str(), BankMapping::Lsb)
-                };
-                let banks: u32 = body
-                    .strip_prefix("banked")
-                    .or_else(|| body.strip_suffix("-banks"))?
-                    .trim_matches('-')
-                    .parse()
-                    .ok()?;
-                if ![4, 8, 16].contains(&banks) {
-                    return None;
-                }
-                Some(Self::Banked { banks, mapping })
-            }
+        if let Some(mp) = Self::parse_multiport(&t) {
+            return Some(mp);
         }
+        let (body, mapping) = if let Some(b) = t.strip_suffix("-xor") {
+            (b, BankMapping::Xor)
+        } else if let Some(at) = t.rfind("-offset") {
+            let digits = &t[at + "-offset".len()..];
+            let shift = if digits.is_empty() { 2 } else { digits.parse().ok()? };
+            (&t[..at], BankMapping::Offset { shift })
+        } else {
+            (t.as_str(), BankMapping::Lsb)
+        };
+        let banks: u32 = body
+            .strip_prefix("banked")
+            .or_else(|| body.strip_suffix("-banks"))?
+            .trim_matches('-')
+            .parse()
+            .ok()?;
+        let kind = Self::Banked { banks, mapping };
+        kind.is_valid().then_some(kind)
+    }
+
+    /// Parse the multiport family: `{R}r-{W}w` / `{R}r{W}w`, with an
+    /// optional `vb` / `-vb` suffix.
+    fn parse_multiport(t: &str) -> Option<Self> {
+        let (body, vb) = match t.strip_suffix("vb") {
+            Some(b) => (b.trim_end_matches('-'), true),
+            None => (t, false),
+        };
+        let r_end = body.find(|c: char| !c.is_ascii_digit())?;
+        let read_ports: u32 = body[..r_end].parse().ok()?;
+        let rest = body[r_end..].strip_prefix('r')?;
+        let rest = rest.strip_prefix('-').unwrap_or(rest);
+        let w_end = rest.find(|c: char| !c.is_ascii_digit())?;
+        let write_ports: u32 = rest[..w_end].parse().ok()?;
+        if &rest[w_end..] != "w" {
+            return None;
+        }
+        let kind = Self::MultiPort { read_ports, write_ports, vb };
+        kind.is_valid().then_some(kind)
     }
 
     /// Clock frequency (MHz) the processor closes timing at with this
@@ -251,6 +298,60 @@ mod tests {
         assert_eq!(MemoryArchKind::parse("4r1w"), Some(MemoryArchKind::mp_4r1w()));
         assert_eq!(MemoryArchKind::parse("banked5"), None);
         assert_eq!(MemoryArchKind::parse("weird"), None);
+    }
+
+    #[test]
+    fn parse_generalized_variants() {
+        assert_eq!(MemoryArchKind::parse("2 Banks"), Some(MemoryArchKind::banked(2)));
+        assert_eq!(
+            MemoryArchKind::parse("32 Banks Offset3"),
+            Some(MemoryArchKind::Banked { banks: 32, mapping: BankMapping::Offset { shift: 3 } })
+        );
+        assert_eq!(
+            MemoryArchKind::parse("2r-1w"),
+            Some(MemoryArchKind::MultiPort { read_ports: 2, write_ports: 1, vb: false })
+        );
+        assert_eq!(
+            MemoryArchKind::parse("8R-1W"),
+            Some(MemoryArchKind::MultiPort { read_ports: 8, write_ports: 1, vb: false })
+        );
+        // Invalid descriptors stay rejected.
+        assert_eq!(MemoryArchKind::parse("3r-1w"), None);
+        assert_eq!(MemoryArchKind::parse("4r-3w"), None);
+        assert_eq!(MemoryArchKind::parse("4r-2w-vb"), None);
+        assert_eq!(MemoryArchKind::parse("banked64"), None);
+        assert_eq!(MemoryArchKind::parse("banked1"), None);
+        assert_eq!(MemoryArchKind::parse("16-banks-offset9"), None);
+    }
+
+    #[test]
+    fn parse_label_roundtrip_property() {
+        use crate::util::proptest::check;
+        // Every *constructible* descriptor's label parses back to itself —
+        // the contract the explorer's generated labels rely on.
+        check("label/parse round-trip", 2000, |rng| {
+            let kind = if rng.chance(0.5) {
+                let banks = 2u32 << rng.below(5); // 2, 4, 8, 16, 32
+                let mapping = match rng.below(3) {
+                    0 => BankMapping::Lsb,
+                    1 => BankMapping::Offset { shift: rng.below(BankMapping::MAX_SHIFT + 1) },
+                    _ => BankMapping::Xor,
+                };
+                MemoryArchKind::Banked { banks, mapping }
+            } else {
+                let read_ports = 1u32 << rng.below(4); // 1, 2, 4, 8
+                let write_ports = 1 + rng.below(2); // 1, 2
+                let vb = write_ports == 1 && rng.chance(0.3);
+                MemoryArchKind::MultiPort { read_ports, write_ports, vb }
+            };
+            assert!(kind.is_valid(), "{kind:?}");
+            assert_eq!(
+                MemoryArchKind::parse(&kind.label()),
+                Some(kind),
+                "label '{}' must round-trip",
+                kind.label()
+            );
+        });
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use super::arch::{MemoryArchKind, OpKind, ReadOp, SharedMemory};
 use super::conflict::max_conflicts;
 use super::mapping::{BankMap, BankMapping};
-use super::{timing, LaneMask, LANES};
+use super::{timing, LaneMask, LANES, MAX_BANKS};
 
 /// Timing fidelity of the banked model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,10 +44,14 @@ impl BankedMemory {
     pub fn new(words: usize, n_banks: u32, mapping: BankMapping) -> Self {
         assert!(words.is_power_of_two(), "capacity must be a power of two");
         assert!(
+            n_banks.is_power_of_two() && (2..=MAX_BANKS as u32).contains(&n_banks),
+            "bank count must be a power of two in 2..={MAX_BANKS}"
+        );
+        assert!(
             words as u32 % n_banks == 0,
             "capacity must divide evenly across banks"
         );
-        let map = BankMap::new(n_banks, mapping);
+        let map = BankMap::for_capacity(n_banks, mapping, words);
         let rows = words / n_banks as usize;
         Self {
             banks: vec![vec![0u32; rows]; n_banks as usize],
@@ -94,8 +98,8 @@ impl BankedMemory {
     /// heap-allocating [`analyze`] stayed on the tests/diagnostics path;
     /// the memory hot path uses this).
     #[inline]
-    fn columns(&self, addrs: &[u32; LANES], mask: LaneMask) -> [LaneMask; LANES] {
-        let mut columns = [0 as LaneMask; LANES];
+    fn columns(&self, addrs: &[u32; LANES], mask: LaneMask) -> [LaneMask; MAX_BANKS] {
+        let mut columns = [0 as LaneMask; MAX_BANKS];
         let mut m = mask;
         while m != 0 {
             let lane = m.trailing_zeros() as usize;
@@ -287,15 +291,15 @@ mod tests {
         // Offset map (shift 2) → 16 distinct banks = 1 cycle. This is the
         // complex-data case the paper designed the Offset map for.
         let mut lsb = BankedMemory::new(1024, 16, BankMapping::Lsb);
-        let mut off = BankedMemory::new(1024, 16, BankMapping::Offset);
+        let mut off = BankedMemory::new(1024, 16, BankMapping::offset());
         assert_eq!(lsb.read_op(&seq_addrs(0, 4), FULL_MASK).cycles, 4);
         assert_eq!(off.read_op(&seq_addrs(0, 4), FULL_MASK).cycles, 1);
     }
 
     #[test]
     fn data_roundtrip_all_mappings() {
-        for mapping in [BankMapping::Lsb, BankMapping::Offset] {
-            for banks in [4u32, 8, 16] {
+        for mapping in [BankMapping::Lsb, BankMapping::offset()] {
+            for banks in [2u32, 4, 8, 16, 32] {
                 let mut m = BankedMemory::new(256, banks, mapping);
                 let addrs = seq_addrs(32, 3);
                 let mut data = [0u32; LANES];
@@ -312,8 +316,8 @@ mod tests {
     #[test]
     fn exact_equals_fast_property() {
         check("banked exact == fast (cycles and data)", 500, |rng| {
-            let banks = [4u32, 8, 16][rng.below(3) as usize];
-            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let banks = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::offset() };
             let mut exact = BankedMemory::new(4096, banks, mapping);
             let mut fast = BankedMemory::new(4096, banks, mapping).with_mode(TimingMode::Fast);
             // Seed both with the same image.
@@ -351,8 +355,8 @@ mod tests {
     #[test]
     fn op_cost_matches_executed_ops_property() {
         check("banked op_cost == read_op/write_op cycles", 500, |rng| {
-            let banks = [4u32, 8, 16][rng.below(3) as usize];
-            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let banks = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::offset() };
             let mode = if rng.chance(0.5) { TimingMode::Exact } else { TimingMode::Fast };
             let mut m = BankedMemory::new(4096, banks, mapping).with_mode(mode);
             let mut addrs = [0u32; LANES];
@@ -392,7 +396,7 @@ mod tests {
 
     #[test]
     fn image_matches_pokes() {
-        let mut m = BankedMemory::new(128, 8, BankMapping::Offset);
+        let mut m = BankedMemory::new(128, 8, BankMapping::offset());
         for a in 0..128 {
             m.poke(a, a * 7);
         }
@@ -406,5 +410,25 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn capacity_must_be_pow2() {
         BankedMemory::new(100, 4, BankMapping::Lsb);
+    }
+
+    #[test]
+    fn extreme_offset_shift_clamped_to_capacity() {
+        // banked32-offset8 on a 1 Ki-word memory: unclamped, address
+        // 1023 would land on row 255 of a 32-row bank (out of bounds).
+        // The capacity clamp keeps the map a bijection on [0, words).
+        let mut m = BankedMemory::new(1024, 32, BankMapping::Offset { shift: 8 });
+        for a in 0..1024u32 {
+            m.poke(a, a ^ 0xABCD);
+        }
+        for a in 0..1024u32 {
+            assert_eq!(m.peek(a), a ^ 0xABCD, "addr {a}");
+        }
+        let mut addrs = [0u32; LANES];
+        for (l, v) in addrs.iter_mut().enumerate() {
+            *v = 1023 - l as u32;
+        }
+        let r = m.read_op(&addrs, FULL_MASK);
+        assert_eq!(r.data[0], 1023 ^ 0xABCD);
     }
 }

@@ -12,7 +12,7 @@
 //! agree on random batches through the PJRT-loaded artifact.
 
 use super::mapping::BankMap;
-use super::{LaneMask, LANES};
+use super::{LaneMask, LANES, MAX_BANKS};
 
 /// The per-operation conflict analysis result.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -60,15 +60,15 @@ pub fn analyze(addrs: &[u32; LANES], mask: LaneMask, map: &BankMap) -> ConflictI
 /// ~1.8× slower — EXPERIMENTS.md §Perf).
 #[inline]
 pub fn max_conflicts(addrs: &[u32; LANES], mask: LaneMask, map: &BankMap) -> u32 {
-    let mut counts = [0u8; LANES]; // ≥ max bank count (16)
+    let mut counts = [0u8; MAX_BANKS];
     let mut max = 0u8;
     let mut m = mask;
     while m != 0 {
         let lane = m.trailing_zeros() as usize;
         m &= m - 1;
         let b = map.bank_of(addrs[lane]) as usize;
-        debug_assert!(b < LANES);
-        // SAFETY: bank_of masks to banks-1 < 16 == LANES.
+        debug_assert!(b < MAX_BANKS);
+        // SAFETY: bank_of masks to banks-1 < MAX_BANKS.
         let c = unsafe {
             let slot = counts.get_unchecked_mut(b);
             *slot += 1;
@@ -151,15 +151,15 @@ mod tests {
         }
         assert_eq!(analyze(&addrs, FULL_MASK, &map).max_conflicts, 16);
         // The Offset map (shift 2) spreads the same stride over 4 banks.
-        let map_off = BankMap::new(16, BankMapping::Offset);
+        let map_off = BankMap::new(16, BankMapping::offset());
         assert_eq!(analyze(&addrs, FULL_MASK, &map_off).max_conflicts, 4);
     }
 
     #[test]
     fn counts_sum_equals_active_property() {
         check("conflict counts sum to active lanes", 1000, |rng| {
-            let banks = [4u32, 8, 16][rng.below(3) as usize];
-            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let banks = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::offset() };
             let map = BankMap::new(banks, mapping);
             let mut addrs = [0u32; LANES];
             for a in addrs.iter_mut() {
@@ -182,8 +182,8 @@ mod tests {
     #[test]
     fn fast_max_matches_full_analysis_property() {
         check("max_conflicts fast path == analyze", 1000, |rng| {
-            let banks = [4u32, 8, 16][rng.below(3) as usize];
-            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::Offset };
+            let banks = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+            let mapping = if rng.chance(0.5) { BankMapping::Lsb } else { BankMapping::offset() };
             let map = BankMap::new(banks, mapping);
             let mut addrs = [0u32; LANES];
             for a in addrs.iter_mut() {

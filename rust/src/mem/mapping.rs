@@ -14,10 +14,12 @@ use crate::util::bits::log2_exact;
 pub enum BankMapping {
     /// Bank = `addr[b-1:0]` — the default map.
     Lsb,
-    /// Bank = `addr[shift+b-1:shift]` with `shift = 2` — the paper's
-    /// Offset map (tuned for interleaved complex data, where I/Q pairs
-    /// occupy adjacent addresses).
-    Offset,
+    /// Bank = `addr[shift+b-1:shift]` — the shifted-field family. The
+    /// paper's **Offset** map is `shift = 2` (tuned for interleaved
+    /// complex data, where I/Q pairs occupy adjacent addresses); the
+    /// design-space explorer sweeps the shift as a free parameter up to
+    /// [`BankMapping::MAX_SHIFT`].
+    Offset { shift: u32 },
     /// Bank = `addr[b-1:0] ^ addr[2b-1:b]` — XOR interleaving, the
     /// classic conflict-randomizing map. Not benchmarked in the paper
     /// (its §VII names "varying the bank mapping" as the FPGA's open
@@ -27,22 +29,44 @@ pub enum BankMapping {
 }
 
 impl BankMapping {
+    /// Largest constructible `Offset` shift (keeps `shift + bank bits`
+    /// well inside the 32-bit word-address space).
+    pub const MAX_SHIFT: u32 = 8;
+
+    /// The paper's Offset map: bank field extracted at bit 2.
+    pub const fn offset() -> Self {
+        BankMapping::Offset { shift: 2 }
+    }
+
     /// The bit offset at which the bank field starts (shift-based maps;
     /// the paper's two benchmark maps are both of this form).
     pub fn shift(self) -> u32 {
         match self {
             BankMapping::Lsb => 0,
-            BankMapping::Offset => 2,
+            BankMapping::Offset { shift } => shift,
             BankMapping::Xor => 0,
         }
     }
 
-    /// Short label used in table headers ("" / "Offset" / "XOR").
-    pub fn label(self) -> &'static str {
+    /// Short label used in table headers ("" / "Offset" / "Offset3" /
+    /// "XOR"). The paper's shift-2 map keeps its bare "Offset" name; any
+    /// other shift carries the shift in the label so labels stay
+    /// parseable round-trip ([`crate::mem::arch::MemoryArchKind::parse`]).
+    pub fn label(self) -> String {
         match self {
-            BankMapping::Lsb => "",
-            BankMapping::Offset => "Offset",
-            BankMapping::Xor => "XOR",
+            BankMapping::Lsb => String::new(),
+            BankMapping::Offset { shift: 2 } => "Offset".to_string(),
+            BankMapping::Offset { shift } => format!("Offset{shift}"),
+            BankMapping::Xor => "XOR".to_string(),
+        }
+    }
+
+    /// Whether this mapping is constructible (the validity predicate the
+    /// design space and `parse` share).
+    pub fn is_valid(self) -> bool {
+        match self {
+            BankMapping::Lsb | BankMapping::Xor => true,
+            BankMapping::Offset { shift } => shift <= Self::MAX_SHIFT,
         }
     }
 
@@ -71,6 +95,23 @@ impl BankMap {
             shift: mapping.shift(),
             xor: matches!(mapping, BankMapping::Xor),
         }
+    }
+
+    /// Like [`Self::new`], but clamps a shifted bank field to the
+    /// capacity's address width: the shift maps are only bijections on
+    /// `[0, words)` when `shift + log2(banks) <= log2(words)`, and an
+    /// unclamped extreme descriptor (e.g. `banked32-offset8` on a
+    /// 1 Ki-word memory) would compute rows past the end of a bank. The
+    /// memory's data and timing paths share the one clamped map, so
+    /// coupled runs and trace replays stay consistent. XOR maps need no
+    /// clamp (`row = addr >> bits` is always in range).
+    pub fn for_capacity(banks: u32, mapping: BankMapping, words: usize) -> Self {
+        let mut m = Self::new(banks, mapping);
+        if !m.xor {
+            let addr_bits = words.trailing_zeros(); // capacity is a power of two
+            m.shift = m.shift.min(addr_bits.saturating_sub(m.bits));
+        }
+        m
     }
 
     #[inline]
@@ -136,7 +177,7 @@ mod tests {
     fn offset_mapping_16_banks() {
         // Offset map uses bits [5:2]: consecutive I/Q pairs of the same
         // point share a bank; points stride across banks.
-        let m = BankMap::new(16, BankMapping::Offset);
+        let m = BankMap::new(16, BankMapping::offset());
         assert_eq!(m.bank_of(0), 0);
         assert_eq!(m.bank_of(1), 0);
         assert_eq!(m.bank_of(4), 1);
@@ -160,8 +201,11 @@ mod tests {
     fn bank_row_bijective_property() {
         check("bank/row bijection", 3000, |rng| {
             let banks = [4u32, 8, 16][rng.below(3) as usize];
-            let mapping = [BankMapping::Lsb, BankMapping::Offset, BankMapping::Xor]
-                [rng.below(3) as usize];
+            let mapping = [
+                BankMapping::Lsb,
+                BankMapping::Offset { shift: rng.below(BankMapping::MAX_SHIFT + 1) },
+                BankMapping::Xor,
+            ][rng.below(3) as usize];
             let m = BankMap::new(banks, mapping);
             let addr = rng.below(1 << 20);
             let (b, r) = (m.bank_of(addr), m.row_of(addr));
@@ -188,7 +232,7 @@ mod tests {
     #[test]
     fn distinct_addrs_distinct_slots_property() {
         check("no two addresses share a (bank,row) slot", 500, |rng| {
-            let m = BankMap::new(16, BankMapping::Offset);
+            let m = BankMap::new(16, BankMapping::offset());
             let a = rng.below(1 << 16);
             let b = rng.below(1 << 16);
             if a != b {

@@ -10,6 +10,11 @@
 //! | `16/8/4 Banks`  | banked, LSB mapping                     | 771 MHz |
 //! | `16/8/4 Banks Offset` | banked, shifted (bit `[shift+b-1:shift]`) mapping | 771 MHz |
 //!
+//! Beyond the paper's nine, every descriptor the design-space explorer
+//! ([`crate::explore`]) enumerates is constructible: 2–32 banks, any
+//! `Offset { shift }` field position, XOR interleaving, and the
+//! {1,2,4,8}R × {1,2}W multiport family ([`MemoryArchKind::is_valid`]).
+//!
 //! The banked path is modelled at the level the paper describes it:
 //! one-hot bank matrices and population counts ([`conflict`]), per-bank
 //! carry-chain arbiters simulated bit-exactly ([`arbiter`]), access
@@ -32,6 +37,11 @@ pub use mapping::BankMapping;
 /// Number of SIMT lanes (SPs) — fixed at 16 in the paper's processor; the
 /// memory *operation* width.
 pub const LANES: usize = 16;
+
+/// Largest constructible bank count. The paper benchmarks 4/8/16 banks;
+/// the design-space explorer ([`crate::explore`]) sweeps 2–32, so the
+/// banked hot paths size their stack arrays to this bound.
+pub const MAX_BANKS: usize = 32;
 
 /// A lane-request mask: bit `l` set means lane `l` participates in the
 /// operation.

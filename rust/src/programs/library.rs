@@ -2,6 +2,7 @@
 //! the sweep runner.
 
 use super::fft::{fft_program, FftPlan};
+use super::reduction::{reduction_program, ReductionPlan};
 use super::transpose::{transpose_program, TransposePlan};
 use crate::isa::program::Program;
 use crate::sim::exec::ExecMemory;
@@ -12,6 +13,7 @@ use crate::util::XorShift64;
 pub enum Workload {
     Transpose(TransposePlan, Program),
     Fft(FftPlan, Program),
+    Reduction(ReductionPlan, Program),
 }
 
 impl Workload {
@@ -19,6 +21,7 @@ impl Workload {
         match self {
             Workload::Transpose(_, p) => p,
             Workload::Fft(_, p) => p,
+            Workload::Reduction(_, p) => p,
         }
     }
 
@@ -31,13 +34,21 @@ impl Workload {
         match self {
             Workload::Transpose(plan, _) => (plan.words as usize).next_power_of_two(),
             Workload::Fft(plan, _) => plan.mem_words(),
+            Workload::Reduction(plan, _) => (plan.words as usize).next_power_of_two(),
         }
+    }
+
+    /// Dataset size in KB — the capacity the footprint model charges for
+    /// holding this workload (shared by the advisor, the explorer CLI
+    /// and the trace-derived figure in `explore::Evaluator`).
+    pub fn dataset_kb(&self) -> u32 {
+        (self.mem_words() * 4 / 1024) as u32
     }
 
     /// Twiddle region for load classification (FFTs only).
     pub fn tw_region(&self) -> Option<std::ops::Range<u32>> {
         match self {
-            Workload::Transpose(..) => None,
+            Workload::Transpose(..) | Workload::Reduction(..) => None,
             Workload::Fft(plan, _) => Some(plan.tw_region()),
         }
     }
@@ -66,11 +77,30 @@ impl Workload {
                     mem.write_word(plan.tw_base + i as u32, v.to_bits());
                 }
             }
+            Workload::Reduction(plan, _) => {
+                for i in 0..plan.n {
+                    mem.write_word(plan.addr_of(i), rng.next_u32());
+                }
+            }
+        }
+    }
+
+    /// Host-reference expected value at the workload's result location,
+    /// when one exists (reductions: the wrapping sum at element 0).
+    pub fn expected_scalar(&self, seed: u64) -> Option<u32> {
+        match self {
+            Workload::Reduction(plan, _) => {
+                let mut rng = XorShift64::new(seed);
+                let elements: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
+                Some(super::reduction::reference_sum(&elements))
+            }
+            _ => None,
         }
     }
 }
 
-/// The benchmark names of the paper's evaluation.
+/// The benchmark names of the paper's evaluation, plus the strided
+/// tree-sum reduction (the suite's third access pattern).
 pub fn program_names() -> Vec<&'static str> {
     vec![
         "transpose32",
@@ -79,11 +109,13 @@ pub fn program_names() -> Vec<&'static str> {
         "fft4096r4",
         "fft4096r8",
         "fft4096r16",
+        "reduction4096",
     ]
 }
 
 /// Build a workload by name (`transposeN` for N ∈ {32, 64, 128} and other
-/// powers of two 4..=1024; `fft4096rR` for R ∈ {4, 8, 16}).
+/// powers of two 4..=1024; `fft4096rR` for R ∈ {4, 8, 16}; `reductionN`
+/// for powers of two 32..=4096).
 pub fn program_by_name(name: &str) -> Option<Workload> {
     if let Some(n) = name.strip_prefix("transpose") {
         let n: u32 = n.parse().ok()?;
@@ -99,6 +131,14 @@ pub fn program_by_name(name: &str) -> Option<Workload> {
         }
         let (plan, program) = fft_program(r);
         return Some(Workload::Fft(plan, program));
+    }
+    if let Some(n) = name.strip_prefix("reduction") {
+        let n: u32 = n.parse().ok()?;
+        if !n.is_power_of_two() || !(32..=4096).contains(&n) {
+            return None;
+        }
+        let (plan, program) = reduction_program(n);
+        return Some(Workload::Reduction(plan, program));
     }
     None
 }
@@ -120,7 +160,27 @@ mod tests {
     fn unknown_names_rejected() {
         assert!(program_by_name("transpose33").is_none());
         assert!(program_by_name("fft4096r5").is_none());
+        assert!(program_by_name("reduction100").is_none());
+        assert!(program_by_name("reduction8192").is_none());
         assert!(program_by_name("quicksort").is_none());
+    }
+
+    #[test]
+    fn reduction_workload_matches_host_reference() {
+        use crate::mem::arch::MemoryArchKind;
+        use crate::sim::config::MachineConfig;
+        use crate::sim::machine::Machine;
+        let w = program_by_name("reduction256").unwrap();
+        let mut machine = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked_offset(16))
+                .with_mem_words(w.mem_words()),
+        );
+        w.load_input(&mut machine, 0x5EED);
+        machine.run_program(w.program()).unwrap();
+        let expected = w.expected_scalar(0x5EED).unwrap();
+        assert_eq!(machine.read_image(0, 1)[0], expected);
+        assert!(w.expected_scalar(1234) != w.expected_scalar(0x5EED), "seed-dependent");
+        assert!(program_by_name("transpose32").unwrap().expected_scalar(1).is_none());
     }
 
     #[test]

@@ -6,13 +6,18 @@
 //! stride-N writes for the transposes; stride-varying butterfly and
 //! twiddle accesses with interleaved I/Q complex data for the FFTs —
 //! because those patterns are what drive the bank-conflict behaviour the
-//! paper measures.
+//! paper measures. The [`reduction`] tree-sum adds a third pattern the
+//! paper's tables don't cover (strided reads with a redundant SIMT
+//! reduction tail), giving the design-space explorer a scenario beyond
+//! the paper's two.
 
 pub mod builder;
 pub mod fft;
 pub mod library;
+pub mod reduction;
 pub mod transpose;
 
 pub use fft::{fft_program, FftPlan};
 pub use library::{program_by_name, program_names};
+pub use reduction::{reduction_program, ReductionPlan};
 pub use transpose::{transpose_program, TransposePlan};

@@ -1,0 +1,198 @@
+//! Tree-sum reduction over a strided array — the third access pattern of
+//! the benchmark suite, beyond the paper's transpose (unit-stride reads,
+//! N-stride writes) and FFT (butterfly strides).
+//!
+//! The input is an N-element array of 32-bit integers laid out with a
+//! power-of-two element stride (default 4 — the layout of a structure-
+//! of-4-words array, or fully interleaved complex-pair data). The kernel
+//! folds it pairwise in log2(N) passes: pass with `len` partial sums
+//! computes `A[i] += A[i + len]` for `i < len`. Timing-wise this is the
+//! pattern the paper's tables don't cover:
+//!
+//! - every access walks a **stride-4** address sequence (4-way conflicts
+//!   under the LSB map, conflict-free under Offset shift-2);
+//! - each pass *halves* the live set, so the final passes have fewer
+//!   sums than lanes — redundant lanes recompute the same element
+//!   (`i = tid & (len-1)`), piling duplicate addresses into single banks
+//!   exactly like a SIMT reduction tail on real hardware;
+//! - reads and blocking writes alternate tightly (each pass must commit
+//!   before the next reads it), so write-controller drain latency is on
+//!   the critical path, unlike the store-heavy transpose.
+//!
+//! Functionally the final wrapping sum lands at element 0; validation
+//! compares it (and the whole image) against a host reference.
+
+use super::builder::ProgramBuilder;
+use crate::isa::program::Program;
+use crate::util::bits::log2_exact;
+
+/// Placement metadata for a reduction run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReductionPlan {
+    /// Element count N (power of two, 32..=4096).
+    pub n: u32,
+    /// Word stride between consecutive elements (power of two).
+    pub stride: u32,
+    /// Word address of element 0.
+    pub base: u32,
+    /// Thread-block size used.
+    pub threads: u32,
+    /// Shared-memory words the benchmark touches (`n * stride`).
+    pub words: u32,
+}
+
+impl ReductionPlan {
+    /// Default element stride: 4 words between consecutive elements.
+    pub const STRIDE: u32 = 4;
+
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (32..=4096).contains(&n));
+        let threads = (n / 2).min(2048);
+        Self { n, stride: Self::STRIDE, base: 0, threads, words: n * Self::STRIDE }
+    }
+
+    /// Word address of element `i`.
+    pub fn addr_of(&self, i: u32) -> u32 {
+        self.base + i * self.stride
+    }
+
+    /// Reduction passes (`log2 n`).
+    pub fn passes(&self) -> u32 {
+        log2_exact(self.n)
+    }
+}
+
+/// Generate the tree-sum program for an N-element strided array.
+pub fn reduction_program(n: u32) -> (ReductionPlan, Program) {
+    let plan = ReductionPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &ReductionPlan) -> Program {
+    let log_s = log2_exact(plan.stride) as u16;
+    let mut b = ProgramBuilder::new(format!("reduction{}", plan.n), plan.threads);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let i = b.alloc();
+    let a_addr = b.alloc();
+    let b_addr = b.alloc();
+    let v0 = b.alloc();
+    let v1 = b.alloc();
+
+    // `threads = n/2` covers every pass's live set in one shot (one
+    // element per thread); when the live set shrinks below the block,
+    // lanes alias (i = tid mod len) and recompute the same sum — the
+    // redundant SIMT reduction tail.
+    let mut len = plan.n / 2;
+    while len >= 1 {
+        b.iandi(i, tid, (len - 1) as u16);
+        // a = base + i·stride; b = a + len·stride.
+        b.ishli(a_addr, i, log_s);
+        if plan.base > 0 {
+            b.iaddi(a_addr, a_addr, plan.base as i32);
+        }
+        b.iaddi(b_addr, a_addr, (len * plan.stride) as i32);
+        b.ld(v0, a_addr);
+        b.ld(v1, b_addr);
+        b.iadd(v0, v0, v1);
+        // Blocking store: the next pass reads these sums ("use st when
+        // the same data will likely be used immediately").
+        b.st(a_addr, v0);
+        len /= 2;
+    }
+    b.halt();
+    b.build()
+}
+
+/// Host reference: the wrapping sum of the input elements.
+pub fn reference_sum(elements: &[u32]) -> u32 {
+    elements.iter().fold(0u32, |acc, &v| acc.wrapping_add(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+    use crate::util::XorShift64;
+
+    fn run_reduction(n: u32, arch: MemoryArchKind) -> (Machine, u32, crate::sim::stats::RunReport) {
+        let (plan, program) = reduction_program(n);
+        let words = (plan.words as usize).max(4096);
+        let mut m = Machine::new(MachineConfig::for_arch(arch).with_mem_words(words));
+        let mut rng = XorShift64::new(7);
+        let elements: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        for (i, &v) in elements.iter().enumerate() {
+            m.load_image(plan.addr_of(i as u32), &[v]);
+        }
+        let r = m.run_program(&program).expect("reduction runs");
+        (m, reference_sum(&elements), r)
+    }
+
+    #[test]
+    fn functional_on_all_paper_archs() {
+        for arch in MemoryArchKind::table3_nine() {
+            let (m, expected, _) = run_reduction(256, arch);
+            assert_eq!(m.read_image(0, 1)[0], expected, "{arch}");
+        }
+    }
+
+    #[test]
+    fn functional_at_scale_and_on_parametric_archs() {
+        for arch in [
+            MemoryArchKind::banked(2),
+            MemoryArchKind::banked(32),
+            MemoryArchKind::banked_xor(16),
+        ] {
+            let (m, expected, _) = run_reduction(4096, arch);
+            assert_eq!(m.read_image(0, 1)[0], expected, "{arch}");
+        }
+    }
+
+    #[test]
+    fn plan_shapes() {
+        let p = ReductionPlan::new(4096);
+        assert_eq!(p.threads, 2048);
+        assert_eq!(p.words, 16_384);
+        assert_eq!(p.passes(), 12);
+        assert_eq!(p.addr_of(3), 12);
+        let small = ReductionPlan::new(32);
+        assert_eq!(small.threads, 16);
+        assert!(small.words.is_power_of_two());
+    }
+
+    #[test]
+    fn op_counts_halve_per_pass_until_warp_floor() {
+        // n=256, 128 threads → 8 warps. Passes at len ≥ 128 issue 8 ops
+        // per load; smaller passes still issue all 8 warps (redundant
+        // lanes), so load ops = 2 × 8 × passes.
+        let (_, _, r) = run_reduction(256, MemoryArchKind::banked(16));
+        let passes = ReductionPlan::new(256).passes() as u64;
+        assert_eq!(r.stats.d_load_ops, 2 * 8 * passes);
+        assert_eq!(r.stats.store_ops, 8 * passes);
+    }
+
+    #[test]
+    fn offset_mapping_beats_lsb_on_strided_reduction() {
+        // The whole array is stride-4: the shift-2 Offset map should win
+        // clearly over LSB on 16 banks.
+        let (_, _, lsb) = run_reduction(1024, MemoryArchKind::banked(16));
+        let (_, _, off) = run_reduction(1024, MemoryArchKind::banked_offset(16));
+        assert!(
+            off.total_cycles() < lsb.total_cycles(),
+            "offset {} !< lsb {}",
+            off.total_cycles(),
+            lsb.total_cycles()
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rejected() {
+        ReductionPlan::new(100);
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration tests for the design-space explorer (ISSUE 2 acceptance):
+//!
+//! - a >50-point parametric space is served by exactly ONE functional
+//!   execution per workload;
+//! - every frontier point's replayed cycles equal a direct coupled
+//!   `Machine::run_program` on that architecture;
+//! - the pruning strategy's Pareto frontier equals the exhaustive
+//!   frontier on small random spaces (property test);
+//! - the lower-bound cost model is sound (lb <= exact) on random
+//!   architectures — the invariant the pruning proof rests on.
+
+use soft_simt::coordinator::job::{BenchJob, TraceCache};
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::explore::{
+    explore, DesignSpace, Evaluator, Exhaustive, ScoredPoint, SuccessiveHalving,
+};
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::mem::mapping::BankMapping;
+use soft_simt::util::proptest::check;
+use soft_simt::util::XorShift64;
+
+#[test]
+fn parametric_space_over_50_points_single_capture() {
+    let space = DesignSpace::parametric(8);
+    let points = space.points();
+    assert!(points.len() > 50, "acceptance floor: got {} points", points.len());
+    let cache = TraceCache::new();
+    let runner = SweepRunner::new(4);
+    let result = explore("transpose32", &space, &Exhaustive, &runner, &cache).unwrap();
+    assert_eq!(result.points_total, points.len());
+    assert_eq!(result.points_scored, points.len());
+    assert_eq!(result.captures, 1, "one functional execution for the whole space");
+    assert!(result.replays as usize <= space.arch_count());
+    assert!(!result.front.is_empty());
+    // The same guarantee holds for the pruning strategy on a warm cache:
+    // zero further captures for arbitrarily many more points.
+    let pruned = explore(
+        "transpose32",
+        &space,
+        &SuccessiveHalving::default(),
+        &runner,
+        &cache,
+    )
+    .unwrap();
+    assert_eq!(pruned.captures, 0, "warm cache: zero functional executions");
+}
+
+#[test]
+fn frontier_cycles_match_direct_machine_run() {
+    let space = DesignSpace::parametric(8);
+    let cache = TraceCache::new();
+    let runner = SweepRunner::new(4);
+    let result = explore("transpose32", &space, &Exhaustive, &runner, &cache).unwrap();
+    assert!(!result.front.is_empty());
+    for s in &result.front {
+        // BenchJob::run is the coupled path: functional execution +
+        // timing replay in lockstep on the real architecture.
+        let coupled = BenchJob::new("transpose32", s.point.arch).run().unwrap();
+        assert_eq!(
+            s.cycles,
+            coupled.report.total_cycles(),
+            "frontier point {} must match Machine::run_program",
+            s.point.label()
+        );
+    }
+}
+
+fn front_key(front: &[ScoredPoint]) -> Vec<(String, u32, u64, u32)> {
+    let mut v: Vec<(String, u32, u64, u32)> = front
+        .iter()
+        .map(|s| {
+            (
+                s.point.arch.label(),
+                s.point.capacity_kb,
+                s.cycles,
+                s.footprint_alms.expect("frontier points are placeable"),
+            )
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+fn random_space(rng: &mut XorShift64) -> DesignSpace {
+    let mut space = DesignSpace::new();
+    // 1-3 bank counts x 1-3 mappings.
+    let all_banks = [2u32, 4, 8, 16, 32];
+    for _ in 0..1 + rng.below(3) {
+        let banks = all_banks[rng.below(5) as usize];
+        let mappings = [
+            BankMapping::Lsb,
+            BankMapping::Offset { shift: rng.below(4) },
+            BankMapping::Xor,
+        ];
+        for _ in 0..1 + rng.below(3) {
+            space = space.banked_grid([banks], [mappings[rng.below(3) as usize]]);
+        }
+    }
+    if rng.chance(0.7) {
+        space = space.multiport(1 << rng.below(4), 1, false);
+    }
+    if rng.chance(0.3) {
+        space = space.multiport(4, 2, false);
+    }
+    // 1-2 capacities, sometimes over rooflines (those points simply
+    // carry no footprint and stay off the frontier).
+    let caps = [8u32, 16, 64, 128, 300];
+    let mut s = space.capacities_kb([caps[rng.below(5) as usize]]);
+    if rng.chance(0.5) {
+        s = s.capacities_kb([caps[rng.below(5) as usize]]);
+    }
+    s
+}
+
+#[test]
+fn pruning_front_equals_exhaustive_front_property() {
+    // Shared cache: the workload is executed once for the whole property
+    // run, every case is pure replay.
+    let cache = TraceCache::new();
+    let runner = SweepRunner::new(2);
+    check("successive-halving frontier == exhaustive frontier", 15, |rng| {
+        let space = random_space(rng);
+        if space.points().is_empty() {
+            return;
+        }
+        let min_wave = 1 + rng.below(3) as usize;
+        let a = explore("transpose16", &space, &Exhaustive, &runner, &cache).unwrap();
+        let b = explore(
+            "transpose16",
+            &space,
+            &SuccessiveHalving { min_wave },
+            &runner,
+            &cache,
+        )
+        .unwrap();
+        assert_eq!(
+            front_key(&a.front),
+            front_key(&b.front),
+            "fronts diverged on a {}-point space (min_wave {min_wave})",
+            space.points().len()
+        );
+        assert!(b.points_scored + b.points_culled == a.points_scored);
+    });
+}
+
+#[test]
+fn lower_bound_is_sound_property() {
+    let cache = TraceCache::new();
+    let eval = Evaluator::new("transpose16", &cache).unwrap();
+    check("lower bound <= exact replay cycles", 40, |rng| {
+        let arch = if rng.chance(0.5) {
+            MemoryArchKind::Banked {
+                banks: [2u32, 4, 8, 16, 32][rng.below(5) as usize],
+                mapping: [
+                    BankMapping::Lsb,
+                    BankMapping::Offset { shift: rng.below(4) },
+                    BankMapping::Xor,
+                ][rng.below(3) as usize],
+            }
+        } else {
+            MemoryArchKind::MultiPort {
+                read_ports: 1 << rng.below(4),
+                write_ports: 1 + rng.below(2),
+                vb: false,
+            }
+        };
+        let lb = eval.lower_bound_cycles(arch);
+        let exact = eval.replay_arch(arch).unwrap();
+        assert!(lb <= exact, "{arch}: lower bound {lb} > exact {exact}");
+    });
+}
+
+#[test]
+fn explorer_covers_reduction_workload() {
+    // The satellite workload runs through the same single-capture path.
+    let space = DesignSpace::parametric(64);
+    let cache = TraceCache::new();
+    let runner = SweepRunner::new(4);
+    let r = explore(
+        "reduction4096",
+        &space,
+        &SuccessiveHalving::default(),
+        &runner,
+        &cache,
+    )
+    .unwrap();
+    assert_eq!(r.captures, 1);
+    assert_eq!(r.dataset_kb, 64);
+    assert!(!r.front.is_empty());
+    // On a stride-4 workload some offset-mapped memory must beat the
+    // plain LSB map of the same bank count wherever both were scored.
+    let cycles_of = |arch: MemoryArchKind| {
+        r.scored.iter().find(|s| s.point.arch == arch).map(|s| s.cycles)
+    };
+    if let (Some(lsb), Some(off)) = (
+        cycles_of(MemoryArchKind::banked(16)),
+        cycles_of(MemoryArchKind::banked_offset(16)),
+    ) {
+        assert!(off < lsb, "offset {off} !< lsb {lsb} on strided reduction");
+    }
+}

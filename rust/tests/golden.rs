@@ -91,7 +91,7 @@ fn conflict_oracle_agrees_with_cycle_accurate_model() {
                 a
             })
             .collect();
-        for mapping in [BankMapping::Lsb, BankMapping::Offset] {
+        for mapping in [BankMapping::Lsb, BankMapping::offset()] {
             let map = BankMap::new(banks, mapping);
             let oracle =
                 conflict_oracle(&rt, banks, &ops, mapping.shift()).expect("oracle executes");

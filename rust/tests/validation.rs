@@ -31,6 +31,16 @@ fn all_ffts_all_archs() {
 }
 
 #[test]
+fn all_reductions_all_archs() {
+    let rt = runtime();
+    let checks = validate::validate_reductions(rt.as_ref());
+    assert_eq!(checks.len(), 2 * 12);
+    for c in &checks {
+        assert!(c.passed, "{}: {}", c.name, c.detail);
+    }
+}
+
+#[test]
 fn conflict_oracle_cross_check() {
     let Some(rt) = runtime() else {
         eprintln!("skipping: artifacts not built");

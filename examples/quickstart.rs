@@ -1,55 +1,65 @@
-//! Quickstart: build a machine, run one benchmark, read the paper-style
-//! metrics.
+//! Quickstart: open a `SimtEngine` session, run benchmark cells through
+//! typed requests, and watch the session's trace cache collapse the
+//! cost of repeat work.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use soft_simt::prelude::*;
+use soft_simt::service::wire;
 
 fn main() {
+    // One engine session: worker pool + persistent trace cache. Every
+    // request below shares both.
+    let engine = SimtEngine::new();
+
     // A 16-bank shared memory with the Offset (complex-data) mapping —
-    // the configuration that wins Table III.
+    // the configuration that wins Table III — running the 32x32
+    // transpose the paper benchmarks.
     let arch = MemoryArchKind::Banked { banks: 16, mapping: BankMapping::offset() };
+    let resp = engine
+        .handle(&Request::Run { program: "transpose32".into(), mem: arch })
+        .expect("runs");
+    print!("{}", resp.render());
 
-    // Generate the 32x32 transpose program the paper benchmarks, then run
-    // it on a machine with a random memory image.
-    let program = transpose_program(32);
+    // The same workload on every paper memory: the engine replays the
+    // cached trace — one functional execution total, nine reports.
+    for mem in MemoryArchKind::table3_nine() {
+        let resp = engine
+            .handle(&Request::Run { program: "transpose32".into(), mem })
+            .expect("replays");
+        let Response::Run(report) = resp else { unreachable!() };
+        println!("{:18} {:>8} cycles", report.arch.label(), report.total_cycles());
+    }
+    assert_eq!(engine.functional_executions(), 1);
+    println!("nine memories timed from one functional execution ✓");
+
+    // Typed errors, one lineage: unknown names are usage errors (exit
+    // code 2), simulator faults are execution errors (exit code 1).
+    let err = engine
+        .handle(&Request::Run { program: "quicksort".into(), mem: arch })
+        .unwrap_err();
+    println!("typed error: {err} (exit code {})", err.exit_code());
+
+    // The wire codec the `soft-simt serve` transport speaks: requests
+    // and responses are single JSON lines.
+    let req = Request::Disasm { program: "transpose32".into() };
+    println!("wire request : {}", wire::request_to_json(&req));
+    let line = wire::response_to_json(&engine.handle(&req).unwrap());
+    println!("wire response: {}...", &line[..line.len().min(72)]);
+
+    // The advisor — the paper's §VII decision rule — through the same
+    // session (its exploration reuses the cached transpose trace).
+    let resp = engine
+        .handle(&Request::Advise { program: "transpose32".into() })
+        .expect("advises");
+    let Response::Advise(advice) = &resp else { unreachable!() };
     println!(
-        "program '{}': {} instructions, {} threads",
-        program.name,
-        program.insts.len(),
-        program.threads
+        "advisor: fastest {} / best perf-per-area {}",
+        advice.fastest().arch.label(),
+        advice.most_efficient().arch.label()
     );
-
-    let mut machine = Machine::new(MachineConfig::for_arch(arch).with_mem_words(4096));
-    let mut rng = soft_simt::util::XorShift64::new(1);
-    let image: Vec<u32> = (0..1024).map(|_| rng.next_u32()).collect();
-    machine.load_image(0, &image);
-
-    let report = machine.run_program(&program).expect("runs");
-    println!("total cycles : {}", report.total_cycles());
-    println!("time         : {:.2} us @ {:.0} MHz", report.time_us(), arch.fmax_mhz());
-    println!("load cycles  : {}", report.stats.d_load_cycles);
-    println!("store cycles : {}", report.stats.store_cycles);
-    if let Some(e) = report.r_bank_eff() {
-        println!("R bank eff.  : {:.1}%", e * 100.0);
-    }
-    if let Some(e) = report.w_bank_eff() {
-        println!("W bank eff.  : {:.1}%", e * 100.0);
-    }
-
-    // Check the result against a host transpose.
-    let out = machine.read_image(1024, 1024);
-    for i in 0..32 {
-        for j in 0..32 {
-            assert_eq!(out[j * 32 + i], image[i * 32 + j]);
-        }
-    }
-    println!("transpose verified against host reference ✓");
-
-    // The same cell through the coordinator (what the table renderers use).
-    let result = BenchJob::new("transpose32", arch).run().unwrap();
-    assert_eq!(result.report.total_cycles(), report.total_cycles());
-    println!("coordinator cell agrees ✓");
+    assert_eq!(engine.functional_executions(), 1, "still one execution");
+    println!("session cache shared across request types ✓");
 }

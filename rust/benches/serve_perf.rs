@@ -1,0 +1,95 @@
+//! Bench: service-engine throughput on a mixed batch (repeat runs + the
+//! paper sweep + a design-space exploration) — emits `BENCH_serve.json`
+//! (requests/sec, functional executions per batch) so CI can track the
+//! service layer's trajectory next to `BENCH_sweep.json` and
+//! `BENCH_explore.json`.
+
+use soft_simt::benchkit::Bencher;
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::service::{ExploreStrategy, Request, SimtEngine};
+
+/// The measured unit: a session-shaped batch — one sweep, one explore,
+/// twenty repeat runs across memories.
+fn mixed_batch() -> Vec<Request> {
+    let mut batch = vec![
+        Request::Sweep { all: false },
+        Request::Explore {
+            program: "transpose32".into(),
+            strategy: ExploreStrategy::Halving,
+        },
+    ];
+    let archs = MemoryArchKind::table3_nine();
+    for i in 0..20 {
+        batch.push(Request::Run {
+            program: if i % 2 == 0 { "transpose32".into() } else { "transpose64".into() },
+            mem: archs[i % archs.len()],
+        });
+    }
+    batch
+}
+
+fn main() {
+    let batch = mixed_batch();
+    let runner_workers = SweepRunner::default().workers();
+    println!(
+        "serve bench: mixed batch of {} requests (1 sweep + 1 explore + {} runs), {} workers",
+        batch.len(),
+        batch.len() - 2,
+        runner_workers
+    );
+
+    let mut b = Bencher::new(1, 7);
+
+    // Cold session: fresh engine per iteration — every trace captured.
+    let cold = b
+        .bench("serve_mixed_batch_cold_engine", || {
+            let engine = SimtEngine::new();
+            let responses = engine.handle_batch(&batch);
+            assert!(responses.iter().all(Result::is_ok));
+            engine.functional_executions()
+        })
+        .clone();
+    let cold_engine = SimtEngine::new();
+    cold_engine.handle_batch(&batch).iter().for_each(|r| assert!(r.is_ok()));
+    let executions = cold_engine.functional_executions();
+    println!("{}  ({} functional executions per cold batch)", cold.line(), executions);
+
+    // Warm session: one long-lived engine, repeat batches replay only.
+    let engine = SimtEngine::new();
+    engine.handle_batch(&batch).iter().for_each(|r| assert!(r.is_ok()));
+    let warm_base = engine.functional_executions();
+    let warm = b
+        .bench("serve_mixed_batch_warm_engine", || {
+            let responses = engine.handle_batch(&batch);
+            assert!(responses.iter().all(Result::is_ok));
+            responses.len()
+        })
+        .clone();
+    assert_eq!(
+        engine.functional_executions(),
+        warm_base,
+        "warm batches must not re-execute"
+    );
+    let warm_rps = batch.len() as f64 / warm.median().as_secs_f64();
+    println!("{}  ({:.1} requests/s warm)", warm.line(), warm_rps);
+
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\n  \"bench\": \"serve_mixed_batch\",\n  \"unix_time\": {unix_time},\n  \
+         \"batch_requests\": {n},\n  \"cold_median_ms\": {cold_ms:.3},\n  \
+         \"warm_median_ms\": {warm_ms:.3},\n  \"warm_requests_per_sec\": {warm_rps:.1},\n  \
+         \"functional_executions_per_cold_batch\": {executions}\n}}\n",
+        n = batch.len(),
+        cold_ms = cold.median().as_secs_f64() * 1e3,
+        warm_ms = warm.median().as_secs_f64() * 1e3,
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+    print!("{}", b.report());
+}

@@ -69,16 +69,33 @@ pub fn candidate_space(dataset_kb: u32) -> DesignSpace {
     DesignSpace::from_archs(candidate_archs(), dataset_kb)
 }
 
-/// Run the advisor for a registered program: one exhaustive exploration
-/// of the candidate space (single functional execution, one timing
-/// replay per candidate).
+/// Run the advisor for a registered program with a private runner and a
+/// cold trace cache.
+///
+/// **Deprecated wiring path**: prefer routing through
+/// [`crate::service::SimtEngine`] (a `Request::Advise`), which owns a
+/// persistent cache and worker pool so the advisor's functional
+/// execution is shared with every other request in the session. This
+/// free function remains for one-shot library use and delegates to
+/// [`advise_with`].
 pub fn advise(program: &str) -> Result<Advice, SimError> {
+    advise_with(program, &SweepRunner::default(), &TraceCache::new())
+}
+
+/// Run the advisor against a caller-owned worker pool and trace cache:
+/// one exhaustive exploration of the candidate space (at most a single
+/// functional execution — zero on a warm cache — and one timing replay
+/// per candidate).
+pub fn advise_with(
+    program: &str,
+    runner: &SweepRunner,
+    cache: &TraceCache,
+) -> Result<Advice, SimError> {
     let workload = crate::programs::library::program_by_name(program)
         .ok_or_else(|| SimError::BadProgram(format!("unknown program '{program}'")))?;
     let dataset_kb = workload.dataset_kb();
     let space = candidate_space(dataset_kb);
-    let cache = TraceCache::new();
-    let result = explore(program, &space, &Exhaustive, &SweepRunner::default(), &cache)?;
+    let result = explore(program, &space, &Exhaustive, runner, cache)?;
     let mut candidates: Vec<Candidate> = result
         .scored
         .iter()
@@ -194,5 +211,16 @@ mod tests {
     #[test]
     fn unknown_program_errors() {
         assert!(advise("nope").is_err());
+    }
+
+    #[test]
+    fn advise_with_reuses_warm_cache() {
+        let runner = SweepRunner::new(2);
+        let cache = TraceCache::new();
+        let a = advise_with("transpose32", &runner, &cache).unwrap();
+        assert_eq!(cache.len(), 1);
+        let b = advise_with("transpose32", &runner, &cache).unwrap();
+        assert_eq!(cache.len(), 1, "warm cache: no second functional execution");
+        assert_eq!(a.candidates.len(), b.candidates.len());
     }
 }

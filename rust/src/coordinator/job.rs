@@ -89,6 +89,11 @@ impl BenchJob {
 
     /// Materialize the workload, build the machine, load the input image
     /// and run (execute + replay in lockstep). Returns the full report.
+    ///
+    /// **Deprecated wiring path** for external consumers: prefer a
+    /// [`crate::service::SimtEngine`] session (`Request::Run`), which
+    /// serves the same report from its shared trace cache — N runs of
+    /// one workload cost one functional execution instead of N.
     pub fn run(&self) -> Result<BenchResult, SimError> {
         let workload = self.workload()?;
         let mut machine = Machine::new(self.config_for(&workload));

@@ -93,6 +93,11 @@ impl SweepRunner {
     /// Cycle-identical to [`Self::run`] (pinned by
     /// `rust/tests/replay_parity.rs`), ~`A×` cheaper for an
     /// `A`-architecture sweep.
+    ///
+    /// **Deprecated wiring path** for external consumers: prefer a
+    /// [`crate::service::SimtEngine`] session (`Request::Sweep`), whose
+    /// persistent cache also shares these traces with every other
+    /// request. The per-call cache here is cold every time.
     pub fn run_cached(&self, jobs: &[BenchJob]) -> Result<Vec<BenchResult>, SimError> {
         let cache = TraceCache::new();
         self.run_with_cache(jobs, &cache)

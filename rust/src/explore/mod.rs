@@ -49,6 +49,11 @@ use crate::sim::exec::SimError;
 /// Explore `space` for the named workload: one functional execution (at
 /// most — zero on a warm `cache`), one trace replay per distinct
 /// architecture the strategy pays for, one footprint lookup per point.
+///
+/// **Deprecated wiring path** for external consumers: prefer a
+/// [`crate::service::SimtEngine`] session (`Request::Explore`), which
+/// supplies the runner and a persistent session cache — an exploration
+/// after a sweep of the same workload captures nothing.
 pub fn explore(
     program: &str,
     space: &DesignSpace,

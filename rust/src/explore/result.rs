@@ -4,7 +4,7 @@
 use super::eval::PointCost;
 use super::pareto::{Cost, ParetoFront};
 use super::space::DesignPoint;
-use crate::util::fmt::{with_commas, TextTable};
+use crate::util::fmt::{json_str, with_commas, TextTable};
 
 /// One exactly-evaluated design point.
 #[derive(Debug, Clone, Copy)]
@@ -140,23 +140,6 @@ impl ExploreResult {
         out.push_str("\n}\n");
         out
     }
-}
-
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 fn json_points(points: &[ScoredPoint], indent: &str) -> String {

@@ -185,7 +185,7 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
         let op: Opcode = mn
             .to_ascii_lowercase()
             .parse()
-            .map_err(|e: String| err(line_no, e))?;
+            .map_err(|e: super::opcode::UnknownMnemonic| err(line_no, e.to_string()))?;
         let ops = operands(rest);
         let imm_or_label = |tok: &str| -> Result<u16, AsmError> {
             if let Some(&target) = labels.get(tok.trim()) {

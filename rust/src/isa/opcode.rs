@@ -175,14 +175,27 @@ impl fmt::Display for Opcode {
     }
 }
 
+/// Typed mnemonic-lookup failure (carries the rejected token, so the
+/// assembler can report it with line context).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownMnemonic(pub String);
+
+impl fmt::Display for UnknownMnemonic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown mnemonic '{}'", self.0)
+    }
+}
+
+impl std::error::Error for UnknownMnemonic {}
+
 impl FromStr for Opcode {
-    type Err = String;
+    type Err = UnknownMnemonic;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         Opcode::ALL
             .iter()
             .copied()
             .find(|o| o.mnemonic() == s)
-            .ok_or_else(|| format!("unknown mnemonic '{s}'"))
+            .ok_or_else(|| UnknownMnemonic(s.to_string()))
     }
 }
 

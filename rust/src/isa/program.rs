@@ -47,17 +47,32 @@ impl Program {
     }
 
     /// Decode a binary image.
-    pub fn decode(name: impl Into<String>, threads: u32, words: &[u64]) -> Result<Self, String> {
+    pub fn decode(name: impl Into<String>, threads: u32, words: &[u64]) -> Result<Self, DecodeError> {
         let insts = words
             .iter()
             .enumerate()
-            .map(|(pc, &w)| {
-                Instruction::decode(w).ok_or_else(|| format!("invalid instruction at pc {pc}"))
-            })
+            .map(|(pc, &w)| Instruction::decode(w).ok_or(DecodeError { pc, word: w }))
             .collect::<Result<Vec<_>, _>>()?;
         Ok(Self::new(name, threads, insts))
     }
 }
+
+/// Typed binary-decode failure: the offending word and its pc. Converts
+/// into [`crate::sim::exec::SimError`] (and from there into the service
+/// layer's `ServiceError`), so no `String`-typed error escapes the ISA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError {
+    pub pc: usize,
+    pub word: u64,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid instruction at pc {} (word {:#012x})", self.pc, self.word)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 #[cfg(test)]
 mod tests {

@@ -51,6 +51,16 @@
 //! space of hypothetical memories (banks 2–32 × mapping × ports ×
 //! capacity), Pareto-searched from a single functional execution per
 //! workload (DESIGN.md §Explore).
+//!
+//! ## The service layer (DESIGN.md §Service)
+//!
+//! [`service`] is how the crate is consumed: a long-lived
+//! [`service::SimtEngine`] session (worker pool + persistent trace
+//! cache) answering typed [`service::Request`]s — every CLI command is
+//! one — with unified [`service::ServiceError`] errors, plus a
+//! line-delimited JSON wire codec and the `soft-simt serve` stdin/stdout
+//! transport. A batch of {paper sweep + explore + N repeat runs} costs
+//! exactly one functional execution per distinct workload.
 
 pub mod area;
 pub mod benchkit;
@@ -60,16 +70,28 @@ pub mod isa;
 pub mod mem;
 pub mod programs;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 
 /// Convenient re-exports of the most commonly used types.
+///
+/// The **preferred entry point** for consumers is the service layer:
+/// [`SimtEngine`](crate::service::SimtEngine) + typed
+/// [`Request`](crate::service::Request)s. The lower-level pieces
+/// (`SweepRunner`, `TraceCache`, `BenchJob`, `explore`) remain exported
+/// for tests and embedders, but hand-wiring them is the deprecated path
+/// — an engine session shares one cache and worker pool across
+/// everything.
 pub mod prelude {
     pub use crate::area::{footprint::Footprint, resources::Resources, table1};
     pub use crate::coordinator::{
         job::{BenchJob, BenchResult, TraceCache},
         report,
         runner::SweepRunner,
+    };
+    pub use crate::service::{
+        ExploreStrategy, Request, Response, ServiceError, SimtEngine, TableKind,
     };
     pub use crate::explore::{
         explore, DesignPoint, DesignSpace, Exhaustive, ExploreResult, ParetoFront, SearchStrategy,

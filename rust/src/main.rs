@@ -11,42 +11,49 @@
 //! soft-simt asm FILE [-m MEM]       # assemble + run a custom program
 //! soft-simt disasm PROG             # disassemble a generated program
 //! soft-simt list                    # programs and memory architectures
+//! soft-simt serve                   # JSON requests on stdin → stdout
 //! ```
 //!
-//! (clap is unavailable offline; parsing is hand-rolled.)
+//! The CLI is a thin client of the service layer: every command
+//! constructs a typed [`Request`], routes it through one
+//! [`SimtEngine`] session, and renders the [`Response`]. Errors are the
+//! unified [`ServiceError`]; its `exit_code()` is the whole exit-code
+//! policy. (clap is unavailable offline; parsing is hand-rolled.)
 
-use soft_simt::coordinator::{job::BenchJob, job::TraceCache, report, runner::SweepRunner, validate};
-use soft_simt::explore::{self, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
-use soft_simt::isa::asm;
-use soft_simt::mem::arch::MemoryArchKind;
-use soft_simt::programs::library;
-use soft_simt::runtime::ArtifactRuntime;
-use soft_simt::sim::config::MachineConfig;
-use soft_simt::sim::machine::Machine;
-use soft_simt::sim::stats::RunReport;
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::service::{
+    wire, ExploreStrategy, Request, Response, ServiceError, SimtEngine, TableKind,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let code = match args.first().map(String::as_str) {
-        Some("table1") => cmd_table1(),
-        Some("table2") => cmd_table("table2", &args[1..]),
-        Some("table3") => cmd_table("table3", &args[1..]),
-        Some("fig9") => cmd_table("fig9", &args[1..]),
-        Some("sweep") => cmd_sweep(&args[1..]),
-        Some("run") => cmd_run(&args[1..]),
-        Some("advise") => cmd_advise(&args[1..]),
-        Some("explore") => cmd_explore(&args[1..]),
-        Some("validate") => cmd_validate(&args[1..]),
-        Some("asm") => cmd_asm(&args[1..]),
-        Some("disasm") => cmd_disasm(&args[1..]),
-        Some("list") => cmd_list(),
+    let engine = SimtEngine::new();
+    let outcome = match args.first().map(String::as_str) {
+        Some("table1") => cmd_table(&engine, TableKind::Table1),
+        Some("table2") => cmd_table(&engine, TableKind::Table2),
+        Some("table3") => cmd_table(&engine, TableKind::Table3),
+        Some("fig9") => cmd_table(&engine, TableKind::Fig9),
+        Some("sweep") => cmd_sweep(&engine, &args[1..]),
+        Some("run") => cmd_run(&engine, &args[1..]),
+        Some("advise") => cmd_advise(&engine, &args[1..]),
+        Some("explore") => cmd_explore(&engine, &args[1..]),
+        Some("validate") => cmd_validate(&engine, &args[1..]),
+        Some("asm") => cmd_asm(&engine, &args[1..]),
+        Some("disasm") => cmd_disasm(&engine, &args[1..]),
+        Some("list") => cmd_list(&engine),
+        Some("serve") => cmd_serve(&engine),
         Some("help") | Some("--help") | Some("-h") | None => {
             print!("{HELP}");
-            0
+            Ok(0)
         }
-        Some(other) => {
-            eprintln!("unknown command '{other}'\n{HELP}");
-            2
+        Some(other) => Err(ServiceError::BadRequest(format!("unknown command '{other}'\n{HELP}"))),
+    };
+    // The single exit point: render the unified error, map to its code.
+    let code = match outcome {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("{e}");
+            e.exit_code()
         }
     };
     std::process::exit(code);
@@ -71,6 +78,10 @@ USAGE:
   soft-simt asm FILE [-m MEM]           assemble and run a custom .asm file
   soft-simt disasm PROG                 print a generated program's assembly
   soft-simt list                        list programs and memory architectures
+  soft-simt serve                       read line-delimited JSON requests on
+                                        stdin, stream responses to stdout
+                                        (one engine session: traces shared
+                                        across all requests)
 ";
 
 fn flag_value<'a>(args: &'a [String], names: &[&str]) -> Option<&'a str> {
@@ -79,288 +90,138 @@ fn flag_value<'a>(args: &'a [String], names: &[&str]) -> Option<&'a str> {
         .map(|w| w[1].as_str())
 }
 
-fn parse_arch(s: &str) -> Result<MemoryArchKind, String> {
-    MemoryArchKind::parse(s).ok_or_else(|| {
-        format!(
-            "unknown memory '{s}' (try one of: {})",
-            MemoryArchKind::table3_nine()
-                .iter()
-                .map(|a| a.label())
-                .collect::<Vec<_>>()
-                .join(", ")
-        )
-    })
+fn required_program(cmd: &str, args: &[String]) -> Result<String, ServiceError> {
+    flag_value(args, &["-p", "--program"])
+        .map(String::from)
+        .ok_or_else(|| ServiceError::BadRequest(format!("{cmd}: missing -p PROGRAM")))
 }
 
-fn run_sweep(jobs: &[BenchJob]) -> Option<Vec<soft_simt::coordinator::job::BenchResult>> {
-    let runner = SweepRunner::default();
+/// Progress note for sweep-backed commands (stderr; the engine itself
+/// never prints).
+fn announce_sweep(engine: &SimtEngine, cells: usize) {
     eprintln!(
         "running {} benchmark cells on {} workers (trace-cached: execute once, replay per arch)...",
-        jobs.len(),
-        runner.workers()
+        cells,
+        engine.runner().workers()
     );
-    match runner.run_cached(jobs) {
-        Ok(r) => Some(r),
-        Err(e) => {
-            eprintln!("sweep failed: {e}");
-            None
-        }
+}
+
+fn cmd_table(engine: &SimtEngine, which: TableKind) -> Result<i32, ServiceError> {
+    if which.needs_sweep() {
+        announce_sweep(engine, BenchJob::paper_sweep().len());
     }
+    let resp = engine.handle(&Request::Table(which))?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
 }
 
-fn cmd_table1() -> i32 {
-    print!("{}", report::render_table1());
-    0
-}
-
-fn cmd_table(which: &str, _rest: &[String]) -> i32 {
-    let jobs = BenchJob::paper_sweep();
-    let Some(results) = run_sweep(&jobs) else { return 1 };
-    match which {
-        "table2" => print!("{}", report::render_table2(&results)),
-        "table3" => print!("{}", report::render_table3(&results)),
-        _ => print!("{}", report::render_fig9(&results)),
-    }
-    0
-}
-
-fn cmd_sweep(rest: &[String]) -> i32 {
+fn cmd_sweep(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
     let all = rest.iter().any(|a| a == "--all");
-    let jobs = if all { BenchJob::extended_sweep() } else { BenchJob::paper_sweep() };
-    let Some(results) = run_sweep(&jobs) else { return 1 };
-    print!("{}", report::render_table2(&results));
-    print!("{}", report::render_table3(&results));
-    if all {
-        print!("{}", report::render_reduction(&results));
-    }
-    print!("{}", report::render_fig9(&results));
+    let cells =
+        if all { BenchJob::extended_sweep().len() } else { BenchJob::paper_sweep().len() };
+    announce_sweep(engine, cells);
+    let resp = engine.handle(&Request::Sweep { all })?;
+    print!("{}", resp.render());
     if let Some(path) = flag_value(rest, &["--csv"]) {
-        if let Err(e) = std::fs::write(path, report::sweep_csv(&results)) {
-            eprintln!("writing {path}: {e}");
-            return 1;
-        }
+        let Response::Sweep(sweep) = &resp else { unreachable!("sweep answers sweep") };
+        std::fs::write(path, sweep.csv())
+            .map_err(|e| ServiceError::io(format!("writing {path}"), &e))?;
         eprintln!("wrote {path}");
     }
-    0
+    Ok(resp.exit_code())
 }
 
-fn print_report(r: &RunReport) {
-    let s = &r.stats;
-    println!("program      {}", r.program);
-    println!("memory       {}", r.arch);
-    println!("threads      {}", r.threads);
-    println!(
-        "INT / Imm / FP / Other cycles: {} / {} / {} / {}",
-        s.int_cycles, s.imm_cycles, s.fp_cycles, s.other_cycles
-    );
-    println!("D load   {} cycles over {} ops", s.d_load_cycles, s.d_load_ops);
-    if s.tw_load_ops > 0 {
-        println!("TW load  {} cycles over {} ops", s.tw_load_cycles, s.tw_load_ops);
-    }
-    println!("store    {} cycles over {} ops", s.store_cycles, s.store_ops);
-    println!("stalls   write-buffer {} / drain {}", s.wbuf_stall_cycles, s.drain_cycles);
-    println!(
-        "total    {} cycles  ({:.2} us @ {:.0} MHz)",
-        r.total_cycles(),
-        r.time_us(),
-        r.arch.fmax_mhz()
-    );
-    if let Some(e) = r.r_bank_eff() {
-        println!("R bank eff.  {:.1}%", e * 100.0);
-    }
-    if let Some(e) = r.tw_bank_eff() {
-        println!("TW bank eff. {:.1}%", e * 100.0);
-    }
-    if let Some(e) = r.w_bank_eff() {
-        println!("W bank eff.  {:.1}%", e * 100.0);
-    }
-    println!("compute eff. {:.1}%", r.compute_efficiency() * 100.0);
+fn cmd_run(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
+    let program = required_program("run", rest)?;
+    let label = flag_value(rest, &["-m", "--mem"]).unwrap_or("16-banks-offset");
+    let mem = soft_simt::service::parse_arch(label)?;
+    let resp = engine.handle(&Request::Run { program, mem })?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
 }
 
-fn cmd_run(rest: &[String]) -> i32 {
-    let Some(program) = flag_value(rest, &["-p", "--program"]) else {
-        eprintln!("run: missing -p PROGRAM");
-        return 2;
-    };
-    let arch = match parse_arch(flag_value(rest, &["-m", "--mem"]).unwrap_or("16-banks-offset")) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
-    match BenchJob::new(program, arch).run() {
-        Ok(result) => {
-            print_report(&result.report);
-            0
-        }
-        Err(e) => {
-            eprintln!("run failed: {e}");
-            1
-        }
-    }
+fn cmd_advise(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
+    let program = required_program("advise", rest)?;
+    let resp = engine.handle(&Request::Advise { program })?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
 }
 
-fn cmd_advise(rest: &[String]) -> i32 {
-    let Some(program) = flag_value(rest, &["-p", "--program"]) else {
-        eprintln!("advise: missing -p PROGRAM");
-        return 2;
+fn cmd_explore(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
+    let program = required_program("explore", rest)?;
+    let strategy = match flag_value(rest, &["--strategy"]) {
+        None => ExploreStrategy::default(),
+        Some(s) => ExploreStrategy::parse(s).ok_or_else(|| {
+            ServiceError::BadRequest(format!("unknown strategy '{s}' (try: exhaustive, halving)"))
+        })?,
     };
-    match soft_simt::coordinator::advisor::advise(program) {
-        Ok(advice) => {
-            print!("{}", advice.render());
-            0
-        }
-        Err(e) => {
-            eprintln!("advise failed: {e}");
-            1
-        }
-    }
-}
-
-fn cmd_explore(rest: &[String]) -> i32 {
-    let Some(program) = flag_value(rest, &["-p", "--program"]) else {
-        eprintln!("explore: missing -p PROGRAM");
-        return 2;
-    };
-    let Some(workload) = library::program_by_name(program) else {
-        eprintln!("unknown program '{program}' (see `soft-simt list`)");
-        return 2;
-    };
-    let strategy_name = flag_value(rest, &["--strategy"]).unwrap_or("halving");
-    let strategy: Box<dyn SearchStrategy> = match strategy_name {
-        "exhaustive" | "grid" => Box::new(Exhaustive),
-        "halving" | "pruning" => Box::new(SuccessiveHalving::default()),
-        other => {
-            eprintln!("unknown strategy '{other}' (try: exhaustive, halving)");
-            return 2;
-        }
-    };
-    let space = DesignSpace::parametric(workload.dataset_kb());
-    let runner = SweepRunner::default();
-    let cache = TraceCache::new();
+    // Progress note: the engine exposes the exact space its dispatch
+    // will build, so the note can never drift from the search.
+    let space = engine.explore_space(&program)?;
     eprintln!(
         "exploring {} design points ({} architectures) for {program} on {} workers...",
         space.points().len(),
         space.arch_count(),
-        runner.workers()
+        engine.runner().workers()
     );
-    match explore::explore(program, &space, strategy.as_ref(), &runner, &cache) {
-        Ok(result) => {
-            // The subsystem's guarantee, asserted where the user can see
-            // it: the whole space was served by one functional execution.
-            assert_eq!(result.captures, 1, "explore must execute the workload exactly once");
-            print!("{}", result.render());
-            if let Some(path) = flag_value(rest, &["--json"]) {
-                if let Err(e) = std::fs::write(path, result.to_json()) {
-                    eprintln!("writing {path}: {e}");
-                    return 1;
-                }
-                eprintln!("wrote {path}");
-            }
-            0
-        }
-        Err(e) => {
-            eprintln!("explore failed: {e}");
-            1
-        }
+    let resp = engine.handle(&Request::Explore { program, strategy })?;
+    let Response::Explore(result) = &resp else { unreachable!("explore answers explore") };
+    // The subsystem's guarantee, asserted where the user can see it: a
+    // fresh CLI session serves the whole space from one execution.
+    assert_eq!(result.captures, 1, "explore must execute the workload exactly once");
+    print!("{}", resp.render());
+    if let Some(path) = flag_value(rest, &["--json"]) {
+        std::fs::write(path, result.to_json())
+            .map_err(|e| ServiceError::io(format!("writing {path}"), &e))?;
+        eprintln!("wrote {path}");
     }
+    Ok(resp.exit_code())
 }
 
-fn cmd_validate(rest: &[String]) -> i32 {
-    let dir = flag_value(rest, &["--artifacts"]).unwrap_or("artifacts");
-    let rt = match ArtifactRuntime::new(dir) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("PJRT unavailable ({e:#}); validating against host references only");
-            None
-        }
-    };
-    let checks = validate::validate_all(rt.as_ref());
-    let mut failed = 0;
-    for c in &checks {
-        println!("[{}] {} — {}", if c.passed { "PASS" } else { "FAIL" }, c.name, c.detail);
-        if !c.passed {
-            failed += 1;
+fn cmd_validate(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
+    let artifacts_dir = flag_value(rest, &["--artifacts"]).map(String::from);
+    let resp = engine.handle(&Request::Validate { artifacts_dir })?;
+    if let Response::Validate(v) = &resp {
+        if let Some(note) = &v.pjrt_note {
+            eprintln!("{note}");
         }
     }
-    println!("\n{} checks, {} failed", checks.len(), failed);
-    if failed > 0 {
-        1
-    } else {
-        0
-    }
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
 }
 
-fn cmd_asm(rest: &[String]) -> i32 {
+fn cmd_asm(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
     let Some(path) = rest.first() else {
-        eprintln!("asm: missing FILE");
-        return 2;
+        return Err(ServiceError::BadRequest("asm: missing FILE".into()));
     };
-    let src = match std::fs::read_to_string(path) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("reading {path}: {e}");
-            return 1;
-        }
-    };
-    let program = match asm::assemble(&src) {
-        Ok(p) => p,
-        Err(e) => {
-            eprintln!("{path}: {e}");
-            return 1;
-        }
-    };
-    let arch = match parse_arch(flag_value(rest, &["-m", "--mem"]).unwrap_or("16-banks")) {
-        Ok(a) => a,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
-    let mut machine = Machine::new(MachineConfig::for_arch(arch));
-    match machine.run_program(&program) {
-        Ok(report) => {
-            print_report(&report);
-            0
-        }
-        Err(e) => {
-            eprintln!("simulation failed: {e}");
-            1
-        }
-    }
+    let source = std::fs::read_to_string(path)
+        .map_err(|e| ServiceError::io(format!("reading {path}"), &e))?;
+    let label = flag_value(rest, &["-m", "--mem"]).unwrap_or("16-banks");
+    let mem = soft_simt::service::parse_arch(label)?;
+    let resp = engine.handle(&Request::Asm { source, mem })?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
 }
 
-fn cmd_disasm(rest: &[String]) -> i32 {
+fn cmd_disasm(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
     let Some(name) = rest.first() else {
-        eprintln!("disasm: missing PROGRAM name");
-        return 2;
+        return Err(ServiceError::BadRequest("disasm: missing PROGRAM name".into()));
     };
-    match library::program_by_name(name) {
-        Some(w) => {
-            print!("{}", asm::disassemble(w.program()));
-            0
-        }
-        None => {
-            eprintln!("unknown program '{name}' (see `soft-simt list`)");
-            1
-        }
-    }
+    let resp = engine.handle(&Request::Disasm { program: name.clone() })?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
 }
 
-fn cmd_list() -> i32 {
-    println!("programs:");
-    for p in library::program_names() {
-        println!("  {p}");
-    }
-    println!("\nmemory architectures (paper set):");
-    for a in MemoryArchKind::table3_nine() {
-        println!("  {}  (fmax {:.0} MHz)", a.label(), a.fmax_mhz());
-    }
-    println!(
-        "\nparametric space (see `explore`): banked 2-32 banks x {{lsb, offsetN, xor}} \
-         mappings, multiport {{1,2,4,8}}R x {{1,2}}W [-VB];\nlabels like 'banked8-offset3', \
-         '2r-1w' parse anywhere a memory is accepted"
-    );
-    0
+fn cmd_list(engine: &SimtEngine) -> Result<i32, ServiceError> {
+    let resp = engine.handle(&Request::List)?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
+}
+
+fn cmd_serve(engine: &SimtEngine) -> Result<i32, ServiceError> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    wire::serve(engine, stdin.lock(), stdout.lock())
+        .map_err(|e| ServiceError::io("serve loop", &e))?;
+    Ok(0)
 }

@@ -6,6 +6,14 @@ use super::multiport::MultiPortMemory;
 use super::{timing, LaneMask, LANES};
 use std::fmt;
 
+/// One-line statement of everything [`MemoryArchKind::parse`] accepts
+/// beyond the paper's nine labels. Stated exactly once: the CLI `list`
+/// output and the service layer's unknown-memory error both quote this
+/// string, so the hint can never drift from the grammar.
+pub const PARSE_GRAMMAR: &str = "banked 2-32 banks x {lsb, offsetN, xor} mappings, multiport \
+     {1,2,4,8}R x {1,2}W [-VB]; labels like 'banked8-offset3', '2r-1w' parse anywhere a memory \
+     is accepted";
+
 /// Whether an operation reads or writes (controllers differ, §III-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpKind {
@@ -188,7 +196,8 @@ impl MemoryArchKind {
     /// paper-style labels case-insensitively and shorthands (`banked16`,
     /// `banked16-offset`, `banked8-offset3`, `4r1w`, `2r-1w`, `4r1w-vb`).
     /// Round-trips `label()` for **every** valid descriptor — pinned by
-    /// the `parse_label_roundtrip_property` test.
+    /// the `parse_label_roundtrip_property` test. The full accepted
+    /// grammar is summarized in [`PARSE_GRAMMAR`].
     pub fn parse(s: &str) -> Option<Self> {
         let t = s.to_ascii_lowercase().replace([' ', '_'], "-");
         if let Some(mp) = Self::parse_multiport(&t) {

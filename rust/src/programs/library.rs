@@ -113,34 +113,59 @@ pub fn program_names() -> Vec<&'static str> {
     ]
 }
 
-/// Build a workload by name (`transposeN` for N ∈ {32, 64, 128} and other
-/// powers of two 4..=1024; `fft4096rR` for R ∈ {4, 8, 16}; `reductionN`
-/// for powers of two 32..=4096).
-pub fn program_by_name(name: &str) -> Option<Workload> {
+/// A parsed-but-not-built program name: the grammar and bounds checks
+/// without any codegen, so name validation is free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ParsedName {
+    Transpose(u32),
+    Fft(u32),
+    Reduction(u32),
+}
+
+/// Parse a program name (`transposeN` for powers of two 4..=1024;
+/// `fft4096rR` for R ∈ {4, 8, 16}; `reductionN` for powers of two
+/// 32..=4096) without constructing the workload.
+fn parse_name(name: &str) -> Option<ParsedName> {
     if let Some(n) = name.strip_prefix("transpose") {
         let n: u32 = n.parse().ok()?;
-        if !n.is_power_of_two() || !(4..=1024).contains(&n) {
-            return None;
-        }
-        return Some(Workload::Transpose(TransposePlan::new(n), transpose_program(n)));
+        return (n.is_power_of_two() && (4..=1024).contains(&n))
+            .then_some(ParsedName::Transpose(n));
     }
     if let Some(r) = name.strip_prefix("fft4096r") {
         let r: u32 = r.parse().ok()?;
-        if !matches!(r, 4 | 8 | 16) {
-            return None;
-        }
-        let (plan, program) = fft_program(r);
-        return Some(Workload::Fft(plan, program));
+        return matches!(r, 4 | 8 | 16).then_some(ParsedName::Fft(r));
     }
     if let Some(n) = name.strip_prefix("reduction") {
         let n: u32 = n.parse().ok()?;
-        if !n.is_power_of_two() || !(32..=4096).contains(&n) {
-            return None;
-        }
-        let (plan, program) = reduction_program(n);
-        return Some(Workload::Reduction(plan, program));
+        return (n.is_power_of_two() && (32..=4096).contains(&n))
+            .then_some(ParsedName::Reduction(n));
     }
     None
+}
+
+/// Whether `name` is a buildable program, without building it — the
+/// cheap validity probe the service layer's hot path uses (a warm
+/// cached `run` must not pay FFT codegen just to re-validate a name).
+pub fn is_known_program(name: &str) -> bool {
+    parse_name(name).is_some()
+}
+
+/// Build a workload by name (see [`is_known_program`] for the grammar:
+/// `transposeN`, `fft4096rR`, `reductionN`).
+pub fn program_by_name(name: &str) -> Option<Workload> {
+    match parse_name(name)? {
+        ParsedName::Transpose(n) => {
+            Some(Workload::Transpose(TransposePlan::new(n), transpose_program(n)))
+        }
+        ParsedName::Fft(r) => {
+            let (plan, program) = fft_program(r);
+            Some(Workload::Fft(plan, program))
+        }
+        ParsedName::Reduction(n) => {
+            let (plan, program) = reduction_program(n);
+            Some(Workload::Reduction(plan, program))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +188,20 @@ mod tests {
         assert!(program_by_name("reduction100").is_none());
         assert!(program_by_name("reduction8192").is_none());
         assert!(program_by_name("quicksort").is_none());
+    }
+
+    #[test]
+    fn is_known_program_agrees_with_builder() {
+        for name in [
+            "transpose32", "transpose33", "transpose1024", "transpose2048", "fft4096r8",
+            "fft4096r5", "reduction4096", "reduction100", "reduction8192", "quicksort", "",
+        ] {
+            assert_eq!(
+                is_known_program(name),
+                program_by_name(name).is_some(),
+                "probe and builder disagree on '{name}'"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! `SimtEngine` — the long-lived session every consumer routes through.
+//!
+//! One engine owns the worker pool ([`SweepRunner`]), a persistent
+//! [`TraceCache`], and the wiring to the program library, the footprint
+//! model and the explorer. Requests go through [`SimtEngine::handle`]
+//! (or [`SimtEngine::handle_batch`], responses in order), and every
+//! operation shares the engine's cache: a 51-cell sweep plus an
+//! exploration plus any number of repeat `Run`s costs exactly one
+//! functional execution per distinct `(program, seed)` — six for the
+//! paper set, counted by [`SimtEngine::functional_executions`] and
+//! asserted in `rust/tests/service.rs`.
+//!
+//! The engine is `&self` throughout (the cache is internally locked, the
+//! runner is immutable), so one engine can sit behind a transport and
+//! serve callers without external synchronization.
+
+use super::error::ServiceError;
+use super::request::{ExploreStrategy, Request, TableKind};
+use super::response::{Listing, Response, SweepOutput, ValidationOutput};
+use crate::coordinator::advisor;
+use crate::coordinator::job::{BenchJob, TraceCache};
+use crate::coordinator::report;
+use crate::coordinator::runner::SweepRunner;
+use crate::coordinator::validate;
+use crate::explore::{self, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
+use crate::isa::asm;
+use crate::programs::library;
+use crate::runtime::ArtifactRuntime;
+use crate::sim::config::MachineConfig;
+use crate::sim::machine::Machine;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The service session: worker pool + persistent trace cache + request
+/// dispatch. See the module docs.
+#[derive(Debug, Default)]
+pub struct SimtEngine {
+    runner: SweepRunner,
+    cache: TraceCache,
+    /// Functional executions this session has paid for: trace captures
+    /// (each inserts one cache entry) plus coupled runs of custom
+    /// `Asm` programs (which have no library cache key). Validation's
+    /// functional checks are deliberately excluded — they verify *data*,
+    /// which replay by construction cannot, so they are not a cost the
+    /// cache could ever share.
+    executions: AtomicU64,
+}
+
+impl SimtEngine {
+    /// An engine with the default worker pool (one worker per core,
+    /// capped at 16).
+    pub fn new() -> Self {
+        Self::with_runner(SweepRunner::default())
+    }
+
+    /// An engine over a caller-sized worker pool.
+    pub fn with_runner(runner: SweepRunner) -> Self {
+        Self { runner, cache: TraceCache::new(), executions: AtomicU64::new(0) }
+    }
+
+    pub fn runner(&self) -> &SweepRunner {
+        &self.runner
+    }
+
+    /// The session's trace cache (shared across every request).
+    pub fn cache(&self) -> &TraceCache {
+        &self.cache
+    }
+
+    /// Functional executions performed so far (see the field docs). The
+    /// engine's defining economy: repeat requests over cached workloads
+    /// leave this counter unchanged. Exact for sequential request
+    /// streams (the CLI, `serve`, batches); overlapping `handle` calls
+    /// from multiple threads still share traces but may attribute a
+    /// concurrent capture to both windows.
+    pub fn functional_executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    /// Serve one request. Errors are per-request values, never process
+    /// state: the engine stays fully usable after any failure.
+    pub fn handle(&self, req: &Request) -> Result<Response, ServiceError> {
+        // Every capture path lands exactly one new entry in the cache,
+        // so the cache-size delta *is* the functional-execution count
+        // (Asm runs are counted explicitly in dispatch).
+        let before = self.cache.len() as u64;
+        let result = self.dispatch(req);
+        let after = self.cache.len() as u64;
+        self.executions.fetch_add(after.saturating_sub(before), Ordering::Relaxed);
+        result
+    }
+
+    /// Serve a batch, responses in request order. The whole batch shares
+    /// the engine cache, so `{paper sweep, explore, N repeat runs}`
+    /// costs the same six functional executions as the sweep alone. A
+    /// failing request yields its error in place; later requests still
+    /// run.
+    pub fn handle_batch(&self, reqs: &[Request]) -> Vec<Result<Response, ServiceError>> {
+        reqs.iter().map(|r| self.handle(r)).collect()
+    }
+
+    fn dispatch(&self, req: &Request) -> Result<Response, ServiceError> {
+        match req {
+            Request::Run { program, mem } => {
+                self.require_program(program)?;
+                let job = BenchJob::new(program.clone(), *mem);
+                let trace = self.cache.get_or_capture(&job)?;
+                let result = job.replay_trace(&trace)?;
+                Ok(Response::Run(result.report))
+            }
+            Request::Sweep { all } => {
+                let jobs =
+                    if *all { BenchJob::extended_sweep() } else { BenchJob::paper_sweep() };
+                let results = self.runner.run_with_cache(&jobs, &self.cache)?;
+                Ok(Response::Sweep(SweepOutput { all: *all, results }))
+            }
+            Request::Table(which) => {
+                let text = if which.needs_sweep() {
+                    let jobs = BenchJob::paper_sweep();
+                    let results = self.runner.run_with_cache(&jobs, &self.cache)?;
+                    match which {
+                        TableKind::Table2 => report::render_table2(&results),
+                        TableKind::Table3 => report::render_table3(&results),
+                        _ => report::render_fig9(&results),
+                    }
+                } else {
+                    report::render_table1()
+                };
+                Ok(Response::Table { which: *which, text })
+            }
+            Request::Advise { program } => {
+                self.require_program(program)?;
+                let advice = advisor::advise_with(program, &self.runner, &self.cache)?;
+                Ok(Response::Advise(advice))
+            }
+            Request::Explore { program, strategy } => {
+                let space = self.explore_space(program)?;
+                let halving = SuccessiveHalving::default();
+                let strategy: &dyn SearchStrategy = match strategy {
+                    ExploreStrategy::Exhaustive => &Exhaustive,
+                    ExploreStrategy::Halving => &halving,
+                };
+                let result =
+                    explore::explore(program, &space, strategy, &self.runner, &self.cache)?;
+                // The subsystem invariant, relaxed by the session cache:
+                // at most one functional execution, zero when a prior
+                // request already captured this workload.
+                debug_assert!(result.captures <= 1);
+                Ok(Response::Explore(result))
+            }
+            Request::Validate { artifacts_dir } => {
+                let dir = artifacts_dir.as_deref().unwrap_or("artifacts");
+                let (rt, note) = match ArtifactRuntime::new(dir) {
+                    Ok(rt) => (Some(rt), None),
+                    Err(e) => (
+                        None,
+                        Some(format!(
+                            "PJRT unavailable ({e}); validating against host references only"
+                        )),
+                    ),
+                };
+                let checks = validate::validate_all(rt.as_ref());
+                Ok(Response::Validate(ValidationOutput { checks, pjrt_note: note }))
+            }
+            Request::Asm { source, mem } => {
+                let program = asm::assemble(source)?;
+                let mut machine = Machine::new(MachineConfig::for_arch(*mem));
+                let report = machine.run_program(&program)?;
+                // A custom program has no library cache key; its coupled
+                // run is a functional execution the counter must see.
+                self.executions.fetch_add(1, Ordering::Relaxed);
+                Ok(Response::Asm(report))
+            }
+            Request::Disasm { program } => {
+                let workload = library::program_by_name(program)
+                    .ok_or_else(|| ServiceError::UnknownProgram(program.clone()))?;
+                Ok(Response::Disasm {
+                    program: program.clone(),
+                    text: asm::disassemble(workload.program()),
+                })
+            }
+            Request::List => Ok(Response::List(Listing::current())),
+        }
+    }
+
+    /// The parametric design space an `Explore` request for `program`
+    /// will search — the single construction both the engine's dispatch
+    /// and clients announcing the space's size use, so the two can
+    /// never drift.
+    pub fn explore_space(&self, program: &str) -> Result<DesignSpace, ServiceError> {
+        let workload = library::program_by_name(program)
+            .ok_or_else(|| ServiceError::UnknownProgram(program.to_string()))?;
+        Ok(DesignSpace::parametric(workload.dataset_kb()))
+    }
+
+    fn require_program(&self, name: &str) -> Result<(), ServiceError> {
+        // Cheap grammar check — no codegen, so a warm cached `run`
+        // costs its timing replay and nothing else.
+        if !library::is_known_program(name) {
+            return Err(ServiceError::UnknownProgram(name.to_string()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+
+    fn run_req(program: &str, mem: MemoryArchKind) -> Request {
+        Request::Run { program: program.into(), mem }
+    }
+
+    #[test]
+    fn run_goes_through_the_cache() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        let a = engine.handle(&run_req("transpose32", MemoryArchKind::banked(16))).unwrap();
+        assert_eq!(engine.functional_executions(), 1);
+        // Same program, different memory: replay only.
+        let b = engine.handle(&run_req("transpose32", MemoryArchKind::mp_4r1w())).unwrap();
+        assert_eq!(engine.functional_executions(), 1, "second run replays the cached trace");
+        let (Response::Run(ra), Response::Run(rb)) = (&a, &b) else { panic!("run responses") };
+        assert_eq!(ra.program, "transpose32");
+        assert_ne!(ra.total_cycles(), 0);
+        assert_ne!(ra.arch, rb.arch);
+    }
+
+    #[test]
+    fn run_matches_coupled_bench_job() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        let arch = MemoryArchKind::banked_offset(16);
+        let Response::Run(report) = engine.handle(&run_req("fft4096r8", arch)).unwrap() else {
+            panic!("run response");
+        };
+        let coupled = BenchJob::new("fft4096r8", arch).run().unwrap();
+        assert_eq!(report.stats, coupled.report.stats);
+        assert_eq!(report.total_cycles(), coupled.report.total_cycles());
+    }
+
+    #[test]
+    fn errors_are_typed_and_engine_survives() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(1));
+        let err = engine.handle(&run_req("nope", MemoryArchKind::banked(16))).unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownProgram(_)));
+        assert_eq!(err.exit_code(), 2);
+        let err = engine
+            .handle(&Request::Asm { source: "halt\n".into(), mem: MemoryArchKind::banked(16) })
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Asm(_)), "missing .threads is an AsmError");
+        // Still serves after errors.
+        assert!(engine.handle(&Request::List).is_ok());
+    }
+
+    #[test]
+    fn asm_counts_as_functional_execution() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(1));
+        let src = ".threads 16\n    tid r0\n    st [r0], r0\n    halt\n";
+        let resp = engine
+            .handle(&Request::Asm { source: src.into(), mem: MemoryArchKind::banked(4) })
+            .unwrap();
+        assert!(matches!(resp, Response::Asm(_)));
+        assert_eq!(engine.functional_executions(), 1);
+        assert_eq!(engine.cache().len(), 0, "custom programs are not cache-keyed");
+    }
+
+    #[test]
+    fn table1_needs_no_simulation() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(1));
+        let resp = engine.handle(&Request::Table(TableKind::Table1)).unwrap();
+        assert_eq!(engine.functional_executions(), 0);
+        let Response::Table { text, .. } = resp else { panic!("table response") };
+        assert!(text.contains("TABLE I"));
+    }
+
+    #[test]
+    fn advise_and_explore_share_the_session_cache() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        engine.handle(&Request::Advise { program: "transpose32".into() }).unwrap();
+        assert_eq!(engine.functional_executions(), 1);
+        let resp = engine
+            .handle(&Request::Explore {
+                program: "transpose32".into(),
+                strategy: ExploreStrategy::Halving,
+            })
+            .unwrap();
+        assert_eq!(engine.functional_executions(), 1, "explore reuses the advisor's trace");
+        let Response::Explore(result) = resp else { panic!("explore response") };
+        assert_eq!(result.captures, 0, "session cache was already warm");
+        assert!(!result.front.is_empty());
+    }
+}

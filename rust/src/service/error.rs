@@ -1,0 +1,151 @@
+//! The unified service-layer error: every failure a request can hit,
+//! folded into one `std::error::Error` type so exit codes and messages
+//! are derived in exactly one place.
+//!
+//! Before the service layer, the crate's consumers juggled three error
+//! conventions: `SimError` from the simulator, bare `String`s from
+//! parsing helpers, and `eprintln!` + ad-hoc exit codes in `main.rs`.
+//! `ServiceError` absorbs all of them — `SimError` and `AsmError` fold
+//! in via `From`, parse failures become typed variants carrying the
+//! rejected input, and [`ServiceError::exit_code`] is the single
+//! message→exit-code policy the CLI applies.
+
+use crate::isa::asm::AsmError;
+use crate::mem::arch::{self, MemoryArchKind};
+use crate::sim::exec::SimError;
+use std::fmt;
+
+/// Anything a [`crate::service::SimtEngine`] request can fail with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceError {
+    /// The simulator faulted (bad program, invalid address, cycle
+    /// limit, ...). `SimError` already implements `std::error::Error` +
+    /// `Display`; it rides along as this error's `source`.
+    Sim(SimError),
+    /// Assembling a custom program failed (carries line context).
+    Asm(AsmError),
+    /// A program name the library does not know.
+    UnknownProgram(String),
+    /// A memory descriptor [`MemoryArchKind::parse`] rejects. The
+    /// rendered hint quotes [`arch::PARSE_GRAMMAR`], so the
+    /// message covers the parametric grammar, not just the paper nine.
+    UnknownMemory(String),
+    /// A malformed request: unparseable JSON, missing required field,
+    /// unknown operation or strategy. Usage-class (exit code 2).
+    BadRequest(String),
+    /// An I/O failure, annotated with what was being attempted. The
+    /// underlying `std::io::Error` is flattened to its message so the
+    /// error stays `Clone` (responses are queued and re-rendered).
+    Io { context: String, error: String },
+}
+
+impl ServiceError {
+    /// Annotate an I/O error with the operation that hit it.
+    pub fn io(context: impl Into<String>, e: &std::io::Error) -> Self {
+        Self::Io { context: context.into(), error: e.to_string() }
+    }
+
+    /// The process exit code this error maps to — the one place the
+    /// CLI's exit policy lives. Usage-class errors (malformed request,
+    /// unknown name) exit 2, execution failures exit 1.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Self::UnknownProgram(_) | Self::UnknownMemory(_) | Self::BadRequest(_) => 2,
+            Self::Sim(_) | Self::Asm(_) | Self::Io { .. } => 1,
+        }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Sim(e) => write!(f, "simulation failed: {e}"),
+            Self::Asm(e) => write!(f, "assembly failed: {e}"),
+            Self::UnknownProgram(name) => {
+                write!(f, "unknown program '{name}' (see `soft-simt list`)")
+            }
+            Self::UnknownMemory(s) => write!(
+                f,
+                "unknown memory '{s}' (paper set: {}; parametric: {})",
+                MemoryArchKind::table3_nine()
+                    .iter()
+                    .map(|a| a.label())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+                arch::PARSE_GRAMMAR,
+            ),
+            Self::BadRequest(m) => write!(f, "bad request: {m}"),
+            Self::Io { context, error } => write!(f, "{context}: {error}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Sim(e) => Some(e),
+            Self::Asm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SimError> for ServiceError {
+    fn from(e: SimError) -> Self {
+        Self::Sim(e)
+    }
+}
+
+impl From<AsmError> for ServiceError {
+    fn from(e: AsmError) -> Self {
+        Self::Asm(e)
+    }
+}
+
+/// Parse a memory descriptor, mapping rejection to the unified error
+/// (with its grammar-bearing hint). The service's one arch-parsing
+/// entry — the CLI and the wire codec both call it.
+pub fn parse_arch(s: &str) -> Result<MemoryArchKind, ServiceError> {
+    MemoryArchKind::parse(s).ok_or_else(|| ServiceError::UnknownMemory(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_split_usage_from_execution() {
+        assert_eq!(ServiceError::BadRequest("x".into()).exit_code(), 2);
+        assert_eq!(ServiceError::UnknownProgram("x".into()).exit_code(), 2);
+        assert_eq!(ServiceError::UnknownMemory("x".into()).exit_code(), 2);
+        assert_eq!(ServiceError::Sim(SimError::MissingHalt).exit_code(), 1);
+        assert_eq!(
+            ServiceError::Asm(AsmError { line: 1, msg: "x".into() }).exit_code(),
+            1
+        );
+    }
+
+    #[test]
+    fn unknown_memory_hint_states_parametric_grammar() {
+        let msg = ServiceError::UnknownMemory("17-banks".into()).to_string();
+        assert!(msg.contains("16 Banks Offset"), "paper set listed: {msg}");
+        assert!(msg.contains("banked8-offset3"), "parametric grammar listed: {msg}");
+        assert!(msg.contains("{1,2,4,8}R"), "multiport grammar listed: {msg}");
+    }
+
+    #[test]
+    fn parse_arch_accepts_parametric_labels() {
+        assert!(parse_arch("banked8-offset3").is_ok());
+        assert!(parse_arch("2r-1w").is_ok());
+        assert!(parse_arch("16-banks-offset").is_ok());
+        assert!(parse_arch("nope").is_err());
+    }
+
+    #[test]
+    fn sources_chain_to_inner_errors() {
+        use std::error::Error;
+        let e = ServiceError::from(SimError::MissingHalt);
+        assert!(e.source().is_some());
+        assert!(ServiceError::BadRequest("x".into()).source().is_none());
+    }
+}

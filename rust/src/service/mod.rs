@@ -1,0 +1,53 @@
+//! The unified service layer — how the crate is consumed (DESIGN.md
+//! §Service).
+//!
+//! The paper's end state is a memory-architecture decision *service*:
+//! "a comprehensive set of data which will guide the reader in making an
+//! informed memory architecture decision" (§I). This module is that
+//! service's substrate. One long-lived [`SimtEngine`] session owns the
+//! worker pool, a persistent trace cache, and the wiring to the program
+//! library, the explorer and the footprint model; every operation the
+//! crate performs — `run`, `sweep`, the paper tables, `advise`,
+//! `explore`, `validate`, `asm`, `disasm`, `list` — is a typed
+//! [`Request`] answered with a typed [`Response`], and every failure is
+//! one [`ServiceError`] (`SimError` and `AsmError` fold in via `From`),
+//! so messages and exit codes are derived in exactly one place.
+//!
+//! Because the cache is session-scoped, request cost collapses across a
+//! batch: a 51-cell paper sweep plus a design-space exploration plus any
+//! number of repeat `run`s performs exactly **six** functional
+//! executions (one per distinct workload) — counted by
+//! [`SimtEngine::functional_executions`] and asserted in
+//! `rust/tests/service.rs`.
+//!
+//! [`wire`] adds a dependency-free line-delimited JSON codec and
+//! [`wire::serve`] the stdin/stdout loop behind `soft-simt serve`, so
+//! the engine can sit behind any transport (pipes today; sockets, HTTP
+//! or a sharded front-end later without touching the engine). The CLI
+//! (`main.rs`) is a thin client of the same API: construct request,
+//! `engine.handle()`, render response.
+//!
+//! ```no_run
+//! use soft_simt::prelude::*;
+//!
+//! let engine = SimtEngine::new();
+//! let resp = engine
+//!     .handle(&Request::Run {
+//!         program: "fft4096r16".into(),
+//!         mem: MemoryArchKind::banked_offset(16),
+//!     })
+//!     .unwrap();
+//! print!("{}", resp.render());
+//! assert_eq!(engine.functional_executions(), 1);
+//! ```
+
+pub mod engine;
+pub mod error;
+pub mod request;
+pub mod response;
+pub mod wire;
+
+pub use engine::SimtEngine;
+pub use error::{parse_arch, ServiceError};
+pub use request::{ExploreStrategy, Request, TableKind};
+pub use response::{Listing, Response, SweepOutput, ValidationOutput};

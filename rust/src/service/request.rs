@@ -1,0 +1,166 @@
+//! Typed requests — one enum variant per operation the crate serves.
+//!
+//! A [`Request`] is fully parsed and validated at construction: memory
+//! descriptors arrive as [`MemoryArchKind`] (not strings), table and
+//! strategy selectors are enums, and the assembler's input is source
+//! text. Client-side I/O stays client-side (reading `.asm` files,
+//! writing `--csv`/`--json` outputs), which keeps the engine usable
+//! behind any transport; the one engine-side filesystem touch is
+//! `Validate`, which probes its `artifacts_dir` for PJRT golden
+//! artifacts — deployments exposing `serve` to untrusted callers should
+//! pin or drop that field. The wire codec ([`crate::service::wire`])
+//! maps line-delimited JSON onto these types.
+
+use crate::mem::arch::MemoryArchKind;
+
+/// One operation for [`crate::service::SimtEngine::handle`]. Batches are
+/// just slices of these ([`crate::service::SimtEngine::handle_batch`]);
+/// every request in a batch shares the engine's trace cache.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Run one benchmark cell (program × memory) and report the paper's
+    /// full metric set.
+    Run { program: String, mem: MemoryArchKind },
+    /// The paper sweep (51 cells), or the extended sweep (+ reduction
+    /// cells) with `all`.
+    Sweep { all: bool },
+    /// Render one paper artifact (Table I needs no simulation; the
+    /// others run the paper sweep through the engine cache).
+    Table(TableKind),
+    /// Rank every candidate memory for a workload (paper nine + XOR).
+    Advise { program: String },
+    /// Search the parametric memory design space for a workload.
+    Explore { program: String, strategy: ExploreStrategy },
+    /// Golden validation. `artifacts_dir` points at the PJRT artifacts
+    /// (`None` = the default `artifacts/`); without them (or on the
+    /// stub build) validation degrades to host references.
+    Validate { artifacts_dir: Option<String> },
+    /// Assemble `source` and run it on `mem`.
+    Asm { source: String, mem: MemoryArchKind },
+    /// Disassemble a library program.
+    Disasm { program: String },
+    /// The program library and memory-architecture sets.
+    List,
+}
+
+impl Request {
+    /// Wire operation name (the `"op"` field of the JSON encoding).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Run { .. } => "run",
+            Request::Sweep { .. } => "sweep",
+            Request::Table(_) => "table",
+            Request::Advise { .. } => "advise",
+            Request::Explore { .. } => "explore",
+            Request::Validate { .. } => "validate",
+            Request::Asm { .. } => "asm",
+            Request::Disasm { .. } => "disasm",
+            Request::List => "list",
+        }
+    }
+}
+
+/// Which paper artifact a `Table` request renders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableKind {
+    /// Table I: resources + Fmax model (no simulation).
+    Table1,
+    /// Table II: transpose profiling.
+    Table2,
+    /// Table III: FFT profiling.
+    Table3,
+    /// Fig. 9: cost vs performance.
+    Fig9,
+}
+
+impl TableKind {
+    pub const ALL: [TableKind; 4] =
+        [TableKind::Table1, TableKind::Table2, TableKind::Table3, TableKind::Fig9];
+
+    /// Wire / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TableKind::Table1 => "table1",
+            TableKind::Table2 => "table2",
+            TableKind::Table3 => "table3",
+            TableKind::Fig9 => "fig9",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|t| t.name() == s)
+    }
+
+    /// Whether rendering needs sweep results (everything but Table I).
+    pub fn needs_sweep(self) -> bool {
+        !matches!(self, TableKind::Table1)
+    }
+}
+
+/// Search strategy selector for `Explore` requests (mirrors
+/// [`crate::explore::strategy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExploreStrategy {
+    /// Exhaustive grid search.
+    Exhaustive,
+    /// Dominance-based successive halving (frontier-exact; the default).
+    #[default]
+    Halving,
+}
+
+impl ExploreStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExploreStrategy::Exhaustive => "exhaustive",
+            ExploreStrategy::Halving => "halving",
+        }
+    }
+
+    /// Accepts the CLI aliases (`grid`, `pruning`) too.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "exhaustive" | "grid" => Some(Self::Exhaustive),
+            "halving" | "pruning" => Some(Self::Halving),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_kinds_roundtrip_names() {
+        for t in TableKind::ALL {
+            assert_eq!(TableKind::parse(t.name()), Some(t));
+        }
+        assert_eq!(TableKind::parse("table4"), None);
+        assert!(TableKind::Table2.needs_sweep());
+        assert!(!TableKind::Table1.needs_sweep());
+    }
+
+    #[test]
+    fn strategies_parse_with_aliases() {
+        assert_eq!(ExploreStrategy::parse("exhaustive"), Some(ExploreStrategy::Exhaustive));
+        assert_eq!(ExploreStrategy::parse("grid"), Some(ExploreStrategy::Exhaustive));
+        assert_eq!(ExploreStrategy::parse("halving"), Some(ExploreStrategy::Halving));
+        assert_eq!(ExploreStrategy::parse("pruning"), Some(ExploreStrategy::Halving));
+        assert_eq!(ExploreStrategy::parse("dfs"), None);
+        assert_eq!(ExploreStrategy::default(), ExploreStrategy::Halving);
+    }
+
+    #[test]
+    fn ops_are_stable_wire_names() {
+        assert_eq!(Request::List.op(), "list");
+        assert_eq!(Request::Sweep { all: false }.op(), "sweep");
+        assert_eq!(
+            Request::Run {
+                program: "transpose32".into(),
+                mem: MemoryArchKind::banked_offset(16)
+            }
+            .op(),
+            "run"
+        );
+    }
+}

@@ -1,0 +1,269 @@
+//! Typed responses — the engine's answer to each
+//! [`Request`](super::request::Request) variant, carrying structured
+//! results plus a `render()` that reproduces the CLI's stdout
+//! byte-for-byte (pinned by `rust/tests/service.rs`).
+
+use super::request::TableKind;
+use crate::coordinator::advisor::Advice;
+use crate::coordinator::job::BenchResult;
+use crate::coordinator::report;
+use crate::coordinator::validate::Check;
+use crate::explore::ExploreResult;
+use crate::mem::arch::{self, MemoryArchKind};
+use crate::programs::library;
+use crate::sim::stats::RunReport;
+
+/// The engine's answer to one request. Each request variant is answered
+/// by the like-named response variant (the wire `op` fields match, so
+/// clients can pair responses to requests).
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// Full report for one cell.
+    Run(RunReport),
+    /// Full report for an assembled custom program (same payload shape
+    /// as [`Response::Run`], distinct wire op).
+    Asm(RunReport),
+    /// Sweep results with their renderers (text tables + CSV).
+    Sweep(SweepOutput),
+    /// One rendered paper artifact.
+    Table { which: TableKind, text: String },
+    /// The advisor's ranked scorecard.
+    Advise(Advice),
+    /// The explorer's scorecards + Pareto frontier.
+    Explore(ExploreResult),
+    /// Validation outcomes (a failing check is a *result*, not an
+    /// error — see [`Response::exit_code`]).
+    Validate(ValidationOutput),
+    /// Disassembly of a library program.
+    Disasm { program: String, text: String },
+    /// Program library + memory-architecture sets.
+    List(Listing),
+}
+
+impl Response {
+    /// Wire operation name (matches the request's).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Response::Run(_) => "run",
+            Response::Asm(_) => "asm",
+            Response::Sweep(_) => "sweep",
+            Response::Table { .. } => "table",
+            Response::Advise(_) => "advise",
+            Response::Explore(_) => "explore",
+            Response::Validate(_) => "validate",
+            Response::Disasm { .. } => "disasm",
+            Response::List(_) => "list",
+        }
+    }
+
+    /// The stdout text the CLI prints for this response — for `run`,
+    /// `sweep` and `explore` byte-identical to the pre-service CLI
+    /// (pinned by the parity tests in `rust/tests/service.rs`).
+    pub fn render(&self) -> String {
+        match self {
+            Response::Run(report) | Response::Asm(report) => render_run_report(report),
+            Response::Sweep(sweep) => sweep.render(),
+            Response::Table { text, .. } => text.clone(),
+            Response::Advise(advice) => advice.render(),
+            Response::Explore(result) => result.render(),
+            Response::Validate(v) => v.render(),
+            Response::Disasm { text, .. } => text.clone(),
+            Response::List(listing) => listing.render(),
+        }
+    }
+
+    /// Exit code for a *successful* response: 0 except for validation
+    /// with failing checks (exit 1, as the validation suite always did).
+    /// Together with [`super::error::ServiceError::exit_code`] this is
+    /// the entire exit-code policy.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            Response::Validate(v) if v.failed() > 0 => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// Sweep results plus the flags the renderers need.
+#[derive(Debug, Clone)]
+pub struct SweepOutput {
+    /// Extended sweep (`--all`): reduction cells included.
+    pub all: bool,
+    pub results: Vec<BenchResult>,
+}
+
+impl SweepOutput {
+    /// The sweep's stdout: Tables II + III (+ the reduction extension
+    /// with `all`) + Fig. 9 — exactly the pre-service `sweep` output.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&report::render_table2(&self.results));
+        out.push_str(&report::render_table3(&self.results));
+        if self.all {
+            out.push_str(&report::render_reduction(&self.results));
+        }
+        out.push_str(&report::render_fig9(&self.results));
+        out
+    }
+
+    /// Machine-readable counterpart (the `--csv` payload).
+    pub fn csv(&self) -> String {
+        report::sweep_csv(&self.results)
+    }
+}
+
+/// The validation suite's outcome.
+#[derive(Debug, Clone)]
+pub struct ValidationOutput {
+    pub checks: Vec<Check>,
+    /// Why PJRT golden checks were skipped (stub build or missing
+    /// artifacts); `None` when the artifact runtime loaded.
+    pub pjrt_note: Option<String>,
+}
+
+impl ValidationOutput {
+    pub fn failed(&self) -> usize {
+        self.checks.iter().filter(|c| !c.passed).count()
+    }
+
+    /// Per-check lines plus the summary — the pre-service `validate`
+    /// stdout (the PJRT note goes to stderr, client-side).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.checks {
+            out.push_str(&format!(
+                "[{}] {} — {}\n",
+                if c.passed { "PASS" } else { "FAIL" },
+                c.name,
+                c.detail
+            ));
+        }
+        out.push_str(&format!("\n{} checks, {} failed\n", self.checks.len(), self.failed()));
+        out
+    }
+}
+
+/// The `list` payload: registered programs and memory sets.
+#[derive(Debug, Clone)]
+pub struct Listing {
+    pub programs: Vec<String>,
+    /// Paper-set architectures with their Fmax in MHz.
+    pub paper_archs: Vec<(String, f64)>,
+}
+
+impl Listing {
+    /// Snapshot the current library and paper architecture set.
+    pub fn current() -> Self {
+        Self {
+            programs: library::program_names().into_iter().map(String::from).collect(),
+            paper_archs: MemoryArchKind::table3_nine()
+                .into_iter()
+                .map(|a| (a.label(), a.fmax_mhz()))
+                .collect(),
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from("programs:\n");
+        for p in &self.programs {
+            out.push_str(&format!("  {p}\n"));
+        }
+        out.push_str("\nmemory architectures (paper set):\n");
+        for (label, fmax) in &self.paper_archs {
+            out.push_str(&format!("  {label}  (fmax {fmax:.0} MHz)\n"));
+        }
+        out.push_str(&format!(
+            "\nparametric space (see `explore`): {}\n",
+            arch::PARSE_GRAMMAR
+        ));
+        out
+    }
+}
+
+/// Render one run report exactly as the CLI prints it (the pre-service
+/// `print_report`, line for line).
+pub fn render_run_report(r: &RunReport) -> String {
+    let s = &r.stats;
+    let mut out = String::new();
+    out.push_str(&format!("program      {}\n", r.program));
+    out.push_str(&format!("memory       {}\n", r.arch));
+    out.push_str(&format!("threads      {}\n", r.threads));
+    out.push_str(&format!(
+        "INT / Imm / FP / Other cycles: {} / {} / {} / {}\n",
+        s.int_cycles, s.imm_cycles, s.fp_cycles, s.other_cycles
+    ));
+    out.push_str(&format!("D load   {} cycles over {} ops\n", s.d_load_cycles, s.d_load_ops));
+    if s.tw_load_ops > 0 {
+        out.push_str(&format!(
+            "TW load  {} cycles over {} ops\n",
+            s.tw_load_cycles, s.tw_load_ops
+        ));
+    }
+    out.push_str(&format!("store    {} cycles over {} ops\n", s.store_cycles, s.store_ops));
+    out.push_str(&format!(
+        "stalls   write-buffer {} / drain {}\n",
+        s.wbuf_stall_cycles, s.drain_cycles
+    ));
+    out.push_str(&format!(
+        "total    {} cycles  ({:.2} us @ {:.0} MHz)\n",
+        r.total_cycles(),
+        r.time_us(),
+        r.arch.fmax_mhz()
+    ));
+    if let Some(e) = r.r_bank_eff() {
+        out.push_str(&format!("R bank eff.  {:.1}%\n", e * 100.0));
+    }
+    if let Some(e) = r.tw_bank_eff() {
+        out.push_str(&format!("TW bank eff. {:.1}%\n", e * 100.0));
+    }
+    if let Some(e) = r.w_bank_eff() {
+        out.push_str(&format!("W bank eff.  {:.1}%\n", e * 100.0));
+    }
+    out.push_str(&format!("compute eff. {:.1}%\n", r.compute_efficiency() * 100.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::BenchJob;
+
+    #[test]
+    fn run_render_has_every_paper_row() {
+        let r = BenchJob::new("fft4096r8", MemoryArchKind::banked_offset(16)).run().unwrap();
+        let text = render_run_report(&r.report);
+        for needle in [
+            "program      fft4096r8",
+            "memory       16 Banks Offset",
+            "TW load ",
+            "stalls   write-buffer",
+            "compute eff.",
+        ] {
+            assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn listing_renders_programs_and_grammar() {
+        let text = Listing::current().render();
+        assert!(text.contains("transpose32"));
+        assert!(text.contains("reduction4096"));
+        assert!(text.contains("16 Banks Offset"));
+        assert!(text.contains(arch::PARSE_GRAMMAR));
+    }
+
+    #[test]
+    fn validation_exit_code_tracks_failures() {
+        let pass = Check { name: "a".into(), passed: true, detail: "ok".into() };
+        let fail = Check { name: "b".into(), passed: false, detail: "no".into() };
+        let good = Response::Validate(ValidationOutput {
+            checks: vec![pass.clone()],
+            pjrt_note: None,
+        });
+        assert_eq!(good.exit_code(), 0);
+        let bad =
+            Response::Validate(ValidationOutput { checks: vec![pass, fail], pjrt_note: None });
+        assert_eq!(bad.exit_code(), 1);
+        assert!(bad.render().contains("2 checks, 1 failed"));
+    }
+}

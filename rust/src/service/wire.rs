@@ -1,0 +1,663 @@
+//! Line-delimited JSON wire codec + the `serve` loop.
+//!
+//! One request per line, one response line per request; a line holding a
+//! JSON *array* of requests is a batch and is answered with one JSON
+//! array of responses (order preserved, traces shared across the whole
+//! batch). The codec is hand-rolled in the crate's established JSON
+//! style (the explorer's `to_json`, the bench `BENCH_*.json` emitters) —
+//! the crate is dependency-free, so this is the entire parser and
+//! serializer.
+//!
+//! Request grammar (`"op"` selects the variant; other fields per op):
+//!
+//! ```text
+//! {"op":"run","program":"transpose32","mem":"16-banks-offset"}
+//! {"op":"sweep","all":true}
+//! {"op":"table","which":"table2"}
+//! {"op":"advise","program":"fft4096r16"}
+//! {"op":"explore","program":"transpose32","strategy":"halving"}
+//! {"op":"validate","artifacts":"artifacts"}
+//! {"op":"asm","source":".threads 16\n    halt\n","mem":"16-banks"}
+//! {"op":"disasm","program":"transpose32"}
+//! {"op":"list"}
+//! ```
+//!
+//! Responses carry `"ok"` plus structured fields per variant and the
+//! CLI-rendered `"text"`. Errors are `{"ok":false,"error":...,
+//! "exit_code":N}` — the same unified `ServiceError` policy the CLI
+//! derives its exit codes from.
+
+use super::engine::SimtEngine;
+use super::error::{parse_arch, ServiceError};
+use super::request::{ExploreStrategy, Request, TableKind};
+use super::response::Response;
+use crate::util::fmt::json_str;
+use std::io::{BufRead, Write};
+
+// ---------------------------------------------------------------------
+// Minimal JSON value + parser.
+// ---------------------------------------------------------------------
+
+/// A parsed JSON value (objects keep insertion order; no number
+/// distinction beyond f64 — ample for the wire grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document (the whole input must be consumed, modulo
+/// trailing whitespace).
+pub fn parse_json(input: &str) -> Result<Json, ServiceError> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    let v = p.value().map_err(ServiceError::BadRequest)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(ServiceError::BadRequest(format!(
+            "trailing input at byte {} of request line",
+            p.pos
+        )));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.pos)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // Surrogate pair: require \uXXXX low half.
+                                if self.peek() == Some(b'\\') {
+                                    self.pos += 1;
+                                    self.expect(b'u').map_err(|_| "bad surrogate pair")?;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(format!(
+                                            "bad surrogate pair \\u{hi:04x}\\u{lo:04x}"
+                                        ));
+                                    }
+                                    let code =
+                                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(code).ok_or("bad surrogate pair")?
+                                } else {
+                                    return Err("lone surrogate".into());
+                                }
+                            } else {
+                                char::from_u32(hi).ok_or("bad \\u escape")?
+                            };
+                            out.push(c);
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    }
+                }
+                Some(_) => {
+                    // Copy one UTF-8 scalar (possibly multibyte).
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(rest).map_err(|_| "invalid utf-8")?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let end = self.pos + 4;
+        if end > self.bytes.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..end]).map_err(|_| "bad \\u escape")?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape")?;
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E') | Some(b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{s}' at byte {start}"))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request decode / encode.
+// ---------------------------------------------------------------------
+
+/// Decode one request object.
+pub fn request_from_json(v: &Json) -> Result<Request, ServiceError> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(ServiceError::BadRequest("request must be a JSON object".into()));
+    }
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ServiceError::BadRequest("missing string field 'op'".into()))?;
+    let program = |field: &str| req_str_field(v, op, field);
+    let mem = |default: &str| parse_arch(opt_str_field(v, "mem")?.unwrap_or(default));
+    match op {
+        "run" => Ok(Request::Run { program: program("program")?, mem: mem("16-banks-offset")? }),
+        "sweep" => Ok(Request::Sweep {
+            all: match v.get("all") {
+                None | Some(Json::Null) => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => {
+                    return Err(ServiceError::BadRequest(
+                        "field 'all' must be a boolean".into(),
+                    ))
+                }
+            },
+        }),
+        "table" => {
+            let which = program("which")?;
+            TableKind::parse(&which)
+                .map(Request::Table)
+                .ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "unknown table '{which}' (try: table1, table2, table3, fig9)"
+                    ))
+                })
+        }
+        "advise" => Ok(Request::Advise { program: program("program")? }),
+        "explore" => {
+            let strategy = match opt_str_field(v, "strategy")? {
+                None => ExploreStrategy::default(),
+                Some(s) => ExploreStrategy::parse(s).ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "unknown strategy '{s}' (try: exhaustive, halving)"
+                    ))
+                })?,
+            };
+            Ok(Request::Explore { program: program("program")?, strategy })
+        }
+        "validate" => Ok(Request::Validate {
+            artifacts_dir: opt_str_field(v, "artifacts")?.map(String::from),
+        }),
+        "asm" => Ok(Request::Asm { source: program("source")?, mem: mem("16-banks")? }),
+        "disasm" => Ok(Request::Disasm { program: program("program")? }),
+        "list" => Ok(Request::List),
+        other => Err(ServiceError::BadRequest(format!("unknown op '{other}'"))),
+    }
+}
+
+/// Fetch an optional string field, type-checked rather than silently
+/// defaulted: a present-but-wrong-typed field is a `BadRequest` (a
+/// client sending `"mem":16` must not be answered with the default
+/// memory). An explicit `null` reads as absent.
+fn opt_str_field<'a>(v: &'a Json, field: &str) -> Result<Option<&'a str>, ServiceError> {
+    match v.get(field) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.as_str())),
+        Some(_) => {
+            Err(ServiceError::BadRequest(format!("field '{field}' must be a string")))
+        }
+    }
+}
+
+/// Fetch a required string field (op context in the error).
+fn req_str_field(v: &Json, op: &str, field: &str) -> Result<String, ServiceError> {
+    opt_str_field(v, field)?.map(String::from).ok_or_else(|| {
+        ServiceError::BadRequest(format!("op '{op}' needs string field '{field}'"))
+    })
+}
+
+/// Parse one wire line: a request object or a batch array of them.
+pub fn requests_from_line(line: &str) -> Result<Vec<Request>, ServiceError> {
+    match parse_json(line)? {
+        v @ Json::Obj(_) => Ok(vec![request_from_json(&v)?]),
+        Json::Arr(items) => items.iter().map(request_from_json).collect(),
+        _ => Err(ServiceError::BadRequest(
+            "request line must be a JSON object or array of objects".into(),
+        )),
+    }
+}
+
+/// Encode a request as one wire line (round-trips through
+/// [`request_from_json`]; pinned for every variant in
+/// `rust/tests/service.rs`).
+pub fn request_to_json(req: &Request) -> String {
+    match req {
+        Request::Run { program, mem } => format!(
+            "{{\"op\":\"run\",\"program\":{},\"mem\":{}}}",
+            json_str(program),
+            json_str(&mem.label())
+        ),
+        Request::Sweep { all } => format!("{{\"op\":\"sweep\",\"all\":{all}}}"),
+        Request::Table(which) => {
+            format!("{{\"op\":\"table\",\"which\":{}}}", json_str(which.name()))
+        }
+        Request::Advise { program } => {
+            format!("{{\"op\":\"advise\",\"program\":{}}}", json_str(program))
+        }
+        Request::Explore { program, strategy } => format!(
+            "{{\"op\":\"explore\",\"program\":{},\"strategy\":{}}}",
+            json_str(program),
+            json_str(strategy.name())
+        ),
+        Request::Validate { artifacts_dir } => match artifacts_dir {
+            Some(dir) => format!("{{\"op\":\"validate\",\"artifacts\":{}}}", json_str(dir)),
+            None => "{\"op\":\"validate\"}".to_string(),
+        },
+        Request::Asm { source, mem } => format!(
+            "{{\"op\":\"asm\",\"source\":{},\"mem\":{}}}",
+            json_str(source),
+            json_str(&mem.label())
+        ),
+        Request::Disasm { program } => {
+            format!("{{\"op\":\"disasm\",\"program\":{}}}", json_str(program))
+        }
+        Request::List => "{\"op\":\"list\"}".to_string(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Response encode.
+// ---------------------------------------------------------------------
+
+/// Encode one handled request as a single response line.
+pub fn result_to_json(result: &Result<Response, ServiceError>) -> String {
+    match result {
+        Ok(resp) => response_to_json(resp),
+        Err(e) => error_to_json(e),
+    }
+}
+
+/// `{"ok":false,...}` for the unified error (same exit-code policy the
+/// CLI applies).
+pub fn error_to_json(e: &ServiceError) -> String {
+    format!(
+        "{{\"ok\":false,\"error\":{},\"exit_code\":{}}}",
+        json_str(&e.to_string()),
+        e.exit_code()
+    )
+}
+
+/// `{"ok":true,"op":...,...,"text":...}` with per-variant structured
+/// fields; `text` is the CLI rendering.
+pub fn response_to_json(resp: &Response) -> String {
+    let mut out = format!("{{\"ok\":true,\"op\":{}", json_str(resp.op()));
+    match resp {
+        Response::Run(r) | Response::Asm(r) => {
+            let s = &r.stats;
+            out.push_str(&format!(
+                ",\"program\":{},\"memory\":{},\"threads\":{},\"total_cycles\":{},\
+                 \"time_us\":{:.4},\"stats\":{{\"int_cycles\":{},\"imm_cycles\":{},\
+                 \"fp_cycles\":{},\"other_cycles\":{},\"d_load_ops\":{},\"d_load_cycles\":{},\
+                 \"tw_load_ops\":{},\"tw_load_cycles\":{},\"store_ops\":{},\"store_cycles\":{},\
+                 \"wbuf_stall_cycles\":{},\"drain_cycles\":{}}}",
+                json_str(&r.program),
+                json_str(&r.arch.label()),
+                r.threads,
+                r.total_cycles(),
+                r.time_us(),
+                s.int_cycles,
+                s.imm_cycles,
+                s.fp_cycles,
+                s.other_cycles,
+                s.d_load_ops,
+                s.d_load_cycles,
+                s.tw_load_ops,
+                s.tw_load_cycles,
+                s.store_ops,
+                s.store_cycles,
+                s.wbuf_stall_cycles,
+                s.drain_cycles,
+            ));
+        }
+        Response::Sweep(sweep) => {
+            out.push_str(&format!(
+                ",\"all\":{},\"cells\":{},\"csv\":{}",
+                sweep.all,
+                sweep.results.len(),
+                json_str(&sweep.csv())
+            ));
+        }
+        Response::Table { which, .. } => {
+            out.push_str(&format!(",\"which\":{}", json_str(which.name())));
+        }
+        Response::Advise(advice) => {
+            out.push_str(&format!(
+                ",\"program\":{},\"dataset_kb\":{},\"candidates\":{},\"fastest\":{},\
+                 \"most_perf_per_area\":{}",
+                json_str(&advice.program),
+                advice.dataset_kb,
+                advice.candidates.len(),
+                json_str(&advice.fastest().arch.label()),
+                json_str(&advice.most_efficient().arch.label()),
+            ));
+        }
+        Response::Explore(result) => {
+            // The explorer's own JSON document, flattened to one line
+            // (its newlines are structural; in-string newlines are
+            // escaped by `json_str`).
+            out.push_str(&format!(",\"result\":{}", result.to_json().replace('\n', " ")));
+        }
+        Response::Validate(v) => {
+            out.push_str(&format!(
+                ",\"checks\":{},\"failed\":{},\"pjrt_note\":{}",
+                v.checks.len(),
+                v.failed(),
+                v.pjrt_note.as_deref().map(json_str).unwrap_or_else(|| "null".into()),
+            ));
+        }
+        Response::Disasm { program, .. } => {
+            out.push_str(&format!(",\"program\":{}", json_str(program)));
+        }
+        Response::List(listing) => {
+            let programs: Vec<String> =
+                listing.programs.iter().map(String::as_str).map(json_str).collect();
+            let memories: Vec<String> =
+                listing.paper_archs.iter().map(|(l, _)| json_str(l)).collect();
+            out.push_str(&format!(
+                ",\"programs\":[{}],\"memories\":[{}]",
+                programs.join(","),
+                memories.join(",")
+            ));
+        }
+    }
+    out.push_str(&format!(",\"text\":{}}}", json_str(&resp.render())));
+    out
+}
+
+// ---------------------------------------------------------------------
+// The serve loop.
+// ---------------------------------------------------------------------
+
+/// Read request lines from `input`, answer each on `output` — the whole
+/// transport of `soft-simt serve`. Blank lines are skipped; a malformed
+/// line yields an `{"ok":false,...}` line and the loop continues; an
+/// array line is answered with an array of responses. Every request in
+/// the session shares `engine`'s trace cache.
+pub fn serve<R: BufRead, W: Write>(
+    engine: &SimtEngine,
+    input: R,
+    mut output: W,
+) -> std::io::Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_json(&line) {
+            Ok(Json::Arr(items)) => {
+                let parts: Vec<String> = items
+                    .iter()
+                    .map(|item| {
+                        let result = request_from_json(item)
+                            .and_then(|req| engine.handle(&req));
+                        result_to_json(&result)
+                    })
+                    .collect();
+                format!("[{}]", parts.join(","))
+            }
+            Ok(v) => {
+                let result = request_from_json(&v).and_then(|req| engine.handle(&req));
+                result_to_json(&result)
+            }
+            Err(e) => error_to_json(&e),
+        };
+        writeln!(output, "{reply}")?;
+        output.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_nesting() {
+        assert_eq!(parse_json("null").unwrap(), Json::Null);
+        assert_eq!(parse_json(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(parse_json("-2.5e2").unwrap(), Json::Num(-250.0));
+        assert_eq!(parse_json("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+        let v = parse_json(r#"{"a":[1,{"b":"c"},false],"d":null}"#).unwrap();
+        assert_eq!(v.get("d"), Some(&Json::Null));
+        let Some(Json::Arr(items)) = v.get("a") else { panic!("array field") };
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[1].get("b").and_then(Json::as_str), Some("c"));
+    }
+
+    #[test]
+    fn parses_unicode_escapes() {
+        assert_eq!(parse_json("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        // Surrogate pair: U+1F600.
+        assert_eq!(
+            parse_json("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        // Raw multibyte UTF-8 passes through.
+        assert_eq!(parse_json("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in ["", "{", "{\"a\"}", "[1,]", "tru", "\"unterminated", "{} extra"] {
+            assert!(parse_json(bad).is_err(), "'{bad}' must be rejected");
+        }
+        // A high surrogate must be followed by a valid low surrogate.
+        assert!(parse_json("\"\\ud83d\\u0041\"").is_err(), "bad low surrogate rejected");
+        assert!(parse_json("\"\\ud83dx\"").is_err(), "lone surrogate rejected");
+    }
+
+    #[test]
+    fn wrong_typed_optional_fields_are_rejected() {
+        let e = requests_from_line("{\"op\":\"run\",\"program\":\"transpose32\",\"mem\":16}")
+            .unwrap_err();
+        assert!(e.to_string().contains("'mem'"), "{e}");
+        let e = requests_from_line("{\"op\":\"sweep\",\"all\":\"true\"}").unwrap_err();
+        assert!(e.to_string().contains("'all'"), "{e}");
+        let e = requests_from_line("{\"op\":\"validate\",\"artifacts\":3}").unwrap_err();
+        assert!(e.to_string().contains("'artifacts'"), "{e}");
+        // Explicit null reads as absent, matching the defaults.
+        let reqs =
+            requests_from_line("{\"op\":\"sweep\",\"all\":null}").unwrap();
+        assert_eq!(reqs[0], Request::Sweep { all: false });
+    }
+
+    #[test]
+    fn escape_roundtrip_through_parser() {
+        let nasty = "line1\nline2\t\"quoted\" back\\slash\r\u{0001}";
+        let encoded = json_str(nasty);
+        assert_eq!(parse_json(&encoded).unwrap(), Json::Str(nasty.into()));
+    }
+
+    #[test]
+    fn bad_requests_are_typed() {
+        let e = requests_from_line("{\"op\":\"frobnicate\"}").unwrap_err();
+        assert!(matches!(e, ServiceError::BadRequest(_)));
+        assert_eq!(e.exit_code(), 2);
+        let e = requests_from_line("{\"op\":\"run\"}").unwrap_err();
+        assert!(e.to_string().contains("program"), "{e}");
+        let e = requests_from_line("{\"op\":\"run\",\"program\":\"transpose32\",\"mem\":\"x\"}")
+            .unwrap_err();
+        assert!(matches!(e, ServiceError::UnknownMemory(_)));
+        assert!(requests_from_line("42").is_err());
+    }
+
+    #[test]
+    fn defaults_match_the_cli() {
+        let reqs =
+            requests_from_line("{\"op\":\"run\",\"program\":\"transpose32\"}").unwrap();
+        let Request::Run { mem, .. } = &reqs[0] else { panic!("run request") };
+        assert_eq!(mem.label(), "16 Banks Offset");
+        let reqs = requests_from_line("{\"op\":\"sweep\"}").unwrap();
+        assert_eq!(reqs[0], Request::Sweep { all: false });
+        let reqs =
+            requests_from_line("{\"op\":\"explore\",\"program\":\"transpose32\"}").unwrap();
+        let Request::Explore { strategy, .. } = &reqs[0] else { panic!("explore request") };
+        assert_eq!(*strategy, ExploreStrategy::Halving);
+    }
+
+    #[test]
+    fn batch_lines_decode_in_order() {
+        let reqs = requests_from_line(
+            "[{\"op\":\"list\"},{\"op\":\"disasm\",\"program\":\"transpose32\"}]",
+        )
+        .unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0], Request::List);
+        assert_eq!(reqs[1], Request::Disasm { program: "transpose32".into() });
+    }
+}

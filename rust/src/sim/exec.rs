@@ -73,6 +73,16 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// A binary image that fails to decode is a bad program — the typed
+/// ISA-layer error folds into the simulator's, so callers loading
+/// binaries (`Program::decode` + `run_program`) can use `?` throughout
+/// and the service layer sees one error lineage.
+impl From<crate::isa::program::DecodeError> for SimError {
+    fn from(e: crate::isa::program::DecodeError) -> Self {
+        SimError::BadProgram(e.to_string())
+    }
+}
+
 /// Word-addressed functional memory — the only thing the execution core
 /// needs from a memory. Implemented by [`FlatMemory`] (the cheap backing
 /// store for trace capture) and by the architectural memories (so the

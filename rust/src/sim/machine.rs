@@ -21,6 +21,12 @@
 //! Uniform control flow only: `jmp`/`bnz` must take the same direction in
 //! every thread (SIMT divergence is out of the paper's scope and the
 //! simulator reports it as an error rather than silently mis-timing).
+//!
+//! Errors are [`SimError`] throughout (a proper `std::error::Error`;
+//! typed ISA failures like [`crate::isa::program::DecodeError`] fold in
+//! via `From`), and `SimError` in turn folds into the service layer's
+//! [`crate::service::ServiceError`] — one error lineage from lane fault
+//! to process exit code.
 
 use super::config::MachineConfig;
 use super::exec::{self, ExecParams, MemTrace};

@@ -109,6 +109,28 @@ pub fn us(x: f64) -> String {
     format!("{x:.2}")
 }
 
+/// Escape and quote a string as a JSON string literal. Shared by every
+/// hand-rolled JSON emitter in the crate (the explorer's `to_json`, the
+/// service wire codec, the bench JSON artifacts) — the crate is
+/// dependency-free, so this *is* the JSON string encoder.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

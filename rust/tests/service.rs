@@ -1,0 +1,297 @@
+//! Service-layer integration suite: wire round-trips for every request
+//! variant, the serve loop over in-memory pipes, the batch trace-sharing
+//! economy (the engine-level functional-execution counter), and
+//! CLI-vs-engine output parity for `run`, `sweep` and `explore`.
+
+use soft_simt::coordinator::job::{BenchJob, TraceCache};
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::explore::{explore, DesignSpace, Exhaustive};
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::service::wire::{self, parse_json, Json};
+use soft_simt::service::{
+    ExploreStrategy, Request, Response, ServiceError, SimtEngine, TableKind,
+};
+use soft_simt::sim::stats::RunReport;
+
+const ASM_SRC: &str = ".threads 16\n    tid r0\n    st [r0], r0\n    halt\n";
+
+/// One request of every variant (cheap parameters; used by the
+/// round-trip and serve-batch tests).
+fn every_variant() -> Vec<Request> {
+    vec![
+        Request::Run {
+            program: "transpose32".into(),
+            mem: MemoryArchKind::banked_offset(16),
+        },
+        Request::Sweep { all: false },
+        Request::Table(TableKind::Table1),
+        Request::Advise { program: "transpose32".into() },
+        Request::Explore {
+            program: "transpose32".into(),
+            strategy: ExploreStrategy::Halving,
+        },
+        Request::Validate { artifacts_dir: Some("artifacts".into()) },
+        Request::Asm { source: ASM_SRC.into(), mem: MemoryArchKind::banked(4) },
+        Request::Disasm { program: "transpose32".into() },
+        Request::List,
+    ]
+}
+
+#[test]
+fn wire_roundtrip_every_request_variant() {
+    let mut variants = every_variant();
+    // Parametric memories and non-default fields must survive too.
+    variants.push(Request::Run {
+        program: "fft4096r8".into(),
+        mem: MemoryArchKind::parse("banked8-offset3").unwrap(),
+    });
+    variants.push(Request::Run {
+        program: "reduction4096".into(),
+        mem: MemoryArchKind::parse("2r-1w").unwrap(),
+    });
+    variants.push(Request::Sweep { all: true });
+    variants.push(Request::Table(TableKind::Fig9));
+    variants.push(Request::Explore {
+        program: "fft4096r16".into(),
+        strategy: ExploreStrategy::Exhaustive,
+    });
+    variants.push(Request::Validate { artifacts_dir: None });
+    for req in &variants {
+        let line = wire::request_to_json(req);
+        let parsed = wire::requests_from_line(&line)
+            .unwrap_or_else(|e| panic!("'{line}' must parse: {e}"));
+        assert_eq!(parsed.as_slice(), std::slice::from_ref(req), "round-trip of {line}");
+        // And as a member of a batch array line.
+        let batch_line = format!("[{line},{}]", wire::request_to_json(&Request::List));
+        let batch = wire::requests_from_line(&batch_line).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(&batch[0], req);
+    }
+}
+
+#[test]
+fn serve_loop_over_in_memory_pipes() {
+    let engine = SimtEngine::with_runner(SweepRunner::new(2));
+    let input = "\
+{\"op\":\"list\"}\n\
+\n\
+{\"op\":\"run\",\"program\":\"transpose32\",\"mem\":\"16-banks\"}\n\
+this is not json\n\
+{\"op\":\"frobnicate\"}\n\
+[{\"op\":\"disasm\",\"program\":\"transpose32\"},{\"op\":\"run\",\"program\":\"nope\"}]\n";
+    let mut output = Vec::new();
+    wire::serve(&engine, input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "one response line per non-blank request line:\n{text}");
+    // Every line is valid JSON.
+    for line in &lines {
+        parse_json(line).unwrap_or_else(|e| panic!("invalid response line '{line}': {e}"));
+    }
+    assert!(lines[0].contains("\"ok\":true") && lines[0].contains("\"op\":\"list\""));
+    assert!(lines[1].contains("\"op\":\"run\"") && lines[1].contains("\"total_cycles\":"));
+    assert!(lines[2].contains("\"ok\":false"), "bad JSON answered in-band: {}", lines[2]);
+    assert!(lines[3].contains("unknown op"), "{}", lines[3]);
+    // The batch line: array of two results, second is a typed error.
+    let Json::Arr(items) = parse_json(lines[4]).unwrap() else {
+        panic!("batch answered with an array: {}", lines[4])
+    };
+    assert_eq!(items.len(), 2);
+    assert_eq!(items[0].get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(items[1].get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(items[1].get("exit_code").and_then(Json::as_f64), Some(2.0));
+}
+
+/// The acceptance batch: paper sweep + explore + ten repeat runs costs
+/// exactly six functional executions (one per distinct workload), and
+/// repeating the whole batch adds zero.
+#[test]
+fn batch_shares_traces_across_sweep_explore_and_runs() {
+    let engine = SimtEngine::with_runner(SweepRunner::new(4));
+    let mut batch = vec![
+        Request::Sweep { all: false },
+        Request::Explore {
+            program: "transpose32".into(),
+            strategy: ExploreStrategy::Halving,
+        },
+    ];
+    for i in 0..10 {
+        let archs = MemoryArchKind::table3_nine();
+        batch.push(Request::Run {
+            program: if i % 2 == 0 { "transpose32".into() } else { "fft4096r8".into() },
+            mem: archs[i % archs.len()],
+        });
+    }
+    let responses = engine.handle_batch(&batch);
+    assert_eq!(responses.len(), batch.len());
+    for (req, resp) in batch.iter().zip(&responses) {
+        assert!(resp.is_ok(), "{req:?} failed: {:?}", resp.as_ref().err());
+    }
+    // Six distinct (program, seed) workloads in the paper sweep; the
+    // explore and all ten runs ride on those traces.
+    assert_eq!(engine.functional_executions(), 6);
+    assert_eq!(engine.cache().len(), 6);
+
+    // Repeat requests leave the cache untouched.
+    let before = engine.cache().len();
+    engine.handle_batch(&batch).iter().for_each(|r| assert!(r.is_ok()));
+    assert_eq!(engine.cache().len(), before, "repeat batch captures nothing");
+    assert_eq!(engine.functional_executions(), 6);
+}
+
+/// Pre-redesign `print_report`, verbatim — the pinned `run` stdout.
+fn legacy_print_report(r: &RunReport) -> String {
+    use std::fmt::Write;
+    let s = &r.stats;
+    let mut out = String::new();
+    writeln!(out, "program      {}", r.program).unwrap();
+    writeln!(out, "memory       {}", r.arch).unwrap();
+    writeln!(out, "threads      {}", r.threads).unwrap();
+    writeln!(
+        out,
+        "INT / Imm / FP / Other cycles: {} / {} / {} / {}",
+        s.int_cycles, s.imm_cycles, s.fp_cycles, s.other_cycles
+    )
+    .unwrap();
+    writeln!(out, "D load   {} cycles over {} ops", s.d_load_cycles, s.d_load_ops).unwrap();
+    if s.tw_load_ops > 0 {
+        writeln!(out, "TW load  {} cycles over {} ops", s.tw_load_cycles, s.tw_load_ops)
+            .unwrap();
+    }
+    writeln!(out, "store    {} cycles over {} ops", s.store_cycles, s.store_ops).unwrap();
+    writeln!(out, "stalls   write-buffer {} / drain {}", s.wbuf_stall_cycles, s.drain_cycles)
+        .unwrap();
+    writeln!(
+        out,
+        "total    {} cycles  ({:.2} us @ {:.0} MHz)",
+        r.total_cycles(),
+        r.time_us(),
+        r.arch.fmax_mhz()
+    )
+    .unwrap();
+    if let Some(e) = r.r_bank_eff() {
+        writeln!(out, "R bank eff.  {:.1}%", e * 100.0).unwrap();
+    }
+    if let Some(e) = r.tw_bank_eff() {
+        writeln!(out, "TW bank eff. {:.1}%", e * 100.0).unwrap();
+    }
+    if let Some(e) = r.w_bank_eff() {
+        writeln!(out, "W bank eff.  {:.1}%", e * 100.0).unwrap();
+    }
+    writeln!(out, "compute eff. {:.1}%", r.compute_efficiency() * 100.0).unwrap();
+    out
+}
+
+#[test]
+fn cli_run_output_is_byte_identical_to_pre_redesign() {
+    // The old CLI: BenchJob::new(p, m).run() then print_report.
+    for (program, mem) in [
+        ("transpose32", MemoryArchKind::banked_offset(16)),
+        ("fft4096r8", MemoryArchKind::mp_4r1w()),
+        ("reduction4096", MemoryArchKind::banked(4)),
+    ] {
+        let legacy = legacy_print_report(
+            &BenchJob::new(program, mem).run().unwrap().report,
+        );
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        let resp = engine
+            .handle(&Request::Run { program: program.into(), mem })
+            .unwrap();
+        assert_eq!(resp.render(), legacy, "{program} on {mem}");
+    }
+}
+
+#[test]
+fn cli_sweep_output_is_byte_identical_to_pre_redesign() {
+    use soft_simt::coordinator::report;
+    // The old CLI: SweepRunner::default().run_cached(paper_sweep), then
+    // table2 + table3 + fig9 (and the CSV for --csv).
+    let jobs = BenchJob::paper_sweep();
+    let runner = SweepRunner::new(4);
+    let results = runner.run_cached(&jobs).unwrap();
+    let mut legacy = String::new();
+    legacy.push_str(&report::render_table2(&results));
+    legacy.push_str(&report::render_table3(&results));
+    legacy.push_str(&report::render_fig9(&results));
+    let legacy_csv = report::sweep_csv(&results);
+
+    let engine = SimtEngine::with_runner(SweepRunner::new(4));
+    let resp = engine.handle(&Request::Sweep { all: false }).unwrap();
+    assert_eq!(resp.render(), legacy);
+    let Response::Sweep(sweep) = &resp else { panic!("sweep response") };
+    assert_eq!(sweep.csv(), legacy_csv);
+}
+
+#[test]
+fn cli_explore_output_is_byte_identical_to_pre_redesign() {
+    // The old CLI: a private cache + runner, explore(), render().
+    let program = "transpose32";
+    let workload = soft_simt::programs::library::program_by_name(program).unwrap();
+    let space = DesignSpace::parametric(workload.dataset_kb());
+    let runner = SweepRunner::new(4);
+    let cache = TraceCache::new();
+    let legacy = explore(program, &space, &Exhaustive, &runner, &cache).unwrap().render();
+
+    let engine = SimtEngine::with_runner(SweepRunner::new(4));
+    let resp = engine
+        .handle(&Request::Explore {
+            program: program.into(),
+            strategy: ExploreStrategy::Exhaustive,
+        })
+        .unwrap();
+    assert_eq!(resp.render(), legacy);
+}
+
+/// The acceptance batch over the actual stdin/stdout transport: one
+/// array line containing every request variant, answered in order.
+#[test]
+fn serve_answers_a_batch_of_every_variant() {
+    let engine = SimtEngine::with_runner(SweepRunner::new(4));
+    let parts: Vec<String> = every_variant().iter().map(wire::request_to_json).collect();
+    let input = format!("[{}]\n", parts.join(","));
+    let mut output = Vec::new();
+    wire::serve(&engine, input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    assert_eq!(text.lines().count(), 1, "one batch line → one response line");
+    let Json::Arr(items) = parse_json(text.trim_end()).unwrap() else {
+        panic!("batch response is an array")
+    };
+    assert_eq!(items.len(), every_variant().len());
+    let expected_ops =
+        ["run", "sweep", "table", "advise", "explore", "validate", "asm", "disasm", "list"];
+    for (item, expected) in items.iter().zip(expected_ops) {
+        assert_eq!(
+            item.get("ok"),
+            Some(&Json::Bool(true)),
+            "{expected} failed: {item:?}"
+        );
+        assert_eq!(item.get("op").and_then(Json::as_str), Some(expected));
+        assert!(item.get("text").is_some(), "{expected} carries its rendering");
+    }
+    // Validation (host references, no artifacts in the test checkout)
+    // must pass wholesale.
+    let validate = &items[5];
+    assert_eq!(validate.get("failed").and_then(Json::as_f64), Some(0.0));
+    // The whole batch shared the engine cache: 6 sweep workloads + 1
+    // asm run (validation's functional checks are uncounted by design).
+    assert_eq!(engine.functional_executions(), 7);
+    assert_eq!(engine.cache().len(), 6);
+}
+
+#[test]
+fn engine_errors_map_to_unified_exit_codes() {
+    let engine = SimtEngine::with_runner(SweepRunner::new(1));
+    let e = engine
+        .handle(&Request::Disasm { program: "quicksort".into() })
+        .unwrap_err();
+    assert!(matches!(e, ServiceError::UnknownProgram(_)));
+    assert_eq!(e.exit_code(), 2);
+    let e = wire::requests_from_line("{\"op\":\"run\",\"program\":\"t\",\"mem\":\"17-banks\"}")
+        .unwrap_err();
+    assert!(matches!(e, ServiceError::UnknownMemory(_)));
+    assert!(e.to_string().contains(soft_simt::mem::arch::PARSE_GRAMMAR));
+    let e = engine
+        .handle(&Request::Asm { source: "halt\n".into(), mem: MemoryArchKind::banked(4) })
+        .unwrap_err();
+    assert_eq!(e.exit_code(), 1, "assembly failures are execution-class");
+}

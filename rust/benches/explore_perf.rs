@@ -4,10 +4,12 @@
 //! `BENCH_sweep.json`.
 
 use soft_simt::benchkit::Bencher;
-use soft_simt::coordinator::job::TraceCache;
+use soft_simt::coordinator::job::{BenchJob, TraceCache};
 use soft_simt::coordinator::runner::SweepRunner;
 use soft_simt::explore::{explore, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
+use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::programs::library::program_by_name;
+use soft_simt::sim::compiled::{replay_many, CompiledTrace};
 
 fn main() {
     let program = "transpose32"; // smallest registered transpose workload
@@ -52,6 +54,48 @@ fn main() {
         summaries.push((name, result, s));
     }
 
+    // The PR's inner-loop win, isolated: the explorer's full arch set
+    // charged from ONE compiled-trace walk (replay_many) vs the legacy
+    // per-arch dyn `op_cost` replay of the same trace. Single-threaded
+    // on purpose: this measures total replay *work*, not pool scaling.
+    let probe = BenchJob::new(program, MemoryArchKind::banked(16));
+    let trace = probe.capture_trace().unwrap();
+    let archs: Vec<MemoryArchKind> = {
+        let mut v = Vec::new();
+        for p in space.points() {
+            if !v.contains(&p.arch) {
+                v.push(p.arch);
+            }
+        }
+        v
+    };
+    let jobs: Vec<BenchJob> = archs.iter().map(|&a| BenchJob::new(program, a)).collect();
+    let mut br = Bencher::new(2, 9);
+    let dyn_s = br
+        .bench(format!("replay_{}archs_dyn_op_cost", archs.len()), || {
+            jobs.iter().map(|j| j.replay_trace(&trace).unwrap().report.total_cycles()).sum::<u64>()
+        })
+        .clone();
+    println!("{}", dyn_s.line());
+    let compile_s = br.bench("compile_trace", || CompiledTrace::compile(&trace).n_ops()).clone();
+    println!("{}", compile_s.line());
+    let compiled = CompiledTrace::compile(&trace);
+    let batched_s = br
+        .bench(format!("replay_{}archs_compiled_batched", archs.len()), || {
+            replay_many(&compiled, &archs, u64::MAX)
+                .into_iter()
+                .map(|r| r.unwrap().total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", batched_s.line());
+    let batch_speedup = dyn_s.median().as_secs_f64() / batched_s.median().as_secs_f64();
+    println!(
+        "compiled batch replay speedup ({} archs, one walk vs {} walks): {batch_speedup:.2}x",
+        archs.len(),
+        archs.len()
+    );
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -64,13 +108,20 @@ fn main() {
          \"points\": {n_points},\n  \"archs\": {archs},\n  \
          \"exhaustive_median_ms\": {ex_ms:.3},\n  \"exhaustive_points_per_sec\": {ex_pps:.1},\n  \
          \"halving_median_ms\": {ha_ms:.3},\n  \"halving_scored\": {ha_scored},\n  \
-         \"halving_culled\": {ha_culled},\n  \"captures_per_explore\": 1\n}}\n",
+         \"halving_culled\": {ha_culled},\n  \"captures_per_explore\": 1,\n  \
+         \"replay_dyn_archset_ms\": {dyn_ms:.3},\n  \
+         \"compile_trace_ms\": {compile_ms:.3},\n  \
+         \"replay_batched_archset_ms\": {batched_ms:.3},\n  \
+         \"batch_speedup\": {batch_speedup:.3}\n}}\n",
         archs = space.arch_count(),
         ex_ms = ex_s.median().as_secs_f64() * 1e3,
         ex_pps = ex_res.points_scored as f64 / ex_s.median().as_secs_f64(),
         ha_ms = ha_s.median().as_secs_f64() * 1e3,
         ha_scored = ha_res.points_scored,
         ha_culled = ha_res.points_culled,
+        dyn_ms = dyn_s.median().as_secs_f64() * 1e3,
+        compile_ms = compile_s.median().as_secs_f64() * 1e3,
+        batched_ms = batched_s.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_explore.json", &json) {
         Ok(()) => println!("wrote BENCH_explore.json"),

@@ -147,6 +147,49 @@ fn main() {
     let speedup = base.median().as_secs_f64() / cached.median().as_secs_f64();
     println!("trace-cache speedup (9 archs, total work): {speedup:.2}x");
 
+    // The compiled batch replayer in isolation: the same 9-arch slate
+    // charged from ONE walk of each program's compiled trace vs the
+    // legacy per-arch dyn `op_cost` replay of the raw traces (the
+    // pre-ISSUE-4 inner loop). Capture/compile cost excluded from both
+    // sides — this is the replay-kernel trajectory number.
+    use soft_simt::sim::compiled::{replay_many, CompiledTrace};
+    let nine = MemoryArchKind::table3_nine();
+    let traces: Vec<_> = ["transpose128", "fft4096r8", "fft4096r16"]
+        .iter()
+        .map(|p| {
+            let job = BenchJob::new(p.to_string(), MemoryArchKind::banked(16));
+            job.capture_trace().unwrap()
+        })
+        .collect();
+    let replay_jobs: Vec<Vec<BenchJob>> = ["transpose128", "fft4096r8", "fft4096r16"]
+        .iter()
+        .map(|p| nine.iter().map(|&a| BenchJob::new(p.to_string(), a)).collect())
+        .collect();
+    let dyn_s = b3
+        .bench("replay_9archs_x3_dyn_op_cost", || {
+            traces
+                .iter()
+                .zip(&replay_jobs)
+                .flat_map(|(t, jobs)| jobs.iter().map(move |j| j.replay_trace(t)))
+                .map(|r| r.unwrap().report.total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", dyn_s.line());
+    let compiled: Vec<CompiledTrace> = traces.iter().map(CompiledTrace::compile).collect();
+    let batched = b3
+        .bench("replay_9archs_x3_compiled_batched", || {
+            compiled
+                .iter()
+                .flat_map(|ct| replay_many(ct, &nine, u64::MAX))
+                .map(|r| r.unwrap().total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", batched.line());
+    let batch_speedup = dyn_s.median().as_secs_f64() / batched.median().as_secs_f64();
+    println!("compiled batch replay speedup (9 archs × 3 programs): {batch_speedup:.2}x");
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -155,10 +198,15 @@ fn main() {
         "{{\n  \"bench\": \"arch_sweep_9x3\",\n  \"unix_time\": {unix_time},\n  \
          \"cells\": {cells},\n  \"programs\": 3,\n  \"archs\": 9,\n  \"workers\": 1,\n  \
          \"reexecute_median_ms\": {base_ms:.3},\n  \"trace_cached_median_ms\": {cached_ms:.3},\n  \
-         \"speedup\": {speedup:.3}\n}}\n",
+         \"speedup\": {speedup:.3},\n  \
+         \"replay_dyn_median_ms\": {dyn_ms:.3},\n  \
+         \"replay_batched_median_ms\": {batched_ms:.3},\n  \
+         \"batch_speedup\": {batch_speedup:.3}\n}}\n",
         cells = sweep_jobs.len(),
         base_ms = base.median().as_secs_f64() * 1e3,
         cached_ms = cached.median().as_secs_f64() * 1e3,
+        dyn_ms = dyn_s.median().as_secs_f64() * 1e3,
+        batched_ms = batched.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => println!("wrote BENCH_sweep.json"),

@@ -5,6 +5,7 @@
 
 use crate::mem::arch::MemoryArchKind;
 use crate::programs::library::{program_by_name, Workload};
+use crate::sim::compiled::{self, CompiledTrace};
 use crate::sim::config::MachineConfig;
 use crate::sim::exec::{self, ExecParams, FlatMemory, MemTrace};
 use crate::sim::machine::{Machine, SimError};
@@ -123,6 +124,11 @@ impl BenchJob {
     /// workload lookup — the trace is self-describing (capacity rides in
     /// [`MemTrace::mem_words`]), so the per-cell marginal cost is the
     /// timing model alone. Cycle-identical to [`Self::run`].
+    ///
+    /// This is the **reference** replay path (`dyn SharedMemory` charge
+    /// loop); the sweep/engine hot path charges a [`CompiledTrace`]
+    /// instead ([`Self::replay_compiled`]), which the differential
+    /// harness pins identical to this.
     pub fn replay_trace(&self, trace: &MemTrace) -> Result<BenchResult, SimError> {
         let mut cfg = MachineConfig::for_arch(self.arch).with_mem_words(trace.mem_words);
         if self.fast_timing {
@@ -130,6 +136,17 @@ impl BenchJob {
         }
         let mem = cfg.build_memory();
         let report = replay::replay(trace, mem.as_ref(), cfg.max_cycles)?;
+        Ok(BenchResult { job: self.clone(), report })
+    }
+
+    /// Replay this job's architecture from a compiled trace — the
+    /// closed-form O(1)-per-op charge path (DESIGN.md §Replay).
+    /// `RunReport`-identical to [`Self::replay_trace`] and [`Self::run`]
+    /// (`rust/tests/replay_diff.rs`); the banked timing-mode knob is
+    /// irrelevant here because exact and fast modes are property-equal.
+    pub fn replay_compiled(&self, trace: &CompiledTrace) -> Result<BenchResult, SimError> {
+        let report =
+            compiled::replay_compiled(trace, self.arch, MachineConfig::DEFAULT_MAX_CYCLES)?;
         Ok(BenchResult { job: self.clone(), report })
     }
 }
@@ -144,10 +161,14 @@ pub struct BenchResult {
 /// Shared cache of functional-execution traces keyed by
 /// `(program, data-image seed)`. A 9-architecture × N-program sweep hits
 /// the expensive functional simulation once per program and replays
-/// timing 9×.
+/// timing 9×. The cache also memoizes each trace's **compiled** form
+/// ([`CompiledTrace`], built at most once per key), so the batch
+/// replayer's one-walk-per-slate kernel is as shareable as the traces
+/// themselves.
 #[derive(Debug, Default)]
 pub struct TraceCache {
     traces: Mutex<HashMap<TraceKey, Arc<MemTrace>>>,
+    compiled: Mutex<HashMap<TraceKey, Arc<CompiledTrace>>>,
 }
 
 impl TraceCache {
@@ -187,6 +208,24 @@ impl TraceCache {
         let trace = Arc::new(job.capture_trace()?);
         self.insert(key, Arc::clone(&trace));
         Ok(trace)
+    }
+
+    /// Fetch the compiled form of `trace` under `key`, compiling on a
+    /// miss (first compile wins on a concurrent race). The compilation
+    /// is the one-walk family precomputation of DESIGN.md §Replay —
+    /// cached here so repeat sweeps, explorations and engine `Run`s over
+    /// a warm trace never re-hash an address.
+    pub fn get_or_compile(&self, key: &TraceKey, trace: &MemTrace) -> Arc<CompiledTrace> {
+        if let Some(c) = self.compiled.lock().unwrap().get(key) {
+            return Arc::clone(c);
+        }
+        let built = Arc::new(CompiledTrace::compile(trace));
+        Arc::clone(self.compiled.lock().unwrap().entry(key.clone()).or_insert(built))
+    }
+
+    /// Number of cached compiled traces (≤ [`Self::len`]).
+    pub fn compiled_len(&self) -> usize {
+        self.compiled.lock().unwrap().len()
     }
 }
 
@@ -245,6 +284,33 @@ mod tests {
             assert_eq!(replayed.report.stats, coupled.report.stats, "{arch}");
             assert_eq!(replayed.report.total_cycles(), coupled.report.total_cycles());
         }
+    }
+
+    #[test]
+    fn compiled_replay_matches_reference_replay() {
+        let base = BenchJob::new("transpose32", MemoryArchKind::banked(16));
+        let trace = base.capture_trace().unwrap();
+        let compiled = CompiledTrace::compile(&trace);
+        for arch in MemoryArchKind::table3_nine() {
+            let job = BenchJob::new("transpose32", arch);
+            let reference = job.replay_trace(&trace).unwrap();
+            let fast = job.replay_compiled(&compiled).unwrap();
+            assert_eq!(fast.report.stats, reference.report.stats, "{arch}");
+            assert_eq!(fast.report.total_cycles(), reference.report.total_cycles(), "{arch}");
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_compiled_traces() {
+        let cache = TraceCache::new();
+        let job = BenchJob::new("transpose32", MemoryArchKind::banked(16));
+        let trace = cache.get_or_capture(&job).unwrap();
+        assert_eq!(cache.compiled_len(), 0, "compilation is on demand");
+        let a = cache.get_or_compile(&job.trace_key(), &trace);
+        let b = cache.get_or_compile(&job.trace_key(), &trace);
+        assert!(Arc::ptr_eq(&a, &b), "one compilation per trace key");
+        assert_eq!(cache.compiled_len(), 1);
+        assert_eq!(a.n_ops() as u64, trace.mem_op_count());
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Parallel sweep runner: a worker pool over benchmark jobs, with a
-//! trace-cached fast path that executes each program once and replays
-//! its timing on every architecture.
+//! trace-cached fast path that executes each program once, compiles the
+//! trace once, and batch-replays every architecture from single trace
+//! walks (DESIGN.md §Replay).
 //!
 //! tokio is unavailable offline, so this is a plain `std::thread` pool
 //! with a shared work queue — ample for a simulator sweep, and the
 //! results arrive in deterministic (input) order regardless of worker
 //! scheduling.
 
-use super::job::{BenchJob, BenchResult, TraceCache};
+use super::job::{BenchJob, BenchResult, TraceCache, TraceKey};
+use crate::mem::arch::MemoryArchKind;
+use crate::sim::compiled::{replay_many, CompiledTrace};
+use crate::sim::config::MachineConfig;
 use crate::sim::machine::SimError;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -88,11 +92,13 @@ impl SweepRunner {
     }
 
     /// Run every job through a fresh trace cache: each distinct
-    /// `(program, data image)` is functionally executed once, then every
-    /// job replays its architecture's timing from the shared trace.
-    /// Cycle-identical to [`Self::run`] (pinned by
-    /// `rust/tests/replay_parity.rs`), ~`A×` cheaper for an
-    /// `A`-architecture sweep.
+    /// `(program, data image)` is functionally executed once, compiled
+    /// once, then every job's architecture is charged from batched trace
+    /// walks. Cycle-identical to [`Self::run`] (pinned by
+    /// `rust/tests/replay_parity.rs` and `rust/tests/replay_diff.rs`),
+    /// ~`A×` cheaper in functional work for an `A`-architecture sweep and
+    /// a further batch win on the replay side (one walk charges a whole
+    /// chunk of architectures).
     ///
     /// **Deprecated wiring path** for external consumers: prefer a
     /// [`crate::service::SimtEngine`] session (`Request::Sweep`), whose
@@ -103,16 +109,23 @@ impl SweepRunner {
         self.run_with_cache(jobs, &cache)
     }
 
-    /// [`Self::run_cached`] against a caller-owned cache, so traces
-    /// survive across sweeps (e.g. re-running the paper sweep while
-    /// exploring hypothetical architectures).
+    /// [`Self::run_cached`] against a caller-owned cache, so traces (and
+    /// their compiled forms) survive across sweeps (e.g. re-running the
+    /// paper sweep while exploring hypothetical architectures).
+    ///
+    /// Three phases, each sharded on the worker pool:
+    ///
+    /// 1. **capture** — each distinct uncached trace key, executed once;
+    /// 2. **compile** — each distinct key's [`CompiledTrace`], built (or
+    ///    fetched) once;
+    /// 3. **batch replay** — each key's cells are chunked and every chunk
+    ///    charged in a single [`replay_many`] trace walk.
     pub fn run_with_cache(
         &self,
         jobs: &[BenchJob],
         cache: &TraceCache,
     ) -> Result<Vec<BenchResult>, SimError> {
-        // Capture phase: each distinct uncached trace key, executed once,
-        // in parallel across programs.
+        // Capture phase.
         let mut seen = HashSet::new();
         let pending: Vec<&BenchJob> = jobs
             .iter()
@@ -128,14 +141,51 @@ impl SweepRunner {
         for (job, trace) in pending.iter().zip(captured?) {
             cache.insert(job.trace_key(), trace);
         }
-        // Replay phase: every cell, in parallel, against the shared
-        // traces.
-        self.parallel_map(jobs, |job| {
-            let trace = cache.get(&job.trace_key()).expect("trace captured in phase 1");
-            job.replay_trace(&trace)
-        })
-        .into_iter()
-        .collect()
+
+        // Compile phase: group cells by trace key, compile each distinct
+        // key at most once (memoized in the cache).
+        let mut keys: Vec<TraceKey> = Vec::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            let key = job.trace_key();
+            match keys.iter().position(|k| *k == key) {
+                Some(g) => groups[g].push(i),
+                None => {
+                    keys.push(key);
+                    groups.push(vec![i]);
+                }
+            }
+        }
+        let compiled: Vec<Arc<CompiledTrace>> = self.parallel_map(&keys, |key| {
+            let trace = cache.get(key).expect("trace captured in phase 1");
+            cache.get_or_compile(key, &trace)
+        });
+
+        // Batch-replay phase: chunk against the *whole* batch so the
+        // unit count lands near the worker count — sizing chunks per
+        // group would collapse to one-arch walks on many-core pools
+        // (e.g. 9-arch groups ÷ 16 workers), forfeiting the batch
+        // amortization — while the `.max(2)` floor keeps every walk
+        // charging at least two architectures whenever a group allows.
+        // Chunks never span groups (a walk charges one trace).
+        let chunk = jobs.len().div_ceil(self.workers).max(2);
+        let mut units: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (g, idxs) in groups.iter().enumerate() {
+            for c in idxs.chunks(chunk) {
+                units.push((g, c.to_vec()));
+            }
+        }
+        let replayed = self.parallel_map(&units, |(g, idxs)| {
+            let archs: Vec<MemoryArchKind> = idxs.iter().map(|&i| jobs[i].arch).collect();
+            replay_many(&compiled[*g], &archs, MachineConfig::DEFAULT_MAX_CYCLES)
+        });
+        let mut slots: Vec<Option<BenchResult>> = (0..jobs.len()).map(|_| None).collect();
+        for ((_, idxs), reports) in units.iter().zip(replayed) {
+            for (&i, report) in idxs.iter().zip(reports) {
+                slots[i] = Some(BenchResult { job: jobs[i].clone(), report: report? });
+            }
+        }
+        Ok(slots.into_iter().map(|s| s.expect("every cell replayed")).collect())
     }
 }
 
@@ -200,6 +250,26 @@ mod tests {
             assert_eq!(a.job, b.job);
             assert_eq!(a.report.stats, b.report.stats, "{}", a.job.arch);
             assert_eq!(a.report.total_cycles(), b.report.total_cycles());
+        }
+    }
+
+    #[test]
+    fn batched_sweep_shares_one_compiled_trace() {
+        let jobs: Vec<BenchJob> = MemoryArchKind::table3_nine()
+            .into_iter()
+            .map(|arch| BenchJob::new("transpose32", arch))
+            .collect();
+        let cache = TraceCache::new();
+        let runner = SweepRunner::new(3);
+        let results = runner.run_with_cache(&jobs, &cache).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.compiled_len(), 1, "nine cells share one compiled trace");
+        // Every batched cell equals the reference per-arch replay.
+        let trace = cache.get(&jobs[0].trace_key()).unwrap();
+        for (job, r) in jobs.iter().zip(&results) {
+            let reference = job.replay_trace(&trace).unwrap();
+            assert_eq!(r.report.stats, reference.report.stats, "{}", job.arch);
+            assert_eq!(r.report.total_cycles(), reference.report.total_cycles());
         }
     }
 

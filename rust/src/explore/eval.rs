@@ -1,12 +1,15 @@
-//! Point evaluation: cached trace replay + footprint model.
+//! Point evaluation: compiled-trace replay + footprint model.
 //!
-//! One [`Evaluator`] owns one workload's [`MemTrace`] (fetched through
-//! the shared [`TraceCache`], so a workload is functionally executed at
-//! most **once** no matter how many points are scored — the counter
-//! [`Evaluator::captures`] is the executable statement of that
-//! guarantee). Per-architecture timing is a pure trace replay, memoized
-//! across the design points that share an architecture; capacity only
-//! enters through the ALM footprint model.
+//! One [`Evaluator`] owns one workload's [`CompiledTrace`] (fetched
+//! through the shared [`TraceCache`], so a workload is functionally
+//! executed — and compiled — at most **once** no matter how many points
+//! are scored; the counter [`Evaluator::captures`] is the executable
+//! statement of that guarantee). Per-architecture timing is a pure
+//! closed-form charge over the compiled trace (DESIGN.md §Replay),
+//! memoized across the design points that share an architecture and
+//! batched per strategy wave ([`Evaluator::replay_batch`]: one trace
+//! walk charges a whole chunk of candidates); capacity only enters
+//! through the ALM footprint model.
 //!
 //! For pruning strategies the evaluator also offers a **lower bound** on
 //! replay cycles, computed in O(1) per architecture from a popcount
@@ -21,11 +24,12 @@ use super::pareto::Cost;
 use super::space::DesignPoint;
 use crate::area::footprint::{self, Footprint};
 use crate::coordinator::job::{BenchJob, TraceCache};
+use crate::coordinator::runner::SweepRunner;
 use crate::mem::arch::MemoryArchKind;
 use crate::mem::{timing, LANES};
+use crate::sim::compiled::{replay_compiled, replay_many, CompiledTrace};
 use crate::sim::config::MachineConfig;
 use crate::sim::exec::{MemAccessKind, MemTrace, SimError};
-use crate::sim::replay;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -106,7 +110,10 @@ impl TraceProfile {
 pub struct Evaluator {
     program: String,
     dataset_kb: u32,
-    trace: Arc<MemTrace>,
+    /// Compiled form of the workload trace (DESIGN.md §Replay): every
+    /// per-architecture score is a closed-form charge over this, with no
+    /// address re-hashing per candidate.
+    compiled: Arc<CompiledTrace>,
     profile: TraceProfile,
     captures: u64,
     /// Per-architecture replay memo. The outer lock only guards the map
@@ -133,10 +140,14 @@ impl Evaluator {
         // workload's capacity, so no workload re-materialization is
         // needed here.
         let dataset_kb = (trace.mem_words * 4 / 1024) as u32;
+        // The compiled form is memoized in the same cache, so a sweep,
+        // an exploration and any number of engine `Run`s over one
+        // workload share one compilation too.
+        let compiled = cache.get_or_compile(&probe.trace_key(), &trace);
         Ok(Self {
             program: program.to_string(),
             dataset_kb,
-            trace,
+            compiled,
             profile,
             captures: u64::from(!warm),
             replays: Mutex::new(HashMap::new()),
@@ -171,22 +182,63 @@ impl Evaluator {
     }
 
     /// Replay the trace on `arch`'s timing model (memoized). Zero
-    /// functional execution: the trace is charged against the cost model
-    /// only, exactly as `BenchJob::replay_trace` does on the sweep path.
+    /// functional execution, zero address hashing: the compiled trace is
+    /// charged against `arch`'s closed-form cost model
+    /// ([`replay_compiled`]), bit-identical to the reference
+    /// `BenchJob::replay_trace` path (`rust/tests/replay_diff.rs`).
     pub fn replay_arch(&self, arch: MemoryArchKind) -> Result<u64, SimError> {
         let slot = Arc::clone(self.replays.lock().unwrap().entry(arch).or_default());
         let mut slot = slot.lock().unwrap();
         if let Some(cycles) = *slot {
             return Ok(cycles);
         }
-        let cfg = MachineConfig::for_arch(arch)
-            .with_mem_words(self.trace.mem_words)
-            .with_fast_timing();
-        let mem = cfg.build_memory();
-        let cycles = replay::replay(&self.trace, mem.as_ref(), cfg.max_cycles)?.total_cycles();
+        let cycles = replay_compiled(&self.compiled, arch, MachineConfig::DEFAULT_MAX_CYCLES)?
+            .total_cycles();
         self.replay_count.fetch_add(1, Ordering::Relaxed);
         *slot = Some(cycles);
         Ok(cycles)
+    }
+
+    /// Batch-replay every not-yet-memoized architecture in `archs`:
+    /// the slate is deduplicated, chunked, and each chunk charged in a
+    /// **single** trace walk ([`replay_many`]) on the worker pool —
+    /// the explorer's unit of parallelism (strategies call this before
+    /// scoring a wave).
+    pub fn replay_batch(
+        &self,
+        archs: &[MemoryArchKind],
+        runner: &SweepRunner,
+    ) -> Result<(), SimError> {
+        let mut todo: Vec<MemoryArchKind> = Vec::new();
+        {
+            let memo = self.replays.lock().unwrap();
+            for &arch in archs {
+                let known = memo.get(&arch).is_some_and(|slot| slot.lock().unwrap().is_some());
+                if !known && !todo.contains(&arch) {
+                    todo.push(arch);
+                }
+            }
+        }
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let chunk = todo.len().div_ceil(runner.workers()).max(1);
+        let chunks: Vec<&[MemoryArchKind]> = todo.chunks(chunk).collect();
+        let replayed = runner.map(&chunks, |chunk| {
+            replay_many(&self.compiled, chunk, MachineConfig::DEFAULT_MAX_CYCLES)
+        });
+        for (chunk, reports) in chunks.iter().zip(replayed) {
+            for (&arch, report) in chunk.iter().zip(reports) {
+                let cycles = report?.total_cycles();
+                let slot = Arc::clone(self.replays.lock().unwrap().entry(arch).or_default());
+                let mut slot = slot.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(cycles);
+                    self.replay_count.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Exact score of one design point: memoized replay + footprint at
@@ -278,6 +330,29 @@ mod tests {
         assert_eq!(eval.replays(), 1, "capacity variants share one replay");
         assert_eq!(ca.cycles, cb.cycles);
         assert!(ca.alms() <= cb.alms(), "banked footprint constant in capacity");
+    }
+
+    #[test]
+    fn batch_replay_memoizes_and_agrees_with_coupled_runs() {
+        let cache = TraceCache::new();
+        let eval = Evaluator::new("transpose32", &cache).unwrap();
+        let runner = SweepRunner::new(2);
+        let archs = [
+            MemoryArchKind::banked(16),
+            MemoryArchKind::mp_4r1w(),
+            MemoryArchKind::banked(16), // duplicate: deduped in the slate
+            MemoryArchKind::banked_offset(8),
+        ];
+        eval.replay_batch(&archs, &runner).unwrap();
+        assert_eq!(eval.replays(), 3, "duplicates share one replay");
+        eval.replay_batch(&archs, &runner).unwrap();
+        assert_eq!(eval.replays(), 3, "second batch is fully memoized");
+        for arch in [MemoryArchKind::banked(16), MemoryArchKind::mp_4r1w()] {
+            let batched = eval.replay_arch(arch).unwrap();
+            let coupled = BenchJob::new("transpose32", arch).run().unwrap();
+            assert_eq!(batched, coupled.report.total_cycles(), "{arch}");
+        }
+        assert_eq!(eval.replays(), 3, "memo reused by the single-arch path");
     }
 
     #[test]

@@ -39,23 +39,17 @@ pub trait SearchStrategy: Sync {
     ) -> Result<SearchOutcome, SimError>;
 }
 
-/// Replay every distinct architecture on the worker pool, then score the
-/// architectures of `points` that have not been replayed yet.
+/// Batch-replay the distinct architectures of `points` that have not
+/// been memoized yet: the evaluator chunks the slate and charges each
+/// chunk in a single compiled-trace walk on the worker pool
+/// ([`Evaluator::replay_batch`], DESIGN.md §Replay).
 fn replay_batch(
     points: &[DesignPoint],
     eval: &Evaluator,
     runner: &SweepRunner,
 ) -> Result<(), SimError> {
-    let mut archs: Vec<MemoryArchKind> = Vec::new();
-    for p in points {
-        if !archs.contains(&p.arch) {
-            archs.push(p.arch);
-        }
-    }
-    runner
-        .map(&archs, |arch| eval.replay_arch(*arch).map(|_| ()))
-        .into_iter()
-        .collect()
+    let archs: Vec<MemoryArchKind> = points.iter().map(|p| p.arch).collect();
+    eval.replay_batch(&archs, runner)
 }
 
 /// Exhaustive grid search: every point scored.

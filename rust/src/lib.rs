@@ -46,11 +46,16 @@
 //! ([`sim::replay`]) that charges any memory architecture's cost model
 //! from that trace. [`sim::machine::Machine`] runs both in lockstep; the
 //! sweep path ([`coordinator`]) caches traces so a 9-architecture sweep
-//! executes each program once and replays timing 9×. The design-space
-//! explorer ([`explore`]) pushes that to its conclusion: a parametric
-//! space of hypothetical memories (banks 2–32 × mapping × ports ×
-//! capacity), Pareto-searched from a single functional execution per
-//! workload (DESIGN.md §Explore).
+//! executes each program once and replays timing 9×. On top of the
+//! cache sits the **compiled batch replayer** ([`sim::compiled`],
+//! DESIGN.md §Replay): a trace is compiled once into per-operation
+//! conflict maxima for every bank-mapping family, and
+//! [`sim::compiled::replay_many`] then charges a whole slate of
+//! architectures in a single trace walk. The design-space explorer
+//! ([`explore`]) pushes that to its conclusion: a parametric space of
+//! hypothetical memories (banks 2–32 × mapping × ports × capacity),
+//! Pareto-searched from a single functional execution per workload
+//! (DESIGN.md §Explore).
 //!
 //! ## The service layer (DESIGN.md §Service)
 //!
@@ -112,6 +117,7 @@ pub mod prelude {
         transpose::transpose_program,
     };
     pub use crate::sim::{
+        compiled::{replay_compiled, replay_many, CompiledTrace},
         config::MachineConfig,
         exec::{execute, ExecMemory, ExecParams, FlatMemory, MemTrace, SimError},
         machine::Machine,

@@ -1,0 +1,367 @@
+//! Closed-form operation-cost compilation — the `mem/` half of the
+//! compiled-trace batch-replay pipeline (DESIGN.md §Replay).
+//!
+//! The per-operation cost of every architecture the crate can construct
+//! is a pure function of quantities that do **not** depend on which
+//! architecture is being charged:
+//!
+//! - **banked** (`B` banks, shift-family or XOR mapping): the maximum
+//!   per-bank population count of the 16 lane addresses under that
+//!   mapping ([`crate::mem::conflict`]);
+//! - **multiport** (`R`R×`W`W, optional VB): `⌈active/ports⌉`, a pure
+//!   function of the lane-population count.
+//!
+//! So a memory operation can be *compiled once* into a small vector of
+//! per-family conflict maxima plus its active-lane count, after which
+//! charging any architecture is an O(1) table lookup — no address
+//! re-hashing, no `dyn SharedMemory` dispatch. Two facts keep the family
+//! table tiny:
+//!
+//! 1. every shift-family map (`Lsb` is shift 0, `Offset { shift }` up to
+//!    [`BankMapping::MAX_SHIFT`]) extracts `bank = (addr >> s) & (B-1)`,
+//!    and the per-bank counts for `B` banks are a pairwise *fold* of the
+//!    counts for `2B` banks (`count_B[i] = count_2B[i] + count_2B[i+B]`),
+//!    so one 32-bucket histogram per shift yields the max for every bank
+//!    count;
+//! 2. the XOR map depends on `log2(B)` directly, so it gets one slot per
+//!    bank count.
+//!
+//! That is [`FAMILY_COUNT`] = 5 bank sizes × 9 shifts + 5 XOR = 50 bytes
+//! per operation. [`family_of`] maps an architecture descriptor (with the
+//! same capacity clamp as [`BankMap::for_capacity`]) to its slot;
+//! [`ArchCost`] bundles the slot with the §III-A overheads and the write
+//! buffer depth — everything the replayer asks a [`SharedMemory`] for,
+//! derived once per architecture. The property tests below pin
+//! `ArchCost` byte-for-byte against the live `SharedMemory::op_cost`
+//! charge path on random operations.
+
+use super::arch::{MemoryArchKind, OpKind};
+use super::mapping::BankMapping;
+use super::{timing, LaneMask, LANES, MAX_BANKS};
+use crate::util::bits::ceil_div;
+
+/// Number of constructible bank counts (powers of two `2..=MAX_BANKS`).
+pub const BANK_SIZES: usize = 5;
+
+/// Number of shift-family positions (`0..=BankMapping::MAX_SHIFT`).
+pub const SHIFT_COUNT: usize = BankMapping::MAX_SHIFT as usize + 1;
+
+/// Conflict families compiled per operation: every (bank count, shift)
+/// pair plus one XOR slot per bank count.
+pub const FAMILY_COUNT: usize = BANK_SIZES * SHIFT_COUNT + BANK_SIZES;
+
+/// Slot index of a bank count within a shift family (2→0 … 32→4).
+#[inline]
+fn bank_slot(banks: u32) -> usize {
+    debug_assert!(banks.is_power_of_two() && (2..=MAX_BANKS as u32).contains(&banks));
+    banks.trailing_zeros() as usize - 1
+}
+
+/// Family slot of `(banks, mapping)` on a memory of `mem_words` capacity.
+///
+/// Applies the same shift clamp as [`BankMap::for_capacity`]
+/// (`shift ≤ log2(words) − log2(banks)`), so compiled lookups agree with
+/// a live [`crate::mem::banked::BankedMemory`] built at that capacity.
+///
+/// [`BankMap::for_capacity`]: crate::mem::mapping::BankMap::for_capacity
+pub fn family_of(banks: u32, mapping: BankMapping, mem_words: usize) -> usize {
+    let slot = bank_slot(banks);
+    match mapping {
+        BankMapping::Xor => BANK_SIZES * SHIFT_COUNT + slot,
+        m => {
+            let bits = banks.trailing_zeros();
+            let addr_bits = mem_words.trailing_zeros(); // capacity is a power of two
+            let shift = m.shift().min(addr_bits.saturating_sub(bits));
+            shift as usize * BANK_SIZES + slot
+        }
+    }
+}
+
+/// Compile one 16-lane operation: fill `out[f]` with the maximum
+/// per-bank population count under family `f`, for every family.
+///
+/// One pass over the active lanes per shift builds a 32-bucket
+/// histogram; folding it in halves yields the maxima for 16/8/4/2 banks
+/// for free. The XOR families each take their own (cheap) lane pass.
+pub fn compile_op(addrs: &[u32; LANES], mask: LaneMask, out: &mut [u8; FAMILY_COUNT]) {
+    for s in 0..SHIFT_COUNT {
+        let mut counts = [0u8; MAX_BANKS];
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            m &= m - 1;
+            counts[((addrs[lane] >> s) & (MAX_BANKS as u32 - 1)) as usize] += 1;
+        }
+        let mut width = MAX_BANKS;
+        for slot in (0..BANK_SIZES).rev() {
+            out[s * BANK_SIZES + slot] = counts[..width].iter().copied().max().unwrap_or(0);
+            width /= 2;
+            for i in 0..width {
+                counts[i] += counts[i + width];
+            }
+        }
+    }
+    for slot in 0..BANK_SIZES {
+        let bits = slot as u32 + 1;
+        let banks = 1u32 << bits;
+        let mut counts = [0u8; MAX_BANKS];
+        let mut max = 0u8;
+        let mut m = mask;
+        while m != 0 {
+            let lane = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let a = addrs[lane];
+            let b = ((a ^ (a >> bits)) & (banks - 1)) as usize;
+            counts[b] += 1;
+            max = max.max(counts[b]);
+        }
+        out[BANK_SIZES * SHIFT_COUNT + slot] = max;
+    }
+}
+
+/// The closed-form cost model of one architecture: everything the
+/// timing replayer asks a [`SharedMemory`] for — per-operation cost,
+/// §III-A overheads, write buffer depth — with the per-operation cost
+/// reduced to a compiled-family lookup (banked) or a popcount division
+/// (multiport). Built once per `(architecture, capacity)` by
+/// [`ArchCost::new`]; the replay-diff harness pins it
+/// `RunReport`-identical to the `dyn SharedMemory` charge path.
+///
+/// [`SharedMemory`]: crate::mem::arch::SharedMemory
+#[derive(Debug, Clone, Copy)]
+pub struct ArchCost {
+    arch: MemoryArchKind,
+    kind: CostKind,
+    read_overhead: u32,
+    write_overhead: u32,
+    write_buffer_ops: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum CostKind {
+    /// Conflict-family slot in a compiled operation's family vector.
+    Banked { family: usize },
+    /// `⌈active/read_ports⌉` reads, `⌈active/write_div⌉` writes
+    /// (`write_div` already folds the VB mode's effective 2W bandwidth).
+    MultiPort { read_ports: u32, write_div: u32 },
+}
+
+impl ArchCost {
+    /// Cost model for `arch` on a `mem_words`-word memory (the standard,
+    /// non-half-banked configuration every sweep/replay path uses).
+    pub fn new(arch: MemoryArchKind, mem_words: usize) -> Self {
+        Self::with_half_banks(arch, mem_words, false)
+    }
+
+    /// As [`Self::new`], with the §IV-A half-bank latency knob.
+    pub fn with_half_banks(arch: MemoryArchKind, mem_words: usize, half_banks: bool) -> Self {
+        match arch {
+            MemoryArchKind::Banked { banks, mapping } => Self {
+                arch,
+                kind: CostKind::Banked { family: family_of(banks, mapping, mem_words) },
+                read_overhead: timing::banked_read_overhead(half_banks),
+                write_overhead: timing::banked_write_overhead(half_banks),
+                write_buffer_ops: timing::WRITE_BUFFER_OPS,
+            },
+            MemoryArchKind::MultiPort { read_ports, write_ports, vb } => Self {
+                arch,
+                kind: CostKind::MultiPort {
+                    read_ports,
+                    write_div: if vb { 2 } else { write_ports },
+                },
+                read_overhead: timing::MULTIPORT_OVERHEAD,
+                write_overhead: timing::MULTIPORT_OVERHEAD,
+                write_buffer_ops: timing::WRITE_BUFFER_OPS,
+            },
+        }
+    }
+
+    /// The architecture this model charges for.
+    pub fn arch(&self) -> MemoryArchKind {
+        self.arch
+    }
+
+    /// Fixed per-instruction overhead, as [`SharedMemory::overhead`].
+    ///
+    /// [`SharedMemory::overhead`]: crate::mem::arch::SharedMemory::overhead
+    #[inline]
+    pub fn overhead(&self, kind: OpKind) -> u32 {
+        match kind {
+            OpKind::Read => self.read_overhead,
+            OpKind::Write => self.write_overhead,
+        }
+    }
+
+    /// Write-controller buffer depth, as [`SharedMemory::write_buffer_ops`].
+    ///
+    /// [`SharedMemory::write_buffer_ops`]: crate::mem::arch::SharedMemory::write_buffer_ops
+    #[inline]
+    pub fn write_buffer_ops(&self) -> u32 {
+        self.write_buffer_ops
+    }
+
+    /// Cycles one compiled operation occupies the memory pipeline.
+    /// `conflicts` is the operation's [`FAMILY_COUNT`]-long family
+    /// vector, `active` its lane-population count. Already floored at 1
+    /// (the `op_cost(..).max(1)` charge the replayer applies).
+    #[inline]
+    pub fn op_cost(&self, kind: OpKind, conflicts: &[u8], active: u8) -> u32 {
+        match self.kind {
+            CostKind::Banked { family } => u32::from(conflicts[family]).max(1),
+            CostKind::MultiPort { read_ports, write_div } => {
+                let div = match kind {
+                    OpKind::Read => read_ports,
+                    OpKind::Write => write_div,
+                };
+                ceil_div(u32::from(active), div).max(1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::SharedMemory;
+    use crate::mem::conflict::max_conflicts;
+    use crate::mem::mapping::BankMap;
+    use crate::util::proptest::check;
+    use crate::util::XorShift64;
+
+    fn random_op(rng: &mut XorShift64, addr_space: u32) -> ([u32; LANES], LaneMask) {
+        let mut addrs = [0u32; LANES];
+        for a in addrs.iter_mut() {
+            *a = rng.below(addr_space);
+        }
+        (addrs, rng.next_u32() as LaneMask)
+    }
+
+    fn random_mapping(rng: &mut XorShift64) -> BankMapping {
+        match rng.below(3) {
+            0 => BankMapping::Lsb,
+            1 => BankMapping::Offset { shift: rng.below(BankMapping::MAX_SHIFT + 1) },
+            _ => BankMapping::Xor,
+        }
+    }
+
+    #[test]
+    fn family_table_shape() {
+        assert_eq!(FAMILY_COUNT, 50);
+        // Distinct valid (banks, mapping) descriptors get distinct slots
+        // on a capacity where no clamp binds.
+        let mut seen = std::collections::HashSet::new();
+        for banks in [2u32, 4, 8, 16, 32] {
+            for shift in 0..=BankMapping::MAX_SHIFT {
+                let f = family_of(banks, BankMapping::Offset { shift }, 1 << 16);
+                assert!(f < FAMILY_COUNT);
+                assert!(seen.insert(f), "slot collision banks={banks} shift={shift}");
+            }
+            let f = family_of(banks, BankMapping::Xor, 1 << 16);
+            assert!(f < FAMILY_COUNT && seen.insert(f));
+            // Lsb aliases shift 0 — by construction, not by accident.
+            assert_eq!(
+                family_of(banks, BankMapping::Lsb, 1 << 16),
+                family_of(banks, BankMapping::Offset { shift: 0 }, 1 << 16)
+            );
+        }
+        assert_eq!(seen.len(), FAMILY_COUNT);
+    }
+
+    #[test]
+    fn family_clamp_matches_bank_map() {
+        // banked32-offset8 on 1 Ki words: BankMap clamps the shift to 5;
+        // the family slot must land on the same effective shift.
+        let f = family_of(32, BankMapping::Offset { shift: 8 }, 1024);
+        assert_eq!(f, family_of(32, BankMapping::Offset { shift: 5 }, 1024));
+        // No clamp at 64 Ki words.
+        assert_ne!(
+            family_of(32, BankMapping::Offset { shift: 8 }, 1 << 16),
+            family_of(32, BankMapping::Offset { shift: 5 }, 1 << 16)
+        );
+    }
+
+    #[test]
+    fn compiled_families_match_live_conflict_maths_property() {
+        check("compile_op == max_conflicts for every family", 500, |rng| {
+            let words = 1usize << (8 + rng.below(9)); // 256 .. 64 Ki
+            let (addrs, mask) = random_op(rng, words as u32);
+            let mut out = [0u8; FAMILY_COUNT];
+            compile_op(&addrs, mask, &mut out);
+            for banks in [2u32, 4, 8, 16, 32] {
+                for mapping in [
+                    BankMapping::Lsb,
+                    BankMapping::Offset { shift: rng.below(BankMapping::MAX_SHIFT + 1) },
+                    BankMapping::Xor,
+                ] {
+                    let map = BankMap::for_capacity(banks, mapping, words);
+                    assert_eq!(
+                        u32::from(out[family_of(banks, mapping, words)]),
+                        max_conflicts(&addrs, mask, &map),
+                        "banks={banks} {mapping:?} words={words}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn arch_cost_matches_shared_memory_property() {
+        check("ArchCost == live SharedMemory charge path", 400, |rng| {
+            let words = 1usize << (10 + rng.below(7)); // 1 Ki .. 64 Ki
+            let arch = if rng.chance(0.5) {
+                MemoryArchKind::Banked {
+                    banks: [2u32, 4, 8, 16, 32][rng.below(5) as usize],
+                    mapping: random_mapping(rng),
+                }
+            } else {
+                let write_ports = 1 + rng.below(2);
+                MemoryArchKind::MultiPort {
+                    read_ports: 1 << rng.below(4),
+                    write_ports,
+                    vb: write_ports == 1 && rng.chance(0.3),
+                }
+            };
+            let mem = arch.build(words);
+            let cost = ArchCost::new(arch, words);
+            assert_eq!(cost.arch(), arch);
+            assert_eq!(cost.overhead(OpKind::Read), mem.overhead(OpKind::Read));
+            assert_eq!(cost.overhead(OpKind::Write), mem.overhead(OpKind::Write));
+            assert_eq!(cost.write_buffer_ops(), mem.write_buffer_ops());
+            for _ in 0..4 {
+                let (addrs, mask) = random_op(rng, words as u32);
+                let mut out = [0u8; FAMILY_COUNT];
+                compile_op(&addrs, mask, &mut out);
+                let active = mask.count_ones() as u8;
+                for kind in [OpKind::Read, OpKind::Write] {
+                    assert_eq!(
+                        cost.op_cost(kind, &out, active),
+                        mem.op_cost(kind, &addrs, mask).max(1),
+                        "{arch} {kind:?} mask={mask:#06x}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_mask_costs_one_cycle() {
+        let (addrs, mask) = ([7u32; LANES], 0);
+        let mut out = [0u8; FAMILY_COUNT];
+        compile_op(&addrs, mask, &mut out);
+        assert!(out.iter().all(|&c| c == 0));
+        for arch in MemoryArchKind::table3_nine() {
+            let cost = ArchCost::new(arch, 1 << 16);
+            assert_eq!(cost.op_cost(OpKind::Read, &out, 0), 1, "{arch}");
+            assert_eq!(cost.op_cost(OpKind::Write, &out, 0), 1, "{arch}");
+        }
+    }
+
+    #[test]
+    fn full_conflict_compiles_to_sixteen() {
+        // All 16 lanes on one address: every family maxes at 16.
+        let addrs = [32u32; LANES];
+        let mut out = [0u8; FAMILY_COUNT];
+        compile_op(&addrs, crate::mem::FULL_MASK, &mut out);
+        assert!(out.iter().all(|&c| c == 16), "{out:?}");
+    }
+}

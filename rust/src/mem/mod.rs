@@ -25,6 +25,7 @@
 pub mod arbiter;
 pub mod arch;
 pub mod banked;
+pub mod compiled;
 pub mod conflict;
 pub mod controller;
 pub mod mapping;
@@ -32,6 +33,7 @@ pub mod multiport;
 pub mod timing;
 
 pub use arch::{MemoryArchKind, OpKind, SharedMemory};
+pub use compiled::ArchCost;
 pub use mapping::BankMapping;
 
 /// Number of SIMT lanes (SPs) — fixed at 16 in the paper's processor; the

@@ -104,7 +104,12 @@ impl SimtEngine {
                 self.require_program(program)?;
                 let job = BenchJob::new(program.clone(), *mem);
                 let trace = self.cache.get_or_capture(&job)?;
-                let result = job.replay_trace(&trace)?;
+                // Charge the compiled trace (memoized next to the trace
+                // itself): repeat runs over a warm workload are
+                // closed-form lookups — no address re-hashing, no dyn
+                // dispatch (DESIGN.md §Replay).
+                let compiled = self.cache.get_or_compile(&job.trace_key(), &trace);
+                let result = job.replay_compiled(&compiled)?;
                 Ok(Response::Run(result.report))
             }
             Request::Sweep { all } => {

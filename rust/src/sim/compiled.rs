@@ -1,0 +1,407 @@
+//! Compiled-trace batch replay — one trace walk, all architectures
+//! (DESIGN.md §Replay).
+//!
+//! [`replay`](crate::sim::replay::replay) charges one architecture per
+//! walk, recomputing bank indices from raw addresses through
+//! `dyn SharedMemory::op_cost` on every operation. But the per-operation
+//! cost of *every* constructible architecture is a pure function of
+//! quantities that can be precomputed once per trace
+//! ([`crate::mem::compiled`]): the per-family conflict maxima and the
+//! lane-population count. A [`CompiledTrace`] stores exactly those, in
+//! structure-of-arrays form, so:
+//!
+//! - [`replay_compiled`] charges one architecture with O(1) per-op cost
+//!   lookups — no address re-hashing, no dyn dispatch in the inner loop;
+//! - [`replay_many`] walks the trace **once** and charges a whole slate
+//!   of candidate architectures in that single pass (per-architecture
+//!   clock + write-pipeline state advanced instruction by instruction) —
+//!   the kernel under the multi-architecture sweep
+//!   ([`crate::coordinator::runner::SweepRunner::run_with_cache`]) and
+//!   the design-space explorer ([`crate::explore`]).
+//!
+//! Both are `RunReport`-bit-identical to the reference [`replay`]
+//! (`rust/tests/replay_diff.rs` pins this across the nine paper
+//! architectures × random parametric explorer points × random
+//! programs/masks/strides; [`replay`] itself stays pinned to the coupled
+//! simulator by `rust/tests/replay_parity.rs`).
+//!
+//! [`replay`]: crate::sim::replay::replay
+
+use super::exec::{AluCharges, LoadClass, MemAccessKind, MemTrace, SimError};
+use super::replay::charge_alu;
+use super::stats::{CycleStats, RunReport};
+use crate::mem::arch::{MemoryArchKind, OpKind};
+use crate::mem::compiled::{compile_op, ArchCost, FAMILY_COUNT};
+use crate::mem::controller::WritePipeline;
+use std::ops::Range;
+
+/// One memory instruction of a compiled trace: its kind, the ALU charges
+/// preceding it, and the slice of the operation arrays it owns.
+#[derive(Debug, Clone)]
+pub struct CompiledInstr {
+    pub kind: MemAccessKind,
+    pub before: AluCharges,
+    /// Index range into the per-operation arrays.
+    pub ops: Range<usize>,
+}
+
+/// A [`MemTrace`] compiled for batch replay: per-operation conflict
+/// maxima for every bank-mapping family plus lane-population counts, in
+/// structure-of-arrays layout. Built once per trace
+/// ([`CompiledTrace::compile`], cached by
+/// [`crate::coordinator::job::TraceCache::get_or_compile`]), charged
+/// arbitrarily many times.
+#[derive(Debug, Clone)]
+pub struct CompiledTrace {
+    program: String,
+    threads: u32,
+    mem_words: usize,
+    instrs: Vec<CompiledInstr>,
+    tail: AluCharges,
+    /// Per-op active-lane counts (`active[op]`).
+    active: Vec<u8>,
+    /// Per-op conflict-family maxima, row-major:
+    /// `conflicts[op * FAMILY_COUNT + family]`.
+    conflicts: Vec<u8>,
+}
+
+impl CompiledTrace {
+    /// Compile `trace`: one walk over its operations, hashing each
+    /// operation's addresses once per shift position instead of once per
+    /// candidate architecture forever after.
+    pub fn compile(trace: &MemTrace) -> Self {
+        let n_ops = trace.mem_op_count() as usize;
+        let mut active = Vec::with_capacity(n_ops);
+        let mut conflicts = vec![0u8; n_ops * FAMILY_COUNT];
+        let mut instrs = Vec::with_capacity(trace.segments.len());
+        let mut next = 0usize;
+        for seg in &trace.segments {
+            let start = next;
+            for (addrs, mask) in &seg.mem.ops {
+                active.push(mask.count_ones() as u8);
+                let row = (&mut conflicts[next * FAMILY_COUNT..(next + 1) * FAMILY_COUNT])
+                    .try_into()
+                    .expect("row is FAMILY_COUNT long");
+                compile_op(addrs, *mask, row);
+                next += 1;
+            }
+            instrs.push(CompiledInstr { kind: seg.mem.kind, before: seg.before, ops: start..next });
+        }
+        Self {
+            program: trace.program.clone(),
+            threads: trace.threads,
+            mem_words: trace.mem_words,
+            instrs,
+            tail: trace.tail,
+            active,
+            conflicts,
+        }
+    }
+
+    /// Program name (propagated into replayed reports).
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    /// Shared-memory capacity (words) the trace executed against — the
+    /// capacity every [`ArchCost`] is derived at, so compiled costs use
+    /// the same shift clamp a live memory of this size would.
+    pub fn mem_words(&self) -> usize {
+        self.mem_words
+    }
+
+    /// Total compiled 16-lane memory operations.
+    pub fn n_ops(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Number of memory instructions.
+    pub fn n_instrs(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// The cost model `arch` gets on this trace's capacity.
+    pub fn arch_cost(&self, arch: MemoryArchKind) -> ArchCost {
+        ArchCost::new(arch, self.mem_words)
+    }
+
+    /// The conflict-family row of operation `op`.
+    #[inline]
+    fn conflicts_of(&self, op: usize) -> &[u8] {
+        &self.conflicts[op * FAMILY_COUNT..(op + 1) * FAMILY_COUNT]
+    }
+}
+
+/// Per-architecture replay state advanced instruction by instruction
+/// during a batch walk.
+struct ArchState {
+    cost: ArchCost,
+    stats: CycleStats,
+    now: u64,
+    pipe: WritePipeline,
+    failed: Option<SimError>,
+}
+
+impl ArchState {
+    fn new(cost: ArchCost) -> Self {
+        Self {
+            pipe: WritePipeline::new(cost.write_buffer_ops()),
+            cost,
+            stats: CycleStats::default(),
+            now: 0,
+            failed: None,
+        }
+    }
+
+    /// Closed-form cost of compiled operation `op` (already floored at 1).
+    #[inline]
+    fn op_cost(&self, trace: &CompiledTrace, kind: OpKind, op: usize) -> u32 {
+        self.cost.op_cost(kind, trace.conflicts_of(op), trace.active[op])
+    }
+
+    /// Charge one compiled memory instruction — the exact sequence of
+    /// charges [`crate::sim::replay::replay`] applies per segment.
+    fn charge(&mut self, trace: &CompiledTrace, instr: &CompiledInstr) {
+        charge_alu(&mut self.stats, &mut self.now, &instr.before);
+        let n_ops = instr.ops.len() as u64;
+        match instr.kind {
+            MemAccessKind::Load(class) => {
+                let mut attributed = self.cost.overhead(OpKind::Read) as u64;
+                for op in instr.ops.clone() {
+                    attributed += self.op_cost(trace, OpKind::Read, op) as u64;
+                }
+                self.now += attributed;
+                self.stats.operations += n_ops;
+                match class {
+                    LoadClass::Data => {
+                        self.stats.d_load_cycles += attributed;
+                        self.stats.d_load_ops += n_ops;
+                    }
+                    LoadClass::Twiddle => {
+                        self.stats.tw_load_cycles += attributed;
+                        self.stats.tw_load_ops += n_ops;
+                    }
+                }
+            }
+            MemAccessKind::Store { blocking } => {
+                let overhead = self.cost.overhead(OpKind::Write);
+                let start = self.now;
+                let mut iss = self.now;
+                for op in instr.ops.clone() {
+                    let cost = self.op_cost(trace, OpKind::Write, op);
+                    let before = iss;
+                    iss = self.pipe.issue_nonblocking(iss, cost, overhead);
+                    self.stats.wbuf_stall_cycles += iss.saturating_sub(before + 1);
+                }
+                self.stats.operations += n_ops;
+                self.stats.store_ops += n_ops;
+                if blocking {
+                    let end = self.pipe.drain(iss);
+                    self.stats.store_cycles += end - start;
+                    self.now = end;
+                } else {
+                    self.stats.store_cycles +=
+                        (self.pipe.busy_until().saturating_sub(start)).max(iss - start);
+                    self.now = iss;
+                }
+            }
+        }
+        self.stats.instructions += 1;
+    }
+
+    /// Tail charges + the halt/drain sequence, producing the report.
+    fn finish(mut self, trace: &CompiledTrace, max_cycles: u64) -> Result<RunReport, SimError> {
+        if let Some(e) = self.failed {
+            return Err(e);
+        }
+        charge_alu(&mut self.stats, &mut self.now, &trace.tail);
+        if self.now > max_cycles {
+            return Err(SimError::CycleLimit { limit: max_cycles });
+        }
+        self.stats.instructions += 1;
+        self.now += 1;
+        let drained = self.pipe.drain(self.now);
+        self.stats.drain_cycles += drained - self.now;
+        self.now = drained;
+        self.stats.other_cycles += 1;
+        Ok(RunReport {
+            program: trace.program.clone(),
+            arch: self.cost.arch(),
+            threads: trace.threads,
+            stats: self.stats,
+            elapsed_cycles: self.now,
+        })
+    }
+}
+
+/// Charge every architecture in `archs` from one walk over `trace`.
+///
+/// Results come back in `archs` order, one per candidate; a slow
+/// architecture that exceeds `max_cycles` yields its own
+/// [`SimError::CycleLimit`] without disturbing the others (batch
+/// isolation — the reference path would have returned the same error for
+/// that architecture alone). `RunReport`-bit-identical to running
+/// [`crate::sim::replay::replay`] per architecture.
+pub fn replay_many(
+    trace: &CompiledTrace,
+    archs: &[MemoryArchKind],
+    max_cycles: u64,
+) -> Vec<Result<RunReport, SimError>> {
+    let mut states: Vec<ArchState> =
+        archs.iter().map(|&a| ArchState::new(trace.arch_cost(a))).collect();
+    for instr in &trace.instrs {
+        for state in states.iter_mut().filter(|s| s.failed.is_none()) {
+            state.charge(trace, instr);
+            if state.now > max_cycles {
+                state.failed = Some(SimError::CycleLimit { limit: max_cycles });
+            }
+        }
+    }
+    states.into_iter().map(|s| s.finish(trace, max_cycles)).collect()
+}
+
+/// Single-architecture convenience over [`replay_many`] — the compiled
+/// equivalent of [`crate::sim::replay::replay`], used by the engine's
+/// warm-cache `Run` path and the explorer's memoized scoring.
+pub fn replay_compiled(
+    trace: &CompiledTrace,
+    arch: MemoryArchKind,
+    max_cycles: u64,
+) -> Result<RunReport, SimError> {
+    replay_many(trace, std::slice::from_ref(&arch), max_cycles)
+        .pop()
+        .expect("one architecture, one result")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{FULL_MASK, LANES};
+    use crate::sim::exec::MemInstr;
+    use crate::sim::replay::replay;
+
+    fn seq_addrs(stride: u32) -> [u32; LANES] {
+        let mut a = [0u32; LANES];
+        for (l, x) in a.iter_mut().enumerate() {
+            *x = l as u32 * stride;
+        }
+        a
+    }
+
+    fn mixed_trace() -> MemTrace {
+        let instrs = vec![
+            MemInstr {
+                kind: MemAccessKind::Load(LoadClass::Data),
+                ops: vec![(seq_addrs(1), FULL_MASK), (seq_addrs(16), FULL_MASK)],
+            },
+            MemInstr {
+                kind: MemAccessKind::Store { blocking: false },
+                ops: vec![(seq_addrs(16), FULL_MASK); 4],
+            },
+            MemInstr {
+                kind: MemAccessKind::Load(LoadClass::Twiddle),
+                ops: vec![(seq_addrs(4), 0x0F0F)],
+            },
+            MemInstr {
+                kind: MemAccessKind::Store { blocking: true },
+                ops: vec![(seq_addrs(2), 0x00FF); 2],
+            },
+        ];
+        MemTrace::from_mem_instrs("mixed", 256, instrs)
+    }
+
+    fn assert_reports_equal(a: &RunReport, b: &RunReport, ctx: &str) {
+        assert_eq!(a.stats, b.stats, "{ctx}: stats");
+        assert_eq!(a.elapsed_cycles, b.elapsed_cycles, "{ctx}: elapsed");
+        assert_eq!(a.program, b.program, "{ctx}: program");
+        assert_eq!(a.arch, b.arch, "{ctx}: arch");
+        assert_eq!(a.threads, b.threads, "{ctx}: threads");
+    }
+
+    #[test]
+    fn compile_shape_matches_trace() {
+        let trace = mixed_trace();
+        let ct = CompiledTrace::compile(&trace);
+        assert_eq!(ct.n_instrs(), 4);
+        assert_eq!(ct.n_ops() as u64, trace.mem_op_count());
+        assert_eq!(ct.program(), "mixed");
+        assert_eq!(ct.mem_words(), trace.mem_words);
+        // Op layout: loads 0..2 (full), stores 2..6 (full), twiddle 6
+        // (mask 0x0F0F → 8 lanes), blocking stores 7..9 (0x00FF → 8).
+        assert_eq!(ct.active[0], 16);
+        assert_eq!(ct.active[6], 8);
+        assert_eq!(ct.active[8], 8);
+    }
+
+    #[test]
+    fn batch_replay_equals_reference_on_all_nine_archs() {
+        let trace = mixed_trace();
+        let ct = CompiledTrace::compile(&trace);
+        let archs = MemoryArchKind::table3_nine();
+        let batch = replay_many(&ct, &archs, u64::MAX);
+        for (arch, got) in archs.iter().zip(&batch) {
+            let mem = arch.build(trace.mem_words);
+            let want = replay(&trace, mem.as_ref(), u64::MAX).unwrap();
+            assert_reports_equal(got.as_ref().unwrap(), &want, &arch.label());
+            let single = replay_compiled(&ct, *arch, u64::MAX).unwrap();
+            assert_reports_equal(&single, &want, &format!("{} (single)", arch.label()));
+        }
+    }
+
+    #[test]
+    fn cycle_limit_isolated_per_architecture() {
+        // A limit that the multiport memories meet but the fully
+        // conflicted 16-bank walk exceeds: the batch must report the
+        // failure only on the slow candidates.
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(16), FULL_MASK); 64],
+        };
+        let trace = MemTrace::from_mem_instrs("slow", 1024, vec![mi]);
+        let ct = CompiledTrace::compile(&trace);
+        let archs = [MemoryArchKind::mp_4r1w(), MemoryArchKind::banked(16)];
+        let limit = 300; // 64 ops × 4 cycles multiport ≈ 256 < 300 < 12 + 64 × 16
+        let out = replay_many(&ct, &archs, limit);
+        assert!(out[0].is_ok(), "multiport fits under the limit");
+        assert!(
+            matches!(out[1], Err(SimError::CycleLimit { limit: 300 })),
+            "banked16 must trip the limit: {:?}",
+            out[1]
+        );
+        // And each verdict matches the reference path's.
+        for (arch, got) in archs.iter().zip(&out) {
+            let mem = arch.build(trace.mem_words);
+            let want = replay(&trace, mem.as_ref(), limit);
+            assert_eq!(got.is_ok(), want.is_ok(), "{arch}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_just_halt() {
+        let trace = MemTrace::from_mem_instrs("empty", 16, vec![]);
+        let ct = CompiledTrace::compile(&trace);
+        for arch in MemoryArchKind::table3_nine() {
+            let r = replay_compiled(&ct, arch, 1000).unwrap();
+            assert_eq!(r.total_cycles(), 1, "{arch}");
+            assert_eq!(r.stats.instructions, 1);
+        }
+    }
+
+    #[test]
+    fn batch_order_matches_input_order() {
+        let ct = CompiledTrace::compile(&mixed_trace());
+        let archs =
+            [MemoryArchKind::banked(4), MemoryArchKind::mp_4r2w(), MemoryArchKind::banked(4)];
+        let out = replay_many(&ct, &archs, u64::MAX);
+        assert_eq!(out.len(), 3);
+        for (arch, r) in archs.iter().zip(&out) {
+            assert_eq!(r.as_ref().unwrap().arch, *arch);
+        }
+        // Duplicate candidates are independent and identical.
+        assert_reports_equal(
+            out[0].as_ref().unwrap(),
+            out[2].as_ref().unwrap(),
+            "duplicate candidates",
+        );
+    }
+}

@@ -12,11 +12,17 @@
 //!
 //! - [`exec`] — architecture-independent functional core: runs a program
 //!   once, emits a complete [`exec::MemTrace`];
-//! - [`replay`] — timing replay: charges any [`crate::mem::SharedMemory`]
-//!   cost model from a trace, producing a [`stats::RunReport`];
-//! - [`machine`] — the facade that runs both in lockstep, preserving the
-//!   original coupled-simulator API.
+//! - [`replay`] — reference timing replay: charges any
+//!   [`crate::mem::SharedMemory`] cost model from a trace, producing a
+//!   [`stats::RunReport`];
+//! - [`compiled`] — compiled-trace batch replay: a [`compiled::CompiledTrace`]
+//!   precomputes every bank-mapping family's conflict maxima once, then
+//!   [`compiled::replay_many`] charges a whole slate of architectures in a
+//!   single trace walk, bit-identically to [`replay`] (DESIGN.md §Replay);
+//! - [`machine`] — the facade that runs execute + replay in lockstep,
+//!   preserving the original coupled-simulator API.
 
+pub mod compiled;
 pub mod config;
 pub mod exec;
 pub mod machine;
@@ -24,6 +30,7 @@ pub mod regfile;
 pub mod replay;
 pub mod stats;
 
+pub use compiled::{replay_compiled, replay_many, CompiledTrace};
 pub use config::MachineConfig;
 pub use exec::{execute, ExecMemory, ExecParams, FlatMemory, MemTrace, SimError};
 pub use machine::Machine;

@@ -76,8 +76,10 @@ pub fn replay(
                     let before = iss;
                     iss = write_pipe.issue_nonblocking(iss, cost.max(1), overhead);
                     // Anything beyond the single issue cycle was a
-                    // buffer-full stall.
-                    stats.wbuf_stall_cycles += iss - before - 1;
+                    // buffer-full stall. Saturating: a controller that
+                    // completes issue in the issue cycle itself must
+                    // count zero stall, not underflow.
+                    stats.wbuf_stall_cycles += iss.saturating_sub(before + 1);
                 }
                 stats.operations += n_ops;
                 stats.store_ops += n_ops;
@@ -127,8 +129,10 @@ pub fn replay(
 
 /// Apply the ALU charges accumulated between memory instructions: each
 /// class advances the clock by its cycle count (one cycle per 16-thread
-/// operation, on every architecture).
-fn charge_alu(stats: &mut CycleStats, now: &mut u64, charges: &AluCharges) {
+/// operation, on every architecture). Shared with the compiled batch
+/// replayer ([`crate::sim::compiled`]) so the two charge paths cannot
+/// drift.
+pub(crate) fn charge_alu(stats: &mut CycleStats, now: &mut u64, charges: &AluCharges) {
     stats.int_cycles += charges.int_cycles;
     stats.imm_cycles += charges.imm_cycles;
     stats.fp_cycles += charges.fp_cycles;
@@ -211,6 +215,30 @@ mod tests {
         assert_eq!(r.stats.store_cycles, 5 + 4 * 16);
         // ...but the clock only pays at the final halt drain.
         assert!(r.stats.drain_cycles > 0);
+    }
+
+    #[test]
+    fn zero_latency_write_stream_counts_no_stalls() {
+        // Regression (ISSUE 4 satellite): a stream of cost-1 non-blocking
+        // writes drains as fast as it issues. `issue_nonblocking` returns
+        // `before + 1` on every call, so the stall accounting sits exactly
+        // on the saturation boundary — the old `iss - before - 1` was one
+        // contract change away from a debug-build underflow panic. The
+        // conflict-free multiport write path is the zero-issue-latency
+        // extreme (zero overhead, cost 1 with a single active lane).
+        let mi = MemInstr {
+            kind: MemAccessKind::Store { blocking: false },
+            ops: vec![(seq_addrs(1), 0x0001); 64], // one active lane: cost 1
+        };
+        let trace = MemTrace::from_mem_instrs("wbuf", 16, vec![mi]);
+        let mem = MemoryArchKind::mp_4r1w().build(64);
+        let r = replay(&trace, mem.as_ref(), u64::MAX).unwrap();
+        assert_eq!(r.stats.wbuf_stall_cycles, 0, "cost-1 stream never fills the buffer");
+        assert_eq!(r.stats.store_ops, 64);
+        // Same invariant on the banked path (cost 1, overhead 5).
+        let mem = MemoryArchKind::banked(16).build(1024);
+        let r = replay(&trace, mem.as_ref(), u64::MAX).unwrap();
+        assert_eq!(r.stats.wbuf_stall_cycles, 0);
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Integration: assembler/disassembler round-trips over randomly
+//! generated valid programs, plus the typed ISA error surface (PR 3)
+//! pinned on *mutated* inputs (ISSUE 4 satellite) — a corrupted
+//! mnemonic must surface the `UnknownMnemonic` lineage with line
+//! context, and a corrupted binary word the typed `DecodeError` with its
+//! pc, both folding into `SimError`/`ServiceError` without ever
+//! degrading to a bare string at the boundary.
+
+use soft_simt::isa::asm::{assemble, disassemble};
+use soft_simt::isa::inst::Instruction;
+use soft_simt::isa::opcode::{Opcode, UnknownMnemonic};
+use soft_simt::isa::program::Program;
+use soft_simt::sim::exec::SimError;
+use soft_simt::util::proptest::check;
+use soft_simt::util::XorShift64;
+
+/// Generate a random valid program in *canonical operand form* (fields
+/// an instruction's assembler syntax does not carry stay zero — exactly
+/// what the assembler itself would emit), so text round-trips are exact.
+fn random_valid_program(rng: &mut XorShift64, max_len: usize) -> Program {
+    let n = 1 + rng.below(max_len as u32) as usize;
+    let mut insts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let op = Opcode::ALL[rng.below(Opcode::ALL.len() as u32) as usize];
+        let r = |rng: &mut XorShift64| rng.below(64) as u8;
+        let inst = match op {
+            Opcode::Nop | Opcode::Halt => Instruction::z(op),
+            Opcode::Tid => Instruction::i(op, r(rng), 0, 0),
+            Opcode::Jmp => Instruction::i(op, 0, 0, rng.below(n as u32) as u16),
+            Opcode::Bnz => Instruction::i(op, r(rng), 0, rng.below(n as u32) as u16),
+            Opcode::Ldi | Opcode::Lui => Instruction::i(op, r(rng), 0, rng.next_u32() as u16),
+            Opcode::Fneg | Opcode::Itof => Instruction::r(op, r(rng), r(rng), 0),
+            Opcode::Ld => Instruction::i(op, r(rng), r(rng), 0),
+            Opcode::St | Opcode::Stnb => Instruction::r(op, 0, r(rng), r(rng)),
+            _ if Instruction::is_i_format(op) => {
+                Instruction::i(op, r(rng), r(rng), rng.next_u32() as u16)
+            }
+            _ => Instruction::r(op, r(rng), r(rng), r(rng)),
+        };
+        insts.push(inst);
+    }
+    Program::new("roundtrip-fuzz", 1 + rng.below(4096), insts)
+}
+
+#[test]
+fn asm_disasm_asm_roundtrip_property() {
+    check("asm → disasm → asm is the identity", 300, |rng| {
+        let p = random_valid_program(rng, 60);
+        let text = disassemble(&p);
+        let q = assemble(&text).expect("disassembly must re-assemble");
+        assert_eq!(p.insts, q.insts, "instruction streams diverged:\n{text}");
+        assert_eq!(p.threads, q.threads);
+        // Idempotence: a second trip emits identical text.
+        assert_eq!(disassemble(&q), text);
+        // And the binary encoding round-trips through the typed decoder.
+        let bin = Program::decode("bin", p.threads, &p.encode()).expect("encode/decode");
+        assert_eq!(bin.insts, p.insts);
+    });
+}
+
+#[test]
+fn mutated_mnemonic_pins_typed_unknown_mnemonic_error() {
+    check("corrupt mnemonic → UnknownMnemonic with line context", 100, |rng| {
+        let p = random_valid_program(rng, 20);
+        let text = disassemble(&p);
+        // Disassembly layout: ".name", ".threads", blank, then one
+        // instruction per line — instruction `i` sits on line 4 + i.
+        let pc = rng.below(p.insts.len() as u32) as usize;
+        let mutated: Vec<String> = text
+            .lines()
+            .enumerate()
+            .map(|(ln, line)| {
+                if ln == 3 + pc {
+                    // Replace the mnemonic, keep the operands.
+                    let rest = line.trim_start().split_once(' ').map(|(_, r)| r).unwrap_or("");
+                    format!("    frobnicate {rest}")
+                } else {
+                    line.to_string()
+                }
+            })
+            .collect();
+        let err = assemble(&(mutated.join("\n") + "\n"))
+            .expect_err("unknown mnemonic must not assemble");
+        assert_eq!(err.line, 4 + pc, "error must carry the mutated line");
+        // The message is the typed UnknownMnemonic's Display, verbatim.
+        let typed: UnknownMnemonic = "frobnicate".parse::<Opcode>().unwrap_err();
+        assert_eq!(err.msg, typed.to_string());
+        assert!(err.to_string().contains("unknown mnemonic 'frobnicate'"));
+    });
+}
+
+#[test]
+fn mutated_binary_word_pins_typed_decode_error() {
+    check("corrupt binary word → DecodeError at its pc", 100, |rng| {
+        let p = random_valid_program(rng, 20);
+        let mut words = p.encode();
+        let pc = rng.below(words.len() as u32) as usize;
+        // An invalid opcode field (63) is rejected; so are stray high bits.
+        words[pc] = if rng.chance(0.5) { 63u64 << 34 } else { (1u64 << 40) | words[pc] };
+        let err = Program::decode("bad", p.threads, &words)
+            .expect_err("corrupt word must not decode");
+        assert_eq!(err.pc, pc, "error must carry the corrupted pc");
+        assert_eq!(err.word, words[pc]);
+        // The lineage folds into the simulator's error type.
+        let sim: SimError = err.into();
+        assert!(
+            matches!(&sim, SimError::BadProgram(m) if m.contains(&format!("pc {pc}"))),
+            "{sim:?}"
+        );
+    });
+}
+
+#[test]
+fn roundtrip_survives_simulation_semantics() {
+    // Behavioural anchor: a round-tripped memory-safe program simulates
+    // identically (complements the structural equality above; uses a
+    // small fixed program so every opcode class is exercised without a
+    // fuzz-side memory-safety harness).
+    use soft_simt::mem::arch::MemoryArchKind;
+    use soft_simt::sim::config::MachineConfig;
+    use soft_simt::sim::machine::Machine;
+
+    let src = "
+.name roundtrip
+.threads 48
+    tid   r0
+    imuli r1, r0, 5
+    iandi r1, r1, 1023
+    ld    r2, [r1]
+    fadd  r3, r2, r2
+    st    [r1], r3
+    stnb  [r1], r2
+    halt
+";
+    let p = assemble(src).unwrap();
+    let q = assemble(&disassemble(&p)).unwrap();
+    for program in [&p, &q] {
+        let mut m = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked_offset(8)).with_mem_words(4096),
+        );
+        let r = m.run_program(program).unwrap();
+        assert!(r.total_cycles() > 0);
+    }
+    let mut ma = Machine::new(
+        MachineConfig::for_arch(MemoryArchKind::banked_offset(8)).with_mem_words(4096),
+    );
+    let mut mb = Machine::new(
+        MachineConfig::for_arch(MemoryArchKind::banked_offset(8)).with_mem_words(4096),
+    );
+    let ra = ma.run_program(&p).unwrap();
+    let rb = mb.run_program(&q).unwrap();
+    assert_eq!(ra.stats, rb.stats);
+    assert_eq!(ra.total_cycles(), rb.total_cycles());
+    assert_eq!(ma.mem().image(), mb.mem().image());
+}

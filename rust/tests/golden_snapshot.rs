@@ -1,0 +1,117 @@
+//! Golden snapshots pinning the full 51-cell paper sweep tables and the
+//! explorer Pareto frontier for the smallest transpose workload (ISSUE 4
+//! satellite), rendered from the **batched** compiled-replay path.
+//!
+//! Snapshot protocol (insta-style bless-on-absence, dependency-free):
+//!
+//! - if `tests/data/golden_*.txt` exists, the freshly rendered output
+//!   must match it **byte for byte** — any drift in cycle counts, table
+//!   layout or frontier membership fails the test;
+//! - if the file is missing (fresh checkout before the first blessed
+//!   run), it is written and the test passes with a note;
+//! - `GOLDEN_BLESS=1 cargo test --test golden_snapshot` deliberately
+//!   re-blesses after an intentional change.
+//!
+//! The snapshots are backed by differential anchors that hold on every
+//! run regardless of blessing state: the batched path must agree with
+//! the coupled per-cell simulator on the same quantities
+//! (`replay_parity.rs`, `replay_diff.rs`), so a blessed file can only
+//! ever record coupled-simulator-equivalent numbers.
+
+use soft_simt::coordinator::job::{BenchJob, TraceCache};
+use soft_simt::coordinator::report;
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::explore::{explore, DesignSpace, Exhaustive};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Compare `actual` against the snapshot at `path` (relative to the
+/// package root — resolved via `CARGO_MANIFEST_DIR`, so the test is
+/// independent of the runner's working directory), blessing it when
+/// absent or when `GOLDEN_BLESS` is set.
+fn check_golden(path: &str, actual: &str) {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join(path);
+    let bless = std::env::var_os("GOLDEN_BLESS").is_some();
+    match std::fs::read_to_string(&p) {
+        Ok(expected) if !bless => {
+            assert_eq!(
+                actual, expected,
+                "snapshot {path} drifted — if the change is intentional, \
+                 re-bless with GOLDEN_BLESS=1 cargo test --test golden_snapshot"
+            );
+        }
+        _ => {
+            if let Some(dir) = p.parent() {
+                std::fs::create_dir_all(dir).expect("snapshot dir");
+            }
+            std::fs::write(&p, actual).expect("write snapshot");
+            eprintln!("golden_snapshot: blessed {} ({} bytes)", p.display(), actual.len());
+        }
+    }
+}
+
+/// The full 51-cell paper sweep, rendered as Tables II and III plus the
+/// per-cell CSV — all from the batched compiled-replay path.
+#[test]
+fn golden_51_cell_paper_sweep_tables() {
+    let jobs = BenchJob::paper_sweep();
+    assert_eq!(jobs.len(), 51);
+    let cache = TraceCache::new();
+    let results = SweepRunner::default()
+        .run_with_cache(&jobs, &cache)
+        .expect("paper sweep runs clean");
+    assert_eq!(cache.compiled_len(), 6, "six workloads, six compiled traces");
+
+    let mut out = String::new();
+    out.push_str(&report::render_table2(&results));
+    out.push('\n');
+    out.push_str(&report::render_table3(&results));
+    out.push('\n');
+    out.push_str(&report::sweep_csv(&results));
+    check_golden("tests/data/golden_paper_sweep.txt", &out);
+
+    // Differential anchor, independent of blessing state: the batched
+    // rendering equals the coupled per-cell rendering byte for byte.
+    let coupled = SweepRunner::default().run(&jobs).expect("coupled sweep");
+    assert_eq!(report::render_table2(&results), report::render_table2(&coupled));
+    assert_eq!(report::render_table3(&results), report::render_table3(&coupled));
+    assert_eq!(report::sweep_csv(&results), report::sweep_csv(&coupled));
+}
+
+/// The explorer's Pareto frontier for the smallest transpose workload on
+/// the default parametric space, pinned point by point (label, capacity,
+/// cycles, ALMs).
+#[test]
+fn golden_explorer_frontier_smallest_transpose() {
+    let space = DesignSpace::parametric(8);
+    let cache = TraceCache::new();
+    let result = explore("transpose32", &space, &Exhaustive, &SweepRunner::default(), &cache)
+        .expect("exploration runs clean");
+    assert_eq!(result.captures, 1);
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# explore transpose32 · parametric space · {} points · frontier {}",
+        result.points_total,
+        result.front.len()
+    );
+    for s in &result.front {
+        let _ = writeln!(
+            out,
+            "{:24} {:>4} KB {:>10} cycles {:>8} ALMs",
+            s.point.arch.label(),
+            s.point.capacity_kb,
+            s.cycles,
+            s.footprint_alms.expect("frontier points are placeable"),
+        );
+    }
+    check_golden("tests/data/golden_explore_transpose32.txt", &out);
+
+    // Differential anchor: every frontier point's cycles equal a direct
+    // coupled run on that architecture.
+    for s in &result.front {
+        let coupled = BenchJob::new("transpose32", s.point.arch).run().unwrap();
+        assert_eq!(s.cycles, coupled.report.total_cycles(), "{}", s.point.label());
+    }
+}

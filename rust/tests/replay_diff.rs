@@ -1,0 +1,236 @@
+//! Differential harness for the compiled-trace batch replayer (ISSUE 4
+//! acceptance): `replay_many` over a [`CompiledTrace`] must be
+//! `RunReport`-**identical** to the reference per-architecture
+//! [`replay`] — every counter, not just totals — across
+//!
+//! - all nine paper architectures,
+//! - random parametric explorer points (banks 2–32 × {LSB, OffsetN,
+//!   XOR} × multiport port configs, including capacities small enough
+//!   to engage the offset-shift clamp),
+//! - random programs with random masks (ragged thread counts) and
+//!   random strides, generated through the crate's own property-test
+//!   harness (`util/proptest.rs`).
+
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::isa::inst::Instruction;
+use soft_simt::isa::opcode::Opcode;
+use soft_simt::isa::program::Program;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::mem::mapping::BankMapping;
+use soft_simt::sim::compiled::{replay_compiled, replay_many, CompiledTrace};
+use soft_simt::sim::exec::{execute, ExecParams, FlatMemory, MemTrace, SimError};
+use soft_simt::sim::replay::replay;
+use soft_simt::sim::stats::RunReport;
+use soft_simt::util::proptest::check;
+use soft_simt::util::XorShift64;
+
+/// Generate a random *memory-safe, divergence-free* program whose
+/// address streams exercise the conflict maths: strided (`imuli` by a
+/// random stride), offset, shifted and xor-mixed addresses, blocking and
+/// non-blocking stores, and ragged thread counts (non-multiples of 16 →
+/// partial lane masks in the trace).
+fn random_program(rng: &mut XorShift64, mem_words: usize, max_len: usize) -> Program {
+    let n = 2 + rng.below(max_len as u32) as usize;
+    let addr_mask = (mem_words - 1) as u16;
+    let mut insts = vec![Instruction::i(Opcode::Tid, 0, 0, 0)];
+    for _ in 0..n {
+        let r = |rng: &mut XorShift64| 1 + rng.below(30) as u8;
+        let inst = match rng.below(12) {
+            0 => Instruction::i(Opcode::Ldi, r(rng), 0, rng.next_u32() as u16),
+            1 => Instruction::r(Opcode::Iadd, r(rng), r(rng), r(rng)),
+            2 => Instruction::r(Opcode::Ixor, r(rng), r(rng), r(rng)),
+            3 => Instruction::i(Opcode::Ishli, r(rng), r(rng), rng.below(6) as u16),
+            4 => Instruction::r(Opcode::Fma, r(rng), r(rng), r(rng)),
+            // Strided access: a = tid * stride (then masked into range).
+            5 | 6 => {
+                let a = r(rng);
+                let stride = 1 + rng.below(33) as u16;
+                insts.push(Instruction::i(Opcode::Imuli, a, 0, stride));
+                insts.push(Instruction::i(Opcode::Iandi, a, a, addr_mask));
+                Instruction::i(Opcode::Ld, r(rng), a, 0)
+            }
+            7 | 8 => {
+                let a = r(rng);
+                insts.push(Instruction::i(Opcode::Iandi, a, a, addr_mask));
+                Instruction::i(Opcode::Ld, r(rng), a, 0)
+            }
+            9 | 10 => {
+                let a = r(rng);
+                insts.push(Instruction::i(Opcode::Iandi, a, a, addr_mask));
+                let op = if rng.chance(0.5) { Opcode::St } else { Opcode::Stnb };
+                Instruction::r(op, 0, a, r(rng))
+            }
+            _ => Instruction::i(Opcode::Iaddi, r(rng), r(rng), rng.next_u32() as u16),
+        };
+        insts.push(inst);
+    }
+    insts.push(Instruction::z(Opcode::Halt));
+    // Ragged thread counts produce partial lane masks in the trace.
+    let threads = 1 + rng.below(80);
+    Program::new("diff-fuzz", threads, insts)
+}
+
+/// Capture the program's trace on a flat memory of `mem_words`, with a
+/// random twiddle region half the time (so both load classes appear).
+fn capture(rng: &mut XorShift64, program: &Program, mem_words: usize) -> MemTrace {
+    let mut mem = FlatMemory::new(mem_words);
+    let tw_region = if rng.chance(0.5) {
+        Some((mem_words as u32 / 4)..(mem_words as u32 / 2))
+    } else {
+        None
+    };
+    let params = ExecParams { tw_region, max_cycles: 10_000_000, ..ExecParams::default() };
+    execute(program, &mut mem, &params).expect("fuzz program executes")
+}
+
+fn assert_reports_identical(got: &RunReport, want: &RunReport, ctx: &str) {
+    assert_eq!(got.stats, want.stats, "{ctx}: stats diverged");
+    assert_eq!(got.elapsed_cycles, want.elapsed_cycles, "{ctx}: elapsed diverged");
+    assert_eq!(got.program, want.program, "{ctx}");
+    assert_eq!(got.arch, want.arch, "{ctx}");
+    assert_eq!(got.threads, want.threads, "{ctx}");
+}
+
+fn random_parametric_arch(rng: &mut XorShift64) -> MemoryArchKind {
+    let arch = if rng.chance(0.6) {
+        MemoryArchKind::Banked {
+            banks: [2u32, 4, 8, 16, 32][rng.below(5) as usize],
+            mapping: match rng.below(3) {
+                0 => BankMapping::Lsb,
+                1 => BankMapping::Offset { shift: rng.below(BankMapping::MAX_SHIFT + 1) },
+                _ => BankMapping::Xor,
+            },
+        }
+    } else {
+        let write_ports = 1 + rng.below(2);
+        MemoryArchKind::MultiPort {
+            read_ports: 1 << rng.below(4),
+            write_ports,
+            vb: write_ports == 1 && rng.chance(0.3),
+        }
+    };
+    assert!(arch.is_valid(), "{arch:?}");
+    arch
+}
+
+/// The core differential property: one random program, one trace, one
+/// compiled trace — every candidate architecture charged three ways
+/// (reference `replay`, single `replay_compiled`, batched `replay_many`)
+/// must produce the identical `RunReport`.
+#[test]
+fn replay_many_identical_to_reference_on_random_programs() {
+    check("replay_many == replay on random programs × archs", 30, |rng| {
+        // Small capacities engage the offset-shift clamp (e.g. 32 banks
+        // at 1 Ki words clamps shift 8 → 5); larger ones don't — both
+        // sides must agree under either regime.
+        let mem_words = 1usize << (10 + rng.below(4)); // 1 Ki .. 8 Ki words
+        let program = random_program(rng, mem_words, 30);
+        let trace = capture(rng, &program, mem_words);
+        let compiled = CompiledTrace::compile(&trace);
+
+        let mut archs = MemoryArchKind::table3_nine();
+        for _ in 0..6 {
+            archs.push(random_parametric_arch(rng));
+        }
+        let batch = replay_many(&compiled, &archs, u64::MAX);
+        assert_eq!(batch.len(), archs.len());
+        for (arch, batched) in archs.iter().zip(batch) {
+            let mem = arch.build(mem_words);
+            let reference = replay(&trace, mem.as_ref(), u64::MAX).expect("reference replays");
+            let batched = batched.expect("compiled replay succeeds");
+            assert_reports_identical(&batched, &reference, &format!("{arch} (batched)"));
+            let single = replay_compiled(&compiled, *arch, u64::MAX).unwrap();
+            assert_reports_identical(&single, &reference, &format!("{arch} (single)"));
+        }
+    });
+}
+
+/// The same property through the job layer the sweep runner and engine
+/// use: `BenchJob::replay_compiled` vs the reference `replay_trace`, on
+/// the paper's real workloads (FFT → twiddle loads + blocking stores;
+/// transpose → non-blocking stores).
+#[test]
+fn job_layer_compiled_replay_matches_reference_on_paper_workloads() {
+    for program in ["transpose64", "fft4096r8"] {
+        let trace = BenchJob::new(program, MemoryArchKind::mp_4r1w())
+            .capture_trace()
+            .expect("paper workload captures");
+        let compiled = CompiledTrace::compile(&trace);
+        for arch in MemoryArchKind::table3_nine() {
+            let job = BenchJob::new(program, arch);
+            let reference = job.replay_trace(&trace).unwrap().report;
+            let fast = job.replay_compiled(&compiled).unwrap().report;
+            assert_reports_identical(&fast, &reference, &format!("{program} on {arch}"));
+            // And both equal the coupled simulator (the transitive
+            // anchor replay_parity.rs pins for the reference path).
+            let coupled = job.run().unwrap().report;
+            assert_reports_identical(&fast, &coupled, &format!("{program} on {arch} (coupled)"));
+        }
+    }
+}
+
+/// Wbuf-stall accounting (ISSUE 4 satellite): the saturating stall
+/// arithmetic must agree between the two replayers on store-heavy
+/// random programs, and a cost-1 non-blocking stream counts zero.
+#[test]
+fn wbuf_stall_accounting_agrees_between_replayers() {
+    check("wbuf stalls identical across replay paths", 20, |rng| {
+        let mem_words = 4096;
+        // Store-heavy program: high chance of stnb streams.
+        let mut insts = vec![Instruction::i(Opcode::Tid, 0, 0, 0)];
+        for _ in 0..20 {
+            let stride = 1 + rng.below(17) as u16;
+            insts.push(Instruction::i(Opcode::Imuli, 1, 0, stride));
+            insts.push(Instruction::i(Opcode::Iandi, 1, 1, (mem_words - 1) as u16));
+            let op = if rng.chance(0.8) { Opcode::Stnb } else { Opcode::St };
+            insts.push(Instruction::r(op, 0, 1, 0));
+        }
+        insts.push(Instruction::z(Opcode::Halt));
+        let program = Program::new("wbuf-fuzz", 16 * (1 + rng.below(64)), insts);
+        let trace = capture(rng, &program, mem_words);
+        let compiled = CompiledTrace::compile(&trace);
+        for arch in [MemoryArchKind::banked(16), MemoryArchKind::mp_4r1w()] {
+            let mem = arch.build(mem_words);
+            let reference = replay(&trace, mem.as_ref(), u64::MAX).unwrap();
+            let fast = replay_compiled(&compiled, arch, u64::MAX).unwrap();
+            let (f, r) = (&fast.stats, &reference.stats);
+            assert_eq!(f.wbuf_stall_cycles, r.wbuf_stall_cycles, "{arch}");
+            assert_eq!(f.drain_cycles, r.drain_cycles, "{arch}");
+        }
+    });
+}
+
+/// Cycle-limit verdicts must agree per architecture, and a failing
+/// candidate must not disturb its batch-mates.
+#[test]
+fn cycle_limit_verdicts_agree_and_stay_isolated() {
+    let mut rng = XorShift64::new(0xD1FF);
+    let mem_words = 1024;
+    let program = random_program(&mut rng, mem_words, 40);
+    let trace = capture(&mut rng, &program, mem_words);
+    let compiled = CompiledTrace::compile(&trace);
+    // Pick a limit between the fastest and slowest candidate so the
+    // batch genuinely mixes verdicts (unless the trace is so small that
+    // all candidates agree — then the equality check still holds).
+    let archs = MemoryArchKind::table3_nine();
+    let cycles: Vec<u64> = archs
+        .iter()
+        .map(|&a| replay_compiled(&compiled, a, u64::MAX).unwrap().total_cycles())
+        .collect();
+    let limit = (cycles.iter().min().unwrap() + cycles.iter().max().unwrap()) / 2;
+    let batch = replay_many(&compiled, &archs, limit);
+    for ((arch, batched), exact) in archs.iter().zip(&batch).zip(&cycles) {
+        let mem = arch.build(mem_words);
+        let reference = replay(&trace, mem.as_ref(), limit);
+        match (batched, &reference) {
+            (Ok(a), Ok(b)) => {
+                assert_reports_identical(a, b, &arch.label());
+                assert!(a.total_cycles() == *exact);
+            }
+            (Err(SimError::CycleLimit { limit: la }), Err(SimError::CycleLimit { limit: lb })) => {
+                assert_eq!(la, lb);
+            }
+            other => panic!("{arch}: verdicts diverged: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Fail CI when a bench JSON regresses past a tolerance vs a committed baseline.
+
+Usage:
+  check_bench_regression.py --current CAND [CAND ...] --baseline BASE \
+      --metrics NAME [NAME ...] [--max-regression 1.20]
+
+- CAND: candidate locations of the freshly produced bench JSON (the first
+  existing path wins; cargo runs bench binaries from the package root, so
+  the file may land in ./ or rust/).
+- BASE: the committed baseline JSON. A metric whose baseline value is
+  null (or absent) is skipped with a notice — that is the "no trusted
+  measurement recorded yet" state. Bless a baseline from the bench-json
+  artifact of a trusted CI run on the same runner class (absolute
+  wall-clock medians only compare meaningfully on like hardware; a
+  workstation-blessed number makes the budget fire spuriously or never).
+- Metrics are medians in milliseconds: lower is better, and the gate
+  fails when current > baseline * max_regression (default 1.20 = the
+  >20% regression budget of ISSUE 4).
+
+Exit codes: 0 ok/skipped, 1 regression, 2 usage/IO error.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", nargs="+", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--metrics", nargs="+", required=True)
+    ap.add_argument("--max-regression", type=float, default=1.20)
+    args = ap.parse_args()
+
+    current_path = next((p for p in map(Path, args.current) if p.is_file()), None)
+    if current_path is None:
+        print(f"error: no current bench JSON found among {args.current}", file=sys.stderr)
+        return 2
+    baseline_path = Path(args.baseline)
+    if not baseline_path.is_file():
+        print(f"error: baseline {baseline_path} missing", file=sys.stderr)
+        return 2
+
+    try:
+        current = json.loads(current_path.read_text())
+        baseline = json.loads(baseline_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    failed = False
+    for metric in args.metrics:
+        base = baseline.get(metric)
+        cur = current.get(metric)
+        if base is None:
+            print(f"skip  {metric}: no committed baseline yet (null/absent) — "
+                  f"bless {baseline_path} from the bench-json artifact of a trusted CI run")
+            continue
+        if cur is None:
+            print(f"FAIL  {metric}: missing from {current_path}", file=sys.stderr)
+            failed = True
+            continue
+        budget = base * args.max_regression
+        verdict = "FAIL" if cur > budget else "ok"
+        line = (f"{verdict:5} {metric}: current {cur:.3f} vs baseline {base:.3f} "
+                f"(budget {budget:.3f}, x{args.max_regression:.2f})")
+        if cur > budget:
+            print(line, file=sys.stderr)
+            failed = True
+        else:
+            print(line)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,7 +30,7 @@ fn main() {
             let mut cells = Vec::new();
             for mapping in mappings {
                 let arch = MemoryArchKind::Banked { banks, mapping };
-                let r = BenchJob::new(program, arch).run().expect("runs");
+                let r = BenchJob::new(program.as_str(), arch).run().expect("runs");
                 cells.push((mapping.label(), r.report.total_cycles()));
             }
             let best = cells.iter().min_by_key(|(_, c)| *c).unwrap();

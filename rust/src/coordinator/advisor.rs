@@ -7,7 +7,9 @@
 //! The one advantage of the FPGA is that we will be able to change our
 //! memory architecture to suit our particular design."
 //!
-//! Given a workload (a registered benchmark or a custom program), the
+//! Given a workload (any member of the kernel registry's name grammar —
+//! `transposeN`, `fft4096rR`, `reductionN`, `scanN`, `histogramN`,
+//! `stencilN`, `gemmN` — see [`crate::programs::registry`]), the
 //! advisor ranks every candidate memory — the paper's nine plus the
 //! XOR-mapped extensions — by time, area and perf-per-area.
 //!

@@ -5,6 +5,7 @@
 
 use crate::mem::arch::MemoryArchKind;
 use crate::programs::library::{program_by_name, Workload};
+use crate::programs::registry;
 use crate::sim::compiled::{self, CompiledTrace};
 use crate::sim::config::MachineConfig;
 use crate::sim::exec::{self, ExecParams, FlatMemory, MemTrace};
@@ -21,9 +22,11 @@ pub struct BenchJob {
     pub program: String,
     /// Memory architecture.
     pub arch: MemoryArchKind,
-    /// Input-data seed (the data does not change timing — access patterns
-    /// are address-driven — but determinism keeps validation exact and
-    /// makes `(program, seed)` a sound trace-cache key).
+    /// Input-data seed. The seed deterministically fixes the input
+    /// image, hence the whole trace — that is what makes
+    /// `(program, seed)` a sound trace-cache key even for kernels whose
+    /// access patterns depend on the data (the histogram's
+    /// gather/scatter), and keeps validation exact for the rest.
     pub seed: u64,
     /// Use the fast banked timing path (identical cycles; see
     /// [`crate::mem::banked::TimingMode`]).
@@ -40,31 +43,30 @@ impl BenchJob {
         Self { program: program.into(), arch, seed: 0x5EED, fast_timing: true }
     }
 
-    /// The full paper sweep: Table II's 24 transpose cells + Table III's
-    /// 27 FFT cells = 51 benchmark combinations.
-    pub fn paper_sweep() -> Vec<BenchJob> {
-        let mut jobs = Vec::new();
-        for n in [32, 64, 128] {
-            for arch in MemoryArchKind::table2_eight() {
-                jobs.push(BenchJob::new(format!("transpose{n}"), arch));
-            }
-        }
-        for r in [4, 8, 16] {
-            for arch in MemoryArchKind::table3_nine() {
-                jobs.push(BenchJob::new(format!("fft4096r{r}"), arch));
-            }
-        }
-        jobs
+    /// Every cell of one registry half: each sweep member crossed with
+    /// its family's architecture slate, in registry order.
+    fn matrix_jobs(paper: Option<bool>) -> Vec<BenchJob> {
+        registry::benchmark_matrix(paper)
+            .into_iter()
+            .flat_map(|(name, archs)| {
+                archs.into_iter().map(move |arch| BenchJob::new(name.clone(), arch))
+            })
+            .collect()
     }
 
-    /// The paper sweep plus the reduction workload's nine Table III
-    /// cells (51 + 9 = 60 combinations) — the `sweep --all` set.
+    /// The full paper sweep: Table II's 24 transpose cells + Table III's
+    /// 27 FFT cells = 51 benchmark combinations — the registry's `paper`
+    /// half.
+    pub fn paper_sweep() -> Vec<BenchJob> {
+        Self::matrix_jobs(Some(true))
+    }
+
+    /// The whole benchmark matrix: the paper sweep plus every registered
+    /// extension family's cells (reduction, scan, histogram, stencil,
+    /// GEMM on the Table III slate) — the `sweep --all` set, 100+ cells
+    /// across the registry's seven kernel families.
     pub fn extended_sweep() -> Vec<BenchJob> {
-        let mut jobs = Self::paper_sweep();
-        for arch in MemoryArchKind::table3_nine() {
-            jobs.push(BenchJob::new("reduction4096", arch));
-        }
-        jobs
+        Self::matrix_jobs(None)
     }
 
     /// The cache key of this job's functional execution.
@@ -241,10 +243,14 @@ mod tests {
     }
 
     #[test]
-    fn extended_sweep_adds_reduction_cells() {
+    fn extended_sweep_is_the_registry_matrix() {
         let jobs = BenchJob::extended_sweep();
-        assert_eq!(jobs.len(), 60);
+        assert_eq!(jobs.len(), crate::programs::registry::matrix_cells(None));
+        assert!(jobs.len() >= 100, "expanded matrix floor: got {}", jobs.len());
         assert_eq!(jobs.iter().filter(|j| j.program == "reduction4096").count(), 9);
+        assert_eq!(jobs.iter().filter(|j| j.program == "gemm64").count(), 9);
+        // The paper half leads, unchanged.
+        assert_eq!(&jobs[..51], &BenchJob::paper_sweep()[..]);
     }
 
     #[test]

@@ -130,26 +130,36 @@ pub fn render_table3(results: &[BenchResult]) -> String {
     out
 }
 
-/// Render the reduction extension table (`sweep --all`): the strided
-/// tree-sum's profile on the Table III architecture set — the third
-/// access pattern, beyond the paper's own tables.
-pub fn render_reduction(results: &[BenchResult]) -> String {
-    let program = "reduction4096";
-    let archs: Vec<MemoryArchKind> = MemoryArchKind::table3_nine()
-        .into_iter()
+/// Render one extension member's profile table (the Table II/III shape,
+/// on whatever part of the family's declared architecture slate is
+/// present in `results`). Empty when the member was not swept.
+fn render_extension_member(
+    results: &[BenchResult],
+    program: &str,
+    title: &str,
+    slate: &[MemoryArchKind],
+) -> String {
+    let archs: Vec<MemoryArchKind> = slate
+        .iter()
+        .copied()
         .filter(|a| results.iter().any(|r| r.job.program == program && r.job.arch == *a))
         .collect();
     if archs.is_empty() {
         return String::new();
     }
-    let mut out =
-        String::from("REDUCTION: Strided Tree-Sum Profiling - Different Memory Architectures\n");
+    let mut out = format!(
+        "{}: {} Profiling - Different Memory Architectures\n",
+        program.to_uppercase(),
+        title
+    );
     let c0 = &cell(results, program, archs[0]).report;
     out.push_str(&format!(
-        "\n4096 elems, stride 4  (Common Ops — INT: {}, Immediate: {}, Other: {}; \
+        "\n{} threads  (Common Ops — INT: {}, Immediate: {}, FP: {}, Other: {}; \
          Load/Store ops {}/{})\n",
+        c0.threads,
         c0.stats.int_cycles,
         c0.stats.imm_cycles,
+        c0.stats.fp_cycles,
         c0.stats.other_cycles,
         c0.stats.d_load_ops,
         c0.stats.store_ops,
@@ -171,6 +181,29 @@ pub fn render_reduction(results: &[BenchResult]) -> String {
     t.row(row("R Bank Eff. (%)", &|r| opt_pct(r.report.r_bank_eff())));
     t.row(row("W Bank Eff. (%)", &|r| opt_pct(r.report.w_bank_eff())));
     out.push_str(&t.render());
+    out
+}
+
+/// Render the extension tables (`sweep --all`): one profile table per
+/// registry extension member present in `results` (reduction, scan,
+/// histogram, stencil, GEMM cells) — the access patterns beyond the
+/// paper's own tables, enumerated from the registry so a new kernel
+/// family reports without touching this module.
+pub fn render_extensions(results: &[BenchResult]) -> String {
+    use crate::programs::registry;
+    let mut out = String::new();
+    for fam in registry::families().iter().filter(|f| !f.paper) {
+        let slate = fam.sweep_archs.archs();
+        for member in fam.sweep_members() {
+            let table = render_extension_member(results, &member, fam.title, &slate);
+            if !table.is_empty() {
+                if !out.is_empty() {
+                    out.push('\n');
+                }
+                out.push_str(&table);
+            }
+        }
+    }
     out
 }
 
@@ -302,17 +335,26 @@ mod tests {
     }
 
     #[test]
-    fn renders_reduction_extension() {
+    fn renders_extension_tables() {
         let jobs: Vec<BenchJob> = MemoryArchKind::table3_nine()
             .into_iter()
-            .map(|arch| BenchJob::new("reduction4096", arch))
+            .flat_map(|arch| {
+                [
+                    BenchJob::new("reduction4096", arch),
+                    BenchJob::new("scan1024", arch),
+                    BenchJob::new("gemm32", arch),
+                ]
+            })
             .collect();
         let results = SweepRunner::default().run_cached(&jobs).unwrap();
-        let out = render_reduction(&results);
-        assert!(out.contains("Strided Tree-Sum"));
+        let out = render_extensions(&results);
+        assert!(out.contains("REDUCTION4096: Strided Tree-Sum"));
+        assert!(out.contains("SCAN1024: Work-Efficient Prefix Sum"));
+        assert!(out.contains("GEMM32: Tiled GEMM"));
+        assert!(!out.contains("HISTOGRAM"), "unswept members render nothing");
         assert!(out.contains("16 Banks Offset"));
-        // Without reduction cells the renderer degrades to empty.
-        assert_eq!(render_reduction(&[]), "");
+        // Without extension cells the renderer degrades to empty.
+        assert_eq!(render_extensions(&[]), "");
     }
 
     #[test]

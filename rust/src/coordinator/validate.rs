@@ -139,41 +139,71 @@ pub fn validate_ffts(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
     checks
 }
 
-/// Validate the strided tree-sum reductions against the host wrapping
-/// sum, on the paper's nine architectures plus the parametric extremes
-/// the explorer sweeps (2 and 32 banks, XOR mapping). Purely host-side:
-/// the reduction has no PJRT artifact.
-pub fn validate_reductions(_rt: Option<&ArtifactRuntime>) -> Vec<Check> {
-    use crate::programs::library::program_by_name;
+/// The architecture slate the registry-driven validator covers: the
+/// paper's nine plus the parametric extremes the explorer sweeps (2 and
+/// 32 banks, XOR mapping).
+pub fn workload_validation_archs() -> Vec<MemoryArchKind> {
+    let mut archs = MemoryArchKind::table3_nine();
+    archs.push(MemoryArchKind::banked(2));
+    archs.push(MemoryArchKind::banked(32));
+    archs.push(MemoryArchKind::banked_xor(16));
+    archs
+}
+
+/// Validate every registry **extension** member against its exact
+/// host-reference image on [`workload_validation_archs`]. The paper
+/// families keep their specialized validators ([`validate_transposes`],
+/// [`validate_ffts`] — the latter by tolerance, f32 pipelines have no
+/// exact image), so no member is simulated twice. Purely host-side —
+/// the extension kernels have no PJRT artifacts — and enumerated from
+/// the registry, so a newly registered kernel is validated without
+/// touching this module.
+pub fn validate_workloads(_rt: Option<&ArtifactRuntime>) -> Vec<Check> {
+    use crate::programs::registry;
     let mut checks = Vec::new();
-    for n in [256u32, 4096] {
-        let name_base = format!("reduction{n}");
-        let Some(workload) = program_by_name(&name_base) else {
-            checks.push(Check::fail(name_base, "workload failed to build"));
+    let members = registry::families()
+        .iter()
+        .filter(|fam| !fam.paper)
+        .flat_map(|fam| fam.sweep_members());
+    for (idx, member) in members.enumerate() {
+        let Some(workload) = registry::program_by_name(&member) else {
+            checks.push(Check::fail(member, "workload failed to build"));
             continue;
         };
-        let seed = 3000 + n as u64;
-        let expected = workload.expected_scalar(seed).expect("reductions have a scalar result");
-        let mut archs = MemoryArchKind::table3_nine();
-        archs.push(MemoryArchKind::banked(2));
-        archs.push(MemoryArchKind::banked(32));
-        archs.push(MemoryArchKind::banked_xor(16));
-        for arch in archs {
+        let seed = 3000 + idx as u64;
+        let Some(expected) = workload.expected_image(seed) else {
+            checks.push(Check::fail(member, "extension members must carry a host reference"));
+            continue;
+        };
+        for arch in workload_validation_archs() {
             let cfg = MachineConfig::for_arch(arch)
                 .with_mem_words(workload.mem_words())
                 .with_fast_timing();
             let mut m = Machine::new(cfg);
             workload.load_input(&mut m, seed);
-            let name = format!("{name_base} on {arch}");
+            let name = format!("{member} on {arch}");
             if let Err(e) = m.run_program(workload.program()) {
                 checks.push(Check::fail(name, e.to_string()));
                 continue;
             }
-            let got = m.read_image(0, 1)[0];
-            if got == expected {
-                checks.push(Check::pass(name, "host wrapping sum agrees"));
+            let got = m.read_image(expected.base, expected.words.len());
+            if got == expected.words {
+                checks.push(Check::pass(
+                    name,
+                    format!("host reference agrees ({} words)", expected.words.len()),
+                ));
             } else {
-                checks.push(Check::fail(name, format!("sum {got:#x} != host {expected:#x}")));
+                let bad = got.iter().zip(&expected.words).position(|(g, e)| g != e).unwrap();
+                checks.push(Check::fail(
+                    name,
+                    format!(
+                        "word {} (addr {}): {:#x} != host {:#x}",
+                        bad,
+                        expected.base + bad as u32,
+                        got[bad],
+                        expected.words[bad]
+                    ),
+                ));
             }
         }
     }
@@ -237,7 +267,7 @@ pub fn validate_conflict_oracle(rt: &ArtifactRuntime, seed: u64) -> Vec<Check> {
 pub fn validate_all(rt: Option<&ArtifactRuntime>) -> Vec<Check> {
     let mut checks = validate_transposes(rt);
     checks.extend(validate_ffts(rt));
-    checks.extend(validate_reductions(rt));
+    checks.extend(validate_workloads(rt));
     if let Some(rt) = rt {
         checks.extend(validate_conflict_oracle(rt, 0xC0DE));
     }
@@ -257,15 +287,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn reductions_validate_without_artifacts() {
-        let checks = validate_reductions(None);
-        assert_eq!(checks.len(), 24, "2 sizes × (9 paper + 3 parametric) archs");
-        for c in &checks {
-            assert!(c.passed, "{}: {}", c.name, c.detail);
-        }
-    }
-
-    // FFT validation across all nine architectures is covered by
-    // rust/tests/validation.rs (it is the long pole of the unit suite).
+    // The registry-driven workload validation (every non-FFT member ×
+    // 12 architectures) and the FFT validation across all nine
+    // architectures are covered by rust/tests/validation.rs (they are
+    // the long poles of the unit suite).
 }

@@ -114,6 +114,7 @@ pub mod prelude {
     };
     pub use crate::programs::{
         fft::{fft_program, FftPlan},
+        registry::{self, KernelFamily, OpCountModel, Workload},
         transpose::transpose_program,
     };
     pub use crate::sim::{

@@ -67,7 +67,8 @@ USAGE:
   soft-simt table2                      run the transpose sweep, print Table II
   soft-simt table3                      run the FFT sweep, print Table III
   soft-simt fig9                        print Fig. 9 (cost vs performance)
-  soft-simt sweep [--csv PATH] [--all]  run all 51 cells (+reduction with --all)
+  soft-simt sweep [--csv PATH] [--all]  run all 51 paper cells (--all: the full
+                                        100+-cell registry benchmark matrix)
   soft-simt run -p PROG -m MEM          run one benchmark cell
   soft-simt advise -p PROG              rank every memory for a workload
   soft-simt explore -p PROG [--strategy exhaustive|halving] [--json PATH]

@@ -148,6 +148,11 @@ impl ProgramBuilder {
         self.emit(Instruction::r(Opcode::Fmul, rd, ra, rb));
     }
 
+    /// `rd = rd + ra·rb` (fused multiply-add).
+    pub fn fma(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Fma, rd, ra, rb));
+    }
+
     pub fn fneg(&mut self, rd: u8, ra: u8) {
         self.emit(Instruction::r(Opcode::Fneg, rd, ra, 0));
     }
@@ -268,6 +273,25 @@ mod tests {
         let out = run_and_read(b, 2);
         assert_eq!(out[0], 3.0);
         assert_eq!(out[1], -2.0);
+    }
+
+    #[test]
+    fn fma_accumulates_into_rd() {
+        // rd = rd + ra·rb, the contract the GEMM kernel's inner loop
+        // (and its bit-exact host reference) depends on.
+        let mut b = ProgramBuilder::new("fma", 16);
+        let acc = b.alloc();
+        let (x, y) = (b.alloc(), b.alloc());
+        let addr = b.alloc();
+        b.fconst(acc, 10.0);
+        b.fconst(x, 3.0);
+        b.fconst(y, 4.0);
+        b.fma(acc, x, y);
+        b.tid(addr);
+        b.st(addr, acc);
+        b.halt();
+        let out = run_and_read(b, 1);
+        assert_eq!(out[0], 22.0);
     }
 
     #[test]

@@ -23,8 +23,10 @@
 //! Ops" checks in the tests).
 
 use super::builder::{CReg, ProgramBuilder};
+use super::registry::{KernelFamily, OpCountModel, SweepArchs, Workload};
 use crate::isa::program::Program;
 use crate::util::bits::log2_exact;
+use crate::util::XorShift64;
 
 /// Layout and metadata of one FFT benchmark instance.
 #[derive(Debug, Clone)]
@@ -345,6 +347,75 @@ pub fn fft_program(radix: u32) -> (FftPlan, Program) {
     let program = build(&plan);
     (plan, program)
 }
+
+fn valid(radix: u32) -> bool {
+    matches!(radix, 4 | 8 | 16)
+}
+
+/// Build the registered workload for `fft4096r{radix}`. No exact host
+/// image (f32 pipelines validate by tolerance —
+/// [`crate::coordinator::validate::validate_ffts`]).
+pub fn workload(radix: u32) -> Workload {
+    let (plan, program) = fft_program(radix);
+    let mem_words = plan.mem_words();
+    let tw = plan.tw_region();
+    Workload::new(program, mem_words)
+        .with_tw_region(tw)
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            let data = rng.f32_vec(2 * plan.n as usize);
+            for (i, &v) in data.iter().enumerate() {
+                mem.write_word(plan.data_base + i as u32, v.to_bits());
+            }
+            for (i, &v) in plan.twiddles.iter().enumerate() {
+                mem.write_word(plan.tw_base + i as u32, v.to_bits());
+            }
+        })
+}
+
+/// Analytical golden model, read straight off [`build`]: every stage
+/// loads and stores `2R` words per butterfly (interleaved re/im of R
+/// points); every stage but the last loads `2(R−1)` twiddle words and
+/// spends `6(R−1)` FP ops applying them; the DFT-R micro-kernels cost
+/// 16 / 61 / 177 FP ops for R = 4 / 8 / 16 (the radix-4 total of
+/// 16 + 18 = 34 per butterfly matches the paper's "≈34 FP instructions").
+pub fn model(radix: u32) -> OpCountModel {
+    let n = 4096u64;
+    let r = radix as u64;
+    let stages = match radix {
+        4 => 6u64,
+        8 => 4,
+        16 => 3,
+        _ => unreachable!("valid() gates the radices"),
+    };
+    let warps = (n / r) / 16;
+    let data = stages * 2 * r * warps;
+    let dft_fp = match radix {
+        4 => 16u64,
+        8 => 61,
+        16 => 177,
+        _ => unreachable!(),
+    };
+    OpCountModel {
+        d_load_ops: data,
+        tw_load_ops: (stages - 1) * 2 * (r - 1) * warps,
+        store_ops: data,
+        fp_ops: warps * (stages * dft_fp + (stages - 1) * 6 * (r - 1)),
+    }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "fft",
+    prefix: "fft4096r",
+    title: "4096-Point Cooley-Tukey FFT",
+    grammar: "fft4096rR — R in {4, 8, 16}",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[4, 8, 16],
+    sweep_archs: SweepArchs::Table3,
+    paper: true,
+};
 
 /// Iterative radix-2 reference FFT in f64 (host-side oracle for tests and
 /// golden validation; `jnp.fft` plays the same role on the Python side).

@@ -1,0 +1,253 @@
+//! Tiled FP32 matrix multiply over shared memory — the suite's
+//! compute-dense kernel, blending FP, integer address math and memory
+//! traffic like the paper's FFTs.
+//!
+//! `C = A·B` for N×N row-major f32 matrices, one thread per output
+//! element, the k-loop unrolled in [`TILE`]-wide tiles. Per k-step a
+//! warp's 16 consecutive threads (for N ≥ 16: one row of C) issue
+//!
+//! - `A[i·N + k]` — all 16 lanes read the **same address** (the
+//!   broadcast case of the bank-conflict matrix; one bank serves the
+//!   whole warp),
+//! - `B[k·N + j]` — 16 consecutive addresses (the friendly case),
+//!
+//! then one fused multiply-add — so the instruction mix interleaves a
+//! degenerate-conflict load, an ideal load and an FP op at a 1:1:1
+//! rate, with a single consecutive store sweep at the end. Accumulation
+//! is bit-deterministic (`fma` in ascending k), so the host reference
+//! ([`reference_gemm`]) matches the machine image **bit for bit**.
+
+use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
+use crate::isa::program::Program;
+use crate::util::bits::log2_exact;
+use crate::util::XorShift64;
+
+/// Tile width of the unrolled k-loop (one warp's worth of k-steps).
+pub const TILE: u32 = 16;
+
+/// Placement metadata for a GEMM run.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmPlan {
+    /// Matrix dimension N (power of two, 8..=64).
+    pub n: u32,
+    /// Word address of B (A occupies `[0, n²)`).
+    pub b_base: u32,
+    /// Word address of C.
+    pub c_base: u32,
+    /// Thread-block size (`N²` — one output element per thread).
+    pub threads: u32,
+    /// Shared-memory words the benchmark touches.
+    pub words: u32,
+}
+
+impl GemmPlan {
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (8..=64).contains(&n));
+        let nn = n * n;
+        Self { n, b_base: nn, c_base: 2 * nn, threads: nn, words: 3 * nn }
+    }
+
+    /// k-tiles per output element.
+    pub fn tiles(&self) -> u32 {
+        self.n.div_ceil(TILE)
+    }
+}
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (8..=64).contains(&n)
+}
+
+/// Generate the GEMM program for N×N matrices.
+pub fn gemm_program(n: u32) -> (GemmPlan, Program) {
+    let plan = GemmPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &GemmPlan) -> Program {
+    let n = plan.n;
+    let log_n = log2_exact(n) as u16;
+    let mut b = ProgramBuilder::new(format!("gemm{n}"), plan.threads);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let a_addr = b.alloc();
+    let b_addr = b.alloc();
+    let av = b.alloc();
+    let bv = b.alloc();
+    let acc = b.alloc();
+
+    // a walks A's row i from i·N = (tid >> log N) << log N;
+    // b walks B's column j from b_base + (tid & (N−1)).
+    b.ishri(a_addr, tid, log_n);
+    b.ishli(a_addr, a_addr, log_n);
+    b.iandi(b_addr, tid, (n - 1) as u16);
+    b.iaddi(b_addr, b_addr, plan.b_base as i32);
+    b.fconst(acc, 0.0);
+
+    // k-loop in TILE-wide tiles: addresses advance incrementally inside
+    // a tile (the per-step immediates a tiled kernel keeps in registers).
+    for tile in 0..plan.tiles() {
+        for k in tile * TILE..((tile + 1) * TILE).min(n) {
+            b.ld(av, a_addr); // broadcast: one address per warp row
+            b.ld(bv, b_addr); // consecutive across the warp
+            b.fma(acc, av, bv);
+            if k + 1 < n {
+                b.iaddi(a_addr, a_addr, 1);
+                b.iaddi(b_addr, b_addr, n as i32);
+            }
+        }
+    }
+    // C[i·N + j] = C base + tid — one consecutive sweep, never re-read.
+    b.iaddi(a_addr, tid, plan.c_base as i32);
+    b.stnb(a_addr, acc);
+    b.halt();
+    b.build()
+}
+
+/// Host reference: C bits with the machine's exact accumulation order
+/// (`acc = A[i][k].mul_add(B[k][j], acc)`, k ascending).
+pub fn reference_gemm(ab: &[f32], n: usize) -> Vec<u32> {
+    assert_eq!(ab.len(), 2 * n * n);
+    let (a, b) = ab.split_at(n * n);
+    let mut c = vec![0u32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc = a[i * n + k].mul_add(b[k * n + j], acc);
+            }
+            c[i * n + j] = acc.to_bits();
+        }
+    }
+    c
+}
+
+/// Build the registered workload for `gemm{n}`.
+pub fn workload(n: u32) -> Workload {
+    let (plan, program) = gemm_program(n);
+    Workload::new(program, (plan.words as usize).next_power_of_two())
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            // A then B, contiguous from address 0.
+            for (i, v) in rng.f32_vec(2 * (plan.n * plan.n) as usize).iter().enumerate() {
+                mem.write_word(i as u32, v.to_bits());
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let ab = rng.f32_vec(2 * (plan.n * plan.n) as usize);
+            ExpectedImage {
+                base: plan.c_base,
+                words: reference_gemm(&ab, plan.n as usize),
+            }
+        })
+}
+
+/// Analytical golden model: per k-step one A load, one B load and one
+/// fma across `N²/16` warps; one store sweep — `N³/8` loads, `N²/16`
+/// stores, `N³/16` 16-wide FP ops.
+pub fn model(n: u32) -> OpCountModel {
+    let n = n as u64;
+    OpCountModel {
+        d_load_ops: n * n * n / 8,
+        tw_load_ops: 0,
+        store_ops: n * n / 16,
+        fp_ops: n * n * n / 16,
+    }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "gemm",
+    prefix: "gemm",
+    title: "Tiled GEMM",
+    grammar: "gemmN — N power of two, 8..=64",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[32, 64],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_gemm(n: u32, arch: MemoryArchKind, seed: u64) -> (Vec<u32>, GemmPlan, Machine) {
+        let plan = GemmPlan::new(n);
+        let w = workload(n);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(arch).with_mem_words(w.mem_words()).with_fast_timing(),
+        );
+        w.load_input(&mut m, seed);
+        m.run_program(w.program()).expect("gemm runs");
+        let out = m.read_image(plan.c_base, (n * n) as usize);
+        (out, plan, m)
+    }
+
+    #[test]
+    fn bit_exact_on_all_paper_archs() {
+        for arch in MemoryArchKind::table3_nine() {
+            let (out, plan, _) = run_gemm(16, arch, 21);
+            let mut rng = XorShift64::new(21);
+            let ab = rng.f32_vec(2 * (plan.n * plan.n) as usize);
+            assert_eq!(out, reference_gemm(&ab, plan.n as usize), "{arch}");
+        }
+    }
+
+    #[test]
+    fn bit_exact_at_scale_and_on_parametric_archs() {
+        for arch in [MemoryArchKind::banked(32), MemoryArchKind::banked_xor(16)] {
+            let (out, plan, _) = run_gemm(64, arch, 23);
+            let mut rng = XorShift64::new(23);
+            let ab = rng.f32_vec(2 * (plan.n * plan.n) as usize);
+            assert_eq!(out, reference_gemm(&ab, plan.n as usize), "{arch}");
+        }
+    }
+
+    #[test]
+    fn identity_times_a_is_a() {
+        // B = I: C must equal A bit for bit (fma with 0/1 is exact).
+        let n = 8usize;
+        let plan = GemmPlan::new(8);
+        let program = build(&plan);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked(16))
+                .with_mem_words(((plan.words as usize).next_power_of_two()).max(64)),
+        );
+        let mut rng = XorShift64::new(1);
+        let a = rng.f32_vec(n * n);
+        m.load_f32_image(0, &a);
+        let mut ident = vec![0.0f32; n * n];
+        for i in 0..n {
+            ident[i * n + i] = 1.0;
+        }
+        m.load_f32_image(plan.b_base, &ident);
+        m.run_program(&program).unwrap();
+        let c = m.read_f32_image(plan.c_base, n * n);
+        for (got, want) in c.iter().zip(&a) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn plan_shapes() {
+        let p = GemmPlan::new(64);
+        assert_eq!(p.threads, 4096);
+        assert_eq!(p.words, 3 * 4096);
+        assert_eq!(p.tiles(), 4);
+        assert_eq!(GemmPlan::new(8).tiles(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_big_rejected() {
+        GemmPlan::new(128);
+    }
+}

@@ -1,0 +1,217 @@
+//! Lockstep chunk histogram — data-dependent bank conflicts, the
+//! adversarial case for the LSB mapping.
+//!
+//! Each thread loads one element (consecutive addresses — the friendly
+//! half), masks it to one of [`BINS`] bins, then read-modify-writes the
+//! bin counter: `ld hist[bin]; +1; st hist[bin]`. The bin addresses are
+//! **data-dependent**: which banks the gather and scatter hit — and how
+//! many lanes collide on one bank — is decided by the input values, not
+//! the address arithmetic, so no shift-family mapping can be conflict-free
+//! by construction. This is the access pattern the paper's §VII names as
+//! the reason a configurable memory matters.
+//!
+//! **Semantics.** The ISA has no atomics, and all lanes of the block
+//! execute the RMW in lockstep (every lane reads the pre-instruction
+//! counter; colliding lanes all write the same `old + 1`). The kernel is
+//! therefore defined as the *lockstep chunk histogram*: per pass of
+//! `threads` elements, each bin hit by the chunk advances by exactly one
+//! ([`reference_histogram`] replicates this bit for bit). The memory
+//! traffic — a data-dependent gather + scatter per element chunk — is
+//! identical to a real histogram's; only the counter arithmetic is
+//! chunk-granular.
+
+use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
+use crate::isa::program::Program;
+use crate::util::XorShift64;
+
+/// Histogram bins (power of two; bin = value & (BINS − 1)).
+pub const BINS: u32 = 64;
+
+/// Placement metadata for a histogram run.
+#[derive(Debug, Clone, Copy)]
+pub struct HistogramPlan {
+    /// Element count N (power of two, 64..=4096).
+    pub n: u32,
+    /// Word address of the bin counters (the data occupies `[0, n)`).
+    pub hist_base: u32,
+    /// Thread-block size.
+    pub threads: u32,
+    /// Shared-memory words the benchmark touches.
+    pub words: u32,
+}
+
+impl HistogramPlan {
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (64..=4096).contains(&n));
+        let threads = n.min(2048);
+        Self { n, hist_base: n, threads, words: n + BINS }
+    }
+
+    /// Elements each thread classifies.
+    pub fn elems_per_thread(&self) -> u32 {
+        self.n / self.threads
+    }
+}
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (64..=4096).contains(&n)
+}
+
+/// Generate the histogram program for an N-element input.
+pub fn histogram_program(n: u32) -> (HistogramPlan, Program) {
+    let plan = HistogramPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &HistogramPlan) -> Program {
+    let mut b = ProgramBuilder::new(format!("histogram{}", plan.n), plan.threads);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let idx = b.alloc();
+    let v = b.alloc();
+    let bin = b.alloc();
+    let h = b.alloc();
+
+    for e in 0..plan.elems_per_thread() {
+        // idx = tid + e·threads — consecutive addresses across the warp.
+        if e == 0 {
+            b.iaddi(idx, tid, 0);
+        } else {
+            b.iaddi(idx, idx, plan.threads as i32);
+        }
+        b.ld(v, idx);
+        // bin address = hist_base + (v & (BINS−1)) — data-dependent.
+        b.iandi(bin, v, (BINS - 1) as u16);
+        b.iaddi(bin, bin, plan.hist_base as i32);
+        b.ld(h, bin); // gather: conflicts decided by the data
+        b.iaddi(h, h, 1);
+        // Blocking store: the next chunk's gather reads these counters.
+        b.st(bin, h);
+    }
+    b.halt();
+    b.build()
+}
+
+/// Host reference: the lockstep chunk histogram — per chunk of `threads`
+/// elements, every bin hit by the chunk advances by one (see the module
+/// docs for why this is the kernel's exact semantics).
+pub fn reference_histogram(elements: &[u32], threads: usize) -> Vec<u32> {
+    let mut hist = vec![0u32; BINS as usize];
+    for chunk in elements.chunks(threads) {
+        let mut hit = vec![false; BINS as usize];
+        for &v in chunk {
+            hit[(v & (BINS - 1)) as usize] = true;
+        }
+        for (counter, &h) in hist.iter_mut().zip(&hit) {
+            if h {
+                *counter += 1;
+            }
+        }
+    }
+    hist
+}
+
+/// Build the registered workload for `histogram{n}`.
+pub fn workload(n: u32) -> Workload {
+    let (plan, program) = histogram_program(n);
+    Workload::new(program, (plan.words as usize).next_power_of_two())
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            for i in 0..plan.n {
+                mem.write_word(i, rng.next_u32());
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let elements: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
+            ExpectedImage {
+                base: plan.hist_base,
+                words: reference_histogram(&elements, plan.threads as usize),
+            }
+        })
+}
+
+/// Analytical golden model: per element chunk, one data load + one bin
+/// gather + one bin scatter per warp — `2N/16` loads, `N/16` stores.
+pub fn model(n: u32) -> OpCountModel {
+    let n = n as u64;
+    OpCountModel { d_load_ops: 2 * n / 16, tw_load_ops: 0, store_ops: n / 16, fp_ops: 0 }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "histogram",
+    prefix: "histogram",
+    title: "Lockstep Chunk Histogram",
+    grammar: "histogramN — N power of two, 64..=4096 (64 bins)",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[4096],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_histogram(n: u32, arch: MemoryArchKind, seed: u64) -> (Vec<u32>, Vec<u32>) {
+        let plan = HistogramPlan::new(n);
+        let w = workload(n);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(arch).with_mem_words(w.mem_words()).with_fast_timing(),
+        );
+        w.load_input(&mut m, seed);
+        let input = m.read_image(0, n as usize);
+        m.run_program(w.program()).expect("histogram runs");
+        (input, m.read_image(plan.hist_base, BINS as usize))
+    }
+
+    #[test]
+    fn functional_on_all_paper_archs() {
+        for arch in MemoryArchKind::table3_nine() {
+            let (input, out) = run_histogram(256, arch, 5);
+            assert_eq!(
+                out,
+                reference_histogram(&input, HistogramPlan::new(256).threads as usize),
+                "{arch}"
+            );
+        }
+    }
+
+    #[test]
+    fn functional_at_scale_multichunk() {
+        // n = 4096 with 2048 threads: two chunks, so the chunk-granular
+        // counter semantics are actually exercised.
+        let plan = HistogramPlan::new(4096);
+        assert_eq!(plan.elems_per_thread(), 2);
+        for arch in [MemoryArchKind::banked(16), MemoryArchKind::banked_xor(16)] {
+            let (input, out) = run_histogram(4096, arch, 3);
+            assert_eq!(out, reference_histogram(&input, plan.threads as usize), "{arch}");
+        }
+    }
+
+    #[test]
+    fn chunk_reference_counts_chunks_not_elements() {
+        // 32 equal elements in one chunk of 32 → the bin advances once.
+        let elements = vec![5u32; 32];
+        let hist = reference_histogram(&elements, 32);
+        assert_eq!(hist[5], 1);
+        // Two chunks of 16 → twice.
+        let hist = reference_histogram(&elements, 16);
+        assert_eq!(hist[5], 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_rejected() {
+        HistogramPlan::new(32);
+    }
+}

@@ -1,171 +1,18 @@
-//! Named program registry — the benchmark suite by name, for the CLI and
-//! the sweep runner.
+//! Named program library — the thin facade over the workload registry
+//! ([`super::registry`]) that the CLI, the sweep runner and the service
+//! layer import. The registry owns the grammar, the builders and the
+//! benchmark matrix; this module re-exports the lookup surface under its
+//! historical names so `programs::library::program_by_name` keeps
+//! working everywhere.
 
-use super::fft::{fft_program, FftPlan};
-use super::reduction::{reduction_program, ReductionPlan};
-use super::transpose::{transpose_program, TransposePlan};
-use crate::isa::program::Program;
-use crate::sim::exec::ExecMemory;
-use crate::util::XorShift64;
+pub use super::registry::{
+    is_known_program, model_by_name, program_by_name, ExpectedImage, OpCountModel, Workload,
+};
 
-/// A registered benchmark: the program plus the workload metadata the
-/// harness needs (memory image layout, twiddle region, capacity).
-pub enum Workload {
-    Transpose(TransposePlan, Program),
-    Fft(FftPlan, Program),
-    Reduction(ReductionPlan, Program),
-}
-
-impl Workload {
-    pub fn program(&self) -> &Program {
-        match self {
-            Workload::Transpose(_, p) => p,
-            Workload::Fft(_, p) => p,
-            Workload::Reduction(_, p) => p,
-        }
-    }
-
-    pub fn name(&self) -> &str {
-        &self.program().name
-    }
-
-    /// Shared-memory words required (power of two).
-    pub fn mem_words(&self) -> usize {
-        match self {
-            Workload::Transpose(plan, _) => (plan.words as usize).next_power_of_two(),
-            Workload::Fft(plan, _) => plan.mem_words(),
-            Workload::Reduction(plan, _) => (plan.words as usize).next_power_of_two(),
-        }
-    }
-
-    /// Dataset size in KB — the capacity the footprint model charges for
-    /// holding this workload (shared by the advisor, the explorer CLI
-    /// and the trace-derived figure in `explore::Evaluator`).
-    pub fn dataset_kb(&self) -> u32 {
-        (self.mem_words() * 4 / 1024) as u32
-    }
-
-    /// Twiddle region for load classification (FFTs only).
-    pub fn tw_region(&self) -> Option<std::ops::Range<u32>> {
-        match self {
-            Workload::Transpose(..) | Workload::Reduction(..) => None,
-            Workload::Fft(plan, _) => Some(plan.tw_region()),
-        }
-    }
-
-    /// Deterministically fill `mem` with this workload's input image
-    /// (source matrix / signal + twiddle table), derived from `seed`.
-    ///
-    /// Input data never changes *timing* (access patterns are
-    /// address-driven), but determinism keeps functional validation and
-    /// trace-cache keys exact: the same `(program, seed)` pair always
-    /// produces the same memory image, hence the same trace.
-    pub fn load_input<M: ExecMemory>(&self, mem: &mut M, seed: u64) {
-        let mut rng = XorShift64::new(seed);
-        match self {
-            Workload::Transpose(plan, _) => {
-                for i in 0..plan.n * plan.n {
-                    mem.write_word(plan.src_base + i, rng.next_u32());
-                }
-            }
-            Workload::Fft(plan, _) => {
-                let data = rng.f32_vec(2 * plan.n as usize);
-                for (i, &v) in data.iter().enumerate() {
-                    mem.write_word(plan.data_base + i as u32, v.to_bits());
-                }
-                for (i, &v) in plan.twiddles.iter().enumerate() {
-                    mem.write_word(plan.tw_base + i as u32, v.to_bits());
-                }
-            }
-            Workload::Reduction(plan, _) => {
-                for i in 0..plan.n {
-                    mem.write_word(plan.addr_of(i), rng.next_u32());
-                }
-            }
-        }
-    }
-
-    /// Host-reference expected value at the workload's result location,
-    /// when one exists (reductions: the wrapping sum at element 0).
-    pub fn expected_scalar(&self, seed: u64) -> Option<u32> {
-        match self {
-            Workload::Reduction(plan, _) => {
-                let mut rng = XorShift64::new(seed);
-                let elements: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
-                Some(super::reduction::reference_sum(&elements))
-            }
-            _ => None,
-        }
-    }
-}
-
-/// The benchmark names of the paper's evaluation, plus the strided
-/// tree-sum reduction (the suite's third access pattern).
-pub fn program_names() -> Vec<&'static str> {
-    vec![
-        "transpose32",
-        "transpose64",
-        "transpose128",
-        "fft4096r4",
-        "fft4096r8",
-        "fft4096r16",
-        "reduction4096",
-    ]
-}
-
-/// A parsed-but-not-built program name: the grammar and bounds checks
-/// without any codegen, so name validation is free.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum ParsedName {
-    Transpose(u32),
-    Fft(u32),
-    Reduction(u32),
-}
-
-/// Parse a program name (`transposeN` for powers of two 4..=1024;
-/// `fft4096rR` for R ∈ {4, 8, 16}; `reductionN` for powers of two
-/// 32..=4096) without constructing the workload.
-fn parse_name(name: &str) -> Option<ParsedName> {
-    if let Some(n) = name.strip_prefix("transpose") {
-        let n: u32 = n.parse().ok()?;
-        return (n.is_power_of_two() && (4..=1024).contains(&n))
-            .then_some(ParsedName::Transpose(n));
-    }
-    if let Some(r) = name.strip_prefix("fft4096r") {
-        let r: u32 = r.parse().ok()?;
-        return matches!(r, 4 | 8 | 16).then_some(ParsedName::Fft(r));
-    }
-    if let Some(n) = name.strip_prefix("reduction") {
-        let n: u32 = n.parse().ok()?;
-        return (n.is_power_of_two() && (32..=4096).contains(&n))
-            .then_some(ParsedName::Reduction(n));
-    }
-    None
-}
-
-/// Whether `name` is a buildable program, without building it — the
-/// cheap validity probe the service layer's hot path uses (a warm
-/// cached `run` must not pay FFT codegen just to re-validate a name).
-pub fn is_known_program(name: &str) -> bool {
-    parse_name(name).is_some()
-}
-
-/// Build a workload by name (see [`is_known_program`] for the grammar:
-/// `transposeN`, `fft4096rR`, `reductionN`).
-pub fn program_by_name(name: &str) -> Option<Workload> {
-    match parse_name(name)? {
-        ParsedName::Transpose(n) => {
-            Some(Workload::Transpose(TransposePlan::new(n), transpose_program(n)))
-        }
-        ParsedName::Fft(r) => {
-            let (plan, program) = fft_program(r);
-            Some(Workload::Fft(plan, program))
-        }
-        ParsedName::Reduction(n) => {
-            let (plan, program) = reduction_program(n);
-            Some(Workload::Reduction(plan, program))
-        }
-    }
+/// The benchmark-matrix member names (every family's sweep members, in
+/// registry order) — what `list` reports and `sweep --all` times.
+pub fn program_names() -> Vec<String> {
+    super::registry::program_names()
 }
 
 #[cfg(test)]
@@ -175,9 +22,19 @@ mod tests {
     #[test]
     fn all_registered_names_build() {
         for name in program_names() {
-            let w = program_by_name(name).unwrap_or_else(|| panic!("{name} must build"));
+            let w = program_by_name(&name).unwrap_or_else(|| panic!("{name} must build"));
             assert_eq!(w.name(), name);
             assert!(w.mem_words().is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn the_paper_names_are_registered() {
+        for name in [
+            "transpose32", "transpose64", "transpose128", "fft4096r4", "fft4096r8",
+            "fft4096r16", "reduction4096",
+        ] {
+            assert!(program_names().iter().any(|n| n == name), "{name} missing");
         }
     }
 
@@ -187,6 +44,8 @@ mod tests {
         assert!(program_by_name("fft4096r5").is_none());
         assert!(program_by_name("reduction100").is_none());
         assert!(program_by_name("reduction8192").is_none());
+        assert!(program_by_name("scan33").is_none());
+        assert!(program_by_name("gemm128").is_none());
         assert!(program_by_name("quicksort").is_none());
     }
 
@@ -194,7 +53,9 @@ mod tests {
     fn is_known_program_agrees_with_builder() {
         for name in [
             "transpose32", "transpose33", "transpose1024", "transpose2048", "fft4096r8",
-            "fft4096r5", "reduction4096", "reduction100", "reduction8192", "quicksort", "",
+            "fft4096r5", "reduction4096", "reduction100", "reduction8192", "scan4096",
+            "scan100", "histogram4096", "histogram32", "stencil4096", "gemm64", "gemm7",
+            "quicksort", "",
         ] {
             assert_eq!(
                 is_known_program(name),
@@ -223,6 +84,19 @@ mod tests {
     }
 
     #[test]
+    fn expected_images_exist_for_every_non_fft_member() {
+        for name in program_names() {
+            let w = program_by_name(&name).unwrap();
+            let has_image = w.expected_image(1).is_some();
+            assert_eq!(
+                has_image,
+                !name.starts_with("fft"),
+                "{name}: only the FFTs validate by tolerance instead of exact image"
+            );
+        }
+    }
+
+    #[test]
     fn fft_workloads_have_tw_regions() {
         assert!(program_by_name("fft4096r4").unwrap().tw_region().is_some());
         assert!(program_by_name("transpose32").unwrap().tw_region().is_none());
@@ -234,20 +108,25 @@ mod tests {
         use crate::sim::config::MachineConfig;
         use crate::sim::exec::FlatMemory;
         use crate::sim::machine::Machine;
-        let w = program_by_name("transpose32").unwrap();
-        let mut flat = FlatMemory::new(w.mem_words());
-        w.load_input(&mut flat, 0x5EED);
-        let mut machine = Machine::new(
-            MachineConfig::for_arch(MemoryArchKind::banked(16)).with_mem_words(w.mem_words()),
-        );
-        w.load_input(&mut machine, 0x5EED);
-        assert_eq!(machine.mem().image(), flat.image());
+        for name in ["transpose32", "gemm16", "histogram256"] {
+            let w = program_by_name(name).unwrap();
+            let mut flat = FlatMemory::new(w.mem_words());
+            w.load_input(&mut flat, 0x5EED);
+            let mut machine = Machine::new(
+                MachineConfig::for_arch(MemoryArchKind::banked(16))
+                    .with_mem_words(w.mem_words()),
+            );
+            w.load_input(&mut machine, 0x5EED);
+            assert_eq!(machine.mem().image(), flat.image(), "{name}");
+        }
     }
 
     #[test]
     fn non_paper_sizes_also_build() {
-        // The library generalizes beyond the paper's three sizes.
+        // The library generalizes beyond the registered sweep sizes.
         assert!(program_by_name("transpose16").is_some());
         assert!(program_by_name("transpose256").is_some());
+        assert!(program_by_name("scan128").is_some());
+        assert!(program_by_name("gemm8").is_some());
     }
 }

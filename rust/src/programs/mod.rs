@@ -1,23 +1,40 @@
 //! Benchmark program generators (paper §V: "All benchmarks were written
-//! in assembler").
+//! in assembler") behind a data-driven workload registry.
 //!
-//! The generators emit the same memory-access *patterns* the paper's
+//! The paper families emit the same memory-access *patterns* the paper's
 //! hand-written assembler produces — consecutive-address reads and
 //! stride-N writes for the transposes; stride-varying butterfly and
 //! twiddle accesses with interleaved I/Q complex data for the FFTs —
 //! because those patterns are what drive the bank-conflict behaviour the
-//! paper measures. The [`reduction`] tree-sum adds a third pattern the
-//! paper's tables don't cover (strided reads with a redundant SIMT
-//! reduction tail), giving the design-space explorer a scenario beyond
-//! the paper's two.
+//! paper measures. Five extension families grow the matrix beyond the
+//! paper's tables with the access patterns §VII gestures at:
+//!
+//! - [`reduction`] — strided tree sum (SIMT reduction tail);
+//! - [`scan`] — work-efficient prefix sum (log-depth shift-family
+//!   strides);
+//! - [`histogram`] — data-dependent gather/scatter (the adversarial
+//!   case for any fixed mapping);
+//! - [`stencil`] — periodic halo reads, read-roofline traffic;
+//! - [`gemm`] — tiled FP matmul (broadcast + consecutive loads, FP-dense).
+//!
+//! Every family registers one [`registry::KernelFamily`] — name grammar,
+//! builder, analytical op-count golden model, sweep members — and every
+//! consumer (sweeps, validation, the advisor, the service `List`)
+//! enumerates [`registry::REGISTRY`] instead of keeping its own list.
 
 pub mod builder;
 pub mod fft;
+pub mod gemm;
+pub mod histogram;
 pub mod library;
 pub mod reduction;
+pub mod registry;
+pub mod scan;
+pub mod stencil;
 pub mod transpose;
 
 pub use fft::{fft_program, FftPlan};
 pub use library::{program_by_name, program_names};
 pub use reduction::{reduction_program, ReductionPlan};
+pub use registry::{KernelFamily, OpCountModel, Workload};
 pub use transpose::{transpose_program, TransposePlan};

@@ -23,8 +23,10 @@
 //! compares it (and the whole image) against a host reference.
 
 use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
 use crate::isa::program::Program;
 use crate::util::bits::log2_exact;
+use crate::util::XorShift64;
 
 /// Placement metadata for a reduction run.
 #[derive(Debug, Clone, Copy)]
@@ -111,6 +113,55 @@ pub fn build(plan: &ReductionPlan) -> Program {
 pub fn reference_sum(elements: &[u32]) -> u32 {
     elements.iter().fold(0u32, |acc, &v| acc.wrapping_add(v))
 }
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (32..=4096).contains(&n)
+}
+
+/// Build the registered workload for `reduction{n}`.
+pub fn workload(n: u32) -> Workload {
+    let (plan, program) = reduction_program(n);
+    Workload::new(program, (plan.words as usize).next_power_of_two())
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            for i in 0..plan.n {
+                mem.write_word(plan.addr_of(i), rng.next_u32());
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let elements: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
+            ExpectedImage { base: plan.base, words: vec![reference_sum(&elements)] }
+        })
+        .with_scalar_at(0)
+}
+
+/// Analytical golden model: every pass issues 2 loads + 1 store per warp
+/// across all `min(N/2, 2048)` threads (redundant tail lanes included),
+/// over `log2(N)` passes.
+pub fn model(n: u32) -> OpCountModel {
+    let warps = (n as u64 / 2).min(2048) / 16;
+    let passes = log2_exact(n) as u64;
+    OpCountModel {
+        d_load_ops: 2 * passes * warps,
+        tw_load_ops: 0,
+        store_ops: passes * warps,
+        fp_ops: 0,
+    }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "reduction",
+    prefix: "reduction",
+    title: "Strided Tree-Sum",
+    grammar: "reductionN — N power of two, 32..=4096",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[4096],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,373 @@
+//! The workload registry — the single, data-driven source of truth for
+//! every benchmark the suite knows.
+//!
+//! Each kernel module exports one [`KernelFamily`]: a name grammar
+//! (`<prefix><param>` plus a validity predicate), a workload builder, an
+//! **analytical golden model** (closed-form 16-lane operation counts,
+//! asserted against the functional executor in `rust/tests/registry.rs`
+//! — so every kernel's correctness is pinned independently of timing),
+//! and the members + architecture slate it contributes to the benchmark
+//! matrix. Everything that used to keep its own hand-written workload
+//! list — `library::is_known_program`, `BenchJob::paper_sweep` /
+//! `extended_sweep`, `validate`, the `--all` report tables, the service
+//! `List` — enumerates from [`REGISTRY`] instead, so the lists can never
+//! drift (`rust/tests/registry.rs` asserts there are no stragglers).
+
+use crate::isa::program::Program;
+use crate::mem::arch::MemoryArchKind;
+use crate::sim::exec::{ExecMemory, LoadClass, MemAccessKind, MemTrace};
+use std::ops::Range;
+
+use super::{fft, gemm, histogram, reduction, scan, stencil, transpose};
+
+/// A buildable benchmark: the generated program plus the workload
+/// metadata the harness needs (memory capacity, twiddle region, input
+/// image, host reference). Construction is by the builder methods so a
+/// kernel module states only what it has (an FFT has a twiddle region
+/// and no exact host image; an integer kernel has the reverse).
+pub struct Workload {
+    program: Program,
+    mem_words: usize,
+    tw_region: Option<Range<u32>>,
+    fill: Box<dyn Fn(&mut dyn ExecMemory, u64) + Send + Sync>,
+    expected: Option<Box<dyn Fn(u64) -> ExpectedImage + Send + Sync>>,
+    scalar_addr: Option<u32>,
+}
+
+/// A host-reference result region: `words[i]` is the expected content of
+/// shared-memory address `base + i` after the program runs on an input
+/// image derived from the same seed.
+pub struct ExpectedImage {
+    pub base: u32,
+    pub words: Vec<u32>,
+}
+
+impl Workload {
+    /// A workload with no input image and no host reference (builder
+    /// methods add both). `mem_words` must be a power of two.
+    pub fn new(program: Program, mem_words: usize) -> Self {
+        debug_assert!(mem_words.is_power_of_two());
+        Self {
+            program,
+            mem_words,
+            tw_region: None,
+            fill: Box::new(|_, _| {}),
+            expected: None,
+            scalar_addr: None,
+        }
+    }
+
+    /// Twiddle region for load classification (FFTs only).
+    pub fn with_tw_region(mut self, region: Range<u32>) -> Self {
+        self.tw_region = Some(region);
+        self
+    }
+
+    /// The deterministic input-image filler (see [`Self::load_input`]).
+    pub fn with_fill(
+        mut self,
+        fill: impl Fn(&mut dyn ExecMemory, u64) + Send + Sync + 'static,
+    ) -> Self {
+        self.fill = Box::new(fill);
+        self
+    }
+
+    /// The host-reference result region for a given input seed.
+    pub fn with_expected(
+        mut self,
+        expected: impl Fn(u64) -> ExpectedImage + Send + Sync + 'static,
+    ) -> Self {
+        self.expected = Some(Box::new(expected));
+        self
+    }
+
+    /// Address within the expected region whose value is the workload's
+    /// scalar result (reductions: the sum; scans: the running total).
+    pub fn with_scalar_at(mut self, addr: u32) -> Self {
+        self.scalar_addr = Some(addr);
+        self
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn name(&self) -> &str {
+        &self.program.name
+    }
+
+    /// Shared-memory words required (power of two).
+    pub fn mem_words(&self) -> usize {
+        self.mem_words
+    }
+
+    /// Dataset size in KB — the capacity the footprint model charges for
+    /// holding this workload (shared by the advisor, the explorer CLI
+    /// and the trace-derived figure in `explore::Evaluator`).
+    pub fn dataset_kb(&self) -> u32 {
+        (self.mem_words * 4 / 1024) as u32
+    }
+
+    /// Twiddle region for load classification (FFTs only).
+    pub fn tw_region(&self) -> Option<Range<u32>> {
+        self.tw_region.clone()
+    }
+
+    /// Deterministically fill `mem` with this workload's input image,
+    /// derived from `seed`.
+    ///
+    /// Input data never changes *timing* for the address-driven kernels
+    /// (and determinism keeps functional validation and trace-cache keys
+    /// exact either way): the same `(program, seed)` pair always produces
+    /// the same memory image, hence the same trace.
+    pub fn load_input<M: ExecMemory>(&self, mem: &mut M, seed: u64) {
+        (self.fill)(mem, seed);
+    }
+
+    /// Host-reference expected contents of the result region, when one
+    /// exists. The FFTs return `None` (their f32 pipeline is validated
+    /// against a tolerance, not bit-exactly — see
+    /// [`crate::coordinator::validate::validate_ffts`]); every integer
+    /// kernel and the bit-deterministic GEMM return the exact image.
+    pub fn expected_image(&self, seed: u64) -> Option<ExpectedImage> {
+        self.expected.as_ref().map(|f| f(seed))
+    }
+
+    /// Host-reference expected value at the workload's scalar result
+    /// location, when one exists.
+    pub fn expected_scalar(&self, seed: u64) -> Option<u32> {
+        let addr = self.scalar_addr?;
+        let img = self.expected_image(seed)?;
+        Some(img.words[(addr - img.base) as usize])
+    }
+}
+
+/// Closed-form operation counts for one benchmark member — the
+/// analytical golden model. Units are **16-lane operations** (exactly
+/// what [`crate::sim::stats::CycleStats`] counts in `d_load_ops` /
+/// `tw_load_ops` / `store_ops`, and what `fp_cycles` charges — one cycle
+/// per 16-wide FP operation on every architecture).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCountModel {
+    pub d_load_ops: u64,
+    pub tw_load_ops: u64,
+    pub store_ops: u64,
+    /// 16-wide FP operations (`== stats.fp_cycles`).
+    pub fp_ops: u64,
+}
+
+impl OpCountModel {
+    /// Total memory operations.
+    pub fn mem_ops(&self) -> u64 {
+        self.d_load_ops + self.tw_load_ops + self.store_ops
+    }
+
+    /// The same counts, measured from a captured functional trace — the
+    /// quantity the analytical model is asserted against.
+    pub fn of_trace(trace: &MemTrace) -> Self {
+        let mut m = OpCountModel { d_load_ops: 0, tw_load_ops: 0, store_ops: 0, fp_ops: 0 };
+        for seg in &trace.segments {
+            m.fp_ops += seg.before.fp_cycles;
+            let ops = seg.mem.ops.len() as u64;
+            match seg.mem.kind {
+                MemAccessKind::Load(LoadClass::Data) => m.d_load_ops += ops,
+                MemAccessKind::Load(LoadClass::Twiddle) => m.tw_load_ops += ops,
+                MemAccessKind::Store { .. } => m.store_ops += ops,
+            }
+        }
+        m.fp_ops += trace.tail.fp_cycles;
+        m
+    }
+}
+
+/// Which architecture slate a family's sweep members are timed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepArchs {
+    /// Table II's eight (the transpose slate).
+    Table2,
+    /// Table III's nine (everything else).
+    Table3,
+}
+
+impl SweepArchs {
+    pub fn archs(self) -> Vec<MemoryArchKind> {
+        match self {
+            SweepArchs::Table2 => MemoryArchKind::table2_eight(),
+            SweepArchs::Table3 => MemoryArchKind::table3_nine(),
+        }
+    }
+}
+
+/// One kernel family: the name grammar, builder, analytical model and
+/// benchmark-matrix contribution of one kernel module. All fields are
+/// plain data / fn pointers so registration is a `const` in the module
+/// and the registry is a static array — adding a kernel is adding one
+/// entry, never a new match arm.
+pub struct KernelFamily {
+    /// Family id, e.g. `"scan"`.
+    pub family: &'static str,
+    /// Member-name prefix: members are `<prefix><param>` (e.g.
+    /// `scan4096`, `fft4096r8`).
+    pub prefix: &'static str,
+    /// Human title for report tables, e.g. `"Work-Efficient Prefix Sum"`.
+    pub title: &'static str,
+    /// Human-readable member grammar, for `list` and error hints.
+    pub grammar: &'static str,
+    /// Whether `param` names a buildable member.
+    pub valid: fn(u32) -> bool,
+    /// Build the member workload (param must satisfy [`Self::valid`]).
+    pub build: fn(u32) -> Workload,
+    /// The analytical golden model for a member.
+    pub model: fn(u32) -> OpCountModel,
+    /// Params of the members enumerated into the benchmark matrix
+    /// (`sweep --all`, validation, the `list` payload).
+    pub sweep_params: &'static [u32],
+    /// Architecture slate those members are timed on.
+    pub sweep_archs: SweepArchs,
+    /// Paper benchmark (Tables II/III) vs suite extension.
+    pub paper: bool,
+}
+
+impl KernelFamily {
+    /// Member name for a param.
+    pub fn name_of(&self, param: u32) -> String {
+        format!("{}{}", self.prefix, param)
+    }
+
+    /// Sweep member names, in param order.
+    pub fn sweep_members(&self) -> Vec<String> {
+        self.sweep_params.iter().map(|&p| self.name_of(p)).collect()
+    }
+}
+
+/// Every registered kernel family, in benchmark-matrix order (the two
+/// paper families first, then the extensions).
+pub static REGISTRY: [KernelFamily; 7] = [
+    transpose::FAMILY,
+    fft::FAMILY,
+    reduction::FAMILY,
+    scan::FAMILY,
+    histogram::FAMILY,
+    stencil::FAMILY,
+    gemm::FAMILY,
+];
+
+/// The registered families.
+pub fn families() -> &'static [KernelFamily] {
+    &REGISTRY
+}
+
+/// Parse a program name into its family and parameter, without building
+/// anything — the grammar check every consumer shares.
+pub fn parse(name: &str) -> Option<(&'static KernelFamily, u32)> {
+    for fam in &REGISTRY {
+        if let Some(rest) = name.strip_prefix(fam.prefix) {
+            // Strict canonical digits: `scan+4`, `scan 4` and the
+            // zero-padded alias `scan064` are not member names — each
+            // member has exactly one name, so it is exactly one
+            // trace-cache key.
+            if rest.is_empty()
+                || !rest.bytes().all(|b| b.is_ascii_digit())
+                || (rest.len() > 1 && rest.starts_with('0'))
+            {
+                continue;
+            }
+            let param: u32 = rest.parse().ok()?;
+            return (fam.valid)(param).then_some((fam, param));
+        }
+    }
+    None
+}
+
+/// Whether `name` is a buildable program, without building it — the
+/// cheap validity probe the service layer's hot path uses (a warm cached
+/// `run` must not pay codegen just to re-validate a name).
+pub fn is_known_program(name: &str) -> bool {
+    parse(name).is_some()
+}
+
+/// Build a workload by name.
+pub fn program_by_name(name: &str) -> Option<Workload> {
+    let (fam, param) = parse(name)?;
+    Some((fam.build)(param))
+}
+
+/// The analytical golden model for a registered name.
+pub fn model_by_name(name: &str) -> Option<OpCountModel> {
+    let (fam, param) = parse(name)?;
+    Some((fam.model)(param))
+}
+
+/// Every benchmark-matrix member name, in registry order — what `list`
+/// reports and validation covers.
+pub fn program_names() -> Vec<String> {
+    REGISTRY.iter().flat_map(|f| f.sweep_members()).collect()
+}
+
+/// The benchmark matrix: every sweep member crossed with its family's
+/// architecture slate, in registry order. `paper` filters to the
+/// Tables II/III half (51 cells) or the extension half.
+pub fn benchmark_matrix(paper: Option<bool>) -> Vec<(String, Vec<MemoryArchKind>)> {
+    REGISTRY
+        .iter()
+        .filter(|f| match paper {
+            None => true,
+            Some(p) => f.paper == p,
+        })
+        .flat_map(|f| {
+            f.sweep_params
+                .iter()
+                .map(move |&param| (f.name_of(param), f.sweep_archs.archs()))
+        })
+        .collect()
+}
+
+/// Total benchmark cells in the matrix (programs × their arch slates).
+pub fn matrix_cells(paper: Option<bool>) -> usize {
+    benchmark_matrix(paper).iter().map(|(_, archs)| archs.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_spans_seven_families() {
+        assert_eq!(REGISTRY.len(), 7);
+        let ids: std::collections::HashSet<&str> =
+            REGISTRY.iter().map(|f| f.family).collect();
+        assert_eq!(ids.len(), 7, "family ids unique");
+        assert_eq!(REGISTRY.iter().filter(|f| f.paper).count(), 2, "transpose + fft");
+    }
+
+    #[test]
+    fn matrix_meets_the_expanded_floor() {
+        // ISSUE 5 acceptance: ≥ 100 cells across ≥ 7 families.
+        assert_eq!(matrix_cells(Some(true)), 51, "the paper half is unchanged");
+        assert!(matrix_cells(None) >= 100, "got {}", matrix_cells(None));
+    }
+
+    #[test]
+    fn parse_is_strict() {
+        assert!(parse("scan4096").is_some());
+        assert!(parse("scan+64").is_none(), "sign prefixes are not digits");
+        assert!(parse("scan064").is_none(), "zero-padded aliases would split the trace cache");
+        assert!(parse("scan").is_none());
+        assert!(parse("scan4096x").is_none());
+        assert!(parse("scan99999999999999").is_none(), "overflow rejected, not panicked");
+        assert!(parse("").is_none());
+    }
+
+    #[test]
+    fn every_sweep_member_parses_to_its_family() {
+        for fam in families() {
+            for &p in fam.sweep_params {
+                assert!((fam.valid)(p), "{} sweep param {p} must be valid", fam.family);
+                let name = fam.name_of(p);
+                let (parsed, param) = parse(&name).expect("sweep member parses");
+                assert_eq!(parsed.family, fam.family, "{name}");
+                assert_eq!(param, p);
+            }
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Work-efficient inclusive prefix sum (Blelloch-style reduce-then-scan)
+//! — log-depth passes whose power-of-two strides stress the shift-family
+//! bank mappings.
+//!
+//! The array is N 32-bit words at unit stride. The kernel runs
+//! `2·log2(N) − 1` passes:
+//!
+//! - **up-sweep** pass `d` (d = 1, 2, …, N/2): `A[2id + 2d−1] +=
+//!   A[2id + d−1]` for `i < N/2d` — lane addresses stride by `2d`, so
+//!   every pass exercises a different shift position of the
+//!   `bank = (addr >> s) & (B−1)` family, and the late passes collapse
+//!   onto single banks under LSB exactly where the Offset/XOR maps
+//!   spread them;
+//! - **down-sweep** pass `d` (d = N/4, …, 1): `A[2(i+1)d + d−1] +=
+//!   A[2(i+1)d − 1]` — the inclusive-scan completion, same stride
+//!   family in reverse order.
+//!
+//! Threads are `N/2`; passes with fewer live pairs alias lanes
+//! (`i = tid & (m−1)`), so redundant lanes recompute the same element —
+//! the SIMT reduction-tail pattern, piling duplicate addresses into
+//! single banks. The down-sweep's aliased ghost lane (`i = m−1`) lands
+//! its write in the scratch half `[N, N + d)` of the 2N-word image, so
+//! the result region `[0, N)` is the exact inclusive scan
+//! ([`reference_scan`]).
+
+use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
+use crate::isa::program::Program;
+use crate::util::bits::log2_exact;
+use crate::util::XorShift64;
+
+/// Placement metadata for a scan run.
+#[derive(Debug, Clone, Copy)]
+pub struct ScanPlan {
+    /// Element count N (power of two, 64..=4096).
+    pub n: u32,
+    /// Thread-block size (`N/2` — one pair per thread on the widest
+    /// pass).
+    pub threads: u32,
+    /// Shared-memory words: the array plus an equal-sized scratch half
+    /// absorbing the down-sweep's aliased ghost writes.
+    pub words: u32,
+}
+
+impl ScanPlan {
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (64..=4096).contains(&n));
+        Self { n, threads: n / 2, words: 2 * n }
+    }
+
+    /// Total passes (`2·log2(N) − 1`).
+    pub fn passes(&self) -> u32 {
+        2 * log2_exact(self.n) - 1
+    }
+}
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (64..=4096).contains(&n)
+}
+
+/// Generate the scan program for an N-element array.
+pub fn scan_program(n: u32) -> (ScanPlan, Program) {
+    let plan = ScanPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &ScanPlan) -> Program {
+    let n = plan.n;
+    let mut b = ProgramBuilder::new(format!("scan{n}"), plan.threads);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let i = b.alloc();
+    let t = b.alloc();
+    let a_addr = b.alloc();
+    let b_addr = b.alloc();
+    let v0 = b.alloc();
+    let v1 = b.alloc();
+
+    // Up-sweep: d = 1, 2, …, N/2.
+    let mut d = 1u32;
+    while d < n {
+        let m = n / (2 * d); // live pairs this pass
+        let log_2d = log2_exact(2 * d) as u16;
+        b.iandi(i, tid, (m - 1) as u16);
+        b.ishli(t, i, log_2d); // t = 2·i·d
+        b.iaddi(a_addr, t, (d - 1) as i32);
+        b.iaddi(b_addr, t, (2 * d - 1) as i32);
+        b.ld(v0, a_addr);
+        b.ld(v1, b_addr);
+        b.iadd(v1, v1, v0);
+        // Blocking store: the next pass reads these partial sums.
+        b.st(b_addr, v1);
+        d *= 2;
+    }
+    // Down-sweep: d = N/4, …, 1 (the inclusive-scan completion).
+    let mut d = n / 4;
+    while d >= 1 {
+        let m = n / (2 * d);
+        let log_2d = log2_exact(2 * d) as u16;
+        b.iandi(i, tid, (m - 1) as u16);
+        b.iaddi(i, i, 1);
+        b.ishli(t, i, log_2d); // t = 2·(i+1)·d
+        b.iaddi(a_addr, t, -1); // src = 2(i+1)d − 1
+        b.iaddi(b_addr, t, (d - 1) as i32); // dst (ghost lane i = m−1 → [N, N+d))
+        b.ld(v0, a_addr);
+        b.ld(v1, b_addr);
+        b.iadd(v1, v1, v0);
+        b.st(b_addr, v1);
+        d /= 2;
+    }
+    b.halt();
+    b.build()
+}
+
+/// Host reference: the wrapping inclusive prefix sums of the input.
+pub fn reference_scan(elements: &[u32]) -> Vec<u32> {
+    let mut acc = 0u32;
+    elements
+        .iter()
+        .map(|&v| {
+            acc = acc.wrapping_add(v);
+            acc
+        })
+        .collect()
+}
+
+/// Build the registered workload for `scan{n}`.
+pub fn workload(n: u32) -> Workload {
+    let (plan, program) = scan_program(n);
+    Workload::new(program, plan.words as usize)
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            for i in 0..plan.n {
+                mem.write_word(i, rng.next_u32());
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let elements: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
+            ExpectedImage { base: 0, words: reference_scan(&elements) }
+        })
+        .with_scalar_at(n - 1)
+}
+
+/// Analytical golden model: every pass issues 2 loads + 1 store per warp
+/// across all `N/2` threads (aliased lanes included), over
+/// `2·log2(N) − 1` passes.
+pub fn model(n: u32) -> OpCountModel {
+    let warps = (n as u64 / 2) / 16;
+    let passes = (2 * log2_exact(n) - 1) as u64;
+    OpCountModel {
+        d_load_ops: 2 * passes * warps,
+        tw_load_ops: 0,
+        store_ops: passes * warps,
+        fp_ops: 0,
+    }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "scan",
+    prefix: "scan",
+    title: "Work-Efficient Prefix Sum",
+    grammar: "scanN — N power of two, 64..=4096",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[1024, 4096],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_scan(n: u32, arch: MemoryArchKind, seed: u64) -> (Vec<u32>, Vec<u32>) {
+        let w = workload(n);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(arch).with_mem_words(w.mem_words()).with_fast_timing(),
+        );
+        w.load_input(&mut m, seed);
+        let input = m.read_image(0, n as usize);
+        m.run_program(w.program()).expect("scan runs");
+        (input, m.read_image(0, n as usize))
+    }
+
+    #[test]
+    fn functional_on_all_paper_archs() {
+        for arch in MemoryArchKind::table3_nine() {
+            let (input, out) = run_scan(256, arch, 7);
+            assert_eq!(out, reference_scan(&input), "{arch}");
+        }
+    }
+
+    #[test]
+    fn functional_at_scale_and_on_parametric_archs() {
+        for arch in [
+            MemoryArchKind::banked(2),
+            MemoryArchKind::banked(32),
+            MemoryArchKind::banked_xor(16),
+        ] {
+            let (input, out) = run_scan(4096, arch, 11);
+            assert_eq!(out, reference_scan(&input), "{arch}");
+        }
+    }
+
+    #[test]
+    fn scalar_is_the_total() {
+        let w = workload(1024);
+        let mut rng = XorShift64::new(42);
+        let total =
+            (0..1024).fold(0u32, |acc, _| acc.wrapping_add(rng.next_u32()));
+        assert_eq!(w.expected_scalar(42), Some(total));
+    }
+
+    #[test]
+    fn plan_shapes() {
+        let p = ScanPlan::new(4096);
+        assert_eq!(p.threads, 2048);
+        assert_eq!(p.words, 8192);
+        assert_eq!(p.passes(), 23);
+        assert_eq!(ScanPlan::new(64).passes(), 11);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rejected() {
+        ScanPlan::new(100);
+    }
+}

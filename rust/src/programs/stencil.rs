@@ -1,0 +1,240 @@
+//! 1D periodic stencil with configurable radius — halo exchange over a
+//! power-of-two ring.
+//!
+//! `out[i] = Σ_{o=−r..+r} in[(i + o) mod N]` (wrapping 32-bit adds).
+//! Reads are `2r + 1` unit-stride sweeps shifted by the tap offset —
+//! heavily overlapping, read-dominated traffic where the banked memories
+//! approach their read roofline — and the halo wrap (`& (N−1)`) folds
+//! the boundary lanes of each warp onto the far end of the ring, the
+//! halo-exchange pattern of a distributed stencil. Writes are one
+//! consecutive sweep into the output half.
+//!
+//! The registered members (`stencilN`) use radius [`RADIUS`]; the plan
+//! API ([`StencilPlan::with_radius`]) generates any radius 1..=8 for
+//! experiments.
+
+use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
+use crate::isa::program::Program;
+use crate::util::XorShift64;
+
+/// Radius of the registered benchmark members (7-point stencil).
+pub const RADIUS: u32 = 3;
+
+/// Placement metadata for a stencil run.
+#[derive(Debug, Clone, Copy)]
+pub struct StencilPlan {
+    /// Ring size N (power of two, 64..=4096).
+    pub n: u32,
+    /// Stencil radius (taps = 2·radius + 1).
+    pub radius: u32,
+    /// Word address of the output (the input ring occupies `[0, n)`).
+    pub out_base: u32,
+    /// Thread-block size.
+    pub threads: u32,
+    /// Shared-memory words the benchmark touches.
+    pub words: u32,
+}
+
+impl StencilPlan {
+    pub fn new(n: u32) -> Self {
+        Self::with_radius(n, RADIUS)
+    }
+
+    /// A plan with an explicit radius (1..=8).
+    pub fn with_radius(n: u32, radius: u32) -> Self {
+        assert!(n.is_power_of_two() && (64..=4096).contains(&n));
+        assert!((1..=8).contains(&radius));
+        let threads = n.min(2048);
+        Self { n, radius, out_base: n, threads, words: 2 * n }
+    }
+
+    /// Elements each thread computes.
+    pub fn elems_per_thread(&self) -> u32 {
+        self.n / self.threads
+    }
+
+    /// Taps per output element.
+    pub fn taps(&self) -> u32 {
+        2 * self.radius + 1
+    }
+}
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (64..=4096).contains(&n)
+}
+
+/// Generate the stencil program for an N-point ring at the default
+/// radius.
+pub fn stencil_program(n: u32) -> (StencilPlan, Program) {
+    let plan = StencilPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &StencilPlan) -> Program {
+    let n = plan.n;
+    let mut b = ProgramBuilder::new(format!("stencil{n}"), plan.threads);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let idx = b.alloc();
+    let a = b.alloc();
+    let v = b.alloc();
+    let acc = b.alloc();
+
+    for e in 0..plan.elems_per_thread() {
+        if e == 0 {
+            b.iaddi(idx, tid, 0);
+        } else {
+            b.iaddi(idx, idx, plan.threads as i32);
+        }
+        for k in 0..plan.taps() {
+            let off = k as i32 - plan.radius as i32;
+            // a = (idx + off) mod N — the wrap is exact because the
+            // sign-extended add is mod 2^32 and N divides 2^32.
+            b.iaddi(a, idx, off);
+            b.iandi(a, a, (n - 1) as u16);
+            b.ld(v, a);
+            if k == 0 {
+                b.iaddi(acc, v, 0);
+            } else {
+                b.iadd(acc, acc, v);
+            }
+        }
+        b.iaddi(a, idx, plan.out_base as i32);
+        b.stnb(a, acc); // out is never re-read: non-blocking
+    }
+    b.halt();
+    b.build()
+}
+
+/// Host reference: the periodic wrapping tap sum.
+pub fn reference_stencil(elements: &[u32], radius: u32) -> Vec<u32> {
+    let n = elements.len();
+    (0..n)
+        .map(|i| {
+            (-(radius as i64)..=radius as i64).fold(0u32, |acc, o| {
+                acc.wrapping_add(elements[(i as i64 + o).rem_euclid(n as i64) as usize])
+            })
+        })
+        .collect()
+}
+
+/// Build the registered workload for `stencil{n}` (radius [`RADIUS`]).
+pub fn workload(n: u32) -> Workload {
+    let (plan, program) = stencil_program(n);
+    Workload::new(program, plan.words as usize)
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            for i in 0..plan.n {
+                mem.write_word(i, rng.next_u32());
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let elements: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
+            ExpectedImage {
+                base: plan.out_base,
+                words: reference_stencil(&elements, plan.radius),
+            }
+        })
+}
+
+/// Analytical golden model: `2r + 1` tap loads and one store per element,
+/// `N/16` warps-worth of each.
+pub fn model(n: u32) -> OpCountModel {
+    let n = n as u64;
+    let taps = (2 * RADIUS + 1) as u64;
+    OpCountModel { d_load_ops: taps * n / 16, tw_load_ops: 0, store_ops: n / 16, fp_ops: 0 }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "stencil",
+    prefix: "stencil",
+    title: "1D Periodic Stencil",
+    grammar: "stencilN — N power of two, 64..=4096 (radius 3)",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[4096],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_stencil(plan: &StencilPlan, arch: MemoryArchKind, seed: u64) -> (Vec<u32>, Vec<u32>) {
+        let program = build(plan);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(arch)
+                .with_mem_words(plan.words as usize)
+                .with_fast_timing(),
+        );
+        let mut rng = XorShift64::new(seed);
+        let input: Vec<u32> = (0..plan.n).map(|_| rng.next_u32()).collect();
+        m.load_image(0, &input);
+        m.run_program(&program).expect("stencil runs");
+        let out = m.read_image(plan.out_base, plan.n as usize);
+        (input, out)
+    }
+
+    #[test]
+    fn functional_on_all_paper_archs() {
+        let plan = StencilPlan::new(256);
+        for arch in MemoryArchKind::table3_nine() {
+            let (input, out) = run_stencil(&plan, arch, 9);
+            assert_eq!(out, reference_stencil(&input, plan.radius), "{arch}");
+        }
+    }
+
+    #[test]
+    fn radii_are_configurable() {
+        for radius in [1u32, 4, 8] {
+            let plan = StencilPlan::with_radius(128, radius);
+            let (input, out) = run_stencil(&plan, MemoryArchKind::banked(16), 13);
+            assert_eq!(out, reference_stencil(&input, radius), "radius {radius}");
+        }
+    }
+
+    #[test]
+    fn halo_wraps_the_ring() {
+        // A single impulse at index 0 shows up in the last `radius`
+        // outputs — the periodic halo.
+        let mut input = vec![0u32; 64];
+        input[0] = 1;
+        let out = reference_stencil(&input, 3);
+        assert_eq!(out[63], 1);
+        assert_eq!(out[61], 1);
+        assert_eq!(out[60], 0);
+        let plan = StencilPlan::new(64);
+        let program = build(&plan);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked(16))
+                .with_mem_words(plan.words as usize),
+        );
+        m.load_image(0, &input);
+        m.run_program(&program).unwrap();
+        assert_eq!(m.read_image(plan.out_base, 64), out);
+    }
+
+    #[test]
+    fn multichunk_at_scale() {
+        let plan = StencilPlan::new(4096);
+        assert_eq!(plan.elems_per_thread(), 2);
+        let (input, out) = run_stencil(&plan, MemoryArchKind::banked_offset(16), 17);
+        assert_eq!(out, reference_stencil(&input, plan.radius));
+    }
+
+    #[test]
+    #[should_panic]
+    fn radius_bounds() {
+        StencilPlan::with_radius(128, 0);
+    }
+}

@@ -14,8 +14,10 @@
 //! larger matrices unroll multiple elements per thread.
 
 use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
 use crate::isa::program::Program;
 use crate::util::bits::log2_exact;
+use crate::util::XorShift64;
 
 /// Placement metadata for a transpose run.
 #[derive(Debug, Clone, Copy)]
@@ -92,13 +94,61 @@ pub fn build(plan: &TransposePlan) -> Program {
     b.build()
 }
 
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (4..=1024).contains(&n)
+}
+
+/// Build the registered workload for `transpose{n}`.
+pub fn workload(n: u32) -> Workload {
+    let plan = TransposePlan::new(n);
+    let program = transpose_program(n);
+    Workload::new(program, (plan.words as usize).next_power_of_two())
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            for i in 0..plan.n * plan.n {
+                mem.write_word(plan.src_base + i, rng.next_u32());
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let n = plan.n as usize;
+            let src: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+            let mut out = vec![0u32; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    out[j * n + i] = src[i * n + j];
+                }
+            }
+            ExpectedImage { base: plan.dst_base, words: out }
+        })
+}
+
+/// Analytical golden model (Table II's Load/Store op rows): one load and
+/// one store per element, `N²/16` warps-worth of each.
+pub fn model(n: u32) -> OpCountModel {
+    let ops = (n as u64 * n as u64) / 16;
+    OpCountModel { d_load_ops: ops, tw_load_ops: 0, store_ops: ops, fp_ops: 0 }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "transpose",
+    prefix: "transpose",
+    title: "Matrix Transpose",
+    grammar: "transposeN — N power of two, 4..=1024",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[32, 64, 128],
+    sweep_archs: SweepArchs::Table2,
+    paper: true,
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mem::arch::MemoryArchKind;
     use crate::sim::config::MachineConfig;
     use crate::sim::machine::Machine;
-    use crate::util::XorShift64;
 
     fn run_transpose(n: u32, arch: MemoryArchKind) -> (Machine, crate::sim::stats::RunReport) {
         let plan = TransposePlan::new(n);

@@ -103,13 +103,22 @@ impl SimtEngine {
             Request::Run { program, mem } => {
                 self.require_program(program)?;
                 let job = BenchJob::new(program.clone(), *mem);
+                let key = job.trace_key();
+                let warm = self.cache.get(&key).is_some();
                 let trace = self.cache.get_or_capture(&job)?;
-                // Charge the compiled trace (memoized next to the trace
-                // itself): repeat runs over a warm workload are
-                // closed-form lookups — no address re-hashing, no dyn
-                // dispatch (DESIGN.md §Replay).
-                let compiled = self.cache.get_or_compile(&job.trace_key(), &trace);
-                let result = job.replay_compiled(&compiled)?;
+                // A cold one-shot run charges the reference replayer —
+                // compiling the 50-byte-per-op family table just to
+                // read one arch's slot would cost more than it saves.
+                // From the second touch of a trace on, runs are
+                // closed-form compiled lookups — no address re-hashing,
+                // no dyn dispatch (DESIGN.md §Replay) — and the two
+                // paths are RunReport-identical (replay_diff harness).
+                let result = if warm {
+                    let compiled = self.cache.get_or_compile(&key, &trace);
+                    job.replay_compiled(&compiled)?
+                } else {
+                    job.replay_trace(&trace)?
+                };
                 Ok(Response::Run(result.report))
             }
             Request::Sweep { all } => {
@@ -198,8 +207,10 @@ impl SimtEngine {
     }
 
     fn require_program(&self, name: &str) -> Result<(), ServiceError> {
-        // Cheap grammar check — no codegen, so a warm cached `run`
-        // costs its timing replay and nothing else.
+        // Cheap registry grammar check — no codegen, so a warm cached
+        // `run` costs its timing replay and nothing else. Any member of
+        // any registered kernel family is runnable, not just the sweep
+        // sizes `List` enumerates.
         if !library::is_known_program(name) {
             return Err(ServiceError::UnknownProgram(name.to_string()));
         }
@@ -221,9 +232,11 @@ mod tests {
         let engine = SimtEngine::with_runner(SweepRunner::new(2));
         let a = engine.handle(&run_req("transpose32", MemoryArchKind::banked(16))).unwrap();
         assert_eq!(engine.functional_executions(), 1);
-        // Same program, different memory: replay only.
+        assert_eq!(engine.cache().compiled_len(), 0, "a cold one-shot run never compiles");
+        // Same program, different memory: replay only, now closed-form.
         let b = engine.handle(&run_req("transpose32", MemoryArchKind::mp_4r1w())).unwrap();
         assert_eq!(engine.functional_executions(), 1, "second run replays the cached trace");
+        assert_eq!(engine.cache().compiled_len(), 1, "warm runs charge the compiled trace");
         let (Response::Run(ra), Response::Run(rb)) = (&a, &b) else { panic!("run responses") };
         assert_eq!(ra.program, "transpose32");
         assert_ne!(ra.total_cycles(), 0);

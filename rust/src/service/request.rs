@@ -21,8 +21,8 @@ pub enum Request {
     /// Run one benchmark cell (program × memory) and report the paper's
     /// full metric set.
     Run { program: String, mem: MemoryArchKind },
-    /// The paper sweep (51 cells), or the extended sweep (+ reduction
-    /// cells) with `all`.
+    /// The paper sweep (51 cells), or the whole registry benchmark
+    /// matrix (100+ cells across all seven kernel families) with `all`.
     Sweep { all: bool },
     /// Render one paper artifact (Table I needs no simulation; the
     /// others run the paper sweep through the engine cache).

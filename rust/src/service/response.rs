@@ -93,14 +93,15 @@ pub struct SweepOutput {
 }
 
 impl SweepOutput {
-    /// The sweep's stdout: Tables II + III (+ the reduction extension
-    /// with `all`) + Fig. 9 — exactly the pre-service `sweep` output.
+    /// The sweep's stdout: Tables II + III (+ one table per registry
+    /// extension member with `all`) + Fig. 9 — exactly the pre-service
+    /// `sweep` output for the paper half.
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&report::render_table2(&self.results));
         out.push_str(&report::render_table3(&self.results));
         if self.all {
-            out.push_str(&report::render_reduction(&self.results));
+            out.push_str(&report::render_extensions(&self.results));
         }
         out.push_str(&report::render_fig9(&self.results));
         out
@@ -143,19 +144,29 @@ impl ValidationOutput {
     }
 }
 
-/// The `list` payload: registered programs and memory sets.
+/// The `list` payload: registered programs, kernel-family grammars and
+/// memory sets — all enumerated from the workload registry, so `list`
+/// can never drift from what `run`/`sweep` accept.
 #[derive(Debug, Clone)]
 pub struct Listing {
+    /// Benchmark-matrix member names, registry order.
     pub programs: Vec<String>,
+    /// Kernel families as (id, member grammar).
+    pub families: Vec<(String, String)>,
     /// Paper-set architectures with their Fmax in MHz.
     pub paper_archs: Vec<(String, f64)>,
 }
 
 impl Listing {
-    /// Snapshot the current library and paper architecture set.
+    /// Snapshot the current registry and paper architecture set.
     pub fn current() -> Self {
+        use crate::programs::registry;
         Self {
-            programs: library::program_names().into_iter().map(String::from).collect(),
+            programs: library::program_names(),
+            families: registry::families()
+                .iter()
+                .map(|f| (f.family.to_string(), f.grammar.to_string()))
+                .collect(),
             paper_archs: MemoryArchKind::table3_nine()
                 .into_iter()
                 .map(|a| (a.label(), a.fmax_mhz()))
@@ -167,6 +178,10 @@ impl Listing {
         let mut out = String::from("programs:\n");
         for p in &self.programs {
             out.push_str(&format!("  {p}\n"));
+        }
+        out.push_str("\nkernel families (any member name runs, not just the listed sizes):\n");
+        for (family, grammar) in &self.families {
+            out.push_str(&format!("  {family:10} {grammar}\n"));
         }
         out.push_str("\nmemory architectures (paper set):\n");
         for (label, fmax) in &self.paper_archs {
@@ -248,8 +263,21 @@ mod tests {
         let text = Listing::current().render();
         assert!(text.contains("transpose32"));
         assert!(text.contains("reduction4096"));
+        assert!(text.contains("scan4096"));
+        assert!(text.contains("histogram4096"));
+        assert!(text.contains("stencil4096"));
+        assert!(text.contains("gemm64"));
+        assert!(text.contains("kernel families"));
         assert!(text.contains("16 Banks Offset"));
         assert!(text.contains(arch::PARSE_GRAMMAR));
+    }
+
+    #[test]
+    fn listing_enumerates_the_registry_verbatim() {
+        use crate::programs::registry;
+        let listing = Listing::current();
+        assert_eq!(listing.programs, registry::program_names());
+        assert_eq!(listing.families.len(), registry::families().len());
     }
 
     #[test]

@@ -506,11 +506,17 @@ pub fn response_to_json(resp: &Response) -> String {
         Response::List(listing) => {
             let programs: Vec<String> =
                 listing.programs.iter().map(String::as_str).map(json_str).collect();
+            let families: Vec<String> = listing
+                .families
+                .iter()
+                .map(|(f, g)| format!("{{\"family\":{},\"grammar\":{}}}", json_str(f), json_str(g)))
+                .collect();
             let memories: Vec<String> =
                 listing.paper_archs.iter().map(|(l, _)| json_str(l)).collect();
             out.push_str(&format!(
-                ",\"programs\":[{}],\"memories\":[{}]",
+                ",\"programs\":[{}],\"families\":[{}],\"memories\":[{}]",
                 programs.join(","),
+                families.join(","),
                 memories.join(",")
             ));
         }

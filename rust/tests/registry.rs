@@ -1,0 +1,185 @@
+//! Registry integration suite (ISSUE 5): per-kernel analytical golden
+//! models asserted against the functional executor, registry property
+//! tests (every registered name parses, round-trips through `List`, and
+//! builds a runnable program), and the no-stragglers guarantee — every
+//! workload-name list in the crate is the registry, so none can drift.
+
+use soft_simt::coordinator::job::BenchJob;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::programs::registry::{self, OpCountModel};
+use soft_simt::service::{Request, Response, SimtEngine};
+
+/// Extra (non-sweep) params per family, exercising the grammar bounds
+/// the sweep members don't touch.
+fn extra_params(family: &str) -> &'static [u32] {
+    match family {
+        "transpose" => &[4, 16, 256],
+        "fft" => &[],
+        "reduction" => &[32, 256],
+        "scan" => &[64, 512],
+        "histogram" => &[64, 512],
+        "stencil" => &[64, 256],
+        "gemm" => &[8, 16],
+        other => panic!("unknown family {other}"),
+    }
+}
+
+/// The analytical golden model of every kernel family equals the
+/// functional executor's trace, member by member — loads (data and
+/// twiddle), stores and 16-wide FP ops, across sweep sizes and the
+/// grammar extremes. This pins each kernel's shape independently of any
+/// timing model.
+#[test]
+fn analytical_models_match_the_functional_executor() {
+    for fam in registry::families() {
+        let params: Vec<u32> =
+            fam.sweep_params.iter().chain(extra_params(fam.family)).copied().collect();
+        for param in params {
+            let name = fam.name_of(param);
+            let model = registry::model_by_name(&name).expect("registered members have models");
+            let trace = BenchJob::new(name.clone(), MemoryArchKind::banked(16))
+                .capture_trace()
+                .unwrap_or_else(|e| panic!("{name} must execute: {e}"));
+            let measured = OpCountModel::of_trace(&trace);
+            assert_eq!(measured, model, "{name}: trace vs closed form");
+            assert_eq!(trace.mem_op_count(), model.mem_ops(), "{name}: total memory ops");
+        }
+    }
+}
+
+/// The model also survives the full run pipeline: a coupled run's
+/// reported op counts equal the closed form (one cheap member per
+/// family).
+#[test]
+fn analytical_models_match_run_reports() {
+    let members = [
+        "transpose32", "fft4096r8", "reduction256", "scan256", "histogram256", "stencil256",
+        "gemm16",
+    ];
+    for name in members {
+        let model = registry::model_by_name(name).expect("model");
+        let r = BenchJob::new(name, MemoryArchKind::banked_offset(16)).run().unwrap();
+        assert_eq!(r.report.stats.d_load_ops, model.d_load_ops, "{name} d loads");
+        assert_eq!(r.report.stats.tw_load_ops, model.tw_load_ops, "{name} tw loads");
+        assert_eq!(r.report.stats.store_ops, model.store_ops, "{name} stores");
+        assert_eq!(r.report.stats.fp_cycles, model.fp_ops, "{name} fp ops");
+    }
+}
+
+/// Every registered name parses, builds, and its workload agrees with
+/// itself (name round-trip, power-of-two capacity, grammar bounds).
+#[test]
+fn every_registered_name_parses_and_builds() {
+    let names = registry::program_names();
+    assert!(names.len() >= 10, "expanded library: got {}", names.len());
+    for name in &names {
+        assert!(registry::is_known_program(name), "{name} must be known");
+        let w = registry::program_by_name(name).expect("builds");
+        assert_eq!(w.name(), name.as_str());
+        assert!(w.mem_words().is_power_of_two());
+        assert!(w.program().threads % 16 == 0, "{name}: warp-aligned thread blocks");
+    }
+    // Out-of-grammar neighbours of every family are rejected.
+    for junk in [
+        "transpose2048", "fft4096r2", "reduction8192", "scan32", "scan6144",
+        "histogram8192", "stencil32", "gemm128", "gemm4", "scan", "gemm", "frobnicate",
+    ] {
+        assert!(!registry::is_known_program(junk), "{junk} must be rejected");
+        assert!(registry::program_by_name(junk).is_none());
+    }
+}
+
+/// Registered names round-trip through the service `List` and every
+/// listed program actually runs end-to-end through the engine.
+#[test]
+fn list_round_trips_and_every_member_runs() {
+    let engine = SimtEngine::new();
+    let Response::List(listing) = engine.handle(&Request::List).unwrap() else {
+        panic!("list answers list")
+    };
+    assert_eq!(listing.programs, registry::program_names());
+    for name in &listing.programs {
+        let resp = engine
+            .handle(&Request::Run { program: name.clone(), mem: MemoryArchKind::banked(16) })
+            .unwrap_or_else(|e| panic!("{name} must run: {e}"));
+        let Response::Run(report) = resp else { panic!("run answers run") };
+        assert_eq!(&report.program, name);
+        assert!(report.total_cycles() > 0);
+    }
+}
+
+/// No stragglers: every workload-name list in the crate enumerates the
+/// registry. The sweep matrix, the service listing and the grammar can
+/// therefore never silently drift apart.
+#[test]
+fn no_independent_workload_name_lists() {
+    let registered = registry::program_names();
+
+    // The benchmark matrix (`sweep --all`) is exactly the registry's
+    // sweep members, with each family's declared arch slate.
+    let jobs = BenchJob::extended_sweep();
+    let mut matrix_names: Vec<String> = jobs.iter().map(|j| j.program.clone()).collect();
+    matrix_names.dedup();
+    assert_eq!(matrix_names, registered, "sweep matrix == registry enumeration");
+
+    // The acceptance floor: 100+ cells across 7+ families.
+    assert!(jobs.len() >= 100, "matrix cells: {}", jobs.len());
+    let families: std::collections::HashSet<&str> = registered
+        .iter()
+        .map(|n| registry::parse(n).expect("registered names parse").0.family)
+        .collect();
+    assert!(families.len() >= 7, "kernel families: {}", families.len());
+
+    // The service listing is the same enumeration.
+    let Response::List(listing) = SimtEngine::new().handle(&Request::List).unwrap() else {
+        panic!("list answers list")
+    };
+    assert_eq!(listing.programs, registered);
+
+    // The paper half is exactly the paper families' members.
+    for job in BenchJob::paper_sweep() {
+        let (fam, _) = registry::parse(&job.program).expect("paper members parse");
+        assert!(fam.paper, "{} in the paper sweep must be a paper family", job.program);
+    }
+}
+
+/// The new kernels flow through the design-space explorer like any
+/// paper workload: one functional execution serves the whole parametric
+/// space and the Pareto frontier is non-trivial.
+#[test]
+fn new_kernels_are_explorable() {
+    use soft_simt::service::ExploreStrategy;
+    let engine = SimtEngine::new();
+    for program in ["scan1024", "histogram256", "gemm32"] {
+        let resp = engine
+            .handle(&Request::Explore {
+                program: program.into(),
+                strategy: ExploreStrategy::Halving,
+            })
+            .unwrap_or_else(|e| panic!("{program} must explore: {e}"));
+        let Response::Explore(result) = resp else { panic!("explore answers explore") };
+        assert!(!result.front.is_empty(), "{program}: empty frontier");
+        assert!(result.points_total > 50, "{program}: {} points", result.points_total);
+    }
+}
+
+/// The expanded matrix stays internally consistent when swept: every
+/// extension cell replays from its family's shared trace, and the
+/// distinct-workload count matches the registry enumeration.
+#[test]
+fn extended_sweep_runs_with_one_trace_per_member() {
+    use soft_simt::coordinator::job::TraceCache;
+    use soft_simt::coordinator::runner::SweepRunner;
+    let jobs = BenchJob::extended_sweep();
+    let cache = TraceCache::new();
+    let results = SweepRunner::default().run_with_cache(&jobs, &cache).unwrap();
+    assert_eq!(results.len(), jobs.len());
+    assert_eq!(
+        cache.len(),
+        registry::program_names().len(),
+        "one functional execution per registered member"
+    );
+    for r in &results {
+        assert!(r.report.total_cycles() > 0, "{} on {}", r.job.program, r.job.arch);
+    }
+}

@@ -31,10 +31,21 @@ fn all_ffts_all_archs() {
 }
 
 #[test]
-fn all_reductions_all_archs() {
+fn all_registry_workloads_all_archs() {
+    use soft_simt::programs::registry;
     let rt = runtime();
-    let checks = validate::validate_reductions(rt.as_ref());
-    assert_eq!(checks.len(), 2 * 12);
+    let checks = validate::validate_workloads(rt.as_ref());
+    // One check per (extension member × validation arch): every
+    // non-paper registry member (the paper families keep their
+    // specialized validators, so nothing is simulated twice), on the
+    // paper nine + three parametric extremes.
+    let extension_members: usize = registry::families()
+        .iter()
+        .filter(|f| !f.paper)
+        .map(|f| f.sweep_params.len())
+        .sum();
+    assert!(extension_members >= 7, "got {extension_members}");
+    assert_eq!(checks.len(), extension_members * validate::workload_validation_archs().len());
     for c in &checks {
         assert!(c.passed, "{}: {}", c.name, c.detail);
     }

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""Fold freshly measured bench medians into the committed baselines.
+
+Companion to check_bench_regression.py and the bless.yml workflow: after
+`cargo bench` writes BENCH_explore.json / BENCH_sweep.json /
+BENCH_serve.json, this copies exactly the GATED metrics into the matching
+rust/benches/baselines/BENCH_*.json, preserving each baseline's note.
+Metrics the gate does not read are left out of the baseline on purpose —
+a baseline is a contract, not a log.
+
+Run on the CI runner class only (see the note inside each baseline).
+
+Exit codes: 0 ok, 2 missing/invalid inputs.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# (fresh candidates, committed baseline, gated metrics) — keep in sync
+# with the bench gates in .github/workflows/ci.yml.
+PLAN = [
+    (
+        ["BENCH_explore.json", "rust/BENCH_explore.json"],
+        "rust/benches/baselines/BENCH_explore.json",
+        ["exhaustive_median_ms", "halving_median_ms", "replay_batched_archset_ms"],
+    ),
+    (
+        ["BENCH_sweep.json", "rust/BENCH_sweep.json"],
+        "rust/benches/baselines/BENCH_sweep.json",
+        ["trace_cached_median_ms", "replay_batched_median_ms"],
+    ),
+    (
+        ["BENCH_serve.json", "rust/BENCH_serve.json"],
+        "rust/benches/baselines/BENCH_serve.json",
+        ["cold_median_ms", "warm_median_ms"],
+    ),
+]
+
+
+def main() -> int:
+    for candidates, baseline, metrics in PLAN:
+        current_path = next((p for p in map(Path, candidates) if p.is_file()), None)
+        if current_path is None:
+            print(f"error: no fresh bench JSON among {candidates}", file=sys.stderr)
+            return 2
+        baseline_path = Path(baseline)
+        if not baseline_path.is_file():
+            print(f"error: baseline {baseline} missing from the checkout", file=sys.stderr)
+            return 2
+        try:
+            current = json.loads(current_path.read_text())
+            base = json.loads(baseline_path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        for metric in metrics:
+            value = current.get(metric)
+            if value is None:
+                print(f"error: {metric} missing from {current_path}", file=sys.stderr)
+                return 2
+            print(f"bless {baseline}: {metric} = {value}")
+            base[metric] = value
+        baseline_path.write_text(json.dumps(base, indent=2) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

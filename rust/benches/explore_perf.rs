@@ -10,6 +10,7 @@ use soft_simt::explore::{explore, DesignSpace, Exhaustive, SearchStrategy, Succe
 use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::programs::library::program_by_name;
 use soft_simt::sim::compiled::{replay_many, CompiledTrace};
+use soft_simt::sim::packed::replay_many_packed;
 
 fn main() {
     let program = "transpose32"; // smallest registered transpose workload
@@ -95,6 +96,23 @@ fn main() {
         archs.len(),
         archs.len()
     );
+    // ISSUE 6: the same arch set through the lane-packed kernel.
+    // `simd_speedup` (packed vs scalar replay_many) is machine-speed
+    // independent, so CI gates it with an absolute floor.
+    let packed_s = br
+        .bench(format!("replay_{}archs_lane_packed", archs.len()), || {
+            replay_many_packed(&compiled, &archs, u64::MAX)
+                .into_iter()
+                .map(|r| r.unwrap().total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", packed_s.line());
+    let simd_speedup = batched_s.median().as_secs_f64() / packed_s.median().as_secs_f64();
+    println!(
+        "lane-packed replay speedup over scalar replay_many ({} archs): {simd_speedup:.2}x",
+        archs.len()
+    );
 
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -112,7 +130,9 @@ fn main() {
          \"replay_dyn_archset_ms\": {dyn_ms:.3},\n  \
          \"compile_trace_ms\": {compile_ms:.3},\n  \
          \"replay_batched_archset_ms\": {batched_ms:.3},\n  \
-         \"batch_speedup\": {batch_speedup:.3}\n}}\n",
+         \"batch_speedup\": {batch_speedup:.3},\n  \
+         \"replay_packed_archset_ms\": {packed_ms:.3},\n  \
+         \"simd_speedup\": {simd_speedup:.3}\n}}\n",
         archs = space.arch_count(),
         ex_ms = ex_s.median().as_secs_f64() * 1e3,
         ex_pps = ex_res.points_scored as f64 / ex_s.median().as_secs_f64(),
@@ -122,6 +142,7 @@ fn main() {
         dyn_ms = dyn_s.median().as_secs_f64() * 1e3,
         compile_ms = compile_s.median().as_secs_f64() * 1e3,
         batched_ms = batched_s.median().as_secs_f64() * 1e3,
+        packed_ms = packed_s.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_explore.json", &json) {
         Ok(()) => println!("wrote BENCH_explore.json"),

@@ -153,6 +153,7 @@ fn main() {
     // pre-ISSUE-4 inner loop). Capture/compile cost excluded from both
     // sides — this is the replay-kernel trajectory number.
     use soft_simt::sim::compiled::{replay_many, CompiledTrace};
+    use soft_simt::sim::packed::replay_many_packed;
     let nine = MemoryArchKind::table3_nine();
     let traces: Vec<_> = ["transpose128", "fft4096r8", "fft4096r16"]
         .iter()
@@ -190,6 +191,24 @@ fn main() {
     let batch_speedup = dyn_s.median().as_secs_f64() / batched.median().as_secs_f64();
     println!("compiled batch replay speedup (9 archs × 3 programs): {batch_speedup:.2}x");
 
+    // The ISSUE-6 lane-packed kernel on the same slate: 8 architectures
+    // advance per gather row, costs pre-resolved into dense tables.
+    // `simd_speedup` is the lane-packed vs scalar `replay_many` ratio —
+    // a pure kernel-shape number, independent of machine speed, which
+    // is why CI gates it with an absolute floor rather than a baseline.
+    let packed = b3
+        .bench("replay_9archs_x3_lane_packed", || {
+            compiled
+                .iter()
+                .flat_map(|ct| replay_many_packed(ct, &nine, u64::MAX))
+                .map(|r| r.unwrap().total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", packed.line());
+    let simd_speedup = batched.median().as_secs_f64() / packed.median().as_secs_f64();
+    println!("lane-packed replay speedup over scalar replay_many: {simd_speedup:.2}x");
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -201,12 +220,15 @@ fn main() {
          \"speedup\": {speedup:.3},\n  \
          \"replay_dyn_median_ms\": {dyn_ms:.3},\n  \
          \"replay_batched_median_ms\": {batched_ms:.3},\n  \
-         \"batch_speedup\": {batch_speedup:.3}\n}}\n",
+         \"batch_speedup\": {batch_speedup:.3},\n  \
+         \"replay_packed_median_ms\": {packed_ms:.3},\n  \
+         \"simd_speedup\": {simd_speedup:.3}\n}}\n",
         cells = sweep_jobs.len(),
         base_ms = base.median().as_secs_f64() * 1e3,
         cached_ms = cached.median().as_secs_f64() * 1e3,
         dyn_ms = dyn_s.median().as_secs_f64() * 1e3,
         batched_ms = batched.median().as_secs_f64() * 1e3,
+        packed_ms = packed.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => println!("wrote BENCH_sweep.json"),

@@ -142,7 +142,10 @@ impl BenchJob {
     }
 
     /// Replay this job's architecture from a compiled trace — the
-    /// closed-form O(1)-per-op charge path (DESIGN.md §Replay).
+    /// closed-form O(1)-per-op charge path (DESIGN.md §Replay), through
+    /// the allocation-free single-arch walk (the engine's warm `Run`
+    /// path; multi-arch slates go through the lane-packed
+    /// [`crate::sim::packed`] kernel instead).
     /// `RunReport`-identical to [`Self::replay_trace`] and [`Self::run`]
     /// (`rust/tests/replay_diff.rs`); the banked timing-mode knob is
     /// irrelevant here because exact and fast modes are property-equal.

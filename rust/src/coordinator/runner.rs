@@ -10,9 +10,11 @@
 
 use super::job::{BenchJob, BenchResult, TraceCache, TraceKey};
 use crate::mem::arch::MemoryArchKind;
-use crate::sim::compiled::{replay_many, CompiledTrace};
+use crate::sim::compiled::CompiledTrace;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::SimError;
+use crate::sim::packed::{replay_many_packed, LaneChunk, ARCH_LANES, SEGMENT_INSTRS};
+use crate::sim::stats::RunReport;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -83,6 +85,62 @@ impl SweepRunner {
         self.parallel_map(items, f)
     }
 
+    /// Charge one compiled trace against a whole candidate slate on the
+    /// worker pool, as a **segment wavefront** over lane-packed chunks
+    /// (DESIGN.md §Replay): candidates pack into [`ARCH_LANES`]-wide
+    /// [`LaneChunk`]s, and the pool advances every chunk through the
+    /// same [`SEGMENT_INSTRS`]-instruction segment before any chunk
+    /// moves to the next — the segment's compiled rows stay hot across
+    /// workers, and chunks whose candidates have all blown `max_cycles`
+    /// are swap-compacted out of the active set at each barrier.
+    ///
+    /// Results in `archs` order, `RunReport`-bit-identical to the scalar
+    /// [`crate::sim::compiled::replay_many`] (and hence to the reference
+    /// per-architecture replay) — segmentation stitches exactly
+    /// (`rust/tests/replay_diff.rs`).
+    pub fn replay_many_parallel(
+        &self,
+        trace: &CompiledTrace,
+        archs: &[MemoryArchKind],
+        max_cycles: u64,
+    ) -> Vec<Result<RunReport, SimError>> {
+        if archs.is_empty() {
+            return Vec::new();
+        }
+        let chunks: Vec<Mutex<LaneChunk>> = archs
+            .chunks(ARCH_LANES)
+            .map(|c| Mutex::new(LaneChunk::new(trace, c)))
+            .collect();
+        let n_instrs = trace.n_instrs();
+        let mut active: Vec<usize> = (0..chunks.len()).collect();
+        let mut start = 0;
+        while start < n_instrs && !active.is_empty() {
+            let end = (start + SEGMENT_INSTRS).min(n_instrs);
+            // One barrier-synchronized wave: each worker claims chunks
+            // and advances them through this segment.
+            let failed = self.parallel_map(&active, |&c| {
+                let mut chunk = chunks[c].lock().unwrap();
+                chunk.advance(trace, start..end);
+                chunk.all_failed(max_cycles)
+            });
+            let survivors =
+                active.iter().zip(&failed).filter(|(_, &f)| !f).map(|(&c, _)| c).collect();
+            active = survivors;
+            start = end;
+        }
+        chunks
+            .into_iter()
+            .flat_map(|chunk| {
+                let chunk = chunk.into_inner().unwrap();
+                if chunk.all_failed(max_cycles) {
+                    chunk.fail_all(max_cycles)
+                } else {
+                    chunk.finish(trace, max_cycles)
+                }
+            })
+            .collect()
+    }
+
     /// Run every job coupled (execute + replay per cell); results come
     /// back in job order. The first simulator error aborts the sweep (the
     /// paper's benchmarks never fault; an error here is a bug or a bad
@@ -119,7 +177,8 @@ impl SweepRunner {
     /// 2. **compile** — each distinct key's [`CompiledTrace`], built (or
     ///    fetched) once;
     /// 3. **batch replay** — each key's cells are chunked and every chunk
-    ///    charged in a single [`replay_many`] trace walk.
+    ///    charged in a single lane-packed [`replay_many_packed`] trace
+    ///    walk (eight architectures per lock-step lane group).
     pub fn run_with_cache(
         &self,
         jobs: &[BenchJob],
@@ -165,10 +224,14 @@ impl SweepRunner {
         // unit count lands near the worker count — sizing chunks per
         // group would collapse to one-arch walks on many-core pools
         // (e.g. 9-arch groups ÷ 16 workers), forfeiting the batch
-        // amortization — while the `.max(2)` floor keeps every walk
-        // charging at least two architectures whenever a group allows.
-        // Chunks never span groups (a walk charges one trace).
-        let chunk = jobs.len().div_ceil(self.workers).max(2);
+        // amortization. The floor and rounding are [`ARCH_LANES`]-aware:
+        // every unit the lane-packed kernel charges should fill whole
+        // 8-wide chunks (a 2-arch unit wastes six lanes of every packed
+        // step), so units are at least one full chunk and a multiple of
+        // the lane width. Chunks never span groups (a walk charges one
+        // trace).
+        let chunk =
+            jobs.len().div_ceil(self.workers).next_multiple_of(ARCH_LANES).max(ARCH_LANES);
         let mut units: Vec<(usize, Vec<usize>)> = Vec::new();
         for (g, idxs) in groups.iter().enumerate() {
             for c in idxs.chunks(chunk) {
@@ -177,7 +240,7 @@ impl SweepRunner {
         }
         let replayed = self.parallel_map(&units, |(g, idxs)| {
             let archs: Vec<MemoryArchKind> = idxs.iter().map(|&i| jobs[i].arch).collect();
-            replay_many(&compiled[*g], &archs, MachineConfig::DEFAULT_MAX_CYCLES)
+            replay_many_packed(&compiled[*g], &archs, MachineConfig::DEFAULT_MAX_CYCLES)
         });
         let mut slots: Vec<Option<BenchResult>> = (0..jobs.len()).map(|_| None).collect();
         for ((_, idxs), reports) in units.iter().zip(replayed) {
@@ -270,6 +333,44 @@ mod tests {
             let reference = job.replay_trace(&trace).unwrap();
             assert_eq!(r.report.stats, reference.report.stats, "{}", job.arch);
             assert_eq!(r.report.total_cycles(), reference.report.total_cycles());
+        }
+    }
+
+    #[test]
+    fn parallel_segment_wavefront_equals_scalar_replay() {
+        use crate::sim::compiled::replay_many;
+        // A real workload trace, a mixed slate wider than one chunk, and
+        // a limit that splits the verdicts: the BSP wavefront must agree
+        // with the scalar reference result for result, verdict for
+        // verdict, on any worker count.
+        let trace = BenchJob::new("transpose64", MemoryArchKind::banked(16))
+            .capture_trace()
+            .unwrap();
+        let compiled = CompiledTrace::compile(&trace);
+        let mut archs = MemoryArchKind::table3_nine();
+        archs.extend(MemoryArchKind::table3_nine()); // 18 archs → 3 chunks
+        let cycles: Vec<u64> = replay_many(&compiled, &archs, u64::MAX)
+            .into_iter()
+            .map(|r| r.unwrap().total_cycles())
+            .collect();
+        let limit = (cycles.iter().min().unwrap() + cycles.iter().max().unwrap()) / 2;
+        for workers in [1, 4] {
+            let runner = SweepRunner::new(workers);
+            for max_cycles in [limit, u64::MAX] {
+                let par = runner.replay_many_parallel(&compiled, &archs, max_cycles);
+                let ser = replay_many(&compiled, &archs, max_cycles);
+                assert_eq!(par.len(), ser.len());
+                for ((arch, p), s) in archs.iter().zip(&par).zip(&ser) {
+                    match (p, s) {
+                        (Ok(a), Ok(b)) => {
+                            assert_eq!(a.stats, b.stats, "{arch} ({workers}w)");
+                            assert_eq!(a.elapsed_cycles, b.elapsed_cycles, "{arch}");
+                        }
+                        (Err(a), Err(b)) => assert_eq!(format!("{a}"), format!("{b}")),
+                        other => panic!("{arch}: verdicts diverged: {other:?}"),
+                    }
+                }
+            }
         }
     }
 

@@ -7,9 +7,10 @@
 //! statement of that guarantee). Per-architecture timing is a pure
 //! closed-form charge over the compiled trace (DESIGN.md §Replay),
 //! memoized across the design points that share an architecture and
-//! batched per strategy wave ([`Evaluator::replay_batch`]: one trace
-//! walk charges a whole chunk of candidates); capacity only enters
-//! through the ALM footprint model.
+//! batched per strategy wave ([`Evaluator::replay_batch`]: the
+//! lane-packed segment wavefront charges eight candidates per lock-step
+//! chunk across the worker pool); capacity only enters through the ALM
+//! footprint model.
 //!
 //! For pruning strategies the evaluator also offers a **lower bound** on
 //! replay cycles, computed in O(1) per architecture from a popcount
@@ -27,7 +28,7 @@ use crate::coordinator::job::{BenchJob, TraceCache};
 use crate::coordinator::runner::SweepRunner;
 use crate::mem::arch::MemoryArchKind;
 use crate::mem::{timing, LANES};
-use crate::sim::compiled::{replay_compiled, replay_many, CompiledTrace};
+use crate::sim::compiled::{replay_compiled, CompiledTrace};
 use crate::sim::config::MachineConfig;
 use crate::sim::exec::{MemAccessKind, MemTrace, SimError};
 use std::collections::HashMap;
@@ -199,11 +200,12 @@ impl Evaluator {
         Ok(cycles)
     }
 
-    /// Batch-replay every not-yet-memoized architecture in `archs`:
-    /// the slate is deduplicated, chunked, and each chunk charged in a
-    /// **single** trace walk ([`replay_many`]) on the worker pool —
-    /// the explorer's unit of parallelism (strategies call this before
-    /// scoring a wave).
+    /// Batch-replay every not-yet-memoized architecture in `archs`: the
+    /// slate is deduplicated and charged through the lane-packed segment
+    /// wavefront ([`SweepRunner::replay_many_parallel`]) — eight
+    /// candidates per lock-step chunk, every worker advancing a chunk
+    /// through the same trace segment — the explorer's unit of
+    /// parallelism (strategies call this before scoring a wave).
     pub fn replay_batch(
         &self,
         archs: &[MemoryArchKind],
@@ -222,20 +224,15 @@ impl Evaluator {
         if todo.is_empty() {
             return Ok(());
         }
-        let chunk = todo.len().div_ceil(runner.workers()).max(1);
-        let chunks: Vec<&[MemoryArchKind]> = todo.chunks(chunk).collect();
-        let replayed = runner.map(&chunks, |chunk| {
-            replay_many(&self.compiled, chunk, MachineConfig::DEFAULT_MAX_CYCLES)
-        });
-        for (chunk, reports) in chunks.iter().zip(replayed) {
-            for (&arch, report) in chunk.iter().zip(reports) {
-                let cycles = report?.total_cycles();
-                let slot = Arc::clone(self.replays.lock().unwrap().entry(arch).or_default());
-                let mut slot = slot.lock().unwrap();
-                if slot.is_none() {
-                    *slot = Some(cycles);
-                    self.replay_count.fetch_add(1, Ordering::Relaxed);
-                }
+        let replayed =
+            runner.replay_many_parallel(&self.compiled, &todo, MachineConfig::DEFAULT_MAX_CYCLES);
+        for (&arch, report) in todo.iter().zip(replayed) {
+            let cycles = report?.total_cycles();
+            let slot = Arc::clone(self.replays.lock().unwrap().entry(arch).or_default());
+            let mut slot = slot.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(cycles);
+                self.replay_count.fetch_add(1, Ordering::Relaxed);
             }
         }
         Ok(())

@@ -49,9 +49,13 @@
 //! executes each program once and replays timing 9×. On top of the
 //! cache sits the **compiled batch replayer** ([`sim::compiled`],
 //! DESIGN.md §Replay): a trace is compiled once into per-operation
-//! conflict maxima for every bank-mapping family, and
-//! [`sim::compiled::replay_many`] then charges a whole slate of
-//! architectures in a single trace walk. The design-space explorer
+//! conflict maxima for every bank-mapping family, and the **lane-packed
+//! kernel** ([`sim::packed::replay_many_packed`]) then charges a whole
+//! slate of architectures in a single trace walk, eight architectures
+//! per gather row, with segment-parallel wavefront replay on the worker
+//! pool ([`coordinator::runner::SweepRunner::replay_many_parallel`]);
+//! the scalar [`sim::compiled::replay_many`] stays as the reference
+//! model. The design-space explorer
 //! ([`explore`]) pushes that to its conclusion: a parametric space of
 //! hypothetical memories (banks 2–32 × mapping × ports × capacity),
 //! Pareto-searched from a single functional execution per workload
@@ -122,6 +126,7 @@ pub mod prelude {
         config::MachineConfig,
         exec::{execute, ExecMemory, ExecParams, FlatMemory, MemTrace, SimError},
         machine::Machine,
+        packed::{replay_many_packed, LaneChunk},
         replay::replay,
         stats::{CycleStats, RunReport},
     };

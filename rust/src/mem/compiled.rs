@@ -50,6 +50,21 @@ pub const SHIFT_COUNT: usize = BankMapping::MAX_SHIFT as usize + 1;
 /// pair plus one XOR slot per bank count.
 pub const FAMILY_COUNT: usize = BANK_SIZES * SHIFT_COUNT + BANK_SIZES;
 
+/// Extra gather slot holding the operation's active-lane count, appended
+/// after the conflict families so the lane-packed replayer resolves
+/// *every* architecture's per-op cost with the same branch-free gather:
+/// `cost_table[row[gather_slot]]` — banked lanes index a family slot,
+/// multiport lanes index this one (DESIGN.md §Replay).
+pub const ACTIVE_SLOT: usize = FAMILY_COUNT;
+
+/// Bytes per compiled gather row: the conflict families plus the
+/// active-lane count ([`ACTIVE_SLOT`]).
+pub const GATHER_WIDTH: usize = FAMILY_COUNT + 1;
+
+/// Entries in a per-lane cost table: gathered bytes are conflict maxima
+/// or lane-population counts, both in `0..=LANES`.
+pub const COST_TABLE_LEN: usize = LANES + 1;
+
 /// Slot index of a bank count within a shift family (2→0 … 32→4).
 #[inline]
 fn bank_slot(banks: u32) -> usize {
@@ -217,6 +232,40 @@ impl ArchCost {
             }
         }
     }
+
+    /// The gather-row slot this architecture's per-op cost is a function
+    /// of: its conflict-family slot (banked) or [`ACTIVE_SLOT`]
+    /// (multiport — cost depends only on the lane-population count).
+    /// The same slot serves reads and writes; only the cost *table*
+    /// differs by [`OpKind`]. Always `< GATHER_WIDTH`.
+    #[inline]
+    pub fn gather_slot(&self) -> usize {
+        match self.kind {
+            CostKind::Banked { family } => family,
+            CostKind::MultiPort { .. } => ACTIVE_SLOT,
+        }
+    }
+
+    /// Dense cost table over every gatherable byte value: for any
+    /// compiled operation, `cost_table(kind)[row[gather_slot(kind)]]`
+    /// equals [`Self::op_cost`] — the lane-packed replayer's whole
+    /// per-op cost resolution, pre-resolved once per chunk setup.
+    pub fn cost_table(&self, kind: OpKind) -> [u32; COST_TABLE_LEN] {
+        let mut table = [0u32; COST_TABLE_LEN];
+        for (v, slot) in table.iter_mut().enumerate() {
+            *slot = match self.kind {
+                CostKind::Banked { .. } => (v as u32).max(1),
+                CostKind::MultiPort { read_ports, write_div } => {
+                    let div = match kind {
+                        OpKind::Read => read_ports,
+                        OpKind::Write => write_div,
+                    };
+                    ceil_div(v as u32, div).max(1)
+                }
+            };
+        }
+        table
+    }
 }
 
 #[cfg(test)]
@@ -339,6 +388,45 @@ mod tests {
                         "{arch} {kind:?} mask={mask:#06x}"
                     );
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn gather_table_matches_op_cost_property() {
+        // The lane-packed replayer's whole cost resolution —
+        // `cost_table(kind)[row[gather_slot()]]` — must equal the scalar
+        // `op_cost` for every architecture kind on random operations.
+        check("cost_table gather == op_cost", 300, |rng| {
+            let words = 1usize << (10 + rng.below(7));
+            let arch = if rng.chance(0.5) {
+                MemoryArchKind::Banked {
+                    banks: [2u32, 4, 8, 16, 32][rng.below(5) as usize],
+                    mapping: random_mapping(rng),
+                }
+            } else {
+                let write_ports = 1 + rng.below(2);
+                MemoryArchKind::MultiPort {
+                    read_ports: 1 << rng.below(4),
+                    write_ports,
+                    vb: write_ports == 1 && rng.chance(0.3),
+                }
+            };
+            let cost = ArchCost::new(arch, words);
+            let slot = cost.gather_slot();
+            assert!(slot < GATHER_WIDTH);
+            let (addrs, mask) = random_op(rng, words as u32);
+            let mut row = [0u8; GATHER_WIDTH];
+            let families = (&mut row[..FAMILY_COUNT]).try_into().unwrap();
+            compile_op(&addrs, mask, families);
+            row[ACTIVE_SLOT] = mask.count_ones() as u8;
+            for kind in [OpKind::Read, OpKind::Write] {
+                let table = cost.cost_table(kind);
+                assert_eq!(
+                    table[row[slot] as usize],
+                    cost.op_cost(kind, &row[..FAMILY_COUNT], row[ACTIVE_SLOT]),
+                    "{arch} {kind:?}"
+                );
             }
         });
     }

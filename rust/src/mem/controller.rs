@@ -86,6 +86,150 @@ impl WritePipeline {
     }
 }
 
+/// Structure-of-arrays write pipeline: `N` independent [`WritePipeline`]s
+/// advanced in lockstep by the lane-packed batch replayer
+/// ([`crate::sim::packed`]), one lane per candidate architecture.
+///
+/// Semantically each lane is exactly a `WritePipeline` (the property
+/// tests below pin this lane for lane); the representation differs:
+///
+/// - per-lane `VecDeque`s become one flat ring-buffer arena. Completion
+///   times are pushed in non-decreasing order (`completion =
+///   max(now+overhead, busy_until) + cost ≥ busy_until` = the previous
+///   completion), and occupancy never exceeds `depth` (a full buffer
+///   pops before pushing), so a fixed `depth`-slot ring per lane
+///   suffices and no lane ever reallocates mid-walk;
+/// - the hot per-lane scalars (`busy_until`, head, length) live in
+///   `[_; N]` arrays so the packed store loop touches contiguous state.
+///
+/// Suspend/resume: [`Self::checkpoint`] captures the full drain state
+/// (busy clock + in-flight completion times per lane) and
+/// [`Self::restore`] rebuilds it — the write-pipeline half of a replay
+/// segment seam (DESIGN.md §Replay).
+#[derive(Debug, Clone)]
+pub struct LaneWritePipes<const N: usize> {
+    busy_until: [u64; N],
+    /// Ring head slot per lane (`0..depth`).
+    head: [u32; N],
+    /// Buffered (not yet drained) operations per lane (`0..=depth`).
+    len: [u32; N],
+    depth: [u32; N],
+    /// Lane-major ring arena: lane `l` owns `ring[l*stride .. l*stride+depth[l]]`.
+    ring: Vec<u64>,
+    stride: usize,
+}
+
+/// The in-flight write state a [`LaneWritePipes`] carries across a
+/// replay-segment seam: per-lane busy clock + buffered completion times
+/// (oldest first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipesCheckpoint<const N: usize> {
+    pub busy_until: [u64; N],
+    pub in_flight: Vec<Vec<u64>>,
+}
+
+impl<const N: usize> LaneWritePipes<N> {
+    /// One pipeline per lane, with per-lane circular-buffer depths.
+    pub fn new(depths: [u32; N]) -> Self {
+        assert!(depths.iter().all(|&d| d > 0));
+        let stride = depths.iter().copied().max().unwrap_or(1) as usize;
+        Self {
+            busy_until: [0; N],
+            head: [0; N],
+            len: [0; N],
+            depth: depths,
+            ring: vec![0; stride * N],
+            stride,
+        }
+    }
+
+    /// Absolute cycle when all of `lane`'s buffered writes have drained.
+    #[inline]
+    pub fn busy_until(&self, lane: usize) -> u64 {
+        self.busy_until[lane]
+    }
+
+    #[inline]
+    fn pop_front(&mut self, lane: usize) -> u64 {
+        debug_assert!(self.len[lane] > 0);
+        let t = self.ring[lane * self.stride + self.head[lane] as usize];
+        self.head[lane] = (self.head[lane] + 1) % self.depth[lane];
+        self.len[lane] -= 1;
+        t
+    }
+
+    /// Issue one non-blocking write on `lane` — identical contract to
+    /// [`WritePipeline::issue_nonblocking`].
+    #[inline]
+    pub fn issue(&mut self, lane: usize, now: u64, op_cycles: u32, overhead: u32) -> u64 {
+        let mut now = now;
+        // Lazy-pop drained operations; monotone completion times mean the
+        // front is always the oldest.
+        while self.len[lane] > 0
+            && self.ring[lane * self.stride + self.head[lane] as usize] <= now
+        {
+            let _ = self.pop_front(lane);
+        }
+        // Buffer-full stall: wait for the oldest operation to drain.
+        if self.len[lane] >= self.depth[lane] {
+            now = self.pop_front(lane);
+        }
+        let service_start = (now + overhead as u64).max(self.busy_until[lane]);
+        let completion = service_start + op_cycles as u64;
+        self.busy_until[lane] = completion;
+        let tail = (self.head[lane] + self.len[lane]) % self.depth[lane];
+        self.ring[lane * self.stride + tail as usize] = completion;
+        self.len[lane] += 1;
+        now + 1
+    }
+
+    /// Wait out `lane`'s buffer — identical contract to
+    /// [`WritePipeline::drain`].
+    #[inline]
+    pub fn drain(&mut self, lane: usize, now: u64) -> u64 {
+        let t = now.max(self.busy_until[lane]);
+        self.len[lane] = 0;
+        t
+    }
+
+    /// Number of operations still buffered on `lane` at time `now`.
+    pub fn occupancy(&mut self, lane: usize, now: u64) -> u32 {
+        while self.len[lane] > 0
+            && self.ring[lane * self.stride + self.head[lane] as usize] <= now
+        {
+            let _ = self.pop_front(lane);
+        }
+        self.len[lane]
+    }
+
+    /// Snapshot the drain state for a segment seam.
+    pub fn checkpoint(&self) -> PipesCheckpoint<N> {
+        let mut in_flight = Vec::with_capacity(N);
+        for lane in 0..N {
+            let mut q = Vec::with_capacity(self.len[lane] as usize);
+            for i in 0..self.len[lane] {
+                let slot = (self.head[lane] + i) % self.depth[lane];
+                q.push(self.ring[lane * self.stride + slot as usize]);
+            }
+            in_flight.push(q);
+        }
+        PipesCheckpoint { busy_until: self.busy_until, in_flight }
+    }
+
+    /// Rebuild the drain state captured by [`Self::checkpoint`].
+    pub fn restore(&mut self, cp: &PipesCheckpoint<N>) {
+        assert_eq!(cp.in_flight.len(), N);
+        self.busy_until = cp.busy_until;
+        for lane in 0..N {
+            let q = &cp.in_flight[lane];
+            assert!(q.len() <= self.depth[lane] as usize);
+            self.head[lane] = 0;
+            self.len[lane] = q.len() as u32;
+            self.ring[lane * self.stride..lane * self.stride + q.len()].copy_from_slice(q);
+        }
+    }
+}
+
 /// Timing summary of one memory instruction, accumulated by the machine.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct InstrTiming {
@@ -156,6 +300,80 @@ mod tests {
         assert_eq!(w.occupancy(10), 2);
         assert_eq!(w.occupancy(30), 0);
         let _ = now;
+    }
+
+    #[test]
+    fn lane_pipes_identical_to_scalar_pipeline_property() {
+        // Each LaneWritePipes lane must be bit-identical to its own
+        // WritePipeline under a random interleaving of issues and drains
+        // — including deep buffer-full stalls (tiny depths) and the
+        // cost-1 saturation boundary.
+        use crate::util::proptest::check;
+        check("LaneWritePipes lane == WritePipeline", 200, |rng| {
+            const N: usize = 4;
+            let mut depths = [0u32; N];
+            for d in depths.iter_mut() {
+                *d = 1 + rng.below(6); // 1..=6: stalls engage quickly
+            }
+            let mut lanes = LaneWritePipes::<N>::new(depths);
+            let mut scalars: Vec<WritePipeline> =
+                depths.iter().map(|&d| WritePipeline::new(d)).collect();
+            let mut now = [0u64; N];
+            for _ in 0..60 {
+                if rng.chance(0.15) {
+                    for l in 0..N {
+                        let a = lanes.drain(l, now[l]);
+                        let b = scalars[l].drain(now[l]);
+                        assert_eq!(a, b, "drain lane {l}");
+                        now[l] = a;
+                    }
+                } else {
+                    let cost = rng.below(20);
+                    let overhead = rng.below(6);
+                    for l in 0..N {
+                        let a = lanes.issue(l, now[l], cost, overhead);
+                        let b = scalars[l].issue_nonblocking(now[l], cost, overhead);
+                        assert_eq!(a, b, "issue lane {l} cost {cost} ovh {overhead}");
+                        assert_eq!(lanes.busy_until(l), scalars[l].busy_until(), "lane {l}");
+                        now[l] = a;
+                    }
+                }
+            }
+            for l in 0..N {
+                assert_eq!(lanes.occupancy(l, now[l]), scalars[l].occupancy(now[l]));
+            }
+        });
+    }
+
+    #[test]
+    fn lane_pipes_checkpoint_round_trips() {
+        // checkpoint → fresh pipes → restore must continue bit-identically
+        // to the uninterrupted pipeline — the segment-seam contract.
+        const N: usize = 2;
+        let depths = [3u32, 512];
+        let mut a = LaneWritePipes::<N>::new(depths);
+        let mut now = [0u64; N];
+        for i in 0..10 {
+            for l in 0..N {
+                now[l] = a.issue(l, now[l], 10 + i, 2);
+            }
+        }
+        let cp = a.checkpoint();
+        let mut b = LaneWritePipes::<N>::new(depths);
+        b.restore(&cp);
+        assert_eq!(b.checkpoint(), cp, "restore reproduces the checkpoint");
+        for i in 0..10 {
+            for l in 0..N {
+                let ta = a.issue(l, now[l], 5 + i, 2);
+                let tb = b.issue(l, now[l], 5 + i, 2);
+                assert_eq!(ta, tb, "post-seam issue lane {l}");
+                assert_eq!(a.busy_until(l), b.busy_until(l));
+                now[l] = ta;
+            }
+        }
+        for l in 0..N {
+            assert_eq!(a.drain(l, now[l]), b.drain(l, now[l]));
+        }
     }
 
     #[test]

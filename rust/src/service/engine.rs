@@ -107,12 +107,15 @@ impl SimtEngine {
                 let warm = self.cache.get(&key).is_some();
                 let trace = self.cache.get_or_capture(&job)?;
                 // A cold one-shot run charges the reference replayer —
-                // compiling the 50-byte-per-op family table just to
-                // read one arch's slot would cost more than it saves.
-                // From the second touch of a trace on, runs are
-                // closed-form compiled lookups — no address re-hashing,
-                // no dyn dispatch (DESIGN.md §Replay) — and the two
-                // paths are RunReport-identical (replay_diff harness).
+                // compiling the per-op gather rows just to read one
+                // arch's slot would cost more than it saves. From the
+                // second touch of a trace on, runs are closed-form
+                // compiled lookups through the direct single-arch walk
+                // (no per-call batch state, no address re-hashing, no
+                // dyn dispatch — DESIGN.md §Replay); batch requests
+                // (Sweep/Table/Explore) instead go through the
+                // lane-packed kernel via the runner. All paths are
+                // RunReport-identical (replay_diff harness).
                 let result = if warm {
                     let compiled = self.cache.get_or_compile(&key, &trace);
                     job.replay_compiled(&compiled)?

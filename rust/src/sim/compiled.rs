@@ -31,7 +31,7 @@ use super::exec::{AluCharges, LoadClass, MemAccessKind, MemTrace, SimError};
 use super::replay::charge_alu;
 use super::stats::{CycleStats, RunReport};
 use crate::mem::arch::{MemoryArchKind, OpKind};
-use crate::mem::compiled::{compile_op, ArchCost, FAMILY_COUNT};
+use crate::mem::compiled::{compile_op, ArchCost, ACTIVE_SLOT, FAMILY_COUNT, GATHER_WIDTH};
 use crate::mem::controller::WritePipeline;
 use std::ops::Range;
 
@@ -58,11 +58,20 @@ pub struct CompiledTrace {
     mem_words: usize,
     instrs: Vec<CompiledInstr>,
     tail: AluCharges,
-    /// Per-op active-lane counts (`active[op]`).
-    active: Vec<u8>,
-    /// Per-op conflict-family maxima, row-major:
-    /// `conflicts[op * FAMILY_COUNT + family]`.
-    conflicts: Vec<u8>,
+    /// Per-op gather rows, row-major with stride [`GATHER_WIDTH`]: the
+    /// [`FAMILY_COUNT`] conflict-family maxima followed by the
+    /// active-lane count at [`ACTIVE_SLOT`], so banked *and* multiport
+    /// lanes resolve their cost with one branch-free
+    /// `cost_table[row[gather_slot]]` lookup (DESIGN.md §Replay).
+    gather: Vec<u8>,
+    /// The architecture-independent part of the final [`CycleStats`]:
+    /// every counter except the five memory-timing cycle fields
+    /// (`d_load`/`tw_load`/`store`/`wbuf_stall`/`drain` cycles) is a pure
+    /// function of the trace — ALU class cycles, all three op counts,
+    /// `instructions`, `operations`, and the halt `other_cycles` — so it
+    /// is accumulated once here instead of once per candidate per
+    /// instruction.
+    base_stats: CycleStats,
 }
 
 impl CompiledTrace {
@@ -71,30 +80,43 @@ impl CompiledTrace {
     /// candidate architecture forever after.
     pub fn compile(trace: &MemTrace) -> Self {
         let n_ops = trace.mem_op_count() as usize;
-        let mut active = Vec::with_capacity(n_ops);
-        let mut conflicts = vec![0u8; n_ops * FAMILY_COUNT];
+        let mut gather = vec![0u8; n_ops * GATHER_WIDTH];
         let mut instrs = Vec::with_capacity(trace.segments.len());
+        let mut base_stats = CycleStats::default();
         let mut next = 0usize;
         for seg in &trace.segments {
             let start = next;
             for (addrs, mask) in &seg.mem.ops {
-                active.push(mask.count_ones() as u8);
-                let row = (&mut conflicts[next * FAMILY_COUNT..(next + 1) * FAMILY_COUNT])
-                    .try_into()
-                    .expect("row is FAMILY_COUNT long");
-                compile_op(addrs, *mask, row);
+                let row = &mut gather[next * GATHER_WIDTH..(next + 1) * GATHER_WIDTH];
+                let families =
+                    (&mut row[..FAMILY_COUNT]).try_into().expect("row is FAMILY_COUNT long");
+                compile_op(addrs, *mask, families);
+                row[ACTIVE_SLOT] = mask.count_ones() as u8;
                 next += 1;
             }
             instrs.push(CompiledInstr { kind: seg.mem.kind, before: seg.before, ops: start..next });
+            base_stats.add_alu(&seg.before);
+            let n_ops = seg.mem.ops.len() as u64;
+            base_stats.operations += n_ops;
+            match seg.mem.kind {
+                MemAccessKind::Load(LoadClass::Data) => base_stats.d_load_ops += n_ops,
+                MemAccessKind::Load(LoadClass::Twiddle) => base_stats.tw_load_ops += n_ops,
+                MemAccessKind::Store { .. } => base_stats.store_ops += n_ops,
+            }
+            base_stats.instructions += 1;
         }
+        // Tail + halt, mirroring the reference replayer's finish sequence.
+        base_stats.add_alu(&trace.tail);
+        base_stats.instructions += 1;
+        base_stats.other_cycles += 1;
         Self {
             program: trace.program.clone(),
             threads: trace.threads,
             mem_words: trace.mem_words,
             instrs,
             tail: trace.tail,
-            active,
-            conflicts,
+            gather,
+            base_stats,
         }
     }
 
@@ -112,7 +134,7 @@ impl CompiledTrace {
 
     /// Total compiled 16-lane memory operations.
     pub fn n_ops(&self) -> usize {
-        self.active.len()
+        self.gather.len() / GATHER_WIDTH
     }
 
     /// Number of memory instructions.
@@ -128,7 +150,45 @@ impl CompiledTrace {
     /// The conflict-family row of operation `op`.
     #[inline]
     fn conflicts_of(&self, op: usize) -> &[u8] {
-        &self.conflicts[op * FAMILY_COUNT..(op + 1) * FAMILY_COUNT]
+        &self.gather[op * GATHER_WIDTH..op * GATHER_WIDTH + FAMILY_COUNT]
+    }
+
+    /// Active-lane count of operation `op`.
+    #[inline]
+    fn active_of(&self, op: usize) -> u8 {
+        self.gather[op * GATHER_WIDTH + ACTIVE_SLOT]
+    }
+
+    /// Full [`GATHER_WIDTH`]-byte gather row of operation `op` — the
+    /// lane-packed replayer's per-op input.
+    #[inline]
+    pub(crate) fn gather_row(&self, op: usize) -> &[u8] {
+        &self.gather[op * GATHER_WIDTH..(op + 1) * GATHER_WIDTH]
+    }
+
+    /// The compiled memory-instruction stream (for the packed replayer).
+    #[inline]
+    pub(crate) fn instrs(&self) -> &[CompiledInstr] {
+        &self.instrs
+    }
+
+    /// ALU charges between the last memory instruction and halt.
+    #[inline]
+    pub(crate) fn tail_charges(&self) -> &AluCharges {
+        &self.tail
+    }
+
+    /// Thread-block size (propagated into replayed reports).
+    #[inline]
+    pub(crate) fn threads(&self) -> u32 {
+        self.threads
+    }
+
+    /// The precomputed architecture-independent [`CycleStats`] baseline
+    /// (see the field docs).
+    #[inline]
+    pub(crate) fn base_stats(&self) -> CycleStats {
+        self.base_stats
     }
 }
 
@@ -156,7 +216,7 @@ impl ArchState {
     /// Closed-form cost of compiled operation `op` (already floored at 1).
     #[inline]
     fn op_cost(&self, trace: &CompiledTrace, kind: OpKind, op: usize) -> u32 {
-        self.cost.op_cost(kind, trace.conflicts_of(op), trace.active[op])
+        self.cost.op_cost(kind, trace.conflicts_of(op), trace.active_of(op))
     }
 
     /// Charge one compiled memory instruction — the exact sequence of
@@ -234,7 +294,11 @@ impl ArchState {
     }
 }
 
-/// Charge every architecture in `archs` from one walk over `trace`.
+/// Charge every architecture in `archs` from one walk over `trace` —
+/// the **scalar reference** batch replayer. The lane-packed kernel
+/// ([`crate::sim::packed::replay_many_packed`]) is the production path;
+/// this one stays as the differential anchor the packed kernel is pinned
+/// against (which is itself pinned to the per-architecture [`replay`]).
 ///
 /// Results come back in `archs` order, one per candidate; a slow
 /// architecture that exceeds `max_cycles` yields its own
@@ -242,6 +306,8 @@ impl ArchState {
 /// isolation — the reference path would have returned the same error for
 /// that architecture alone). `RunReport`-bit-identical to running
 /// [`crate::sim::replay::replay`] per architecture.
+///
+/// [`replay`]: crate::sim::replay::replay
 pub fn replay_many(
     trace: &CompiledTrace,
     archs: &[MemoryArchKind],
@@ -249,28 +315,48 @@ pub fn replay_many(
 ) -> Vec<Result<RunReport, SimError>> {
     let mut states: Vec<ArchState> =
         archs.iter().map(|&a| ArchState::new(trace.arch_cost(a))).collect();
+    // Failed candidates are swap-compacted out of the active index set
+    // once, when they fail — not re-filtered on every instruction. The
+    // charge order across candidates is irrelevant (states are
+    // independent), so compaction cannot change any result.
+    let mut active: Vec<usize> = (0..states.len()).collect();
     for instr in &trace.instrs {
-        for state in states.iter_mut().filter(|s| s.failed.is_none()) {
+        let mut i = 0;
+        while i < active.len() {
+            let state = &mut states[active[i]];
             state.charge(trace, instr);
             if state.now > max_cycles {
                 state.failed = Some(SimError::CycleLimit { limit: max_cycles });
+                active.swap_remove(i);
+            } else {
+                i += 1;
             }
+        }
+        if active.is_empty() {
+            break;
         }
     }
     states.into_iter().map(|s| s.finish(trace, max_cycles)).collect()
 }
 
-/// Single-architecture convenience over [`replay_many`] — the compiled
-/// equivalent of [`crate::sim::replay::replay`], used by the engine's
-/// warm-cache `Run` path and the explorer's memoized scoring.
+/// Single-architecture compiled replay — the compiled equivalent of
+/// [`crate::sim::replay::replay`], used by the engine's warm-cache `Run`
+/// path and the explorer's memoized scoring. A direct scalar walk: no
+/// per-call `Vec` of states, no batch plumbing (the warm `Run` path
+/// calls this once per request).
 pub fn replay_compiled(
     trace: &CompiledTrace,
     arch: MemoryArchKind,
     max_cycles: u64,
 ) -> Result<RunReport, SimError> {
-    replay_many(trace, std::slice::from_ref(&arch), max_cycles)
-        .pop()
-        .expect("one architecture, one result")
+    let mut state = ArchState::new(trace.arch_cost(arch));
+    for instr in &trace.instrs {
+        state.charge(trace, instr);
+        if state.now > max_cycles {
+            return Err(SimError::CycleLimit { limit: max_cycles });
+        }
+    }
+    state.finish(trace, max_cycles)
 }
 
 #[cfg(test)]
@@ -328,9 +414,36 @@ mod tests {
         assert_eq!(ct.mem_words(), trace.mem_words);
         // Op layout: loads 0..2 (full), stores 2..6 (full), twiddle 6
         // (mask 0x0F0F → 8 lanes), blocking stores 7..9 (0x00FF → 8).
-        assert_eq!(ct.active[0], 16);
-        assert_eq!(ct.active[6], 8);
-        assert_eq!(ct.active[8], 8);
+        assert_eq!(ct.active_of(0), 16);
+        assert_eq!(ct.active_of(6), 8);
+        assert_eq!(ct.active_of(8), 8);
+        assert_eq!(ct.gather_row(0).len(), GATHER_WIDTH);
+        assert_eq!(ct.gather_row(6)[ACTIVE_SLOT], 8);
+    }
+
+    #[test]
+    fn base_stats_matches_arch_independent_counters() {
+        // The precomputed baseline must equal every replayed report on
+        // exactly the architecture-independent fields, regardless of the
+        // architecture charged.
+        let trace = mixed_trace();
+        let ct = CompiledTrace::compile(&trace);
+        let base = ct.base_stats();
+        assert_eq!(base.d_load_cycles, 0);
+        assert_eq!(base.tw_load_cycles, 0);
+        assert_eq!(base.store_cycles, 0);
+        assert_eq!(base.wbuf_stall_cycles, 0);
+        assert_eq!(base.drain_cycles, 0);
+        for arch in MemoryArchKind::table3_nine() {
+            let s = replay_compiled(&ct, arch, u64::MAX).unwrap().stats;
+            let mut masked = s;
+            masked.d_load_cycles = 0;
+            masked.tw_load_cycles = 0;
+            masked.store_cycles = 0;
+            masked.wbuf_stall_cycles = 0;
+            masked.drain_cycles = 0;
+            assert_eq!(masked, base, "{arch}");
+        }
     }
 
     #[test]

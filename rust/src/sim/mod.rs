@@ -19,6 +19,11 @@
 //!   precomputes every bank-mapping family's conflict maxima once, then
 //!   [`compiled::replay_many`] charges a whole slate of architectures in a
 //!   single trace walk, bit-identically to [`replay`] (DESIGN.md §Replay);
+//! - [`packed`] — the lane-packed production kernel over the same
+//!   compiled traces: [`packed::LaneChunk`]s advance eight architectures
+//!   per step in structure-of-arrays form, resumable at instruction
+//!   boundaries ([`packed::replay_many_packed`]), bit-identical to the
+//!   scalar [`compiled::replay_many`];
 //! - [`machine`] — the facade that runs execute + replay in lockstep,
 //!   preserving the original coupled-simulator API.
 
@@ -26,11 +31,13 @@ pub mod compiled;
 pub mod config;
 pub mod exec;
 pub mod machine;
+pub mod packed;
 pub mod regfile;
 pub mod replay;
 pub mod stats;
 
 pub use compiled::{replay_compiled, replay_many, CompiledTrace};
+pub use packed::{replay_many_packed, LaneChunk, ARCH_LANES};
 pub use config::MachineConfig;
 pub use exec::{execute, ExecMemory, ExecParams, FlatMemory, MemTrace, SimError};
 pub use machine::Machine;

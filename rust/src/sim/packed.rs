@@ -1,0 +1,455 @@
+//! Lane-packed, segment-resumable batch replay — the production kernel
+//! behind every multi-architecture charge path (DESIGN.md §Replay).
+//!
+//! The scalar [`replay_many`](super::compiled::replay_many) advances one
+//! [`ArchCost`] state at a time per instruction: per candidate it
+//! dispatches on the cost kind, slices a conflict row, and updates a
+//! full [`CycleStats`]. This module applies the source paper's own
+//! trick — lock-step lanes over shared control flow — to the replayer
+//! itself:
+//!
+//! - **Arch-lane packing.** Candidates are packed into [`LaneChunk`]s of
+//!   [`ARCH_LANES`] architectures in structure-of-arrays form: the
+//!   clocks, per-class memory-cycle counters and write-pipeline scalars
+//!   are `[u64; ARCH_LANES]` arrays advanced together (plain indexed
+//!   loops over fixed-size arrays on stable Rust — shaped for the
+//!   autovectorizer, no `std::simd`). Per-lane costs are pre-resolved at
+//!   chunk setup into dense 17-entry tables
+//!   ([`ArchCost::cost_table`]), so the load/store inner loops are a
+//!   branch-free gather — `table[lane][row[slot[lane]]]` — with no
+//!   per-arch dispatch. The architecture-independent statistics are not
+//!   touched at all: [`CompiledTrace`] precomputes them once
+//!   (`base_stats`), and a lane only tracks the five memory-timing
+//!   counters that actually depend on the architecture.
+//!
+//! - **Segments.** [`LaneChunk::advance`] replays any instruction
+//!   subrange, and [`LaneChunk::suspend`]/[`LaneChunk::resume`] move the
+//!   full seam state — clock offsets, partial memory-cycle counters, and
+//!   the write pipelines' in-flight drain state
+//!   ([`PipesCheckpoint`]) — so a trace can be replayed segment by
+//!   segment and stitched bit-identically to the straight-through walk
+//!   (`rust/tests/replay_diff.rs` pins this under random split points).
+//!   The parallel driver ([`SweepRunner::replay_many_parallel`]) walks
+//!   chunks over segments as a barrier-synchronized wavefront: every
+//!   worker advances a different chunk through the *same* segment (the
+//!   compiled rows of the segment stay hot in cache across workers), and
+//!   chunks whose candidates have all exceeded the cycle limit are
+//!   swap-compacted out of the active set at segment boundaries.
+//!
+//! - **Cycle limits without per-instruction checks.** Every charge is
+//!   non-negative, so a lane's clock is monotone non-decreasing across
+//!   instructions; the reference per-instruction `now > max_cycles`
+//!   check therefore trips iff the *final* clock (after the tail
+//!   charges) exceeds the limit. [`LaneChunk::finish`] applies exactly
+//!   that end-of-walk check, yielding per-lane `CycleLimit` verdicts
+//!   bit-identical to the scalar path without masking inside the hot
+//!   loops. A failed lane keeps accumulating harmless (finite) garbage
+//!   until its whole chunk fails and is compacted.
+//!
+//! [`SweepRunner::replay_many_parallel`]:
+//!     crate::coordinator::runner::SweepRunner::replay_many_parallel
+
+use super::compiled::CompiledTrace;
+use super::exec::{LoadClass, MemAccessKind, SimError};
+use super::stats::RunReport;
+use crate::mem::arch::{MemoryArchKind, OpKind};
+use crate::mem::compiled::{ArchCost, COST_TABLE_LEN, GATHER_WIDTH};
+use crate::mem::controller::{LaneWritePipes, PipesCheckpoint};
+use std::ops::Range;
+
+/// Architectures charged per lock-step chunk. Eight `u64` lanes fill a
+/// 512-bit vector register; the remainder chunk of a non-multiple slate
+/// pads with copies of lane 0 (computed and discarded).
+pub const ARCH_LANES: usize = 8;
+
+/// Default instructions per replay segment: long enough that the
+/// per-segment barrier and compaction sweep are noise, short enough that
+/// a whole-slate cycle-limit failure is caught well before the end of a
+/// multi-million-instruction trace.
+pub const SEGMENT_INSTRS: usize = 4096;
+
+/// A structure-of-arrays chunk of up to [`ARCH_LANES`] candidate
+/// architectures replaying one [`CompiledTrace`] in lock step.
+#[derive(Debug, Clone)]
+pub struct LaneChunk {
+    /// Real candidates in this chunk (`1..=ARCH_LANES`); higher lanes are
+    /// padding that mirrors lane 0.
+    lanes: usize,
+    costs: [ArchCost; ARCH_LANES],
+    // Per-lane cost resolution, pre-gathered at setup: slot into the
+    // compiled gather row, then a dense table over the gathered byte.
+    read_slot: [usize; ARCH_LANES],
+    write_slot: [usize; ARCH_LANES],
+    read_tab: [[u32; COST_TABLE_LEN]; ARCH_LANES],
+    write_tab: [[u32; COST_TABLE_LEN]; ARCH_LANES],
+    read_overhead: [u64; ARCH_LANES],
+    write_overhead: [u32; ARCH_LANES],
+    // Mutable lane state: the clock and the five architecture-dependent
+    // counters (everything else comes from `CompiledTrace::base_stats`).
+    now: [u64; ARCH_LANES],
+    d_load_cycles: [u64; ARCH_LANES],
+    tw_load_cycles: [u64; ARCH_LANES],
+    store_cycles: [u64; ARCH_LANES],
+    wbuf_stall_cycles: [u64; ARCH_LANES],
+    pipes: LaneWritePipes<ARCH_LANES>,
+}
+
+/// Everything a [`LaneChunk`] carries across a segment seam: clock
+/// offsets, the partial memory-cycle counters, and the write pipelines'
+/// pending drain state. Applying `resume(suspend())` on a fresh chunk of
+/// the same candidates continues the walk bit-identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkCheckpoint {
+    pub now: [u64; ARCH_LANES],
+    pub d_load_cycles: [u64; ARCH_LANES],
+    pub tw_load_cycles: [u64; ARCH_LANES],
+    pub store_cycles: [u64; ARCH_LANES],
+    pub wbuf_stall_cycles: [u64; ARCH_LANES],
+    pub pipes: PipesCheckpoint<ARCH_LANES>,
+}
+
+impl LaneChunk {
+    /// Pack `archs` (1..=[`ARCH_LANES`] candidates) against `trace`'s
+    /// capacity: resolve every lane's cost tables and write-buffer depth
+    /// once, before any instruction is walked.
+    pub fn new(trace: &CompiledTrace, archs: &[MemoryArchKind]) -> Self {
+        assert!(!archs.is_empty() && archs.len() <= ARCH_LANES);
+        // Padding lanes replicate lane 0: they charge real (discarded)
+        // work, keeping every inner loop branch-free over ARCH_LANES.
+        let costs: [ArchCost; ARCH_LANES] =
+            std::array::from_fn(|l| trace.arch_cost(archs[if l < archs.len() { l } else { 0 }]));
+        let mut depths = [0u32; ARCH_LANES];
+        for (d, c) in depths.iter_mut().zip(&costs) {
+            *d = c.write_buffer_ops();
+        }
+        Self {
+            lanes: archs.len(),
+            read_slot: std::array::from_fn(|l| costs[l].gather_slot()),
+            write_slot: std::array::from_fn(|l| costs[l].gather_slot()),
+            read_tab: std::array::from_fn(|l| costs[l].cost_table(OpKind::Read)),
+            write_tab: std::array::from_fn(|l| costs[l].cost_table(OpKind::Write)),
+            read_overhead: std::array::from_fn(|l| u64::from(costs[l].overhead(OpKind::Read))),
+            write_overhead: std::array::from_fn(|l| costs[l].overhead(OpKind::Write)),
+            now: [0; ARCH_LANES],
+            d_load_cycles: [0; ARCH_LANES],
+            tw_load_cycles: [0; ARCH_LANES],
+            store_cycles: [0; ARCH_LANES],
+            wbuf_stall_cycles: [0; ARCH_LANES],
+            pipes: LaneWritePipes::new(depths),
+            costs,
+        }
+    }
+
+    /// Real (non-padding) candidates in this chunk.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Advance every lane through the compiled instructions `instrs` — a
+    /// whole trace (`0..trace.n_instrs()`) or one segment of it.
+    pub fn advance(&mut self, trace: &CompiledTrace, instrs: Range<usize>) {
+        for instr in &trace.instrs()[instrs] {
+            let alu = instr.before.cycles();
+            for now in self.now.iter_mut() {
+                *now += alu;
+            }
+            match instr.kind {
+                MemAccessKind::Load(class) => {
+                    // Gather + lane-wise add: the hot loop. Costs are
+                    // independent per op (reads don't queue), so the
+                    // per-lane attributed sum accumulates locally and
+                    // the clock/counters update once per instruction.
+                    let mut acc = [0u64; ARCH_LANES];
+                    for op in instr.ops.clone() {
+                        let row = trace.gather_row(op);
+                        for l in 0..ARCH_LANES {
+                            acc[l] += u64::from(self.read_tab[l][row[self.read_slot[l]] as usize]);
+                        }
+                    }
+                    let bucket = match class {
+                        LoadClass::Data => &mut self.d_load_cycles,
+                        LoadClass::Twiddle => &mut self.tw_load_cycles,
+                    };
+                    for l in 0..ARCH_LANES {
+                        let attributed = self.read_overhead[l] + acc[l];
+                        self.now[l] += attributed;
+                        bucket[l] += attributed;
+                    }
+                }
+                MemAccessKind::Store { blocking } => {
+                    let start = self.now;
+                    let mut iss = self.now;
+                    for op in instr.ops.clone() {
+                        let row = trace.gather_row(op);
+                        for l in 0..ARCH_LANES {
+                            let cost = self.write_tab[l][row[self.write_slot[l]] as usize];
+                            let before = iss[l];
+                            iss[l] = self.pipes.issue(l, before, cost, self.write_overhead[l]);
+                            self.wbuf_stall_cycles[l] += iss[l].saturating_sub(before + 1);
+                        }
+                    }
+                    if blocking {
+                        for l in 0..ARCH_LANES {
+                            let end = self.pipes.drain(l, iss[l]);
+                            self.store_cycles[l] += end - start[l];
+                            self.now[l] = end;
+                        }
+                    } else {
+                        for l in 0..ARCH_LANES {
+                            self.store_cycles[l] += self
+                                .pipes
+                                .busy_until(l)
+                                .saturating_sub(start[l])
+                                .max(iss[l] - start[l]);
+                            self.now[l] = iss[l];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// True when every real lane's clock already exceeds `max_cycles` —
+    /// the clock is monotone, so the chunk's verdicts are all sealed as
+    /// [`SimError::CycleLimit`] and the walk can stop charging it.
+    pub fn all_failed(&self, max_cycles: u64) -> bool {
+        self.now[..self.lanes].iter().all(|&now| now > max_cycles)
+    }
+
+    /// Snapshot the seam state (see [`ChunkCheckpoint`]).
+    pub fn suspend(&self) -> ChunkCheckpoint {
+        ChunkCheckpoint {
+            now: self.now,
+            d_load_cycles: self.d_load_cycles,
+            tw_load_cycles: self.tw_load_cycles,
+            store_cycles: self.store_cycles,
+            wbuf_stall_cycles: self.wbuf_stall_cycles,
+            pipes: self.pipes.checkpoint(),
+        }
+    }
+
+    /// Restore the seam state captured by [`Self::suspend`] — the chunk
+    /// continues exactly where the suspended walk left off.
+    pub fn resume(&mut self, cp: &ChunkCheckpoint) {
+        self.now = cp.now;
+        self.d_load_cycles = cp.d_load_cycles;
+        self.tw_load_cycles = cp.tw_load_cycles;
+        self.store_cycles = cp.store_cycles;
+        self.wbuf_stall_cycles = cp.wbuf_stall_cycles;
+        self.pipes.restore(&cp.pipes);
+    }
+
+    /// Tail charges + halt/drain per lane, producing one result per real
+    /// candidate (in lane order). The single end-of-walk limit check is
+    /// verdict-identical to the scalar per-instruction check (module
+    /// docs: monotone clock).
+    pub fn finish(mut self, trace: &CompiledTrace, max_cycles: u64) -> Vec<Result<RunReport, SimError>> {
+        let tail = trace.tail_charges().cycles();
+        (0..self.lanes)
+            .map(|l| {
+                let mut now = self.now[l] + tail;
+                if now > max_cycles {
+                    return Err(SimError::CycleLimit { limit: max_cycles });
+                }
+                now += 1;
+                let drained = self.pipes.drain(l, now);
+                let mut stats = trace.base_stats();
+                stats.d_load_cycles = self.d_load_cycles[l];
+                stats.tw_load_cycles = self.tw_load_cycles[l];
+                stats.store_cycles = self.store_cycles[l];
+                stats.wbuf_stall_cycles = self.wbuf_stall_cycles[l];
+                stats.drain_cycles = drained - now;
+                Ok(RunReport {
+                    program: trace.program().to_string(),
+                    arch: self.costs[l].arch(),
+                    threads: trace.threads(),
+                    stats,
+                    elapsed_cycles: drained,
+                })
+            })
+            .collect()
+    }
+
+    /// The candidate verdicts of a chunk compacted out mid-walk: every
+    /// real lane sealed its [`SimError::CycleLimit`].
+    pub fn fail_all(&self, max_cycles: u64) -> Vec<Result<RunReport, SimError>> {
+        debug_assert!(self.all_failed(max_cycles));
+        (0..self.lanes).map(|_| Err(SimError::CycleLimit { limit: max_cycles })).collect()
+    }
+}
+
+/// Charge every architecture in `archs` through the lane-packed kernel,
+/// single-threaded: candidates pack into [`ARCH_LANES`]-wide chunks, and
+/// each chunk walks the trace in [`SEGMENT_INSTRS`] segments with
+/// all-failed chunks compacted out at segment boundaries. Results in
+/// `archs` order, `RunReport`-bit-identical to the scalar
+/// [`replay_many`](super::compiled::replay_many) (and so to the
+/// reference [`replay`](super::replay::replay)) — pinned by
+/// `rust/tests/replay_diff.rs`.
+pub fn replay_many_packed(
+    trace: &CompiledTrace,
+    archs: &[MemoryArchKind],
+    max_cycles: u64,
+) -> Vec<Result<RunReport, SimError>> {
+    let mut chunks: Vec<LaneChunk> =
+        archs.chunks(ARCH_LANES).map(|c| LaneChunk::new(trace, c)).collect();
+    let n_instrs = trace.n_instrs();
+    // Active set of chunk indices; all-failed chunks swap-compact out.
+    let mut active: Vec<usize> = (0..chunks.len()).collect();
+    let mut start = 0;
+    while start < n_instrs && !active.is_empty() {
+        let end = (start + SEGMENT_INSTRS).min(n_instrs);
+        let mut i = 0;
+        while i < active.len() {
+            let chunk = &mut chunks[active[i]];
+            chunk.advance(trace, start..end);
+            if chunk.all_failed(max_cycles) {
+                active.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        start = end;
+    }
+    chunks
+        .into_iter()
+        .flat_map(|chunk| {
+            if chunk.all_failed(max_cycles) {
+                chunk.fail_all(max_cycles)
+            } else {
+                chunk.finish(trace, max_cycles)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{FULL_MASK, LANES};
+    use crate::sim::compiled::{replay_many, CompiledTrace};
+    use crate::sim::exec::{MemInstr, MemTrace};
+
+    fn seq_addrs(stride: u32) -> [u32; LANES] {
+        let mut a = [0u32; LANES];
+        for (l, x) in a.iter_mut().enumerate() {
+            *x = l as u32 * stride;
+        }
+        a
+    }
+
+    fn mixed_trace() -> MemTrace {
+        let instrs = vec![
+            MemInstr {
+                kind: MemAccessKind::Load(LoadClass::Data),
+                ops: vec![(seq_addrs(1), FULL_MASK), (seq_addrs(16), FULL_MASK)],
+            },
+            MemInstr {
+                kind: MemAccessKind::Store { blocking: false },
+                ops: vec![(seq_addrs(16), FULL_MASK); 4],
+            },
+            MemInstr {
+                kind: MemAccessKind::Load(LoadClass::Twiddle),
+                ops: vec![(seq_addrs(4), 0x0F0F)],
+            },
+            MemInstr {
+                kind: MemAccessKind::Store { blocking: true },
+                ops: vec![(seq_addrs(2), 0x00FF); 2],
+            },
+        ];
+        MemTrace::from_mem_instrs("mixed", 256, instrs)
+    }
+
+    fn assert_same(a: &[Result<RunReport, SimError>], b: &[Result<RunReport, SimError>]) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            match (x, y) {
+                (Ok(p), Ok(q)) => {
+                    assert_eq!(p.stats, q.stats, "{}", p.arch);
+                    assert_eq!(p.elapsed_cycles, q.elapsed_cycles, "{}", p.arch);
+                    assert_eq!(p.arch, q.arch);
+                    assert_eq!(p.program, q.program);
+                    assert_eq!(p.threads, q.threads);
+                }
+                (
+                    Err(SimError::CycleLimit { limit: p }),
+                    Err(SimError::CycleLimit { limit: q }),
+                ) => assert_eq!(p, q),
+                other => panic!("verdicts diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn packed_equals_scalar_on_paper_archs() {
+        let trace = mixed_trace();
+        let ct = CompiledTrace::compile(&trace);
+        let archs = MemoryArchKind::table3_nine(); // 9: exercises a remainder lane
+        let packed = replay_many_packed(&ct, &archs, u64::MAX);
+        let scalar = replay_many(&ct, &archs, u64::MAX);
+        assert_same(&packed, &scalar);
+    }
+
+    #[test]
+    fn packed_cycle_limit_verdicts_match_scalar() {
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(16), FULL_MASK); 64],
+        };
+        let trace = MemTrace::from_mem_instrs("slow", 1024, vec![mi]);
+        let ct = CompiledTrace::compile(&trace);
+        let archs = [MemoryArchKind::mp_4r1w(), MemoryArchKind::banked(16)];
+        for limit in [1, 100, 300, 2000, u64::MAX] {
+            let packed = replay_many_packed(&ct, &archs, limit);
+            let scalar = replay_many(&ct, &archs, limit);
+            assert_same(&packed, &scalar);
+        }
+    }
+
+    #[test]
+    fn chunk_segmented_walk_stitches_bit_identically() {
+        let trace = mixed_trace();
+        let ct = CompiledTrace::compile(&trace);
+        let archs = MemoryArchKind::table3_nine();
+        let whole = replay_many_packed(&ct, &archs, u64::MAX);
+        // Walk instruction-by-instruction through suspend/resume seams.
+        let out: Vec<_> = archs
+            .chunks(ARCH_LANES)
+            .flat_map(|c| {
+                let mut chunk = LaneChunk::new(&ct, c);
+                for i in 0..ct.n_instrs() {
+                    chunk.advance(&ct, i..i + 1);
+                    let seam = chunk.suspend();
+                    let mut fresh = LaneChunk::new(&ct, c);
+                    fresh.resume(&seam);
+                    assert_eq!(fresh.suspend(), seam);
+                    chunk = fresh;
+                }
+                chunk.finish(&ct, u64::MAX)
+            })
+            .collect();
+        assert_same(&out, &whole);
+    }
+
+    #[test]
+    fn empty_trace_is_just_halt() {
+        let trace = MemTrace::from_mem_instrs("empty", 16, vec![]);
+        let ct = CompiledTrace::compile(&trace);
+        let out = replay_many_packed(&ct, &MemoryArchKind::table3_nine(), 1000);
+        for r in out {
+            let r = r.unwrap();
+            assert_eq!(r.total_cycles(), 1);
+            assert_eq!(r.stats.instructions, 1);
+        }
+    }
+
+    #[test]
+    fn single_arch_chunk_pads_cleanly() {
+        let ct = CompiledTrace::compile(&mixed_trace());
+        let archs = [MemoryArchKind::banked_offset(8)];
+        let packed = replay_many_packed(&ct, &archs, u64::MAX);
+        let scalar = replay_many(&ct, &archs, u64::MAX);
+        assert_eq!(packed.len(), 1);
+        assert_same(&packed, &scalar);
+    }
+}

@@ -133,12 +133,7 @@ pub fn replay(
 /// replayer ([`crate::sim::compiled`]) so the two charge paths cannot
 /// drift.
 pub(crate) fn charge_alu(stats: &mut CycleStats, now: &mut u64, charges: &AluCharges) {
-    stats.int_cycles += charges.int_cycles;
-    stats.imm_cycles += charges.imm_cycles;
-    stats.fp_cycles += charges.fp_cycles;
-    stats.other_cycles += charges.other_cycles;
-    stats.operations += charges.operations;
-    stats.instructions += charges.instructions;
+    stats.add_alu(charges);
     *now += charges.cycles();
 }
 

@@ -1,6 +1,7 @@
 //! Cycle accounting, mirroring the row structure of the paper's Tables II
 //! and III.
 
+use super::exec::AluCharges;
 use crate::mem::arch::MemoryArchKind;
 
 /// Cycle counters by instruction class. ALU classes count one cycle per
@@ -54,6 +55,21 @@ impl CycleStats {
     /// is blocking, as in the paper's benchmarks.
     pub fn attributed_total(&self) -> u64 {
         self.common_cycles() + self.load_cycles() + self.store_cycles
+    }
+
+    /// Fold the ALU charges accumulated between memory instructions into
+    /// the per-class counters (no clock — callers that track a clock add
+    /// `charges.cycles()` themselves). Shared by the reference replayer's
+    /// `charge_alu`, the compiled batch replayer, and the trace-invariant
+    /// base-stats precompute ([`crate::sim::compiled::CompiledTrace`]),
+    /// so the three accountings cannot drift.
+    pub fn add_alu(&mut self, charges: &AluCharges) {
+        self.int_cycles += charges.int_cycles;
+        self.imm_cycles += charges.imm_cycles;
+        self.fp_cycles += charges.fp_cycles;
+        self.other_cycles += charges.other_cycles;
+        self.operations += charges.operations;
+        self.instructions += charges.instructions;
     }
 }
 

@@ -12,6 +12,7 @@
 //!   harness (`util/proptest.rs`).
 
 use soft_simt::coordinator::job::BenchJob;
+use soft_simt::coordinator::runner::SweepRunner;
 use soft_simt::isa::inst::Instruction;
 use soft_simt::isa::opcode::Opcode;
 use soft_simt::isa::program::Program;
@@ -19,6 +20,7 @@ use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::mem::mapping::BankMapping;
 use soft_simt::sim::compiled::{replay_compiled, replay_many, CompiledTrace};
 use soft_simt::sim::exec::{execute, ExecParams, FlatMemory, MemTrace, SimError};
+use soft_simt::sim::packed::{replay_many_packed, LaneChunk, ARCH_LANES};
 use soft_simt::sim::replay::replay;
 use soft_simt::sim::stats::RunReport;
 use soft_simt::util::proptest::check;
@@ -200,6 +202,119 @@ fn wbuf_stall_accounting_agrees_between_replayers() {
     });
 }
 
+/// ISSUE 6 tentpole property: the lane-packed kernel (sequential and
+/// BSP-parallel drivers) must be `RunReport`-bit-identical to the scalar
+/// `replay_many` — which the property above pins to the reference
+/// `replay` — across random programs × paper + parametric architectures.
+#[test]
+fn packed_replay_identical_to_scalar_on_random_programs() {
+    let runner = SweepRunner::new(3);
+    check("packed == scalar replay_many on random programs × archs", 25, |rng| {
+        let mem_words = 1usize << (10 + rng.below(4));
+        let program = random_program(rng, mem_words, 30);
+        let trace = capture(rng, &program, mem_words);
+        let compiled = CompiledTrace::compile(&trace);
+
+        let mut archs = MemoryArchKind::table3_nine();
+        for _ in 0..6 {
+            archs.push(random_parametric_arch(rng));
+        }
+        let scalar = replay_many(&compiled, &archs, u64::MAX);
+        let packed = replay_many_packed(&compiled, &archs, u64::MAX);
+        let parallel = runner.replay_many_parallel(&compiled, &archs, u64::MAX);
+        assert_eq!(packed.len(), scalar.len());
+        assert_eq!(parallel.len(), scalar.len());
+        for ((arch, s), (p, w)) in archs.iter().zip(&scalar).zip(packed.iter().zip(&parallel)) {
+            let s = s.as_ref().expect("scalar replay succeeds");
+            let p = p.as_ref().expect("packed replay succeeds");
+            let w = w.as_ref().expect("parallel replay succeeds");
+            assert_reports_identical(p, s, &format!("{arch} (packed)"));
+            assert_reports_identical(w, s, &format!("{arch} (wavefront)"));
+        }
+    });
+}
+
+/// ISSUE 6 satellite: segmented replay with *random split points* —
+/// chunks suspended and resumed at every seam — must stitch
+/// bit-identically to the whole-trace walk, across random programs ×
+/// paper + parametric architectures.
+#[test]
+fn segmented_replay_with_random_splits_is_bit_identical() {
+    check("random-seam segmented replay == whole-trace replay", 20, |rng| {
+        let mem_words = 1usize << (10 + rng.below(4));
+        let program = random_program(rng, mem_words, 40);
+        let trace = capture(rng, &program, mem_words);
+        let compiled = CompiledTrace::compile(&trace);
+        let mut archs = MemoryArchKind::table3_nine();
+        for _ in 0..4 {
+            archs.push(random_parametric_arch(rng));
+        }
+        let whole = replay_many(&compiled, &archs, u64::MAX);
+
+        // Random instruction-boundary split points (possibly none,
+        // possibly adjacent — zero-length segments must be harmless).
+        let n = compiled.n_instrs();
+        let mut splits: Vec<usize> = (0..rng.below(6)).map(|_| rng.below(n as u32 + 1) as usize).collect();
+        splits.push(0);
+        splits.push(n);
+        splits.sort_unstable();
+
+        let segmented: Vec<_> = archs
+            .chunks(ARCH_LANES)
+            .flat_map(|slate| {
+                let mut chunk = LaneChunk::new(&compiled, slate);
+                for pair in splits.windows(2) {
+                    chunk.advance(&compiled, pair[0]..pair[1]);
+                    // Cross the seam: suspend, rebuild from scratch,
+                    // resume — exactly what a worker handoff carries.
+                    let seam = chunk.suspend();
+                    let mut fresh = LaneChunk::new(&compiled, slate);
+                    fresh.resume(&seam);
+                    chunk = fresh;
+                }
+                chunk.finish(&compiled, u64::MAX)
+            })
+            .collect();
+        assert_eq!(segmented.len(), whole.len());
+        for ((arch, s), w) in archs.iter().zip(&segmented).zip(&whole) {
+            let s = s.as_ref().expect("segmented replay succeeds");
+            let w = w.as_ref().expect("whole replay succeeds");
+            assert_reports_identical(s, w, &format!("{arch} (seamed)"));
+        }
+    });
+}
+
+/// ISSUE 6 satellite: non-multiple-of-8 slates — every remainder-chunk
+/// width from 1 to a full chunk plus one — keep padding lanes inert.
+#[test]
+fn remainder_lane_slates_match_scalar() {
+    let mut rng = XorShift64::new(0x8EA1);
+    let mem_words = 2048;
+    let program = random_program(&mut rng, mem_words, 25);
+    let trace = capture(&mut rng, &program, mem_words);
+    let compiled = CompiledTrace::compile(&trace);
+    let pool: Vec<MemoryArchKind> = {
+        let mut v = MemoryArchKind::table3_nine();
+        for _ in 0..3 {
+            v.push(random_parametric_arch(&mut rng));
+        }
+        v
+    };
+    for width in 1..=ARCH_LANES + 1 {
+        let slate: Vec<MemoryArchKind> = pool.iter().copied().take(width).collect();
+        let packed = replay_many_packed(&compiled, &slate, u64::MAX);
+        let scalar = replay_many(&compiled, &slate, u64::MAX);
+        assert_eq!(packed.len(), width);
+        for ((arch, p), s) in slate.iter().zip(&packed).zip(&scalar) {
+            assert_reports_identical(
+                p.as_ref().unwrap(),
+                s.as_ref().unwrap(),
+                &format!("{arch} (slate width {width})"),
+            );
+        }
+    }
+}
+
 /// Cycle-limit verdicts must agree per architecture, and a failing
 /// candidate must not disturb its batch-mates.
 #[test]
@@ -219,6 +334,19 @@ fn cycle_limit_verdicts_agree_and_stay_isolated() {
         .collect();
     let limit = (cycles.iter().min().unwrap() + cycles.iter().max().unwrap()) / 2;
     let batch = replay_many(&compiled, &archs, limit);
+    // The lane-packed kernel checks the limit once per lane at the end
+    // of the walk (the clock is monotone), yet must reach the very same
+    // per-arch verdicts as the per-instruction reference checks.
+    let packed = replay_many_packed(&compiled, &archs, limit);
+    for ((arch, p), b) in archs.iter().zip(&packed).zip(&batch) {
+        match (p, b) {
+            (Ok(a), Ok(b)) => assert_reports_identical(a, b, &format!("{arch} (packed @ limit)")),
+            (Err(SimError::CycleLimit { limit: la }), Err(SimError::CycleLimit { limit: lb })) => {
+                assert_eq!(la, lb);
+            }
+            other => panic!("{arch}: packed verdict diverged from scalar: {other:?}"),
+        }
+    }
     for ((arch, batched), exact) in archs.iter().zip(&batch).zip(&cycles) {
         let mem = arch.build(mem_words);
         let reference = replay(&trace, mem.as_ref(), limit);

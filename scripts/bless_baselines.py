@@ -10,7 +10,14 @@ a baseline is a contract, not a log.
 
 Run on the CI runner class only (see the note inside each baseline).
 
-Exit codes: 0 ok, 2 missing/invalid inputs.
+`--check-null` does not bless: it inspects only the committed baselines
+and exits 0 when some gated metric is still null/absent (a bless is
+needed — e.g. a PR just added a new gated metric) and 1 when every
+gated metric already has a trusted measurement. bless.yml uses this to
+self-trigger exactly once after CI lands a new metric.
+
+Exit codes: 0 ok / bless needed, 1 (--check-null) nothing to bless,
+2 missing/invalid inputs.
 """
 
 import json
@@ -23,12 +30,17 @@ PLAN = [
     (
         ["BENCH_explore.json", "rust/BENCH_explore.json"],
         "rust/benches/baselines/BENCH_explore.json",
-        ["exhaustive_median_ms", "halving_median_ms", "replay_batched_archset_ms"],
+        [
+            "exhaustive_median_ms",
+            "halving_median_ms",
+            "replay_batched_archset_ms",
+            "replay_packed_archset_ms",
+        ],
     ),
     (
         ["BENCH_sweep.json", "rust/BENCH_sweep.json"],
         "rust/benches/baselines/BENCH_sweep.json",
-        ["trace_cached_median_ms", "replay_batched_median_ms"],
+        ["trace_cached_median_ms", "replay_batched_median_ms", "replay_packed_median_ms"],
     ),
     (
         ["BENCH_serve.json", "rust/BENCH_serve.json"],
@@ -38,7 +50,30 @@ PLAN = [
 ]
 
 
+def check_null() -> int:
+    needed = False
+    for _, baseline, metrics in PLAN:
+        baseline_path = Path(baseline)
+        if not baseline_path.is_file():
+            print(f"error: baseline {baseline} missing from the checkout", file=sys.stderr)
+            return 2
+        try:
+            base = json.loads(baseline_path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        for metric in metrics:
+            if base.get(metric) is None:
+                print(f"unblessed: {baseline}: {metric}")
+                needed = True
+    if not needed:
+        print("all gated baseline metrics already blessed")
+    return 0 if needed else 1
+
+
 def main() -> int:
+    if "--check-null" in sys.argv[1:]:
+        return check_null()
     for candidates, baseline, metrics in PLAN:
         current_path = next((p for p in map(Path, candidates) if p.is_file()), None)
         if current_path is None:

@@ -3,7 +3,8 @@
 
 Usage:
   check_bench_regression.py --current CAND [CAND ...] --baseline BASE \
-      --metrics NAME [NAME ...] [--max-regression 1.20]
+      --metrics NAME [NAME ...] [--max-regression 1.20] \
+      [--floor NAME=VALUE [NAME=VALUE ...]]
 
 - CAND: candidate locations of the freshly produced bench JSON (the first
   existing path wins; cargo runs bench binaries from the package root, so
@@ -17,6 +18,11 @@ Usage:
 - Metrics are medians in milliseconds: lower is better, and the gate
   fails when current > baseline * max_regression (default 1.20 = the
   >20% regression budget of ISSUE 4).
+- Floors are higher-is-better ABSOLUTE gates, independent of the
+  baseline file: `--floor simd_speedup=4.0` fails when the current
+  JSON's `simd_speedup` is below 4.0 or missing. Use floors for
+  dimensionless ratios (speedups) that do not depend on runner speed
+  and therefore need no per-runner blessing.
 
 Exit codes: 0 ok/skipped, 1 regression, 2 usage/IO error.
 """
@@ -31,9 +37,24 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", nargs="+", required=True)
     ap.add_argument("--baseline", required=True)
-    ap.add_argument("--metrics", nargs="+", required=True)
+    ap.add_argument("--metrics", nargs="*", default=[])
     ap.add_argument("--max-regression", type=float, default=1.20)
+    ap.add_argument("--floor", nargs="*", default=[], metavar="NAME=VALUE")
     args = ap.parse_args()
+    if not args.metrics and not args.floor:
+        print("error: nothing to check (need --metrics and/or --floor)", file=sys.stderr)
+        return 2
+    floors = []
+    for spec in args.floor:
+        name, sep, value = spec.partition("=")
+        try:
+            threshold = float(value)
+        except ValueError:
+            sep = ""
+        if not sep or not name:
+            print(f"error: bad --floor spec {spec!r} (want NAME=VALUE)", file=sys.stderr)
+            return 2
+        floors.append((name, threshold))
 
     current_path = next((p for p in map(Path, args.current) if p.is_file()), None)
     if current_path is None:
@@ -68,6 +89,20 @@ def main() -> int:
         line = (f"{verdict:5} {metric}: current {cur:.3f} vs baseline {base:.3f} "
                 f"(budget {budget:.3f}, x{args.max_regression:.2f})")
         if cur > budget:
+            print(line, file=sys.stderr)
+            failed = True
+        else:
+            print(line)
+    for name, floor in floors:
+        cur = current.get(name)
+        if cur is None:
+            print(f"FAIL  {name}: missing from {current_path} (floor {floor:.3f})",
+                  file=sys.stderr)
+            failed = True
+            continue
+        verdict = "FAIL" if cur < floor else "ok"
+        line = f"{verdict:5} {name}: current {cur:.3f} vs floor {floor:.3f} (higher is better)"
+        if cur < floor:
             print(line, file=sys.stderr)
             failed = True
         else:

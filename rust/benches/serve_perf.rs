@@ -74,6 +74,28 @@ fn main() {
     let warm_rps = batch.len() as f64 / warm.median().as_secs_f64();
     println!("{}  ({:.1} requests/s warm)", warm.line(), warm_rps);
 
+    // Telemetry overhead on the warm path: the warm bench above runs
+    // with span recording ON (the engine default); re-run it with
+    // recording off to price the spans + clock reads. Counters are
+    // always on — they are the part designed to be free. CI bounds the
+    // delta with `--ceiling instrumented_overhead_pct=2.0`.
+    engine.metrics().set_recording(false);
+    let warm_off = b
+        .bench("serve_mixed_batch_warm_recording_off", || {
+            let responses = engine.handle_batch(&batch);
+            assert!(responses.iter().all(Result::is_ok));
+            responses.len()
+        })
+        .clone();
+    engine.metrics().set_recording(true);
+    let instrumented_overhead_pct =
+        (warm.median().as_secs_f64() / warm_off.median().as_secs_f64() - 1.0) * 100.0;
+    println!(
+        "{}  (span recording overhead {:.2}%)",
+        warm_off.line(),
+        instrumented_overhead_pct
+    );
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -82,10 +104,13 @@ fn main() {
         "{{\n  \"bench\": \"serve_mixed_batch\",\n  \"unix_time\": {unix_time},\n  \
          \"batch_requests\": {n},\n  \"cold_median_ms\": {cold_ms:.3},\n  \
          \"warm_median_ms\": {warm_ms:.3},\n  \"warm_requests_per_sec\": {warm_rps:.1},\n  \
-         \"functional_executions_per_cold_batch\": {executions}\n}}\n",
+         \"functional_executions_per_cold_batch\": {executions},\n  \
+         \"warm_recording_off_median_ms\": {warm_off_ms:.3},\n  \
+         \"instrumented_overhead_pct\": {instrumented_overhead_pct:.3}\n}}\n",
         n = batch.len(),
         cold_ms = cold.median().as_secs_f64() * 1e3,
         warm_ms = warm.median().as_secs_f64() * 1e3,
+        warm_off_ms = warm_off.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("wrote BENCH_serve.json"),

@@ -209,6 +209,45 @@ fn main() {
     let simd_speedup = batched.median().as_secs_f64() / packed.median().as_secs_f64();
     println!("lane-packed replay speedup over scalar replay_many: {simd_speedup:.2}x");
 
+    // The same packed slate with telemetry on: the counted driver plus
+    // the per-call registry flush the sweep runner performs (local
+    // tallies, a handful of atomics per *call*, never per step). CI
+    // bounds `instrumented_overhead_pct` with an absolute ceiling, so
+    // observability can never quietly tax the replay hot path.
+    use soft_simt::obs::{Counter, Hist, MetricsRegistry};
+    use soft_simt::sim::packed::{replay_many_packed_counted, ReplayTally};
+    let metrics = MetricsRegistry::new();
+    let instrumented = b3
+        .bench("replay_9archs_x3_lane_packed_instrumented", || {
+            let mut cycles = 0u64;
+            for ct in &compiled {
+                let t0 = std::time::Instant::now();
+                let (reports, tally): (Vec<_>, ReplayTally) =
+                    replay_many_packed_counted(ct, &nine, u64::MAX);
+                metrics.add(Counter::ReplayPackedInvocations, tally.invocations);
+                metrics.add(Counter::ReplayPackedChunks, tally.chunks);
+                metrics.add(Counter::ReplayPackedLanesUsed, tally.lanes_used);
+                metrics.add(Counter::ReplayPackedLaneSlots, tally.lane_slots);
+                metrics.add(Counter::ReplayWavefrontSegments, tally.segments);
+                let stalls = reports
+                    .iter()
+                    .filter_map(|r| r.as_ref().ok())
+                    .map(|r| r.stats.wbuf_stall_cycles)
+                    .sum::<u64>();
+                metrics.add(Counter::ReplayWbufStallCycles, stalls);
+                metrics.observe(Hist::ReplayMicros, t0.elapsed().as_micros() as u64);
+                cycles += reports.into_iter().map(|r| r.unwrap().total_cycles()).sum::<u64>();
+            }
+            cycles
+        })
+        .clone();
+    println!("{}", instrumented.line());
+    let instrumented_overhead_pct = (instrumented.median().as_secs_f64()
+        / packed.median().as_secs_f64()
+        - 1.0)
+        * 100.0;
+    println!("instrumented packed replay overhead: {instrumented_overhead_pct:.2}%");
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -222,13 +261,16 @@ fn main() {
          \"replay_batched_median_ms\": {batched_ms:.3},\n  \
          \"batch_speedup\": {batch_speedup:.3},\n  \
          \"replay_packed_median_ms\": {packed_ms:.3},\n  \
-         \"simd_speedup\": {simd_speedup:.3}\n}}\n",
+         \"simd_speedup\": {simd_speedup:.3},\n  \
+         \"replay_packed_instrumented_median_ms\": {instr_ms:.3},\n  \
+         \"instrumented_overhead_pct\": {instrumented_overhead_pct:.3}\n}}\n",
         cells = sweep_jobs.len(),
         base_ms = base.median().as_secs_f64() * 1e3,
         cached_ms = cached.median().as_secs_f64() * 1e3,
         dyn_ms = dyn_s.median().as_secs_f64() * 1e3,
         batched_ms = batched.median().as_secs_f64() * 1e3,
         packed_ms = packed.median().as_secs_f64() * 1e3,
+        instr_ms = instrumented.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => println!("wrote BENCH_sweep.json"),

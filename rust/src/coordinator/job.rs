@@ -4,6 +4,7 @@
 //! timing on every architecture (DESIGN.md §Trace cache).
 
 use crate::mem::arch::MemoryArchKind;
+use crate::obs::{Counter, MetricsRegistry};
 use crate::programs::library::{program_by_name, Workload};
 use crate::programs::registry;
 use crate::sim::compiled::{self, CompiledTrace};
@@ -13,7 +14,7 @@ use crate::sim::machine::{Machine, SimError};
 use crate::sim::replay;
 use crate::sim::stats::RunReport;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Job descriptor (cheap to clone and ship to worker threads).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -174,11 +175,34 @@ pub struct BenchResult {
 pub struct TraceCache {
     traces: Mutex<HashMap<TraceKey, Arc<MemTrace>>>,
     compiled: Mutex<HashMap<TraceKey, Arc<CompiledTrace>>>,
+    /// Session metrics, attached once by the owning engine. Hit/miss
+    /// counting rides the cache so every consumer (engine, runner,
+    /// explorer, advisor) reports through one set of counters.
+    metrics: OnceLock<Arc<MetricsRegistry>>,
 }
 
 impl TraceCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the session's metrics registry (first attach wins; the
+    /// engine does this at construction). A cache without a registry
+    /// counts nothing — the standalone/deprecated wiring paths stay
+    /// zero-overhead.
+    pub fn attach_metrics(&self, metrics: Arc<MetricsRegistry>) {
+        let _ = self.metrics.set(metrics);
+    }
+
+    /// The attached session registry, if any.
+    pub fn metrics(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.metrics.get()
+    }
+
+    fn count(&self, counter: Counter) {
+        if let Some(m) = self.metrics.get() {
+            m.inc(counter);
+        }
     }
 
     /// Number of cached traces.
@@ -190,8 +214,24 @@ impl TraceCache {
         self.len() == 0
     }
 
-    /// Look up a cached trace.
+    /// Look up a cached trace, counting the lookup as a
+    /// `trace_cache.{hits,misses}` metric. One logical access should be
+    /// counted once: re-checks after a counted `get` go through
+    /// [`Self::peek`] (as [`Self::get_or_capture`] does internally).
     pub fn get(&self, key: &TraceKey) -> Option<Arc<MemTrace>> {
+        let found = self.peek(key);
+        self.count(if found.is_some() {
+            Counter::TraceCacheHits
+        } else {
+            Counter::TraceCacheMisses
+        });
+        found
+    }
+
+    /// Look up a cached trace without touching the hit/miss counters
+    /// (for re-checks and bulk filters that account for themselves,
+    /// e.g. the sweep runner's capture phase).
+    pub fn peek(&self, key: &TraceKey) -> Option<Arc<MemTrace>> {
         self.traces.lock().unwrap().get(key).cloned()
     }
 
@@ -205,9 +245,14 @@ impl TraceCache {
     /// avoid concurrent duplicate captures should pre-populate the cache
     /// (as [`crate::coordinator::runner::SweepRunner::run_with_cache`]
     /// does in its capture phase).
+    ///
+    /// The internal warm check is an uncounted [`Self::peek`]: callers
+    /// that want the lookup on the hit/miss counters (the engine, the
+    /// explorer's evaluator) do a counted [`Self::get`] first, so one
+    /// logical access never counts twice.
     pub fn get_or_capture(&self, job: &BenchJob) -> Result<Arc<MemTrace>, SimError> {
         let key = job.trace_key();
-        if let Some(t) = self.get(&key) {
+        if let Some(t) = self.peek(&key) {
             return Ok(t);
         }
         let trace = Arc::new(job.capture_trace()?);
@@ -220,11 +265,17 @@ impl TraceCache {
     /// is the one-walk family precomputation of DESIGN.md §Replay —
     /// cached here so repeat sweeps, explorations and engine `Run`s over
     /// a warm trace never re-hash an address.
+    ///
+    /// Counted as `compiled.{hits,builds}`; a losing racer's build is
+    /// still a build performed, so `compiled.builds` can exceed
+    /// [`Self::compiled_len`] under concurrent first touches.
     pub fn get_or_compile(&self, key: &TraceKey, trace: &MemTrace) -> Arc<CompiledTrace> {
         if let Some(c) = self.compiled.lock().unwrap().get(key) {
+            self.count(Counter::CompiledHits);
             return Arc::clone(c);
         }
         let built = Arc::new(CompiledTrace::compile(trace));
+        self.count(Counter::CompiledBuilds);
         Arc::clone(self.compiled.lock().unwrap().entry(key.clone()).or_insert(built))
     }
 

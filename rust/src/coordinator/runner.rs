@@ -10,32 +10,80 @@
 
 use super::job::{BenchJob, BenchResult, TraceCache, TraceKey};
 use crate::mem::arch::MemoryArchKind;
+use crate::obs::{Counter, MetricsRegistry};
 use crate::sim::compiled::CompiledTrace;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::SimError;
-use crate::sim::packed::{replay_many_packed, LaneChunk, ARCH_LANES, SEGMENT_INSTRS};
+use crate::sim::packed::{
+    replay_many_packed_counted, LaneChunk, ReplayTally, ARCH_LANES, SEGMENT_INSTRS,
+};
 use crate::sim::stats::RunReport;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Wall time of a cached sweep's three phases, for span attribution
+/// (the engine maps capture → `Phase::Execute`, compile →
+/// `Phase::Compile`, replay → `Phase::Replay`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SweepPhases {
+    pub capture: Duration,
+    pub compile: Duration,
+    pub replay: Duration,
+}
 
 /// Thread-pool sweep runner.
 #[derive(Debug, Clone)]
 pub struct SweepRunner {
     workers: usize,
+    /// Session metrics (attached by the owning engine). `None` — the
+    /// standalone wiring paths — counts nothing and costs nothing.
+    metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl Default for SweepRunner {
     fn default() -> Self {
         let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self { workers: n.min(16) }
+        Self::new(n.min(16))
     }
 }
 
 impl SweepRunner {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
-        Self { workers }
+        Self { workers, metrics: None }
+    }
+
+    /// This runner, reporting into the session's metrics registry.
+    /// Counters are flushed once per batch-replay driver call from
+    /// local tallies — the packed walk itself never touches an atomic.
+    pub fn with_metrics(mut self, metrics: Arc<MetricsRegistry>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// The attached session registry, if any.
+    pub fn metrics(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.metrics.as_ref()
+    }
+
+    /// Flush a packed walk's local tally — plus the replayed runs'
+    /// write-pipeline stall cycles — into the registry, if attached.
+    fn flush_packed<'a>(
+        &self,
+        tally: &ReplayTally,
+        reports: impl Iterator<Item = &'a Result<RunReport, SimError>>,
+    ) {
+        let Some(m) = &self.metrics else { return };
+        m.add(Counter::ReplayPackedInvocations, tally.invocations);
+        m.add(Counter::ReplayPackedChunks, tally.chunks);
+        m.add(Counter::ReplayPackedLanesUsed, tally.lanes_used);
+        m.add(Counter::ReplayPackedLaneSlots, tally.lane_slots);
+        m.add(Counter::ReplayWavefrontSegments, tally.segments);
+        let stalls: u64 =
+            reports.filter_map(|r| r.as_ref().ok()).map(|r| r.stats.wbuf_stall_cycles).sum();
+        m.add(Counter::ReplayWbufStallCycles, stalls);
     }
 
     pub fn workers(&self) -> usize {
@@ -111,6 +159,15 @@ impl SweepRunner {
             .chunks(ARCH_LANES)
             .map(|c| Mutex::new(LaneChunk::new(trace, c)))
             .collect();
+        // Work tally, accumulated in the sequential driver between
+        // barriers (never inside the walk) and flushed once at the end.
+        let mut tally = ReplayTally {
+            invocations: 1,
+            chunks: chunks.len() as u64,
+            lanes_used: archs.len() as u64,
+            lane_slots: (chunks.len() * ARCH_LANES) as u64,
+            segments: 0,
+        };
         let n_instrs = trace.n_instrs();
         let mut active: Vec<usize> = (0..chunks.len()).collect();
         let mut start = 0;
@@ -123,12 +180,13 @@ impl SweepRunner {
                 chunk.advance(trace, start..end);
                 chunk.all_failed(max_cycles)
             });
+            tally.segments += active.len() as u64;
             let survivors =
                 active.iter().zip(&failed).filter(|(_, &f)| !f).map(|(&c, _)| c).collect();
             active = survivors;
             start = end;
         }
-        chunks
+        let reports: Vec<Result<RunReport, SimError>> = chunks
             .into_iter()
             .flat_map(|chunk| {
                 let chunk = chunk.into_inner().unwrap();
@@ -138,7 +196,9 @@ impl SweepRunner {
                     chunk.finish(trace, max_cycles)
                 }
             })
-            .collect()
+            .collect();
+        self.flush_packed(&tally, reports.iter());
+        reports
     }
 
     /// Run every job coupled (execute + replay per cell); results come
@@ -177,20 +237,36 @@ impl SweepRunner {
     /// 2. **compile** — each distinct key's [`CompiledTrace`], built (or
     ///    fetched) once;
     /// 3. **batch replay** — each key's cells are chunked and every chunk
-    ///    charged in a single lane-packed [`replay_many_packed`] trace
+    ///    charged in a single lane-packed
+    ///    [`crate::sim::packed::replay_many_packed`] trace
     ///    walk (eight architectures per lock-step lane group).
     pub fn run_with_cache(
         &self,
         jobs: &[BenchJob],
         cache: &TraceCache,
     ) -> Result<Vec<BenchResult>, SimError> {
-        // Capture phase.
+        self.run_with_cache_timed(jobs, cache).map(|(results, _)| results)
+    }
+
+    /// [`Self::run_with_cache`] plus the wall time of each phase, so the
+    /// engine can attribute a sweep's span to execute/compile/replay.
+    /// The timing is three `Instant` reads per *sweep* — always on.
+    pub fn run_with_cache_timed(
+        &self,
+        jobs: &[BenchJob],
+        cache: &TraceCache,
+    ) -> Result<(Vec<BenchResult>, SweepPhases), SimError> {
+        let mut phases = SweepPhases::default();
+        // Capture phase. The bulk filter peeks (uncounted) per cell;
+        // hit/miss metrics are charged per *distinct key* below, which
+        // is the sharing the cache actually provides a sweep.
+        let t0 = Instant::now();
         let mut seen = HashSet::new();
         let pending: Vec<&BenchJob> = jobs
             .iter()
             .filter(|job| {
                 let key = job.trace_key();
-                cache.get(&key).is_none() && seen.insert(key)
+                cache.peek(&key).is_none() && seen.insert(key)
             })
             .collect();
         let captured: Result<Vec<Arc<_>>, SimError> = self
@@ -200,9 +276,11 @@ impl SweepRunner {
         for (job, trace) in pending.iter().zip(captured?) {
             cache.insert(job.trace_key(), trace);
         }
+        phases.capture = t0.elapsed();
 
         // Compile phase: group cells by trace key, compile each distinct
         // key at most once (memoized in the cache).
+        let t0 = Instant::now();
         let mut keys: Vec<TraceKey> = Vec::new();
         let mut groups: Vec<Vec<usize>> = Vec::new();
         for (i, job) in jobs.iter().enumerate() {
@@ -215,10 +293,15 @@ impl SweepRunner {
                 }
             }
         }
+        if let Some(m) = &self.metrics {
+            m.add(Counter::TraceCacheMisses, pending.len() as u64);
+            m.add(Counter::TraceCacheHits, (keys.len() - pending.len()) as u64);
+        }
         let compiled: Vec<Arc<CompiledTrace>> = self.parallel_map(&keys, |key| {
-            let trace = cache.get(key).expect("trace captured in phase 1");
+            let trace = cache.peek(key).expect("trace captured in phase 1");
             cache.get_or_compile(key, &trace)
         });
+        phases.compile = t0.elapsed();
 
         // Batch-replay phase: chunk against the *whole* batch so the
         // unit count lands near the worker count — sizing chunks per
@@ -230,6 +313,7 @@ impl SweepRunner {
         // step), so units are at least one full chunk and a multiple of
         // the lane width. Chunks never span groups (a walk charges one
         // trace).
+        let t0 = Instant::now();
         let chunk =
             jobs.len().div_ceil(self.workers).next_multiple_of(ARCH_LANES).max(ARCH_LANES);
         let mut units: Vec<(usize, Vec<usize>)> = Vec::new();
@@ -240,15 +324,25 @@ impl SweepRunner {
         }
         let replayed = self.parallel_map(&units, |(g, idxs)| {
             let archs: Vec<MemoryArchKind> = idxs.iter().map(|&i| jobs[i].arch).collect();
-            replay_many_packed(&compiled[*g], &archs, MachineConfig::DEFAULT_MAX_CYCLES)
+            replay_many_packed_counted(&compiled[*g], &archs, MachineConfig::DEFAULT_MAX_CYCLES)
         });
+        // Fold each unit's local tally and flush once for the sweep.
+        let mut tally = ReplayTally::default();
+        for (_, unit_tally) in &replayed {
+            tally.merge(unit_tally);
+        }
+        self.flush_packed(&tally, replayed.iter().flat_map(|(reports, _)| reports.iter()));
+        if let Some(m) = &self.metrics {
+            m.observe(crate::obs::Hist::ReplayMicros, t0.elapsed().as_micros() as u64);
+        }
         let mut slots: Vec<Option<BenchResult>> = (0..jobs.len()).map(|_| None).collect();
-        for ((_, idxs), reports) in units.iter().zip(replayed) {
+        for ((_, idxs), (reports, _)) in units.iter().zip(replayed) {
             for (&i, report) in idxs.iter().zip(reports) {
                 slots[i] = Some(BenchResult { job: jobs[i].clone(), report: report? });
             }
         }
-        Ok(slots.into_iter().map(|s| s.expect("every cell replayed")).collect())
+        phases.replay = t0.elapsed();
+        Ok((slots.into_iter().map(|s| s.expect("every cell replayed")).collect(), phases))
     }
 }
 

@@ -28,6 +28,7 @@ use crate::coordinator::job::{BenchJob, TraceCache};
 use crate::coordinator::runner::SweepRunner;
 use crate::mem::arch::MemoryArchKind;
 use crate::mem::{timing, LANES};
+use crate::obs::{Counter, MetricsRegistry};
 use crate::sim::compiled::{replay_compiled, CompiledTrace};
 use crate::sim::config::MachineConfig;
 use crate::sim::exec::{MemAccessKind, MemTrace, SimError};
@@ -125,6 +126,10 @@ pub struct Evaluator {
     replays: Mutex<HashMap<MemoryArchKind, Arc<Mutex<Option<u64>>>>>,
     replay_count: AtomicU64,
     scored: AtomicU64,
+    /// Session metrics, inherited from the cache (the engine attaches
+    /// one registry to cache + runner; the explorer reports through the
+    /// same one). `None` on standalone/cold-cache wiring.
+    metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl Evaluator {
@@ -154,6 +159,7 @@ impl Evaluator {
             replays: Mutex::new(HashMap::new()),
             replay_count: AtomicU64::new(0),
             scored: AtomicU64::new(0),
+            metrics: cache.metrics().cloned(),
         })
     }
 
@@ -193,8 +199,12 @@ impl Evaluator {
         if let Some(cycles) = *slot {
             return Ok(cycles);
         }
-        let cycles = replay_compiled(&self.compiled, arch, MachineConfig::DEFAULT_MAX_CYCLES)?
-            .total_cycles();
+        let report = replay_compiled(&self.compiled, arch, MachineConfig::DEFAULT_MAX_CYCLES)?;
+        if let Some(m) = &self.metrics {
+            m.inc(Counter::ReplayScalarInvocations);
+            m.add(Counter::ReplayWbufStallCycles, report.stats.wbuf_stall_cycles);
+        }
+        let cycles = report.total_cycles();
         self.replay_count.fetch_add(1, Ordering::Relaxed);
         *slot = Some(cycles);
         Ok(cycles)

@@ -69,7 +69,11 @@
 //! one — with unified [`service::ServiceError`] errors, plus a
 //! line-delimited JSON wire codec and the `soft-simt serve` stdin/stdout
 //! transport. A batch of {paper sweep + explore + N repeat runs} costs
-//! exactly one functional execution per distinct workload.
+//! exactly one functional execution per distinct workload. Session
+//! telemetry — atomic counters, latency histograms, per-request phase
+//! spans — lives in [`obs`], is threaded through the cache, runner and
+//! explorer, and is queryable in-band via `Request::Stats` or the
+//! `soft-simt stats` CLI (DESIGN.md §Observability).
 
 pub mod area;
 pub mod benchkit;
@@ -77,6 +81,7 @@ pub mod coordinator;
 pub mod explore;
 pub mod isa;
 pub mod mem;
+pub mod obs;
 pub mod programs;
 pub mod runtime;
 pub mod service;
@@ -116,6 +121,7 @@ pub mod prelude {
         arch::{MemoryArchKind, SharedMemory},
         mapping::BankMapping,
     };
+    pub use crate::obs::{Counter, MetricsRegistry, MetricsSnapshot, Phase, Span};
     pub use crate::programs::{
         fft::{fft_program, FftPlan},
         registry::{self, KernelFamily, OpCountModel, Workload},

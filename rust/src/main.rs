@@ -12,6 +12,7 @@
 //! soft-simt disasm PROG             # disassemble a generated program
 //! soft-simt list                    # programs and memory architectures
 //! soft-simt serve                   # JSON requests on stdin → stdout
+//! soft-simt stats                   # session telemetry snapshot
 //! ```
 //!
 //! The CLI is a thin client of the service layer: every command
@@ -41,7 +42,8 @@ fn main() {
         Some("asm") => cmd_asm(&engine, &args[1..]),
         Some("disasm") => cmd_disasm(&engine, &args[1..]),
         Some("list") => cmd_list(&engine),
-        Some("serve") => cmd_serve(&engine),
+        Some("stats") => cmd_stats(&engine),
+        Some("serve") => cmd_serve(&engine, &args[1..]),
         Some("help") | Some("--help") | Some("-h") | None => {
             print!("{HELP}");
             Ok(0)
@@ -79,10 +81,13 @@ USAGE:
   soft-simt asm FILE [-m MEM]           assemble and run a custom .asm file
   soft-simt disasm PROG                 print a generated program's assembly
   soft-simt list                        list programs and memory architectures
-  soft-simt serve                       read line-delimited JSON requests on
+  soft-simt stats                       print the session's telemetry snapshot
+                                        (counters, latency percentiles, spans)
+  soft-simt serve [--metrics-json PATH] read line-delimited JSON requests on
                                         stdin, stream responses to stdout
                                         (one engine session: traces shared
-                                        across all requests)
+                                        across all requests); on exit, dump a
+                                        metrics snapshot to PATH if given
 ";
 
 fn flag_value<'a>(args: &'a [String], names: &[&str]) -> Option<&'a str> {
@@ -219,10 +224,25 @@ fn cmd_list(engine: &SimtEngine) -> Result<i32, ServiceError> {
     Ok(resp.exit_code())
 }
 
-fn cmd_serve(engine: &SimtEngine) -> Result<i32, ServiceError> {
+fn cmd_stats(engine: &SimtEngine) -> Result<i32, ServiceError> {
+    let resp = engine.handle(&Request::Stats)?;
+    print!("{}", resp.render());
+    Ok(resp.exit_code())
+}
+
+fn cmd_serve(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
+    let metrics_path = flag_value(rest, &["--metrics-json"]).map(String::from);
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
     wire::serve(engine, stdin.lock(), stdout.lock())
         .map_err(|e| ServiceError::io("serve loop", &e))?;
+    if let Some(path) = &metrics_path {
+        // End-of-session snapshot: the whole serve run's counters,
+        // histograms and recent spans, as one JSON document.
+        let mut doc = engine.metrics().snapshot().to_json();
+        doc.push('\n');
+        std::fs::write(path, doc).map_err(|e| ServiceError::io(format!("writing {path}"), &e))?;
+        eprintln!("wrote {path}");
+    }
     Ok(0)
 }

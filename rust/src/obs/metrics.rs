@@ -1,0 +1,445 @@
+//! The metrics registry: named atomic counters, fixed-bucket latency
+//! histograms, and the ring of recent request spans.
+//!
+//! Everything here is dependency-free `std` and built for hot paths:
+//!
+//! - **Counters** are a fixed [`Counter`] enum indexing a
+//!   `[AtomicU64; N]` — increments are single `Relaxed` `fetch_add`s,
+//!   no locks, no hashing, no registration. The replay kernels never
+//!   even pay the atomic per step: they tally into locals and flush
+//!   once per walk (see `sim/packed.rs` and `coordinator/runner.rs`).
+//! - **Histograms** are 32 power-of-two buckets (`0`, `[1,2)`, `[2,4)`,
+//!   …, saturating at the top). Recording is one `leading_zeros` plus
+//!   one atomic add; p50/p90/p99 are derived on snapshot by walking the
+//!   bucket counts and reporting the containing bucket's upper bound.
+//! - **Spans** live in a small mutex-guarded ring (per *request*, never
+//!   per replay step), gated by an `AtomicBool` so disabling recording
+//!   removes every clock read (DESIGN.md §Observability).
+//!
+//! Reads are snapshot-on-read ([`MetricsRegistry::snapshot`]): the
+//! `Stats` service endpoint, the `--metrics-json` dump, and the benches
+//! all consume the same [`MetricsSnapshot`].
+
+use super::span::{Phase, Span, SpanRecord};
+use crate::util::fmt::{json_str, TextTable};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of registered counters (the length of [`Counter::ALL`]).
+pub const COUNTERS: usize = 14;
+
+/// Every counter in the registry. Discriminants index the registry's
+/// atomic array; [`Counter::name`] is the stable wire/text name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Requests the engine has answered (ok or error).
+    RequestsServed,
+    /// Requests that returned a `ServiceError`.
+    RequestsErrors,
+    /// Functional executions paid for: trace captures plus coupled
+    /// `Asm` runs (promoted from the engine's old test-only counter).
+    FunctionalExecutions,
+    /// Counted trace-cache lookups that found a trace.
+    TraceCacheHits,
+    /// Counted trace-cache lookups that missed.
+    TraceCacheMisses,
+    /// Compiled-trace builds performed.
+    CompiledBuilds,
+    /// Compiled-trace lookups served from the memo.
+    CompiledHits,
+    /// Single-architecture replay walks (reference or compiled).
+    ReplayScalarInvocations,
+    /// Lane-packed batch replay driver calls.
+    ReplayPackedInvocations,
+    /// `LaneChunk`s charged by packed drivers.
+    ReplayPackedChunks,
+    /// Architecture lanes actually occupied across those chunks.
+    ReplayPackedLanesUsed,
+    /// Lane slots available (`chunks × ARCH_LANES`); with
+    /// [`Counter::ReplayPackedLanesUsed`] this is packed occupancy.
+    ReplayPackedLaneSlots,
+    /// Chunk-segment advances walked (wavefront and single-threaded).
+    ReplayWavefrontSegments,
+    /// Write-pipeline stall cycles summed over replayed runs.
+    ReplayWbufStallCycles,
+}
+
+impl Counter {
+    /// Every counter, in report order.
+    pub const ALL: [Counter; COUNTERS] = [
+        Counter::RequestsServed,
+        Counter::RequestsErrors,
+        Counter::FunctionalExecutions,
+        Counter::TraceCacheHits,
+        Counter::TraceCacheMisses,
+        Counter::CompiledBuilds,
+        Counter::CompiledHits,
+        Counter::ReplayScalarInvocations,
+        Counter::ReplayPackedInvocations,
+        Counter::ReplayPackedChunks,
+        Counter::ReplayPackedLanesUsed,
+        Counter::ReplayPackedLaneSlots,
+        Counter::ReplayWavefrontSegments,
+        Counter::ReplayWbufStallCycles,
+    ];
+
+    /// Stable dotted wire/text name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::RequestsServed => "requests.served",
+            Counter::RequestsErrors => "requests.errors",
+            Counter::FunctionalExecutions => "exec.functional_executions",
+            Counter::TraceCacheHits => "trace_cache.hits",
+            Counter::TraceCacheMisses => "trace_cache.misses",
+            Counter::CompiledBuilds => "compiled.builds",
+            Counter::CompiledHits => "compiled.hits",
+            Counter::ReplayScalarInvocations => "replay.scalar_invocations",
+            Counter::ReplayPackedInvocations => "replay.packed_invocations",
+            Counter::ReplayPackedChunks => "replay.packed_chunks",
+            Counter::ReplayPackedLanesUsed => "replay.packed_lanes_used",
+            Counter::ReplayPackedLaneSlots => "replay.packed_lane_slots",
+            Counter::ReplayWavefrontSegments => "replay.wavefront_segments",
+            Counter::ReplayWbufStallCycles => "replay.wbuf_stall_cycles",
+        }
+    }
+}
+
+/// Number of registered histograms (the length of [`Hist::ALL`]).
+pub const HISTS: usize = 2;
+
+/// Every latency histogram in the registry (values in microseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Whole-request wall latency through `SimtEngine::handle`.
+    RequestMicros,
+    /// Replay-phase latency (warm runs and sweep batch-replay phases).
+    ReplayMicros,
+}
+
+impl Hist {
+    pub const ALL: [Hist; HISTS] = [Hist::RequestMicros, Hist::ReplayMicros];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::RequestMicros => "request_us",
+            Hist::ReplayMicros => "replay_us",
+        }
+    }
+}
+
+/// Fixed bucket count: `0`, then 31 power-of-two ranges, saturating.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Bucket index for a recorded value: bucket 0 holds exactly `0`,
+/// bucket `i ≥ 1` holds `[2^(i-1), 2^i)`, and the top bucket absorbs
+/// everything from `2^(HIST_BUCKETS-2)` up.
+fn bucket_index(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        ((64 - value.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Largest value the bucket reports as its percentile estimate (its
+/// inclusive upper bound; the saturating top bucket reports its nominal
+/// bound).
+fn bucket_upper_bound(index: usize) -> u64 {
+    if index == 0 {
+        0
+    } else {
+        (1u64 << index) - 1
+    }
+}
+
+/// A lock-free fixed-bucket latency histogram.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one observation (units are the caller's; the registry's
+    /// histograms use microseconds).
+    pub fn record(&self, value: u64) {
+        self.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy of the bucket counts.
+    pub fn snapshot(&self) -> HistogramCounts {
+        HistogramCounts { counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)) }
+    }
+}
+
+/// Snapshot of one histogram's buckets, with percentile derivation.
+#[derive(Debug, Clone)]
+pub struct HistogramCounts {
+    pub counts: [u64; HIST_BUCKETS],
+}
+
+impl HistogramCounts {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The `p`-th percentile (0 < p ≤ 1) as the upper bound of the
+    /// bucket containing rank `ceil(p · total)`; 0 on an empty
+    /// histogram. Example: after recording `1, 2, 4, 8`, `p50` is the
+    /// bound of `[2,4)` = 3 and `p99` the bound of `[8,16)` = 15.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(HIST_BUCKETS - 1)
+    }
+
+    fn summary(&self, name: &'static str) -> HistogramSummary {
+        HistogramSummary {
+            name,
+            count: self.total(),
+            p50: self.percentile(0.50),
+            p90: self.percentile(0.90),
+            p99: self.percentile(0.99),
+        }
+    }
+}
+
+/// One histogram's derived summary, as reported by `Stats`.
+#[derive(Debug, Clone)]
+pub struct HistogramSummary {
+    pub name: &'static str,
+    pub count: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+}
+
+/// Capacity of the recent-spans ring buffer.
+pub const SPAN_RING_CAP: usize = 128;
+
+/// The engine-wide registry. One per [`SimtEngine`] session, shared by
+/// `Arc` into the runner and the trace cache.
+///
+/// [`SimtEngine`]: crate::service::SimtEngine
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    counters: [AtomicU64; COUNTERS],
+    hists: [Histogram; HISTS],
+    recording: AtomicBool,
+    spans: Mutex<VecDeque<SpanRecord>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsRegistry {
+    /// A fresh registry with span recording **on** (the per-request
+    /// cost is a handful of clock reads; turn it off for benchmarking
+    /// the floor with [`Self::set_recording`]).
+    pub fn new() -> Self {
+        Self {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| Histogram::new()),
+            recording: AtomicBool::new(true),
+            spans: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn inc(&self, counter: Counter) {
+        self.counters[counter as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, counter: Counter, n: u64) {
+        if n != 0 {
+            self.counters[counter as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self, counter: Counter) -> u64 {
+        self.counters[counter as usize].load(Ordering::Relaxed)
+    }
+
+    /// Record a histogram observation (microseconds for the built-ins).
+    pub fn observe(&self, hist: Hist, value: u64) {
+        self.hists[hist as usize].record(value);
+    }
+
+    /// Whether per-request span recording is enabled.
+    pub fn recording(&self) -> bool {
+        self.recording.load(Ordering::Relaxed)
+    }
+
+    pub fn set_recording(&self, on: bool) {
+        self.recording.store(on, Ordering::Relaxed);
+    }
+
+    /// A span for one request — enabled iff recording is on, so the
+    /// disabled path never reads a clock.
+    pub fn span(&self, op: &'static str) -> Span {
+        Span::new(op, self.recording())
+    }
+
+    /// Close a span into the ring (a no-op for disabled spans).
+    pub fn finish_span(&self, span: Span) {
+        if let Some(record) = span.finish() {
+            self.record_span(record);
+        }
+    }
+
+    /// Push a finished record, evicting the oldest past
+    /// [`SPAN_RING_CAP`].
+    pub fn record_span(&self, record: SpanRecord) {
+        let mut ring = self.spans.lock().unwrap();
+        if ring.len() == SPAN_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(record);
+    }
+
+    /// The recent spans, oldest first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Point-in-time copy of everything — the one read path `Stats`,
+    /// `--metrics-json` and the benches share. Counters are read
+    /// `Relaxed`; concurrent writers may land between reads, which is
+    /// fine for telemetry (each counter is individually exact).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: Counter::ALL.iter().map(|&c| (c.name(), self.get(c))).collect(),
+            histograms: Hist::ALL
+                .iter()
+                .map(|&h| self.hists[h as usize].snapshot().summary(h.name()))
+                .collect(),
+            spans: self.spans(),
+            recording: self.recording(),
+        }
+    }
+}
+
+/// What a `Stats` response carries: every counter, every histogram
+/// summary, and the recent spans.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` in [`Counter::ALL`] order.
+    pub counters: Vec<(&'static str, u64)>,
+    pub histograms: Vec<HistogramSummary>,
+    pub spans: Vec<SpanRecord>,
+    pub recording: bool,
+}
+
+impl MetricsSnapshot {
+    /// Value of a counter by wire name (`None` for unknown names).
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    /// Human-readable rendering (the CLI `stats` output and the
+    /// `Stats` response's `text` field).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "session metrics (span recording {})\n\n",
+            if self.recording { "on" } else { "off" }
+        ));
+        let mut counters = TextTable::new(vec!["counter", "value"]);
+        for (name, value) in &self.counters {
+            counters.row(vec![name.to_string(), value.to_string()]);
+        }
+        out.push_str(&counters.render());
+        out.push('\n');
+        let mut hists = TextTable::new(vec!["histogram", "count", "p50", "p90", "p99"]);
+        for h in &self.histograms {
+            hists.row(vec![
+                h.name.to_string(),
+                h.count.to_string(),
+                format!("{} us", h.p50),
+                format!("{} us", h.p90),
+                format!("{} us", h.p99),
+            ]);
+        }
+        out.push_str(&hists.render());
+        out.push('\n');
+        out.push_str(&format!(
+            "recent spans: {} (ring capacity {})\n",
+            self.spans.len(),
+            SPAN_RING_CAP
+        ));
+        out
+    }
+
+    /// The snapshot's JSON fields, brace-free so the wire codec can
+    /// splice them into a response object. Span/wall times are reported
+    /// in microseconds.
+    pub fn to_json_fields(&self) -> String {
+        let counters: Vec<String> =
+            self.counters.iter().map(|(n, v)| format!("{}:{v}", json_str(n))).collect();
+        let hists: Vec<String> = self
+            .histograms
+            .iter()
+            .map(|h| {
+                format!(
+                    "{}:{{\"count\":{},\"p50\":{},\"p90\":{},\"p99\":{}}}",
+                    json_str(h.name),
+                    h.count,
+                    h.p50,
+                    h.p90,
+                    h.p99
+                )
+            })
+            .collect();
+        let spans: Vec<String> = self
+            .spans
+            .iter()
+            .map(|s| {
+                let phases: Vec<String> = Phase::ALL
+                    .iter()
+                    .map(|&p| format!("{}:{}", json_str(p.name()), s.phase_nanos[p as usize] / 1_000))
+                    .collect();
+                format!(
+                    "{{\"op\":{},\"wall_us\":{},\"phases_us\":{{{}}}}}",
+                    json_str(s.op),
+                    s.wall_nanos / 1_000,
+                    phases.join(",")
+                )
+            })
+            .collect();
+        format!(
+            "\"recording\":{},\"counters\":{{{}}},\"histograms\":{{{}}},\"spans\":[{}]",
+            self.recording,
+            counters.join(","),
+            hists.join(","),
+            spans.join(",")
+        )
+    }
+
+    /// The snapshot as a standalone JSON object (the `--metrics-json`
+    /// dump format).
+    pub fn to_json(&self) -> String {
+        format!("{{{}}}", self.to_json_fields())
+    }
+}

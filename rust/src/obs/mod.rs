@@ -1,0 +1,33 @@
+//! Engine-wide observability: counters, latency histograms, and
+//! per-request spans (DESIGN.md §Observability).
+//!
+//! Dependency-free `std`, built so instrumentation can live *on* the
+//! hot paths without slowing them:
+//!
+//! - [`MetricsRegistry`] — a fixed set of named [`Counter`]s over plain
+//!   atomics plus power-of-two-bucket [`Histogram`]s, owned by the
+//!   [`SimtEngine`](crate::service::SimtEngine) and shared (`Arc`) into
+//!   the [`SweepRunner`](crate::coordinator::runner::SweepRunner), the
+//!   [`TraceCache`](crate::coordinator::job::TraceCache), and — through
+//!   those two — the design-space explorer.
+//! - [`Span`] — one request's phase timings (`parse → cache_lookup →
+//!   execute → compile → replay → render`), collected into a ring of
+//!   recent [`SpanRecord`]s, with a zero-cost path when recording is
+//!   disabled.
+//! - [`MetricsSnapshot`] — the snapshot-on-read view every consumer
+//!   shares: `Request::Stats`, the `soft-simt stats` CLI, the
+//!   `serve --metrics-json` dump, and the bench overhead probes.
+//!
+//! The replay kernels themselves never touch an atomic per step: packed
+//! walks tally into local [`ReplayTally`](crate::sim::packed::ReplayTally)s
+//! and flush once per driver call, which is what keeps the bench-gated
+//! `instrumented_overhead_pct` inside the ≤2% budget.
+
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{
+    Counter, Hist, Histogram, HistogramCounts, HistogramSummary, MetricsRegistry,
+    MetricsSnapshot, COUNTERS, HISTS, HIST_BUCKETS, SPAN_RING_CAP,
+};
+pub use span::{Phase, Span, SpanRecord, PHASES};

@@ -1,0 +1,156 @@
+//! Per-request spans: where a request's wall time went, phase by phase.
+//!
+//! A [`Span`] is a small value the engine threads through one request's
+//! dispatch. Each layer that does recognizable work wraps it in
+//! [`Span::time`] (or reports a pre-measured duration via [`Span::add`]),
+//! attributing the elapsed time to one of the fixed [`Phase`]s:
+//!
+//! `parse → cache_lookup → execute → compile → replay → render`
+//!
+//! The wire transport owns `parse`/`render`; the engine owns the middle
+//! four. Phases are *disjoint sub-intervals* of the span's wall time, so
+//! for every finished [`SpanRecord`] the sum of phase nanos is ≤ the
+//! wall nanos — a structural invariant the obs proptest pins.
+//!
+//! **Zero-cost when disabled**: a span built with recording off carries
+//! no `Instant` and [`Span::time`] degenerates to calling the closure —
+//! no clock reads, no arithmetic, and [`Span::finish`] records nothing.
+
+use std::time::{Duration, Instant};
+
+/// Number of span phases (the length of [`Phase::ALL`]).
+pub const PHASES: usize = 6;
+
+/// One phase of a request's lifecycle. Discriminants index the
+/// fixed-size phase arrays in [`Span`] and [`SpanRecord`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Wire-level request decoding (JSON line → typed `Request`).
+    Parse,
+    /// Trace-cache lookup for the request's trace key.
+    CacheLookup,
+    /// Functional execution (trace capture) on a cache miss.
+    Execute,
+    /// Trace compilation into per-op gather rows.
+    Compile,
+    /// Timing replay (scalar walk or lane-packed batch).
+    Replay,
+    /// Response rendering/encoding back onto the wire.
+    Render,
+}
+
+impl Phase {
+    /// Every phase, in lifecycle order.
+    pub const ALL: [Phase; PHASES] = [
+        Phase::Parse,
+        Phase::CacheLookup,
+        Phase::Execute,
+        Phase::Compile,
+        Phase::Replay,
+        Phase::Render,
+    ];
+
+    /// Stable wire/text name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Parse => "parse",
+            Phase::CacheLookup => "cache_lookup",
+            Phase::Execute => "execute",
+            Phase::Compile => "compile",
+            Phase::Replay => "replay",
+            Phase::Render => "render",
+        }
+    }
+}
+
+/// An in-flight request span. Created by
+/// [`MetricsRegistry::span`](super::metrics::MetricsRegistry::span)
+/// (enabled iff recording is on) and finished back into the registry's
+/// ring by
+/// [`MetricsRegistry::finish_span`](super::metrics::MetricsRegistry::finish_span).
+#[derive(Debug)]
+pub struct Span {
+    op: &'static str,
+    /// `Some` ⇔ recording enabled; doubles as the wall-clock anchor.
+    started: Option<Instant>,
+    phase_nanos: [u64; PHASES],
+}
+
+impl Span {
+    /// A span for one request; `enabled = false` yields the zero-cost
+    /// variant (no clock is ever read).
+    pub fn new(op: &'static str, enabled: bool) -> Self {
+        Self { op, started: enabled.then(Instant::now), phase_nanos: [0; PHASES] }
+    }
+
+    /// The zero-cost variant, for callers without a registry.
+    pub fn disabled(op: &'static str) -> Self {
+        Self::new(op, false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.started.is_some()
+    }
+
+    pub fn op(&self) -> &'static str {
+        self.op
+    }
+
+    /// Relabel the span once the op is known (the wire transport opens
+    /// the span before the line is parsed).
+    pub fn set_op(&mut self, op: &'static str) {
+        self.op = op;
+    }
+
+    /// Run `f`, attributing its elapsed time to `phase`. When the span
+    /// is disabled this is exactly `f()`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        if self.started.is_none() {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    /// Attribute an externally measured duration to `phase` (used by
+    /// layers that time their own sub-phases, e.g. the sweep runner's
+    /// capture/compile/replay split).
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        if self.started.is_some() {
+            self.phase_nanos[phase as usize] =
+                self.phase_nanos[phase as usize].saturating_add(d.as_nanos() as u64);
+        }
+    }
+
+    /// Close the span. `None` when recording was disabled — nothing is
+    /// recorded, pinned by the obs disabled-recording test.
+    pub fn finish(self) -> Option<SpanRecord> {
+        let started = self.started?;
+        Some(SpanRecord {
+            op: self.op,
+            wall_nanos: started.elapsed().as_nanos() as u64,
+            phase_nanos: self.phase_nanos,
+        })
+    }
+}
+
+/// A finished span, as stored in the registry's ring buffer.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// The request's wire op name (`"run"`, `"sweep"`, `"batch"`, …).
+    pub op: &'static str,
+    /// Wall time from span creation to finish.
+    pub wall_nanos: u64,
+    /// Per-phase attributed time, indexed by `Phase as usize`.
+    pub phase_nanos: [u64; PHASES],
+}
+
+impl SpanRecord {
+    /// Total attributed time; ≤ [`Self::wall_nanos`] by construction
+    /// (phases are disjoint sub-intervals of the span's lifetime).
+    pub fn phase_sum_nanos(&self) -> u64 {
+        self.phase_nanos.iter().sum()
+    }
+}

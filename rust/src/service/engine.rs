@@ -24,25 +24,31 @@ use crate::coordinator::runner::SweepRunner;
 use crate::coordinator::validate;
 use crate::explore::{self, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
 use crate::isa::asm;
+use crate::obs::{Counter, Hist, MetricsRegistry, Phase, Span};
 use crate::programs::library;
 use crate::runtime::ArtifactRuntime;
 use crate::sim::config::MachineConfig;
 use crate::sim::machine::Machine;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// The service session: worker pool + persistent trace cache + request
 /// dispatch. See the module docs.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SimtEngine {
     runner: SweepRunner,
     cache: TraceCache,
-    /// Functional executions this session has paid for: trace captures
-    /// (each inserts one cache entry) plus coupled runs of custom
-    /// `Asm` programs (which have no library cache key). Validation's
-    /// functional checks are deliberately excluded — they verify *data*,
-    /// which replay by construction cannot, so they are not a cost the
-    /// cache could ever share.
-    executions: AtomicU64,
+    /// Session telemetry (DESIGN.md §Observability). The engine owns
+    /// the registry and shares it (`Arc`) into the runner and the
+    /// cache, which the explorer and advisor in turn inherit — one set
+    /// of counters for everything a session does.
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl Default for SimtEngine {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl SimtEngine {
@@ -54,7 +60,11 @@ impl SimtEngine {
 
     /// An engine over a caller-sized worker pool.
     pub fn with_runner(runner: SweepRunner) -> Self {
-        Self { runner, cache: TraceCache::new(), executions: AtomicU64::new(0) }
+        let metrics = Arc::new(MetricsRegistry::new());
+        let cache = TraceCache::new();
+        cache.attach_metrics(Arc::clone(&metrics));
+        let runner = runner.with_metrics(Arc::clone(&metrics));
+        Self { runner, cache, metrics }
     }
 
     pub fn runner(&self) -> &SweepRunner {
@@ -66,26 +76,60 @@ impl SimtEngine {
         &self.cache
     }
 
-    /// Functional executions performed so far (see the field docs). The
-    /// engine's defining economy: repeat requests over cached workloads
-    /// leave this counter unchanged. Exact for sequential request
-    /// streams (the CLI, `serve`, batches); overlapping `handle` calls
-    /// from multiple threads still share traces but may attribute a
-    /// concurrent capture to both windows.
+    /// The session's metrics registry. `Request::Stats` answers a
+    /// snapshot of this; benches and the `--metrics-json` dump read the
+    /// same source.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Functional executions performed so far — the
+    /// `exec.functional_executions` counter: trace captures (each
+    /// inserts one cache entry) plus coupled runs of custom `Asm`
+    /// programs (which have no library cache key). Validation's
+    /// functional checks are deliberately excluded — they verify
+    /// *data*, which replay by construction cannot, so they are not a
+    /// cost the cache could ever share. The engine's defining economy:
+    /// repeat requests over cached workloads leave this counter
+    /// unchanged. Exact for sequential request streams (the CLI,
+    /// `serve`, batches); overlapping `handle` calls from multiple
+    /// threads still share traces but may attribute a concurrent
+    /// capture to both windows.
     pub fn functional_executions(&self) -> u64 {
-        self.executions.load(Ordering::Relaxed)
+        self.metrics.get(Counter::FunctionalExecutions)
     }
 
     /// Serve one request. Errors are per-request values, never process
     /// state: the engine stays fully usable after any failure.
     pub fn handle(&self, req: &Request) -> Result<Response, ServiceError> {
+        let mut span = self.metrics.span(req.op());
+        let result = self.handle_in_span(req, &mut span);
+        self.metrics.finish_span(span);
+        result
+    }
+
+    /// [`Self::handle`] inside a caller-owned [`Span`] — the wire
+    /// transport uses this so one span can also cover its parse/render
+    /// phases. All request-level counters and the request-latency
+    /// histogram are charged here.
+    pub fn handle_in_span(
+        &self,
+        req: &Request,
+        span: &mut Span,
+    ) -> Result<Response, ServiceError> {
+        let t0 = Instant::now();
         // Every capture path lands exactly one new entry in the cache,
         // so the cache-size delta *is* the functional-execution count
         // (Asm runs are counted explicitly in dispatch).
         let before = self.cache.len() as u64;
-        let result = self.dispatch(req);
+        let result = self.dispatch(req, span);
         let after = self.cache.len() as u64;
-        self.executions.fetch_add(after.saturating_sub(before), Ordering::Relaxed);
+        self.metrics.add(Counter::FunctionalExecutions, after.saturating_sub(before));
+        self.metrics.inc(Counter::RequestsServed);
+        if result.is_err() {
+            self.metrics.inc(Counter::RequestsErrors);
+        }
+        self.metrics.observe(Hist::RequestMicros, t0.elapsed().as_micros() as u64);
         result
     }
 
@@ -98,14 +142,27 @@ impl SimtEngine {
         reqs.iter().map(|r| self.handle(r)).collect()
     }
 
-    fn dispatch(&self, req: &Request) -> Result<Response, ServiceError> {
+    /// Attribute a timed sweep's phases to the request's span.
+    fn span_sweep_phases(span: &mut Span, phases: &crate::coordinator::runner::SweepPhases) {
+        span.add(Phase::Execute, phases.capture);
+        span.add(Phase::Compile, phases.compile);
+        span.add(Phase::Replay, phases.replay);
+    }
+
+    fn dispatch(&self, req: &Request, span: &mut Span) -> Result<Response, ServiceError> {
         match req {
             Request::Run { program, mem } => {
                 self.require_program(program)?;
                 let job = BenchJob::new(program.clone(), *mem);
                 let key = job.trace_key();
-                let warm = self.cache.get(&key).is_some();
-                let trace = self.cache.get_or_capture(&job)?;
+                // One counted cache lookup per run (the capture path
+                // re-checks via the uncounted peek).
+                let cached = span.time(Phase::CacheLookup, || self.cache.get(&key));
+                let warm = cached.is_some();
+                let trace = match cached {
+                    Some(trace) => trace,
+                    None => span.time(Phase::Execute, || self.cache.get_or_capture(&job))?,
+                };
                 // A cold one-shot run charges the reference replayer —
                 // compiling the per-op gather rows just to read one
                 // arch's slot would cost more than it saves. From the
@@ -116,24 +173,37 @@ impl SimtEngine {
                 // (Sweep/Table/Explore) instead go through the
                 // lane-packed kernel via the runner. All paths are
                 // RunReport-identical (replay_diff harness).
-                let result = if warm {
-                    let compiled = self.cache.get_or_compile(&key, &trace);
-                    job.replay_compiled(&compiled)?
+                let (result, replayed_in) = if warm {
+                    let compiled =
+                        span.time(Phase::Compile, || self.cache.get_or_compile(&key, &trace));
+                    let t0 = Instant::now();
+                    let result = job.replay_compiled(&compiled)?;
+                    (result, t0.elapsed())
                 } else {
-                    job.replay_trace(&trace)?
+                    let t0 = Instant::now();
+                    let result = job.replay_trace(&trace)?;
+                    (result, t0.elapsed())
                 };
+                span.add(Phase::Replay, replayed_in);
+                self.metrics.inc(Counter::ReplayScalarInvocations);
+                self.metrics
+                    .add(Counter::ReplayWbufStallCycles, result.report.stats.wbuf_stall_cycles);
+                self.metrics.observe(Hist::ReplayMicros, replayed_in.as_micros() as u64);
                 Ok(Response::Run(result.report))
             }
             Request::Sweep { all } => {
                 let jobs =
                     if *all { BenchJob::extended_sweep() } else { BenchJob::paper_sweep() };
-                let results = self.runner.run_with_cache(&jobs, &self.cache)?;
+                let (results, phases) = self.runner.run_with_cache_timed(&jobs, &self.cache)?;
+                Self::span_sweep_phases(span, &phases);
                 Ok(Response::Sweep(SweepOutput { all: *all, results }))
             }
             Request::Table(which) => {
                 let text = if which.needs_sweep() {
                     let jobs = BenchJob::paper_sweep();
-                    let results = self.runner.run_with_cache(&jobs, &self.cache)?;
+                    let (results, phases) =
+                        self.runner.run_with_cache_timed(&jobs, &self.cache)?;
+                    Self::span_sweep_phases(span, &phases);
                     match which {
                         TableKind::Table2 => report::render_table2(&results),
                         TableKind::Table3 => report::render_table3(&results),
@@ -179,12 +249,14 @@ impl SimtEngine {
                 Ok(Response::Validate(ValidationOutput { checks, pjrt_note: note }))
             }
             Request::Asm { source, mem } => {
-                let program = asm::assemble(source)?;
+                let program = span.time(Phase::Parse, || asm::assemble(source))?;
                 let mut machine = Machine::new(MachineConfig::for_arch(*mem));
+                let t0 = Instant::now();
                 let report = machine.run_program(&program)?;
+                span.add(Phase::Execute, t0.elapsed());
                 // A custom program has no library cache key; its coupled
                 // run is a functional execution the counter must see.
-                self.executions.fetch_add(1, Ordering::Relaxed);
+                self.metrics.inc(Counter::FunctionalExecutions);
                 Ok(Response::Asm(report))
             }
             Request::Disasm { program } => {
@@ -196,6 +268,12 @@ impl SimtEngine {
                 })
             }
             Request::List => Ok(Response::List(Listing::current())),
+            // Snapshot-on-read: the counters the *snapshot* reports do
+            // not yet include this request's own bookkeeping (served
+            // count, latency), which lands in `handle_in_span` after
+            // dispatch returns — so a Stats request never perturbs the
+            // numbers it reports.
+            Request::Stats => Ok(Response::Stats(self.metrics.snapshot())),
         }
     }
 
@@ -291,6 +369,53 @@ mod tests {
         assert_eq!(engine.functional_executions(), 0);
         let Response::Table { text, .. } = resp else { panic!("table response") };
         assert!(text.contains("TABLE I"));
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_cache_and_replay_counters() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        let req = run_req("transpose32", MemoryArchKind::banked(16));
+        engine.handle(&req).unwrap(); // cold: counted miss + capture
+        engine.handle(&req).unwrap(); // warm: counted hit, compiled replay
+        let Response::Stats(snap) = engine.handle(&Request::Stats).unwrap() else {
+            panic!("stats response");
+        };
+        assert!(snap.counter("trace_cache.hits").unwrap() >= 1, "warm run must record a hit");
+        assert_eq!(snap.counter("trace_cache.misses"), Some(1));
+        assert_eq!(snap.counter("exec.functional_executions"), Some(1));
+        assert_eq!(snap.counter("replay.scalar_invocations"), Some(2));
+        assert_eq!(snap.counter("compiled.builds"), Some(1));
+        assert_eq!(snap.counter("requests.served"), Some(2), "snapshot precedes own bookkeeping");
+        assert_eq!(snap.counter("replay.packed_invocations"), Some(0), "runs replay scalar");
+        assert_eq!(snap.counter("nonexistent.counter"), None);
+
+        // Batch requests ride the lane-packed kernel: packed counters
+        // must advance, and occupancy is bounded by the lane slots.
+        engine.handle(&Request::Sweep { all: false }).unwrap();
+        let m = engine.metrics();
+        assert!(m.get(Counter::ReplayPackedInvocations) >= 1);
+        let used = m.get(Counter::ReplayPackedLanesUsed);
+        let slots = m.get(Counter::ReplayPackedLaneSlots);
+        assert!(used >= 51, "51 sweep cells occupy at least 51 lanes: {used}");
+        assert!(slots >= used, "occupancy ≤ 1: {used}/{slots}");
+        assert!(m.get(Counter::ReplayWavefrontSegments) >= 1);
+    }
+
+    #[test]
+    fn every_request_records_one_span() {
+        let engine = SimtEngine::with_runner(SweepRunner::new(1));
+        assert!(engine.metrics().recording(), "span recording defaults on");
+        engine.handle(&run_req("transpose32", MemoryArchKind::banked(16))).unwrap();
+        engine.handle(&Request::List).unwrap();
+        let spans = engine.metrics().spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].op, "run");
+        assert_eq!(spans[1].op, "list");
+        for s in &spans {
+            assert!(s.phase_sum_nanos() <= s.wall_nanos, "phases are sub-intervals of wall");
+        }
+        // The run span attributed its functional execution and replay.
+        assert!(spans[0].phase_nanos[crate::obs::Phase::Execute as usize] > 0);
     }
 
     #[test]

@@ -8,10 +8,13 @@
 //! worker pool, a persistent trace cache, and the wiring to the program
 //! library, the explorer and the footprint model; every operation the
 //! crate performs — `run`, `sweep`, the paper tables, `advise`,
-//! `explore`, `validate`, `asm`, `disasm`, `list` — is a typed
+//! `explore`, `validate`, `asm`, `disasm`, `list`, `stats` — is a typed
 //! [`Request`] answered with a typed [`Response`], and every failure is
 //! one [`ServiceError`] (`SimError` and `AsmError` fold in via `From`),
-//! so messages and exit codes are derived in exactly one place.
+//! so messages and exit codes are derived in exactly one place. The
+//! session also owns a [`crate::obs::MetricsRegistry`]: every request is
+//! counted, latency-histogrammed and span-recorded, and `Request::Stats`
+//! answers a snapshot (DESIGN.md §Observability).
 //!
 //! Because the cache is session-scoped, request cost collapses across a
 //! batch: a 51-cell paper sweep plus a design-space exploration plus any

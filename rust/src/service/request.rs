@@ -41,6 +41,11 @@ pub enum Request {
     Disasm { program: String },
     /// The program library and memory-architecture sets.
     List,
+    /// Session telemetry: a snapshot of the engine's metrics registry
+    /// (counters, latency histograms, recent request spans — DESIGN.md
+    /// §Observability). Read-only and cheap; safe to interleave into
+    /// batches.
+    Stats,
 }
 
 impl Request {
@@ -56,6 +61,7 @@ impl Request {
             Request::Asm { .. } => "asm",
             Request::Disasm { .. } => "disasm",
             Request::List => "list",
+            Request::Stats => "stats",
         }
     }
 }
@@ -153,6 +159,7 @@ mod tests {
     #[test]
     fn ops_are_stable_wire_names() {
         assert_eq!(Request::List.op(), "list");
+        assert_eq!(Request::Stats.op(), "stats");
         assert_eq!(Request::Sweep { all: false }.op(), "sweep");
         assert_eq!(
             Request::Run {

@@ -10,6 +10,7 @@ use crate::coordinator::report;
 use crate::coordinator::validate::Check;
 use crate::explore::ExploreResult;
 use crate::mem::arch::{self, MemoryArchKind};
+use crate::obs::MetricsSnapshot;
 use crate::programs::library;
 use crate::sim::stats::RunReport;
 
@@ -38,6 +39,8 @@ pub enum Response {
     Disasm { program: String, text: String },
     /// Program library + memory-architecture sets.
     List(Listing),
+    /// Session telemetry snapshot (counters, histograms, recent spans).
+    Stats(MetricsSnapshot),
 }
 
 impl Response {
@@ -53,6 +56,7 @@ impl Response {
             Response::Validate(_) => "validate",
             Response::Disasm { .. } => "disasm",
             Response::List(_) => "list",
+            Response::Stats(_) => "stats",
         }
     }
 
@@ -69,6 +73,7 @@ impl Response {
             Response::Validate(v) => v.render(),
             Response::Disasm { text, .. } => text.clone(),
             Response::List(listing) => listing.render(),
+            Response::Stats(snapshot) => snapshot.render_text(),
         }
     }
 

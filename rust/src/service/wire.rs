@@ -20,6 +20,7 @@
 //! {"op":"asm","source":".threads 16\n    halt\n","mem":"16-banks"}
 //! {"op":"disasm","program":"transpose32"}
 //! {"op":"list"}
+//! {"op":"stats"}
 //! ```
 //!
 //! Responses carry `"ok"` plus structured fields per variant and the
@@ -31,6 +32,7 @@ use super::engine::SimtEngine;
 use super::error::{parse_arch, ServiceError};
 use super::request::{ExploreStrategy, Request, TableKind};
 use super::response::Response;
+use crate::obs::Phase;
 use crate::util::fmt::json_str;
 use std::io::{BufRead, Write};
 
@@ -336,6 +338,7 @@ pub fn request_from_json(v: &Json) -> Result<Request, ServiceError> {
         "asm" => Ok(Request::Asm { source: program("source")?, mem: mem("16-banks")? }),
         "disasm" => Ok(Request::Disasm { program: program("program")? }),
         "list" => Ok(Request::List),
+        "stats" => Ok(Request::Stats),
         other => Err(ServiceError::BadRequest(format!("unknown op '{other}'"))),
     }
 }
@@ -407,6 +410,7 @@ pub fn request_to_json(req: &Request) -> String {
             format!("{{\"op\":\"disasm\",\"program\":{}}}", json_str(program))
         }
         Request::List => "{\"op\":\"list\"}".to_string(),
+        Request::Stats => "{\"op\":\"stats\"}".to_string(),
     }
 }
 
@@ -520,6 +524,12 @@ pub fn response_to_json(resp: &Response) -> String {
                 memories.join(",")
             ));
         }
+        Response::Stats(snapshot) => {
+            // The snapshot's own fields (counters / histograms / spans),
+            // spliced brace-free into the response object. This is the
+            // same document `serve --metrics-json` dumps standalone.
+            out.push_str(&format!(",{}", snapshot.to_json_fields()));
+        }
     }
     out.push_str(&format!(",\"text\":{}}}", json_str(&resp.render())));
     out
@@ -534,6 +544,11 @@ pub fn response_to_json(resp: &Response) -> String {
 /// line yields an `{"ok":false,...}` line and the loop continues; an
 /// array line is answered with an array of responses. Every request in
 /// the session shares `engine`'s trace cache.
+///
+/// Each wire line records one span in the engine's metrics registry:
+/// the transport attributes JSON decode to `parse` and encode to
+/// `render` around the engine's own dispatch phases. A batch line is a
+/// single span labelled `"batch"` that accumulates across its items.
 pub fn serve<R: BufRead, W: Write>(
     engine: &SimtEngine,
     input: R,
@@ -544,24 +559,32 @@ pub fn serve<R: BufRead, W: Write>(
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_json(&line) {
+        let mut span = engine.metrics().span("line");
+        let reply = match span.time(Phase::Parse, || parse_json(&line)) {
             Ok(Json::Arr(items)) => {
-                let parts: Vec<String> = items
-                    .iter()
-                    .map(|item| {
-                        let result = request_from_json(item)
-                            .and_then(|req| engine.handle(&req));
-                        result_to_json(&result)
-                    })
-                    .collect();
+                span.set_op("batch");
+                let mut parts = Vec::with_capacity(items.len());
+                for item in &items {
+                    let result = span
+                        .time(Phase::Parse, || request_from_json(item))
+                        .and_then(|req| engine.handle_in_span(&req, &mut span));
+                    parts.push(span.time(Phase::Render, || result_to_json(&result)));
+                }
                 format!("[{}]", parts.join(","))
             }
             Ok(v) => {
-                let result = request_from_json(&v).and_then(|req| engine.handle(&req));
-                result_to_json(&result)
+                let result = match span.time(Phase::Parse, || request_from_json(&v)) {
+                    Ok(req) => {
+                        span.set_op(req.op());
+                        engine.handle_in_span(&req, &mut span)
+                    }
+                    Err(e) => Err(e),
+                };
+                span.time(Phase::Render, || result_to_json(&result))
             }
             Err(e) => error_to_json(&e),
         };
+        engine.metrics().finish_span(span);
         writeln!(output, "{reply}")?;
         output.flush()?;
     }

@@ -278,6 +278,38 @@ impl LaneChunk {
     }
 }
 
+/// Occupancy/work tally of one or more packed replay driver calls —
+/// accumulated in **locals** during the walk and flushed into the
+/// [`MetricsRegistry`](crate::obs::MetricsRegistry) once per call by
+/// whoever holds a registry handle, so the packed kernel itself never
+/// touches an atomic (DESIGN.md §Observability).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayTally {
+    /// Driver calls folded into this tally.
+    pub invocations: u64,
+    /// [`LaneChunk`]s charged.
+    pub chunks: u64,
+    /// Architecture lanes actually occupied across those chunks.
+    pub lanes_used: u64,
+    /// Lane slots available (`chunks × ARCH_LANES`); `lanes_used /
+    /// lane_slots` is the packed occupancy.
+    pub lane_slots: u64,
+    /// Chunk-segment advances performed (one per chunk per
+    /// [`SEGMENT_INSTRS`] window it stayed active for).
+    pub segments: u64,
+}
+
+impl ReplayTally {
+    /// Fold another driver call's tally into this one.
+    pub fn merge(&mut self, other: &ReplayTally) {
+        self.invocations += other.invocations;
+        self.chunks += other.chunks;
+        self.lanes_used += other.lanes_used;
+        self.lane_slots += other.lane_slots;
+        self.segments += other.segments;
+    }
+}
+
 /// Charge every architecture in `archs` through the lane-packed kernel,
 /// single-threaded: candidates pack into [`ARCH_LANES`]-wide chunks, and
 /// each chunk walks the trace in [`SEGMENT_INSTRS`] segments with
@@ -291,8 +323,26 @@ pub fn replay_many_packed(
     archs: &[MemoryArchKind],
     max_cycles: u64,
 ) -> Vec<Result<RunReport, SimError>> {
+    replay_many_packed_counted(trace, archs, max_cycles).0
+}
+
+/// [`replay_many_packed`] plus the walk's [`ReplayTally`]. The tally
+/// costs a few local integer adds per segment — callers without a
+/// metrics registry use the plain wrapper and drop it.
+pub fn replay_many_packed_counted(
+    trace: &CompiledTrace,
+    archs: &[MemoryArchKind],
+    max_cycles: u64,
+) -> (Vec<Result<RunReport, SimError>>, ReplayTally) {
     let mut chunks: Vec<LaneChunk> =
         archs.chunks(ARCH_LANES).map(|c| LaneChunk::new(trace, c)).collect();
+    let mut tally = ReplayTally {
+        invocations: 1,
+        chunks: chunks.len() as u64,
+        lanes_used: archs.len() as u64,
+        lane_slots: (chunks.len() * ARCH_LANES) as u64,
+        segments: 0,
+    };
     let n_instrs = trace.n_instrs();
     // Active set of chunk indices; all-failed chunks swap-compact out.
     let mut active: Vec<usize> = (0..chunks.len()).collect();
@@ -303,6 +353,7 @@ pub fn replay_many_packed(
         while i < active.len() {
             let chunk = &mut chunks[active[i]];
             chunk.advance(trace, start..end);
+            tally.segments += 1;
             if chunk.all_failed(max_cycles) {
                 active.swap_remove(i);
             } else {
@@ -311,7 +362,7 @@ pub fn replay_many_packed(
         }
         start = end;
     }
-    chunks
+    let reports = chunks
         .into_iter()
         .flat_map(|chunk| {
             if chunk.all_failed(max_cycles) {
@@ -320,7 +371,8 @@ pub fn replay_many_packed(
                 chunk.finish(trace, max_cycles)
             }
         })
-        .collect()
+        .collect();
+    (reports, tally)
 }
 
 #[cfg(test)]

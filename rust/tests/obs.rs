@@ -1,0 +1,231 @@
+//! Observability-layer tests: histogram bucket math and percentiles,
+//! registry counters and snapshots, span recording (and its
+//! zero-cost-when-disabled contract), and the snapshot JSON shape.
+
+use soft_simt::obs::{
+    Counter, Hist, Histogram, MetricsRegistry, Phase, Span, SpanRecord, HIST_BUCKETS, PHASES,
+    SPAN_RING_CAP,
+};
+use soft_simt::util::proptest::check;
+
+// ---------------------------------------------------------------------
+// Histogram buckets and percentiles.
+// ---------------------------------------------------------------------
+
+#[test]
+fn percentiles_are_exact_on_known_inputs() {
+    // 1 → [1,2), 2 → [2,4), 4 → [4,8), 8 → [8,16). Ranks: p50 hits the
+    // 2nd observation (bucket [2,4), upper bound 3); p90 and p99 hit
+    // the 4th (bucket [8,16), upper bound 15).
+    let h = Histogram::new();
+    for v in [1u64, 2, 4, 8] {
+        h.record(v);
+    }
+    let counts = h.snapshot();
+    assert_eq!(counts.total(), 4);
+    assert_eq!(counts.percentile(0.50), 3);
+    assert_eq!(counts.percentile(0.90), 15);
+    assert_eq!(counts.percentile(0.99), 15);
+}
+
+#[test]
+fn zero_has_its_own_bucket() {
+    let h = Histogram::new();
+    h.record(0);
+    h.record(0);
+    let counts = h.snapshot();
+    assert_eq!(counts.counts[0], 2);
+    assert_eq!(counts.percentile(0.50), 0);
+    assert_eq!(counts.percentile(0.99), 0);
+}
+
+#[test]
+fn huge_values_saturate_into_the_top_bucket() {
+    let h = Histogram::new();
+    h.record(u64::MAX);
+    h.record(1u64 << 40);
+    let counts = h.snapshot();
+    assert_eq!(counts.counts[HIST_BUCKETS - 1], 2);
+    // The saturating bucket reports its nominal upper bound.
+    assert_eq!(counts.percentile(0.99), (1u64 << (HIST_BUCKETS - 1)) - 1);
+}
+
+#[test]
+fn empty_histogram_reports_zero_percentiles() {
+    let counts = Histogram::new().snapshot();
+    assert_eq!(counts.total(), 0);
+    assert_eq!(counts.percentile(0.50), 0);
+    assert_eq!(counts.percentile(0.99), 0);
+}
+
+#[test]
+fn bucket_placement_matches_the_powers_of_two() {
+    // Each value lands in a bucket whose range [lo, hi] brackets it:
+    // bucket 0 = {0}, bucket i = [2^(i-1), 2^i - 1].
+    check("histogram bucket brackets its value", 500, |rng| {
+        let v = rng.next_u64() >> (rng.next_u32() % 64);
+        let h = Histogram::new();
+        h.record(v);
+        let counts = h.snapshot();
+        let i = counts.counts.iter().position(|&c| c == 1).unwrap();
+        let lo = if i == 0 { 0 } else { 1u64 << (i - 1) };
+        assert!(v >= lo, "value {v} below bucket {i} lower bound {lo}");
+        if i < HIST_BUCKETS - 1 {
+            let hi = (1u64 << i) - 1;
+            assert!(v <= hi, "value {v} above bucket {i} upper bound {hi}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Registry counters and snapshots.
+// ---------------------------------------------------------------------
+
+#[test]
+fn counters_start_zero_and_accumulate() {
+    let m = MetricsRegistry::new();
+    for c in Counter::ALL {
+        assert_eq!(m.get(c), 0, "counter {} not zero at start", c.name());
+    }
+    m.inc(Counter::TraceCacheHits);
+    m.add(Counter::TraceCacheHits, 4);
+    m.add(Counter::TraceCacheMisses, 0); // no-op, not an underflow trap
+    assert_eq!(m.get(Counter::TraceCacheHits), 5);
+    assert_eq!(m.get(Counter::TraceCacheMisses), 0);
+}
+
+#[test]
+fn snapshot_reports_every_counter_in_registry_order() {
+    let m = MetricsRegistry::new();
+    m.add(Counter::ReplayPackedLanesUsed, 51);
+    m.observe(Hist::RequestMicros, 100);
+    let snap = m.snapshot();
+    assert_eq!(snap.counters.len(), Counter::ALL.len());
+    for (i, c) in Counter::ALL.iter().enumerate() {
+        assert_eq!(snap.counters[i].0, c.name());
+    }
+    assert_eq!(snap.counter("replay.packed_lanes_used"), Some(51));
+    assert_eq!(snap.counter("requests.served"), Some(0));
+    assert_eq!(snap.counter("no.such.counter"), None);
+    let request_hist = &snap.histograms[Hist::RequestMicros as usize];
+    assert_eq!(request_hist.name, "request_us");
+    assert_eq!(request_hist.count, 1);
+}
+
+#[test]
+fn counter_names_are_unique_and_dotted() {
+    let names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+    let mut dedup = names.clone();
+    dedup.sort_unstable();
+    dedup.dedup();
+    assert_eq!(dedup.len(), names.len(), "duplicate counter names: {names:?}");
+    for n in names {
+        assert!(n.contains('.'), "counter name '{n}' is not namespaced");
+    }
+}
+
+#[test]
+fn snapshot_json_has_the_documented_shape() {
+    let m = MetricsRegistry::new();
+    m.inc(Counter::RequestsServed);
+    m.observe(Hist::ReplayMicros, 7);
+    let mut span = m.span("run");
+    span.time(Phase::Replay, || std::hint::black_box(17 * 3));
+    m.finish_span(span);
+    let json = m.snapshot().to_json();
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    for needle in [
+        "\"recording\":true",
+        "\"counters\":{",
+        "\"requests.served\":1",
+        "\"histograms\":{",
+        "\"replay_us\":{\"count\":1,",
+        "\"spans\":[{\"op\":\"run\",\"wall_us\":",
+        "\"phases_us\":{\"parse\":",
+    ] {
+        assert!(json.contains(needle), "missing `{needle}` in:\n{json}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spans.
+// ---------------------------------------------------------------------
+
+#[test]
+fn span_phase_sum_never_exceeds_wall_time() {
+    // Phases are timed sub-intervals of the span's lifetime, so however
+    // they interleave the attributed total must fit inside the wall
+    // time. Randomize phase choice, work size and call count.
+    check("span phase sum <= wall", 200, |rng| {
+        let m = MetricsRegistry::new();
+        let mut span = m.span("prop");
+        let calls = 1 + rng.below(8);
+        for _ in 0..calls {
+            let phase = Phase::ALL[rng.below(PHASES as u32) as usize];
+            let spin = rng.below(64);
+            span.time(phase, || {
+                let mut acc = 0u64;
+                for i in 0..spin {
+                    acc = acc.wrapping_add(std::hint::black_box(i as u64));
+                }
+                acc
+            });
+        }
+        m.finish_span(span);
+        let spans = m.spans();
+        assert_eq!(spans.len(), 1);
+        let rec = &spans[0];
+        assert!(
+            rec.phase_sum_nanos() <= rec.wall_nanos,
+            "phase sum {} > wall {}",
+            rec.phase_sum_nanos(),
+            rec.wall_nanos
+        );
+    });
+}
+
+#[test]
+fn disabled_recording_records_nothing() {
+    let m = MetricsRegistry::new();
+    m.set_recording(false);
+    assert!(!m.recording());
+    let mut span = m.span("run");
+    assert!(!span.enabled());
+    // The closure still runs — only the instrumentation is skipped.
+    let out = span.time(Phase::Execute, || 42);
+    assert_eq!(out, 42);
+    span.add(Phase::Replay, std::time::Duration::from_millis(5));
+    m.finish_span(span);
+    assert!(m.spans().is_empty(), "disabled span must not reach the ring");
+    assert!(!m.snapshot().recording);
+
+    // And a standalone disabled span never yields a record at all.
+    let span = Span::disabled("x");
+    assert!(span.finish().is_none());
+
+    // Counters keep working regardless of span recording.
+    m.inc(Counter::RequestsServed);
+    assert_eq!(m.get(Counter::RequestsServed), 1);
+}
+
+#[test]
+fn span_ring_evicts_oldest_past_capacity() {
+    let m = MetricsRegistry::new();
+    for i in 0..(SPAN_RING_CAP + 5) {
+        m.record_span(SpanRecord {
+            op: "x",
+            wall_nanos: i as u64,
+            phase_nanos: [0; PHASES],
+        });
+    }
+    let spans = m.spans();
+    assert_eq!(spans.len(), SPAN_RING_CAP);
+    assert_eq!(spans.first().unwrap().wall_nanos, 5, "oldest spans must be evicted");
+    assert_eq!(spans.last().unwrap().wall_nanos, (SPAN_RING_CAP + 4) as u64);
+}
+
+#[test]
+fn phase_names_cover_the_request_lifecycle_in_order() {
+    let names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+    assert_eq!(names, ["parse", "cache_lookup", "execute", "compile", "replay", "render"]);
+}

@@ -1,7 +1,7 @@
 //! Service-layer integration suite: wire round-trips for every request
 //! variant, the serve loop over in-memory pipes, the batch trace-sharing
-//! economy (the engine-level functional-execution counter), and
-//! CLI-vs-engine output parity for `run`, `sweep` and `explore`.
+//! economy (asserted on the metrics registry through `Request::Stats`),
+//! and CLI-vs-engine output parity for `run`, `sweep` and `explore`.
 
 use soft_simt::coordinator::job::{BenchJob, TraceCache};
 use soft_simt::coordinator::runner::SweepRunner;
@@ -34,6 +34,7 @@ fn every_variant() -> Vec<Request> {
         Request::Asm { source: ASM_SRC.into(), mem: MemoryArchKind::banked(4) },
         Request::Disasm { program: "transpose32".into() },
         Request::List,
+        Request::Stats,
     ]
 }
 
@@ -104,7 +105,8 @@ this is not json\n\
 
 /// The acceptance batch: paper sweep + explore + ten repeat runs costs
 /// exactly six functional executions (one per distinct workload), and
-/// repeating the whole batch adds zero.
+/// repeating the whole batch adds zero. The count is asserted the way a
+/// client would see it: on the `Stats` response closing the batch.
 #[test]
 fn batch_shares_traces_across_sweep_explore_and_runs() {
     let engine = SimtEngine::with_runner(SweepRunner::new(4));
@@ -122,21 +124,38 @@ fn batch_shares_traces_across_sweep_explore_and_runs() {
             mem: archs[i % archs.len()],
         });
     }
+    batch.push(Request::Stats);
     let responses = engine.handle_batch(&batch);
     assert_eq!(responses.len(), batch.len());
     for (req, resp) in batch.iter().zip(&responses) {
         assert!(resp.is_ok(), "{req:?} failed: {:?}", resp.as_ref().err());
     }
     // Six distinct (program, seed) workloads in the paper sweep; the
-    // explore and all ten runs ride on those traces.
-    assert_eq!(engine.functional_executions(), 6);
+    // explore and all ten runs ride on those traces. The closing Stats
+    // request snapshots the registry after everything before it.
+    let Ok(Response::Stats(snap)) = responses.last().unwrap() else {
+        panic!("batch ends with the stats snapshot")
+    };
+    assert_eq!(snap.counter("exec.functional_executions"), Some(6));
+    assert_eq!(snap.counter("trace_cache.misses"), Some(6));
     assert_eq!(engine.cache().len(), 6);
 
-    // Repeat requests leave the cache untouched.
+    // Repeat requests leave the cache untouched — and the warm pass
+    // advances the hit counter without a single new execution.
     let before = engine.cache().len();
-    engine.handle_batch(&batch).iter().for_each(|r| assert!(r.is_ok()));
+    let responses = engine.handle_batch(&batch);
+    responses.iter().for_each(|r| assert!(r.is_ok()));
     assert_eq!(engine.cache().len(), before, "repeat batch captures nothing");
-    assert_eq!(engine.functional_executions(), 6);
+    let Ok(Response::Stats(snap)) = responses.last().unwrap() else {
+        panic!("batch ends with the stats snapshot")
+    };
+    assert_eq!(snap.counter("exec.functional_executions"), Some(6));
+    assert!(
+        snap.counter("trace_cache.hits").unwrap() >= 1,
+        "warm batch must be served from the trace cache: {:?}",
+        snap.counters
+    );
+    assert!(snap.counter("replay.packed_invocations").unwrap() >= 2, "both sweeps packed");
 }
 
 /// Pre-redesign `print_report`, verbatim — the pinned `run` stdout.
@@ -257,8 +276,10 @@ fn serve_answers_a_batch_of_every_variant() {
         panic!("batch response is an array")
     };
     assert_eq!(items.len(), every_variant().len());
-    let expected_ops =
-        ["run", "sweep", "table", "advise", "explore", "validate", "asm", "disasm", "list"];
+    let expected_ops = [
+        "run", "sweep", "table", "advise", "explore", "validate", "asm", "disasm", "list",
+        "stats",
+    ];
     for (item, expected) in items.iter().zip(expected_ops) {
         assert_eq!(
             item.get("ok"),
@@ -276,6 +297,60 @@ fn serve_answers_a_batch_of_every_variant() {
     // asm run (validation's functional checks are uncounted by design).
     assert_eq!(engine.functional_executions(), 7);
     assert_eq!(engine.cache().len(), 6);
+    // The closing stats item saw every earlier request of the batch:
+    // its snapshot is taken before its own bookkeeping lands.
+    let stats = items.last().unwrap();
+    let counters = stats.get("counters").expect("stats carries counters");
+    assert_eq!(
+        counters.get("exec.functional_executions").and_then(Json::as_f64),
+        Some(7.0)
+    );
+    assert_eq!(
+        counters.get("requests.served").and_then(Json::as_f64),
+        Some((expected_ops.len() - 1) as f64)
+    );
+    assert!(stats.get("histograms").is_some() && stats.get("spans").is_some());
+}
+
+/// A serve session's telemetry, end to end over the wire: a repeated
+/// `run` is served warm from the trace cache, and the closing `stats`
+/// line reports it — the ISSUE's acceptance check, over real pipes.
+#[test]
+fn serve_stats_line_reports_warm_cache_and_spans() {
+    let engine = SimtEngine::with_runner(SweepRunner::new(2));
+    let input = "\
+{\"op\":\"run\",\"program\":\"transpose32\",\"mem\":\"16-banks\"}\n\
+{\"op\":\"run\",\"program\":\"transpose32\",\"mem\":\"16-banks\"}\n\
+[{\"op\":\"list\"},{\"op\":\"stats\"}]\n\
+{\"op\":\"stats\"}\n";
+    let mut output = Vec::new();
+    wire::serve(&engine, input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4);
+    // Stats inside a batch array answers like any other member.
+    let Json::Arr(items) = parse_json(lines[2]).unwrap() else {
+        panic!("batch line answers an array: {}", lines[2])
+    };
+    assert_eq!(items[1].get("op").and_then(Json::as_str), Some("stats"));
+    assert_eq!(items[1].get("ok"), Some(&Json::Bool(true)));
+    // The closing standalone stats line: the second run was warm (one
+    // execution, at least one hit), and the earlier wire lines already
+    // landed spans in the ring.
+    let stats = parse_json(lines[3]).unwrap();
+    let counters = stats.get("counters").expect("counters object");
+    assert_eq!(counters.get("exec.functional_executions").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(counters.get("trace_cache.misses").and_then(Json::as_f64), Some(1.0));
+    assert!(counters.get("trace_cache.hits").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert!(counters.get("replay.scalar_invocations").and_then(Json::as_f64).unwrap() >= 2.0);
+    // Four requests answered before this snapshot (2 runs, list, the
+    // batch's stats); the snapshot precedes its own bookkeeping.
+    assert_eq!(counters.get("requests.served").and_then(Json::as_f64), Some(4.0));
+    let Some(Json::Arr(spans)) = stats.get("spans").cloned() else {
+        panic!("stats carries a spans array")
+    };
+    assert_eq!(spans.len(), 3, "three wire lines finished before this one");
+    assert_eq!(spans[2].get("op").and_then(Json::as_str), Some("batch"));
 }
 
 #[test]

@@ -4,7 +4,8 @@
 Usage:
   check_bench_regression.py --current CAND [CAND ...] --baseline BASE \
       --metrics NAME [NAME ...] [--max-regression 1.20] \
-      [--floor NAME=VALUE [NAME=VALUE ...]]
+      [--floor NAME=VALUE [NAME=VALUE ...]] \
+      [--ceiling NAME=VALUE [NAME=VALUE ...]]
 
 - CAND: candidate locations of the freshly produced bench JSON (the first
   existing path wins; cargo runs bench binaries from the package root, so
@@ -23,6 +24,11 @@ Usage:
   JSON's `simd_speedup` is below 4.0 or missing. Use floors for
   dimensionless ratios (speedups) that do not depend on runner speed
   and therefore need no per-runner blessing.
+- Ceilings are the lower-is-better twin of floors (absolute, no
+  baseline): `--ceiling instrumented_overhead_pct=2.0` fails when the
+  current JSON's `instrumented_overhead_pct` exceeds 2.0 or is missing.
+  Used to bound the observability overhead on the replay hot path
+  (DESIGN.md §Observability).
 
 Exit codes: 0 ok/skipped, 1 regression, 2 usage/IO error.
 """
@@ -40,21 +46,31 @@ def main() -> int:
     ap.add_argument("--metrics", nargs="*", default=[])
     ap.add_argument("--max-regression", type=float, default=1.20)
     ap.add_argument("--floor", nargs="*", default=[], metavar="NAME=VALUE")
+    ap.add_argument("--ceiling", nargs="*", default=[], metavar="NAME=VALUE")
     args = ap.parse_args()
-    if not args.metrics and not args.floor:
-        print("error: nothing to check (need --metrics and/or --floor)", file=sys.stderr)
+    if not args.metrics and not args.floor and not args.ceiling:
+        print("error: nothing to check (need --metrics, --floor and/or --ceiling)",
+              file=sys.stderr)
         return 2
-    floors = []
-    for spec in args.floor:
-        name, sep, value = spec.partition("=")
-        try:
-            threshold = float(value)
-        except ValueError:
-            sep = ""
-        if not sep or not name:
-            print(f"error: bad --floor spec {spec!r} (want NAME=VALUE)", file=sys.stderr)
-            return 2
-        floors.append((name, threshold))
+
+    def parse_thresholds(specs, flag):
+        parsed = []
+        for spec in specs:
+            name, sep, value = spec.partition("=")
+            try:
+                threshold = float(value)
+            except ValueError:
+                sep = ""
+            if not sep or not name:
+                print(f"error: bad {flag} spec {spec!r} (want NAME=VALUE)", file=sys.stderr)
+                return None
+            parsed.append((name, threshold))
+        return parsed
+
+    floors = parse_thresholds(args.floor, "--floor")
+    ceilings = parse_thresholds(args.ceiling, "--ceiling")
+    if floors is None or ceilings is None:
+        return 2
 
     current_path = next((p for p in map(Path, args.current) if p.is_file()), None)
     if current_path is None:
@@ -103,6 +119,20 @@ def main() -> int:
         verdict = "FAIL" if cur < floor else "ok"
         line = f"{verdict:5} {name}: current {cur:.3f} vs floor {floor:.3f} (higher is better)"
         if cur < floor:
+            print(line, file=sys.stderr)
+            failed = True
+        else:
+            print(line)
+    for name, ceiling in ceilings:
+        cur = current.get(name)
+        if cur is None:
+            print(f"FAIL  {name}: missing from {current_path} (ceiling {ceiling:.3f})",
+                  file=sys.stderr)
+            failed = True
+            continue
+        verdict = "FAIL" if cur > ceiling else "ok"
+        line = f"{verdict:5} {name}: current {cur:.3f} vs ceiling {ceiling:.3f} (lower is better)"
+        if cur > ceiling:
             print(line, file=sys.stderr)
             failed = True
         else:

@@ -1,0 +1,179 @@
+"""Unit tests for check_bench_regression.py (run by the CI python step:
+`python3 -m unittest discover -s scripts -p 'test_*.py'`).
+
+The gate has three modes — baseline-relative regression budgets
+(--metrics/--max-regression), absolute higher-is-better floors
+(--floor), and absolute lower-is-better ceilings (--ceiling, bounding
+the observability overhead) — plus the null-baseline skip path. Each is
+pinned here by invoking main() in-process with patched argv.
+"""
+
+import json
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+from unittest import mock
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import check_bench_regression  # noqa: E402
+
+
+class GateHarness(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self.tmp.cleanup)
+        self.dir = Path(self.tmp.name)
+
+    def write(self, name, payload):
+        path = self.dir / name
+        path.write_text(json.dumps(payload))
+        return str(path)
+
+    def run_gate(self, *argv):
+        with mock.patch.object(sys, "argv", ["check_bench_regression.py", *argv]):
+            return check_bench_regression.main()
+
+
+class MetricsModeTests(GateHarness):
+    def test_within_budget_passes(self):
+        cur = self.write("cur.json", {"warm_median_ms": 11.0})
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--metrics", "warm_median_ms", "--max-regression", "1.20")
+        self.assertEqual(code, 0)
+
+    def test_regression_past_budget_fails(self):
+        cur = self.write("cur.json", {"warm_median_ms": 12.5})
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--metrics", "warm_median_ms", "--max-regression", "1.20")
+        self.assertEqual(code, 1)
+
+    def test_null_baseline_is_skipped_not_failed(self):
+        cur = self.write("cur.json", {"warm_median_ms": 999.0})
+        base = self.write("base.json", {"warm_median_ms": None})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--metrics", "warm_median_ms")
+        self.assertEqual(code, 0, "null baseline means 'not blessed yet', never a failure")
+
+    def test_metric_missing_from_current_fails(self):
+        cur = self.write("cur.json", {})
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--metrics", "warm_median_ms")
+        self.assertEqual(code, 1)
+
+    def test_first_existing_current_candidate_wins(self):
+        cur = self.write("cur.json", {"warm_median_ms": 10.0})
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        missing = str(self.dir / "does_not_exist.json")
+        code = self.run_gate("--current", missing, cur, "--baseline", base,
+                             "--metrics", "warm_median_ms")
+        self.assertEqual(code, 0)
+
+    def test_no_current_anywhere_is_usage_error(self):
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        code = self.run_gate("--current", str(self.dir / "nope.json"),
+                             "--baseline", base, "--metrics", "warm_median_ms")
+        self.assertEqual(code, 2)
+
+
+class FloorModeTests(GateHarness):
+    def test_floor_met_passes(self):
+        cur = self.write("cur.json", {"simd_speedup": 5.1})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--floor", "simd_speedup=4.0")
+        self.assertEqual(code, 0)
+
+    def test_floor_violated_fails(self):
+        cur = self.write("cur.json", {"simd_speedup": 3.2})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--floor", "simd_speedup=4.0")
+        self.assertEqual(code, 1)
+
+    def test_bad_floor_spec_is_usage_error(self):
+        cur = self.write("cur.json", {"simd_speedup": 5.0})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--floor", "simd_speedup")
+        self.assertEqual(code, 2)
+
+
+class CeilingModeTests(GateHarness):
+    def test_under_ceiling_passes(self):
+        cur = self.write("cur.json", {"instrumented_overhead_pct": 0.7})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--ceiling", "instrumented_overhead_pct=2.0")
+        self.assertEqual(code, 0)
+
+    def test_at_ceiling_passes(self):
+        cur = self.write("cur.json", {"instrumented_overhead_pct": 2.0})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--ceiling", "instrumented_overhead_pct=2.0")
+        self.assertEqual(code, 0, "the ceiling itself is inside the budget")
+
+    def test_over_ceiling_fails(self):
+        cur = self.write("cur.json", {"instrumented_overhead_pct": 2.3})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--ceiling", "instrumented_overhead_pct=2.0")
+        self.assertEqual(code, 1)
+
+    def test_missing_ceiling_metric_fails(self):
+        # A bench that stops emitting the overhead number must not
+        # silently pass the overhead gate.
+        cur = self.write("cur.json", {"warm_median_ms": 1.0})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--ceiling", "instrumented_overhead_pct=2.0")
+        self.assertEqual(code, 1)
+
+    def test_bad_ceiling_spec_is_usage_error(self):
+        cur = self.write("cur.json", {"instrumented_overhead_pct": 1.0})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--ceiling", "overhead=not_a_number")
+        self.assertEqual(code, 2)
+
+
+class CombinedModeTests(GateHarness):
+    def test_nothing_to_check_is_usage_error(self):
+        cur = self.write("cur.json", {})
+        base = self.write("base.json", {})
+        code = self.run_gate("--current", cur, "--baseline", base)
+        self.assertEqual(code, 2)
+
+    def test_any_failing_mode_fails_the_gate(self):
+        cur = self.write("cur.json", {
+            "warm_median_ms": 10.0,
+            "simd_speedup": 5.0,
+            "instrumented_overhead_pct": 9.9,
+        })
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--metrics", "warm_median_ms",
+                             "--floor", "simd_speedup=4.0",
+                             "--ceiling", "instrumented_overhead_pct=2.0")
+        self.assertEqual(code, 1)
+
+    def test_all_modes_passing_together(self):
+        cur = self.write("cur.json", {
+            "warm_median_ms": 10.5,
+            "simd_speedup": 5.0,
+            "instrumented_overhead_pct": 0.4,
+        })
+        base = self.write("base.json", {"warm_median_ms": 10.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--metrics", "warm_median_ms",
+                             "--floor", "simd_speedup=4.0",
+                             "--ceiling", "instrumented_overhead_pct=2.0")
+        self.assertEqual(code, 0)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,13 +1,74 @@
 //! Bench: service-engine throughput on a mixed batch (repeat runs + the
-//! paper sweep + a design-space exploration) — emits `BENCH_serve.json`
-//! (requests/sec, functional executions per batch) so CI can track the
-//! service layer's trajectory next to `BENCH_sweep.json` and
-//! `BENCH_explore.json`.
+//! paper sweep + a design-space exploration), plus a **saturation mode**
+//! — N in-process client sessions (1/4/16) hammering one warm shared
+//! engine with single requests, reporting per-request p50/p99 latency
+//! and aggregate throughput per client count. Emits `BENCH_serve.json`
+//! so CI can track the service layer's trajectory next to
+//! `BENCH_sweep.json` and `BENCH_explore.json`.
+//!
+//! The saturation section also asserts the ISSUE's warm-path guarantee:
+//! the whole measured window takes **zero** trace-store shard write
+//! locks (`store.shard_write_locks` is flat), i.e. concurrent warm
+//! reads really are read-lock-only.
 
 use soft_simt::benchkit::Bencher;
 use soft_simt::coordinator::runner::SweepRunner;
 use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::obs::{Counter, Histogram};
+use soft_simt::server::Session;
 use soft_simt::service::{ExploreStrategy, Request, SimtEngine};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Concurrency levels for the saturation mode.
+const CLIENT_COUNTS: [usize; 3] = [1, 4, 16];
+/// Warm requests each client issues per saturation point.
+const REQUESTS_PER_CLIENT: usize = 256;
+
+struct SaturationPoint {
+    clients: usize,
+    p50_us: u64,
+    p99_us: u64,
+    throughput_rps: f64,
+}
+
+/// One saturation point: `clients` sessions over the shared warm
+/// engine, each issuing [`REQUESTS_PER_CLIENT`] single `Run` requests;
+/// per-request latency lands in one shared lock-free histogram.
+fn saturate(engine: &Arc<SimtEngine>, clients: usize) -> SaturationPoint {
+    let hist = Histogram::new();
+    let archs = MemoryArchKind::table3_nine();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let engine = Arc::clone(engine);
+            let hist = &hist;
+            let archs = &archs;
+            scope.spawn(move || {
+                let session = Session::new(engine);
+                for k in 0..REQUESTS_PER_CLIENT {
+                    let program =
+                        if (c + k) % 2 == 0 { "transpose32" } else { "transpose64" };
+                    let req = Request::Run {
+                        program: program.into(),
+                        mem: archs[(c + k) % archs.len()],
+                    };
+                    let t = Instant::now();
+                    session.handle(&req).expect("warm run");
+                    hist.record(t.elapsed().as_micros() as u64);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let counts = hist.snapshot();
+    SaturationPoint {
+        clients,
+        p50_us: counts.percentile(0.50),
+        p99_us: counts.percentile(0.99),
+        throughput_rps: (clients * REQUESTS_PER_CLIENT) as f64 / wall,
+    }
+}
 
 /// The measured unit: a session-shaped batch — one sweep, one explore,
 /// twenty repeat runs across memories.
@@ -96,22 +157,68 @@ fn main() {
         instrumented_overhead_pct
     );
 
+    // Saturation mode: a dedicated shared engine, warmed so every
+    // workload's trace and compiled form already exist — the measured
+    // window is pure concurrent warm traffic.
+    let shared = Arc::new(SimtEngine::new());
+    for arch in MemoryArchKind::table3_nine() {
+        for program in ["transpose32", "transpose64"] {
+            // Twice per cell: the second run builds the compiled trace.
+            for _ in 0..2 {
+                shared
+                    .handle(&Request::Run { program: program.into(), mem: arch })
+                    .expect("warmup run");
+            }
+        }
+    }
+    let warm_locks = shared.metrics().get(Counter::StoreShardWriteLocks);
+    let mut points = Vec::new();
+    for &clients in &CLIENT_COUNTS {
+        let p = saturate(&shared, clients);
+        println!(
+            "saturation c{:<2}  p50 {:>6} us  p99 {:>6} us  {:>9.1} req/s",
+            p.clients, p.p50_us, p.p99_us, p.throughput_rps
+        );
+        points.push(p);
+    }
+    assert_eq!(
+        shared.metrics().get(Counter::StoreShardWriteLocks),
+        warm_locks,
+        "warm saturation traffic must take no shard write lock"
+    );
+    println!(
+        "shard write locks flat at {} across {} concurrent warm requests",
+        warm_locks,
+        CLIENT_COUNTS.iter().sum::<usize>() * REQUESTS_PER_CLIENT
+    );
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
-    let json = format!(
+    let mut json = format!(
         "{{\n  \"bench\": \"serve_mixed_batch\",\n  \"unix_time\": {unix_time},\n  \
          \"batch_requests\": {n},\n  \"cold_median_ms\": {cold_ms:.3},\n  \
          \"warm_median_ms\": {warm_ms:.3},\n  \"warm_requests_per_sec\": {warm_rps:.1},\n  \
          \"functional_executions_per_cold_batch\": {executions},\n  \
          \"warm_recording_off_median_ms\": {warm_off_ms:.3},\n  \
-         \"instrumented_overhead_pct\": {instrumented_overhead_pct:.3}\n}}\n",
+         \"instrumented_overhead_pct\": {instrumented_overhead_pct:.3}",
         n = batch.len(),
         cold_ms = cold.median().as_secs_f64() * 1e3,
         warm_ms = warm.median().as_secs_f64() * 1e3,
         warm_off_ms = warm_off.median().as_secs_f64() * 1e3,
     );
+    for p in &points {
+        json.push_str(&format!(
+            ",\n  \"concurrent_c{c}_p50_us\": {p50},\n  \"concurrent_c{c}_p99_us\": {p99},\n  \
+             \"concurrent_c{c}_throughput_rps\": {rps:.1}",
+            c = p.clients,
+            p50 = p.p50_us,
+            p99 = p.p99_us,
+            rps = p.throughput_rps,
+        ));
+    }
+    json.push_str("\n}\n");
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),

@@ -7,14 +7,14 @@ use crate::mem::arch::MemoryArchKind;
 use crate::obs::{Counter, MetricsRegistry};
 use crate::programs::library::{program_by_name, Workload};
 use crate::programs::registry;
+use crate::server::store::ShardedStore;
 use crate::sim::compiled::{self, CompiledTrace};
 use crate::sim::config::MachineConfig;
 use crate::sim::exec::{self, ExecParams, FlatMemory, MemTrace};
 use crate::sim::machine::{Machine, SimError};
 use crate::sim::replay;
 use crate::sim::stats::RunReport;
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 /// Job descriptor (cheap to clone and ship to worker threads).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -168,13 +168,23 @@ pub struct BenchResult {
 /// `(program, data-image seed)`. A 9-architecture × N-program sweep hits
 /// the expensive functional simulation once per program and replays
 /// timing 9×. The cache also memoizes each trace's **compiled** form
-/// ([`CompiledTrace`], built at most once per key), so the batch
+/// ([`CompiledTrace`], built exactly once per key), so the batch
 /// replayer's one-walk-per-slate kernel is as shareable as the traces
 /// themselves.
+///
+/// Both maps are [`ShardedStore`]s (DESIGN.md §Server): warm lookups
+/// take only a shard read lock and clone an `Arc`, so any number of
+/// concurrent sessions read without serializing, and cold captures and
+/// compilations are **single-flight** — however many requests race for
+/// an absent key, the expensive work runs once and everyone shares the
+/// one result. Capture outcomes are cached *including errors*: the
+/// trace of a `(program, seed)` key is deterministic, so a failed
+/// capture is a failed capture forever and re-serving the cached
+/// [`SimError`] is both correct and cheap.
 #[derive(Debug, Default)]
 pub struct TraceCache {
-    traces: Mutex<HashMap<TraceKey, Arc<MemTrace>>>,
-    compiled: Mutex<HashMap<TraceKey, Arc<CompiledTrace>>>,
+    traces: ShardedStore<Result<Arc<MemTrace>, SimError>>,
+    compiled: ShardedStore<Arc<CompiledTrace>>,
     /// Session metrics, attached once by the owning engine. Hit/miss
     /// counting rides the cache so every consumer (engine, runner,
     /// explorer, advisor) reports through one set of counters.
@@ -205,9 +215,14 @@ impl TraceCache {
         }
     }
 
-    /// Number of cached traces.
+    fn metrics_ref(&self) -> Option<&MetricsRegistry> {
+        self.metrics.get().map(Arc::as_ref)
+    }
+
+    /// Number of successfully cached traces (cached capture *errors*
+    /// are excluded — they occupy a single-flight cell, not a trace).
     pub fn len(&self) -> usize {
-        self.traces.lock().unwrap().len()
+        self.traces.count_initialized(|r| r.is_ok())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -230,21 +245,26 @@ impl TraceCache {
 
     /// Look up a cached trace without touching the hit/miss counters
     /// (for re-checks and bulk filters that account for themselves,
-    /// e.g. the sweep runner's capture phase).
+    /// e.g. the sweep runner's capture phase). Shard-read-lock only: an
+    /// in-flight capture on another thread reads as absent (joining it
+    /// is [`Self::get_or_capture`]'s job).
     pub fn peek(&self, key: &TraceKey) -> Option<Arc<MemTrace>> {
-        self.traces.lock().unwrap().get(key).cloned()
+        self.traces.get(key, self.metrics_ref()).and_then(|r| r.ok())
     }
 
     /// Insert a trace (first insert wins; concurrent duplicates are
     /// dropped).
     pub fn insert(&self, key: TraceKey, trace: Arc<MemTrace>) {
-        self.traces.lock().unwrap().entry(key).or_insert(trace);
+        self.traces.cell(&key, self.metrics_ref()).get_or_init(|| Ok(trace));
     }
 
-    /// Fetch the job's trace, capturing it on a miss. Callers wanting to
-    /// avoid concurrent duplicate captures should pre-populate the cache
-    /// (as [`crate::coordinator::runner::SweepRunner::run_with_cache`]
-    /// does in its capture phase).
+    /// Fetch the job's trace, capturing it on a miss — **single-flight**:
+    /// concurrent callers racing on the same absent key block on the
+    /// one capture in flight and share its result, so each distinct key
+    /// is functionally executed exactly once however the requests
+    /// interleave (counted `exec.functional_executions` inside the
+    /// initializer, which is what keeps that counter exact under
+    /// concurrency). The warm path is shard-read-lock only.
     ///
     /// The internal warm check is an uncounted [`Self::peek`]: callers
     /// that want the lookup on the hit/miss counters (the engine, the
@@ -252,36 +272,43 @@ impl TraceCache {
     /// logical access never counts twice.
     pub fn get_or_capture(&self, job: &BenchJob) -> Result<Arc<MemTrace>, SimError> {
         let key = job.trace_key();
-        if let Some(t) = self.peek(&key) {
-            return Ok(t);
-        }
-        let trace = Arc::new(job.capture_trace()?);
-        self.insert(key, Arc::clone(&trace));
-        Ok(trace)
+        let cell = self.traces.cell(&key, self.metrics_ref());
+        cell.get_or_init(|| {
+            let trace = job.capture_trace()?;
+            self.count(Counter::FunctionalExecutions);
+            Ok(Arc::new(trace))
+        })
+        .clone()
     }
 
     /// Fetch the compiled form of `trace` under `key`, compiling on a
-    /// miss (first compile wins on a concurrent race). The compilation
-    /// is the one-walk family precomputation of DESIGN.md §Replay —
-    /// cached here so repeat sweeps, explorations and engine `Run`s over
-    /// a warm trace never re-hash an address.
+    /// miss — single-flight like captures, so each key's compilation is
+    /// built **exactly once** even under concurrent first touches
+    /// (losing racers block on the winner and share the memo). The
+    /// compilation is the one-walk family precomputation of DESIGN.md
+    /// §Replay — cached here so repeat sweeps, explorations and engine
+    /// `Run`s over a warm trace never re-hash an address.
     ///
-    /// Counted as `compiled.{hits,builds}`; a losing racer's build is
-    /// still a build performed, so `compiled.builds` can exceed
-    /// [`Self::compiled_len`] under concurrent first touches.
+    /// Counted as `compiled.{hits,builds}`: every call lands exactly
+    /// one of the two, and `compiled.builds` equals
+    /// [`Self::compiled_len`] growth.
     pub fn get_or_compile(&self, key: &TraceKey, trace: &MemTrace) -> Arc<CompiledTrace> {
-        if let Some(c) = self.compiled.lock().unwrap().get(key) {
+        let cell = self.compiled.cell(key, self.metrics_ref());
+        let mut built = false;
+        let compiled = cell.get_or_init(|| {
+            built = true;
+            self.count(Counter::CompiledBuilds);
+            Arc::new(CompiledTrace::compile(trace))
+        });
+        if !built {
             self.count(Counter::CompiledHits);
-            return Arc::clone(c);
         }
-        let built = Arc::new(CompiledTrace::compile(trace));
-        self.count(Counter::CompiledBuilds);
-        Arc::clone(self.compiled.lock().unwrap().entry(key.clone()).or_insert(built))
+        Arc::clone(compiled)
     }
 
     /// Number of cached compiled traces (≤ [`Self::len`]).
     pub fn compiled_len(&self) -> usize {
-        self.compiled.lock().unwrap().len()
+        self.compiled.count_initialized(|_| true)
     }
 }
 

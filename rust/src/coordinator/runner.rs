@@ -269,13 +269,14 @@ impl SweepRunner {
                 cache.peek(&key).is_none() && seen.insert(key)
             })
             .collect();
+        // Captures go through the cache's single-flight cells, so a
+        // concurrent sweep (or engine request) racing on the same key
+        // joins this sweep's capture instead of duplicating it.
         let captured: Result<Vec<Arc<_>>, SimError> = self
-            .parallel_map(&pending, |job| job.capture_trace().map(Arc::new))
+            .parallel_map(&pending, |job| cache.get_or_capture(job))
             .into_iter()
             .collect();
-        for (job, trace) in pending.iter().zip(captured?) {
-            cache.insert(job.trace_key(), trace);
-        }
+        captured?;
         phases.capture = t0.elapsed();
 
         // Compile phase: group cells by trace key, compile each distinct

@@ -74,6 +74,18 @@
 //! spans — lives in [`obs`], is threaded through the cache, runner and
 //! explorer, and is queryable in-band via `Request::Stats` or the
 //! `soft-simt stats` CLI (DESIGN.md §Observability).
+//!
+//! ## The server layer (DESIGN.md §Server)
+//!
+//! [`server`] makes one engine genuinely multi-client: the trace cache
+//! is backed by a sharded, single-flight [`server::ShardedStore`] (warm
+//! reads take only a shard read lock — the serving-side analogue of the
+//! paper's banked memories), each client is a [`server::Session`] with
+//! isolated bookkeeping over the shared `Arc<SimtEngine>`, batches fan
+//! out concurrently onto the worker pool, a [`server::Dispatcher`]
+//! bounds in-flight work (reject-with-`Overloaded` past a configurable
+//! depth), and `soft-simt serve --listen ADDR` accepts TCP and
+//! Unix-socket clients over the same wire transport as stdin.
 
 pub mod area;
 pub mod benchkit;
@@ -84,6 +96,7 @@ pub mod mem;
 pub mod obs;
 pub mod programs;
 pub mod runtime;
+pub mod server;
 pub mod service;
 pub mod sim;
 pub mod util;
@@ -104,8 +117,9 @@ pub mod prelude {
         report,
         runner::SweepRunner,
     };
+    pub use crate::server::{Dispatcher, ListenAddr, Session, ShardedStore, SocketServer};
     pub use crate::service::{
-        ExploreStrategy, Request, Response, ServiceError, SimtEngine, TableKind,
+        ExploreStrategy, Request, Response, ServiceError, SimtEngine, StatsScope, TableKind,
     };
     pub use crate::explore::{
         explore, DesignPoint, DesignSpace, Exhaustive, ExploreResult, ParetoFront, SearchStrategy,

@@ -12,6 +12,7 @@
 //! soft-simt disasm PROG             # disassemble a generated program
 //! soft-simt list                    # programs and memory architectures
 //! soft-simt serve                   # JSON requests on stdin → stdout
+//! soft-simt serve --listen ADDR     # concurrent TCP / unix-socket clients
 //! soft-simt stats                   # session telemetry snapshot
 //! ```
 //!
@@ -22,13 +23,17 @@
 //! policy. (clap is unavailable offline; parsing is hand-rolled.)
 
 use soft_simt::coordinator::job::BenchJob;
+use soft_simt::server::{ListenAddr, Session, SocketServer};
 use soft_simt::service::{
-    wire, ExploreStrategy, Request, Response, ServiceError, SimtEngine, TableKind,
+    wire, ExploreStrategy, Request, Response, ServiceError, SimtEngine, StatsScope, TableKind,
 };
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let engine = SimtEngine::new();
+    // Arc so `serve --listen` can share the one engine session across
+    // client threads; every other command sees it as a plain reference.
+    let engine = Arc::new(SimtEngine::new());
     let outcome = match args.first().map(String::as_str) {
         Some("table1") => cmd_table(&engine, TableKind::Table1),
         Some("table2") => cmd_table(&engine, TableKind::Table2),
@@ -88,6 +93,13 @@ USAGE:
                                         (one engine session: traces shared
                                         across all requests); on exit, dump a
                                         metrics snapshot to PATH if given
+  soft-simt serve --listen ADDR [--depth N]
+                                        accept concurrent TCP (HOST:PORT) or
+                                        unix-socket (unix:PATH) clients; all
+                                        sessions share one engine and trace
+                                        store; N bounds in-flight requests
+                                        (default 64; exit-code-3 rejections
+                                        past it)
 ";
 
 fn flag_value<'a>(args: &'a [String], names: &[&str]) -> Option<&'a str> {
@@ -225,16 +237,39 @@ fn cmd_list(engine: &SimtEngine) -> Result<i32, ServiceError> {
 }
 
 fn cmd_stats(engine: &SimtEngine) -> Result<i32, ServiceError> {
-    let resp = engine.handle(&Request::Stats)?;
+    let resp = engine.handle(&Request::Stats { scope: StatsScope::Engine })?;
     print!("{}", resp.render());
     Ok(resp.exit_code())
 }
 
-fn cmd_serve(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError> {
+fn cmd_serve(engine: &Arc<SimtEngine>, rest: &[String]) -> Result<i32, ServiceError> {
+    let depth = match flag_value(rest, &["--depth"]) {
+        None => 64,
+        Some(s) => s.parse::<usize>().map_err(|_| {
+            ServiceError::BadRequest(format!("serve: --depth must be a count, got '{s}'"))
+        })?,
+    };
+    if let Some(addr) = flag_value(rest, &["--listen"]) {
+        // Socket front-end: concurrent clients, one Session each, one
+        // shared dispatcher bounding in-flight lines (DESIGN.md §Server).
+        let addr = ListenAddr::parse(addr)?;
+        let server = SocketServer::bind(Arc::clone(engine), &addr, depth)
+            .map_err(|e| ServiceError::io("binding --listen address", &e))?;
+        eprintln!(
+            "listening on {} (depth {depth}, {} workers)",
+            server.local_addr().unwrap_or_else(|| "<unknown>".into()),
+            engine.runner().workers()
+        );
+        server.run().map_err(|e| ServiceError::io("accept loop", &e))?;
+        return Ok(0);
+    }
     let metrics_path = flag_value(rest, &["--metrics-json"]).map(String::from);
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
-    wire::serve(engine, stdin.lock(), stdout.lock())
+    // The stdin loop is a thin single-session adapter over the same
+    // transport the socket clients run (byte-identical per line).
+    let session = Session::new(Arc::clone(engine));
+    wire::serve(&session, stdin.lock(), stdout.lock())
         .map_err(|e| ServiceError::io("serve loop", &e))?;
     if let Some(path) = &metrics_path {
         // End-of-session snapshot: the whole serve run's counters,

@@ -27,7 +27,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Number of registered counters (the length of [`Counter::ALL`]).
-pub const COUNTERS: usize = 14;
+pub const COUNTERS: usize = 18;
 
 /// Every counter in the registry. Discriminants index the registry's
 /// atomic array; [`Counter::name`] is the stable wire/text name.
@@ -63,6 +63,18 @@ pub enum Counter {
     ReplayWavefrontSegments,
     /// Write-pipeline stall cycles summed over replayed runs.
     ReplayWbufStallCycles,
+    /// Shard write-lock acquisitions in the sharded trace store (cold
+    /// inserts only; a warm read path that stays at zero is the
+    /// lock-free-read guarantee the serve bench asserts).
+    StoreShardWriteLocks,
+    /// Read-lock acquisitions that found the shard momentarily busy and
+    /// had to block (`try_read` miss → blocking `read`).
+    StoreShardReadContention,
+    /// `Session`s opened against the engine (stdin adapter + sockets).
+    SessionsOpened,
+    /// Requests rejected by the dispatcher's backpressure bound
+    /// (`ServiceError::Overloaded`).
+    OverloadRejections,
 }
 
 impl Counter {
@@ -82,6 +94,10 @@ impl Counter {
         Counter::ReplayPackedLaneSlots,
         Counter::ReplayWavefrontSegments,
         Counter::ReplayWbufStallCycles,
+        Counter::StoreShardWriteLocks,
+        Counter::StoreShardReadContention,
+        Counter::SessionsOpened,
+        Counter::OverloadRejections,
     ];
 
     /// Stable dotted wire/text name.
@@ -101,6 +117,10 @@ impl Counter {
             Counter::ReplayPackedLaneSlots => "replay.packed_lane_slots",
             Counter::ReplayWavefrontSegments => "replay.wavefront_segments",
             Counter::ReplayWbufStallCycles => "replay.wbuf_stall_cycles",
+            Counter::StoreShardWriteLocks => "store.shard_write_locks",
+            Counter::StoreShardReadContention => "store.shard_read_contention",
+            Counter::SessionsOpened => "server.sessions_opened",
+            Counter::OverloadRejections => "server.overload_rejections",
         }
     }
 }
@@ -330,6 +350,7 @@ impl MetricsRegistry {
     /// fine for telemetry (each counter is individually exact).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
+            scope: "engine",
             counters: Counter::ALL.iter().map(|&c| (c.name(), self.get(c))).collect(),
             histograms: Hist::ALL
                 .iter()
@@ -345,6 +366,10 @@ impl MetricsRegistry {
 /// summary, and the recent spans.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Which registry this snapshot reads: `"engine"` (the global
+    /// registry every request shares) or `"session"` (one client's
+    /// isolated bookkeeping — see `crate::server::Session`).
+    pub scope: &'static str,
     /// `(name, value)` in [`Counter::ALL`] order.
     pub counters: Vec<(&'static str, u64)>,
     pub histograms: Vec<HistogramSummary>,
@@ -362,8 +387,11 @@ impl MetricsSnapshot {
     /// `Stats` response's `text` field).
     pub fn render_text(&self) -> String {
         let mut out = String::new();
+        // The engine scope keeps its pre-session header verbatim; only
+        // the per-session view announces itself.
         out.push_str(&format!(
-            "session metrics (span recording {})\n\n",
+            "session metrics ({}span recording {})\n\n",
+            if self.scope == "engine" { "" } else { "session scope, " },
             if self.recording { "on" } else { "off" }
         ));
         let mut counters = TextTable::new(vec!["counter", "value"]);
@@ -429,7 +457,8 @@ impl MetricsSnapshot {
             })
             .collect();
         format!(
-            "\"recording\":{},\"counters\":{{{}}},\"histograms\":{{{}}},\"spans\":[{}]",
+            "\"scope\":{},\"recording\":{},\"counters\":{{{}}},\"histograms\":{{{}}},\"spans\":[{}]",
+            json_str(self.scope),
             self.recording,
             counters.join(","),
             hists.join(","),

@@ -1,0 +1,138 @@
+//! Backpressure: a bound on concurrently admitted wire lines.
+//!
+//! The paper's write buffer is the same shape in hardware: a fixed-depth
+//! queue that absorbs bursts and *stalls the issuer* when full, rather
+//! than growing without bound. Here the policy is reject-not-stall —
+//! a client pushed past the bound gets an immediate
+//! [`ServiceError::Overloaded`] line (exit code 3, retryable) instead of
+//! unbounded queueing, so saturated servers degrade by shedding load,
+//! not by stretching every client's latency.
+//!
+//! The [`Dispatcher`] is a counter, not a queue: admission is one
+//! compare-and-swap, rejection touches no lock, and the admitted work
+//! itself still runs on the engine's [`SweepRunner`] pool. One
+//! dispatcher is shared by every client of a
+//! [`SocketServer`](crate::server::SocketServer).
+
+use crate::obs::{Counter, MetricsRegistry};
+use crate::service::ServiceError;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Bounds in-flight wire lines across every session of one server.
+#[derive(Debug)]
+pub struct Dispatcher {
+    /// Maximum concurrently admitted lines.
+    depth: usize,
+    in_flight: AtomicUsize,
+    /// Engine-global registry (rejections are a server-wide signal, not
+    /// a per-session one).
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl Dispatcher {
+    pub fn new(depth: usize, metrics: Arc<MetricsRegistry>) -> Self {
+        Self { depth, in_flight: AtomicUsize::new(0), metrics }
+    }
+
+    /// The configured bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Lines currently admitted (racy by nature; exact only to an
+    /// observer holding all permits).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Admit one wire line, or reject it with
+    /// [`ServiceError::Overloaded`] (counted
+    /// `server.overload_rejections`). The permit releases its slot on
+    /// drop — hold it across the line's whole handle+render+write.
+    pub fn admit(&self) -> Result<Permit<'_>, ServiceError> {
+        let mut current = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if current >= self.depth {
+                self.metrics.inc(Counter::OverloadRejections);
+                return Err(ServiceError::Overloaded {
+                    in_flight: current,
+                    depth: self.depth,
+                });
+            }
+            match self.in_flight.compare_exchange_weak(
+                current,
+                current + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(Permit { dispatcher: self }),
+                Err(seen) => current = seen,
+            }
+        }
+    }
+}
+
+/// One admitted wire line's slot; releases on drop.
+#[derive(Debug)]
+pub struct Permit<'a> {
+    dispatcher: &'a Dispatcher,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.dispatcher.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_depth_then_rejects() {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let d = Dispatcher::new(2, Arc::clone(&metrics));
+        let a = d.admit().unwrap();
+        let _b = d.admit().unwrap();
+        assert_eq!(d.in_flight(), 2);
+        let err = d.admit().unwrap_err();
+        assert!(matches!(err, ServiceError::Overloaded { in_flight: 2, depth: 2 }));
+        assert_eq!(err.exit_code(), 3);
+        assert_eq!(metrics.get(Counter::OverloadRejections), 1);
+        // A released slot is immediately reusable.
+        drop(a);
+        assert_eq!(d.in_flight(), 1);
+        let _c = d.admit().unwrap();
+    }
+
+    #[test]
+    fn depth_zero_rejects_everything() {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let d = Dispatcher::new(0, metrics);
+        assert!(d.admit().is_err());
+        assert_eq!(d.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admissions_never_exceed_depth() {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let d = Dispatcher::new(4, metrics);
+        let peak = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..16 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        if let Ok(_permit) = d.admit() {
+                            let now = d.in_flight();
+                            peak.fetch_max(now, Ordering::Relaxed);
+                            assert!(now <= 4, "depth exceeded: {now}");
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(d.in_flight(), 0, "every permit released");
+        assert!(peak.load(Ordering::Relaxed) >= 1);
+    }
+}

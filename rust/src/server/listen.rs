@@ -1,0 +1,226 @@
+//! The socket front-end: `soft-simt serve --listen ADDR`.
+//!
+//! `std::net`/`std::os::unix::net` only (the crate is dependency-free):
+//! a blocking accept loop, one reader thread per client. Each accepted
+//! connection gets its own [`Session`] over the shared engine and runs
+//! the *same* [`wire::serve_with`] transport the stdin adapter uses —
+//! one code path, so socket clients and the stdin loop are
+//! byte-identical per line (pinned by the CI socket-smoke diff). All
+//! clients share one [`Dispatcher`], so the backpressure bound is
+//! server-wide, not per-connection.
+//!
+//! Address grammar ([`ListenAddr::parse`]):
+//!
+//! - `HOST:PORT` (e.g. `127.0.0.1:7878`, `0.0.0.0:0`) — TCP;
+//! - `unix:PATH` or any string containing `/` — a Unix domain socket
+//!   (rejected at parse time on non-Unix platforms).
+
+use super::dispatch::Dispatcher;
+use super::session::Session;
+use crate::service::wire;
+use crate::service::{ServiceError, SimtEngine};
+use std::io::BufReader;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::path::PathBuf;
+
+/// A parsed `--listen` address.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ListenAddr {
+    /// `HOST:PORT` for [`TcpListener::bind`].
+    Tcp(String),
+    /// Filesystem path of a Unix domain socket.
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse the `--listen` grammar (see the module docs). Usage-class
+    /// errors (`BadRequest`, exit code 2).
+    pub fn parse(s: &str) -> Result<Self, ServiceError> {
+        let unix_path = match s.strip_prefix("unix:") {
+            Some(path) => Some(path),
+            None if s.contains('/') => Some(s),
+            None => None,
+        };
+        match unix_path {
+            None => Ok(ListenAddr::Tcp(s.to_string())),
+            #[cfg(unix)]
+            Some(path) if !path.is_empty() => Ok(ListenAddr::Unix(PathBuf::from(path))),
+            #[cfg(unix)]
+            Some(_) => {
+                Err(ServiceError::BadRequest("empty unix socket path in --listen".into()))
+            }
+            #[cfg(not(unix))]
+            Some(_) => Err(ServiceError::BadRequest(
+                "unix socket addresses are not supported on this platform".into(),
+            )),
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+/// The accept loop behind `serve --listen`. See the module docs.
+#[derive(Debug)]
+pub struct SocketServer {
+    engine: Arc<SimtEngine>,
+    dispatcher: Arc<Dispatcher>,
+    listener: Listener,
+}
+
+impl SocketServer {
+    /// Bind the address and set up the shared dispatcher (`depth` bounds
+    /// in-flight wire lines across *all* clients). A stale Unix socket
+    /// file from a previous run is removed first.
+    pub fn bind(
+        engine: Arc<SimtEngine>,
+        addr: &ListenAddr,
+        depth: usize,
+    ) -> std::io::Result<Self> {
+        let listener = match addr {
+            ListenAddr::Tcp(hostport) => Listener::Tcp(TcpListener::bind(hostport)?),
+            #[cfg(unix)]
+            ListenAddr::Unix(path) => {
+                match std::fs::remove_file(path) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(e),
+                }
+                Listener::Unix(UnixListener::bind(path)?, path.clone())
+            }
+        };
+        let dispatcher =
+            Arc::new(Dispatcher::new(depth, Arc::clone(engine.metrics())));
+        Ok(Self { engine, dispatcher, listener })
+    }
+
+    /// The bound address — for TCP this is the *resolved* one (port 0
+    /// becomes the kernel's pick), which is what tests and the startup
+    /// banner print.
+    pub fn local_addr(&self) -> Option<String> {
+        match &self.listener {
+            Listener::Tcp(l) => l.local_addr().ok().map(|a| a.to_string()),
+            #[cfg(unix)]
+            Listener::Unix(_, path) => Some(path.display().to_string()),
+        }
+    }
+
+    /// The shared backpressure bound.
+    pub fn dispatcher(&self) -> &Arc<Dispatcher> {
+        &self.dispatcher
+    }
+
+    /// Accept clients forever (until the listener errors), one session
+    /// thread per connection. A single client's I/O failure closes that
+    /// client only; the loop keeps accepting.
+    pub fn run(&self) -> std::io::Result<()> {
+        match &self.listener {
+            Listener::Tcp(l) => {
+                for stream in l.incoming() {
+                    let stream = stream?;
+                    let _ = stream.set_nodelay(true);
+                    let reader = match stream.try_clone() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("serve: dropping client (clone failed: {e})");
+                            continue;
+                        }
+                    };
+                    self.spawn_client(reader, stream);
+                }
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => {
+                for stream in l.incoming() {
+                    let stream = stream?;
+                    let reader = match stream.try_clone() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("serve: dropping client (clone failed: {e})");
+                            continue;
+                        }
+                    };
+                    self.spawn_client(reader, stream);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One client: a fresh [`Session`] over the shared engine, served by
+    /// the common wire transport under the shared dispatcher.
+    fn spawn_client<S>(&self, reader: S, writer: S)
+    where
+        S: std::io::Read + std::io::Write + Send + 'static,
+    {
+        let engine = Arc::clone(&self.engine);
+        let dispatcher = Arc::clone(&self.dispatcher);
+        std::thread::spawn(move || {
+            let session = Session::new(engine);
+            let name = format!("session {}", session.id());
+            if let Err(e) =
+                wire::serve_with(&session, Some(&dispatcher), BufReader::new(reader), writer)
+            {
+                eprintln!("serve: {name} closed: {e}");
+            }
+        });
+    }
+}
+
+impl Drop for SocketServer {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = &self.listener {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tcp_and_unix_addresses() {
+        assert_eq!(
+            ListenAddr::parse("127.0.0.1:7878").unwrap(),
+            ListenAddr::Tcp("127.0.0.1:7878".into())
+        );
+        assert_eq!(ListenAddr::parse("0.0.0.0:0").unwrap(), ListenAddr::Tcp("0.0.0.0:0".into()));
+        #[cfg(unix)]
+        {
+            assert_eq!(
+                ListenAddr::parse("unix:/tmp/soft-simt.sock").unwrap(),
+                ListenAddr::Unix(PathBuf::from("/tmp/soft-simt.sock"))
+            );
+            assert_eq!(
+                ListenAddr::parse("/tmp/soft-simt.sock").unwrap(),
+                ListenAddr::Unix(PathBuf::from("/tmp/soft-simt.sock"))
+            );
+            assert!(ListenAddr::parse("unix:").is_err(), "empty path rejected");
+        }
+    }
+
+    #[test]
+    fn tcp_bind_resolves_port_zero() {
+        let engine = Arc::new(SimtEngine::with_runner(
+            crate::coordinator::runner::SweepRunner::new(1),
+        ));
+        let addr = ListenAddr::parse("127.0.0.1:0").unwrap();
+        let server = SocketServer::bind(engine, &addr, 4).unwrap();
+        let local = server.local_addr().unwrap();
+        assert!(local.starts_with("127.0.0.1:"), "{local}");
+        assert!(!local.ends_with(":0"), "port resolved: {local}");
+        assert_eq!(server.dispatcher().depth(), 4);
+    }
+}

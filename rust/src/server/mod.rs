@@ -1,0 +1,37 @@
+//! Concurrent multi-client serving (DESIGN.md §Server).
+//!
+//! The paper's banked memories exist so many lanes can access shared
+//! state concurrently; this module applies the same shape to serving
+//! the simulator itself. Four layers, bottom to top:
+//!
+//! - [`store`] — the sharded, single-flight [`ShardedStore`] backing
+//!   [`TraceCache`](crate::coordinator::job::TraceCache): warm reads
+//!   are shard-read-lock-only `Arc` clones (traces are immutable after
+//!   capture, like banks after a write drains), cold captures run
+//!   exactly once per key however many sessions race for them.
+//! - [`session`] — [`Session`]: one client's view of a shared
+//!   `Arc<SimtEngine>`. All sessions share the trace store and worker
+//!   pool; each keeps isolated bookkeeping (request counters, latency
+//!   histogram, span ring) queryable via `{"op":"stats",
+//!   "scope":"session"}`.
+//! - [`dispatch`] — [`Dispatcher`]: a backpressure bound on in-flight
+//!   wire lines. Past the configured depth, requests are rejected
+//!   immediately with [`ServiceError::Overloaded`]
+//!   (exit code 3, retryable) instead of queuing unboundedly.
+//! - [`listen`] — [`SocketServer`]: `soft-simt serve --listen ADDR`
+//!   accepting TCP or Unix-socket clients (`std::net` only), one reader
+//!   thread per client feeding the shared dispatcher. The stdin/stdout
+//!   loop is a thin single-session adapter over the same
+//!   [`crate::service::wire::serve_with`] code path.
+//!
+//! [`ServiceError::Overloaded`]: crate::service::ServiceError::Overloaded
+
+pub mod dispatch;
+pub mod listen;
+pub mod session;
+pub mod store;
+
+pub use dispatch::{Dispatcher, Permit};
+pub use listen::{ListenAddr, SocketServer};
+pub use session::Session;
+pub use store::{ShardedStore, SHARDS};

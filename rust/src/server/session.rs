@@ -1,0 +1,225 @@
+//! One client's view of a shared engine.
+//!
+//! Every [`Session`] wraps the same `Arc<SimtEngine>`: requests
+//! delegate to the engine, so all clients share the trace store, the
+//! compiled-trace memo and the worker pool — N clients running one
+//! workload still pay one functional execution. What a session does
+//! *not* share is bookkeeping: it keeps its own
+//! [`MetricsRegistry`] (request counters, latency histogram, span
+//! ring), mirrored alongside the engine-global one, so
+//! `{"op":"stats","scope":"session"}` answers *this client's* traffic
+//! while `{"op":"stats"}` keeps answering the engine-wide view. A
+//! client's errors land on its own `requests.errors` (and the global
+//! registry), never on a neighbour's — the error-isolation guarantee
+//! `rust/tests/server.rs` pins.
+//!
+//! The stdin/stdout `soft-simt serve` loop is exactly one of these over
+//! the CLI's engine, so single-client behavior is byte-identical to the
+//! pre-session transport (pinned by the serve parity tests).
+
+use crate::obs::{Counter, Hist, MetricsRegistry, Span};
+use crate::service::request::StatsScope;
+use crate::service::wire::WireHandler;
+use crate::service::{Request, Response, ServiceError, SimtEngine};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Session ids are process-global so log lines from different listeners
+/// never collide.
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One client of a shared [`SimtEngine`]. See the module docs.
+#[derive(Debug)]
+pub struct Session {
+    id: u64,
+    engine: Arc<SimtEngine>,
+    /// This client's isolated bookkeeping. Same registry type as the
+    /// engine's, so the wire snapshot shape is identical — only the
+    /// reported `scope` differs.
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl Session {
+    /// Open a session over the shared engine (counted engine-wide as
+    /// `server.sessions_opened`).
+    pub fn new(engine: Arc<SimtEngine>) -> Self {
+        engine.metrics().inc(Counter::SessionsOpened);
+        Self {
+            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
+            engine,
+            metrics: Arc::new(MetricsRegistry::new()),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn engine(&self) -> &Arc<SimtEngine> {
+        &self.engine
+    }
+
+    /// This session's own registry (the `scope: "session"` snapshot
+    /// source).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Serve one request. Everything delegates to the shared engine —
+    /// one exception: a session-scope `Stats` is answered entirely from
+    /// this session's registry (the engine never sees it). Either way
+    /// the session mirrors the engine's request bookkeeping (served /
+    /// error counts, request latency) into its own registry.
+    pub fn handle(&self, req: &Request) -> Result<Response, ServiceError> {
+        let mut span = self.metrics.span(req.op());
+        let result = self.handle_in_span(req, &mut span);
+        self.finish_both(span);
+        result
+    }
+
+    /// [`Self::handle`] inside a caller-owned span (the wire transport's
+    /// entry point, mirroring [`SimtEngine::handle_in_span`]).
+    pub fn handle_in_span(
+        &self,
+        req: &Request,
+        span: &mut Span,
+    ) -> Result<Response, ServiceError> {
+        let t0 = Instant::now();
+        let result = match req {
+            // Snapshot-on-read, before this request's own bookkeeping
+            // below — a session-scope stats never perturbs the numbers
+            // it reports (same contract as the engine's).
+            Request::Stats { scope: StatsScope::Session } => {
+                let mut snap = self.metrics.snapshot();
+                snap.scope = StatsScope::Session.name();
+                Ok(Response::Stats(snap))
+            }
+            _ => self.engine.handle_in_span(req, span),
+        };
+        self.metrics.inc(Counter::RequestsServed);
+        if result.is_err() {
+            self.metrics.inc(Counter::RequestsErrors);
+        }
+        self.metrics.observe(Hist::RequestMicros, t0.elapsed().as_micros() as u64);
+        result
+    }
+
+    /// Serve a batch, responses in request order — the same
+    /// barrier-segmented concurrent fan-out as
+    /// [`SimtEngine::handle_batch`] (stats items are sequencing
+    /// barriers), run through [`Self::handle`] so each item lands on
+    /// this session's bookkeeping too.
+    pub fn handle_batch(&self, reqs: &[Request]) -> Vec<Result<Response, ServiceError>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for segment in reqs.split_inclusive(|r| matches!(r, Request::Stats { .. })) {
+            let (concurrent, barrier) = match segment.last() {
+                Some(Request::Stats { .. }) => {
+                    (&segment[..segment.len() - 1], segment.last())
+                }
+                _ => (segment, None),
+            };
+            match concurrent {
+                [] => {}
+                [one] => out.push(self.handle(one)),
+                many => out.extend(self.engine.runner().map(many, |r| self.handle(r))),
+            }
+            if let Some(stats) = barrier {
+                out.push(self.handle(stats));
+            }
+        }
+        out
+    }
+
+    /// Record a finished span into both rings: the session's (so
+    /// session-scope stats show this client's recent requests) and the
+    /// engine's (so the global view stays complete).
+    fn finish_both(&self, span: Span) {
+        if let Some(record) = span.finish() {
+            self.metrics.record_span(record.clone());
+            self.engine.metrics().record_span(record);
+        }
+    }
+}
+
+impl WireHandler for Session {
+    fn line_span(&self, op: &'static str) -> Span {
+        self.metrics.span(op)
+    }
+
+    fn handle_in_span(&self, req: &Request, span: &mut Span)
+        -> Result<Response, ServiceError> {
+        Session::handle_in_span(self, req, span)
+    }
+
+    fn handle_batch(&self, reqs: &[Request]) -> Vec<Result<Response, ServiceError>> {
+        Session::handle_batch(self, reqs)
+    }
+
+    fn finish_line_span(&self, span: Span) {
+        self.finish_both(span);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::runner::SweepRunner;
+    use crate::mem::arch::MemoryArchKind;
+
+    fn shared_engine() -> Arc<SimtEngine> {
+        Arc::new(SimtEngine::with_runner(SweepRunner::new(2)))
+    }
+
+    #[test]
+    fn sessions_get_distinct_ids_and_are_counted() {
+        let engine = shared_engine();
+        let a = Session::new(Arc::clone(&engine));
+        let b = Session::new(Arc::clone(&engine));
+        assert_ne!(a.id(), b.id());
+        assert_eq!(engine.metrics().get(Counter::SessionsOpened), 2);
+    }
+
+    #[test]
+    fn session_scope_stats_report_only_own_traffic() {
+        let engine = shared_engine();
+        let a = Session::new(Arc::clone(&engine));
+        let b = Session::new(Arc::clone(&engine));
+        let run = Request::Run {
+            program: "transpose32".into(),
+            mem: MemoryArchKind::banked(16),
+        };
+        a.handle(&run).unwrap();
+        a.handle(&run).unwrap();
+        b.handle(&run).unwrap();
+
+        let session_stats = Request::Stats { scope: StatsScope::Session };
+        let Ok(Response::Stats(sa)) = a.handle(&session_stats) else { panic!("stats") };
+        let Ok(Response::Stats(sb)) = b.handle(&session_stats) else { panic!("stats") };
+        assert_eq!(sa.scope, "session");
+        assert_eq!(sa.counter("requests.served"), Some(2), "a's own traffic only");
+        assert_eq!(sb.counter("requests.served"), Some(1), "b's own traffic only");
+
+        // The engine-global view spans all three runs (plus nothing from
+        // the session-scope stats, which the engine never saw) and paid
+        // one functional execution for the shared workload.
+        let Ok(Response::Stats(se)) =
+            a.handle(&Request::Stats { scope: StatsScope::Engine })
+        else {
+            panic!("stats")
+        };
+        assert_eq!(se.scope, "engine");
+        assert_eq!(se.counter("requests.served"), Some(3));
+        assert_eq!(se.counter("exec.functional_executions"), Some(1));
+    }
+
+    #[test]
+    fn session_spans_land_in_both_rings() {
+        let engine = shared_engine();
+        let s = Session::new(Arc::clone(&engine));
+        s.handle(&Request::List).unwrap();
+        assert_eq!(s.metrics().spans().len(), 1);
+        assert_eq!(engine.metrics().spans().len(), 1);
+        assert_eq!(s.metrics().spans()[0].op, "list");
+    }
+}

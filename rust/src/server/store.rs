@@ -1,0 +1,198 @@
+//! The sharded, single-flight trace store backing [`TraceCache`].
+//!
+//! The paper's banked memories turn one monolithic port into N banks so
+//! 16 lanes can load concurrently; this store does the same to the trace
+//! cache so N client sessions can *read* concurrently. Keys hash onto
+//! [`SHARDS`] independent `RwLock<HashMap>` shards, and every entry is
+//! an `Arc<OnceLock<T>>` **cell**:
+//!
+//! - **Warm reads** take only a shard *read* lock (shared, so readers
+//!   never serialize behind each other) and clone the `Arc` out — the
+//!   value itself (a captured [`MemTrace`] or a compiled trace) is
+//!   immutable after initialization, exactly like a trace bank after
+//!   capture. A warm read never acquires a write lock; the serve bench
+//!   asserts this via [`Counter::StoreShardWriteLocks`].
+//! - **Cold inserts** take the shard write lock just long enough to
+//!   install an *empty* cell, then initialize it **outside** any shard
+//!   lock via `OnceLock::get_or_init` — so an expensive functional
+//!   execution never blocks the shard, and concurrent requesters of the
+//!   same key block only on each other (single-flight: the work runs
+//!   exactly once, everyone shares the one result).
+//!
+//! Contention telemetry rides the engine's [`MetricsRegistry`]:
+//! write-lock acquisitions count [`Counter::StoreShardWriteLocks`], and
+//! a read path that finds its shard briefly write-held counts
+//! [`Counter::StoreShardReadContention`] before falling back to a
+//! blocking read.
+//!
+//! [`TraceCache`]: crate::coordinator::job::TraceCache
+//! [`MemTrace`]: crate::sim::exec::MemTrace
+
+use crate::coordinator::job::TraceKey;
+use crate::obs::{Counter, MetricsRegistry};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, OnceLock, RwLock, TryLockError};
+
+/// Shard count — a power of two so the hash folds with a mask. 16
+/// mirrors the paper's widest banking (16 banks for 16 lanes): enough
+/// that concurrent sessions rarely collide, small enough that a full
+/// scan ([`ShardedStore::count_initialized`]) stays trivial.
+pub const SHARDS: usize = 16;
+
+type Shard<T> = RwLock<HashMap<TraceKey, Arc<OnceLock<T>>>>;
+
+/// A sharded map from [`TraceKey`] to a single-flight cell of `T`.
+#[derive(Debug)]
+pub struct ShardedStore<T> {
+    shards: Vec<Shard<T>>,
+}
+
+impl<T> Default for ShardedStore<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ShardedStore<T> {
+    pub fn new() -> Self {
+        Self { shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect() }
+    }
+
+    fn shard(&self, key: &TraceKey) -> &Shard<T> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & (SHARDS - 1)]
+    }
+
+    /// Read-lock a shard, preferring the non-blocking path; a busy
+    /// shard (write-held during a cold insert) counts one contention
+    /// event and falls back to the blocking read.
+    fn read_shard<'a>(
+        shard: &'a Shard<T>,
+        metrics: Option<&MetricsRegistry>,
+    ) -> std::sync::RwLockReadGuard<'a, HashMap<TraceKey, Arc<OnceLock<T>>>> {
+        match shard.try_read() {
+            Ok(guard) => guard,
+            Err(TryLockError::WouldBlock) => {
+                if let Some(m) = metrics {
+                    m.inc(Counter::StoreShardReadContention);
+                }
+                shard.read().unwrap()
+            }
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+
+    /// The initialized value under `key`, if any — the warm path. Takes
+    /// only a shard read lock; an installed-but-uninitialized cell (a
+    /// capture in flight on another thread) reads as absent, so callers
+    /// that must share in-flight work go through [`Self::cell`].
+    pub fn get(&self, key: &TraceKey, metrics: Option<&MetricsRegistry>) -> Option<T>
+    where
+        T: Clone,
+    {
+        let shard = self.shard(key);
+        Self::read_shard(shard, metrics).get(key).and_then(|cell| cell.get().cloned())
+    }
+
+    /// The single-flight cell under `key`, installing an empty one if
+    /// absent. Warm calls resolve on the read lock alone; only the call
+    /// that actually installs the cell takes (and counts) the shard
+    /// write lock. Initialize the returned cell with
+    /// `OnceLock::get_or_init` — outside any shard lock.
+    pub fn cell(&self, key: &TraceKey, metrics: Option<&MetricsRegistry>) -> Arc<OnceLock<T>> {
+        let shard = self.shard(key);
+        if let Some(cell) = Self::read_shard(shard, metrics).get(key) {
+            return Arc::clone(cell);
+        }
+        if let Some(m) = metrics {
+            m.inc(Counter::StoreShardWriteLocks);
+        }
+        let mut guard = match shard.write() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        Arc::clone(guard.entry(key.clone()).or_default())
+    }
+
+    /// Number of initialized entries satisfying `pred` (read locks
+    /// only; an introspection path, not a hot one).
+    pub fn count_initialized(&self, pred: impl Fn(&T) -> bool) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                Self::read_shard(s, None)
+                    .values()
+                    .filter(|cell| cell.get().is_some_and(&pred))
+                    .count()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn key(name: &str) -> TraceKey {
+        (name.to_string(), 0x5EED)
+    }
+
+    #[test]
+    fn get_sees_only_initialized_cells() {
+        let store: ShardedStore<u64> = ShardedStore::new();
+        assert_eq!(store.get(&key("a"), None), None);
+        let cell = store.cell(&key("a"), None);
+        assert_eq!(store.get(&key("a"), None), None, "empty cell reads as absent");
+        cell.get_or_init(|| 7);
+        assert_eq!(store.get(&key("a"), None), Some(7));
+        assert_eq!(store.count_initialized(|_| true), 1);
+    }
+
+    #[test]
+    fn concurrent_initializers_run_exactly_once() {
+        let store: Arc<ShardedStore<u64>> = Arc::new(ShardedStore::new());
+        let runs = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let v = *store.cell(&key("shared"), None).get_or_init(|| {
+                        runs.fetch_add(1, Ordering::Relaxed);
+                        42
+                    });
+                    assert_eq!(v, 42);
+                });
+            }
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), 1, "single-flight init");
+        assert_eq!(store.count_initialized(|_| true), 1);
+    }
+
+    #[test]
+    fn warm_cells_take_no_write_lock() {
+        let metrics = MetricsRegistry::new();
+        let store: ShardedStore<u64> = ShardedStore::new();
+        store.cell(&key("a"), Some(&metrics)).get_or_init(|| 1);
+        assert_eq!(metrics.get(Counter::StoreShardWriteLocks), 1);
+        for _ in 0..10 {
+            assert_eq!(store.get(&key("a"), Some(&metrics)), Some(1));
+            store.cell(&key("a"), Some(&metrics));
+        }
+        assert_eq!(metrics.get(Counter::StoreShardWriteLocks), 1, "warm paths stay read-only");
+    }
+
+    #[test]
+    fn distinct_keys_spread_over_shards() {
+        let store: ShardedStore<u64> = ShardedStore::new();
+        for i in 0..64 {
+            store.cell(&key(&format!("k{i}")), None).get_or_init(|| i);
+        }
+        assert_eq!(store.count_initialized(|_| true), 64);
+        let populated =
+            store.shards.iter().filter(|s| !s.read().unwrap().is_empty()).count();
+        assert!(populated > 1, "64 keys must not collapse onto one shard");
+    }
+}

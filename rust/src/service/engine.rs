@@ -91,10 +91,10 @@ impl SimtEngine {
     /// *data*, which replay by construction cannot, so they are not a
     /// cost the cache could ever share. The engine's defining economy:
     /// repeat requests over cached workloads leave this counter
-    /// unchanged. Exact for sequential request streams (the CLI,
-    /// `serve`, batches); overlapping `handle` calls from multiple
-    /// threads still share traces but may attribute a concurrent
-    /// capture to both windows.
+    /// unchanged. **Exact under concurrency**: captures count inside
+    /// the trace store's single-flight initializer, so N clients racing
+    /// on one cold key contribute exactly one increment
+    /// (`rust/tests/server.rs` pins this).
     pub fn functional_executions(&self) -> u64 {
         self.metrics.get(Counter::FunctionalExecutions)
     }
@@ -118,13 +118,12 @@ impl SimtEngine {
         span: &mut Span,
     ) -> Result<Response, ServiceError> {
         let t0 = Instant::now();
-        // Every capture path lands exactly one new entry in the cache,
-        // so the cache-size delta *is* the functional-execution count
-        // (Asm runs are counted explicitly in dispatch).
-        let before = self.cache.len() as u64;
+        // Functional executions are counted at the point of capture —
+        // inside the trace store's single-flight initializer (see
+        // `TraceCache::get_or_capture`) — not by cache-size deltas, so
+        // the count stays exact when requests overlap. Asm runs, which
+        // have no cache key, count explicitly in dispatch.
         let result = self.dispatch(req, span);
-        let after = self.cache.len() as u64;
-        self.metrics.add(Counter::FunctionalExecutions, after.saturating_sub(before));
         self.metrics.inc(Counter::RequestsServed);
         if result.is_err() {
             self.metrics.inc(Counter::RequestsErrors);
@@ -138,8 +137,39 @@ impl SimtEngine {
     /// costs the same six functional executions as the sweep alone. A
     /// failing request yields its error in place; later requests still
     /// run.
+    ///
+    /// Internally the batch is no longer strictly sequential:
+    /// independent requests fan out onto the [`SweepRunner`] pool and
+    /// are reassembled in submission order (DESIGN.md §Server). The one
+    /// ordering-sensitive request is `Stats` — its snapshot-on-read
+    /// semantics promise it reflects every earlier request in the batch
+    /// — so stats items act as **sequencing barriers**: the requests
+    /// before one complete first, the stats item runs alone, then the
+    /// rest proceeds. Trace sharing makes this safe (concurrent items
+    /// racing on one workload still cost one capture, single-flight);
+    /// responses and per-request metrics are identical to the
+    /// sequential path, only wall-clock and span ring order differ.
     pub fn handle_batch(&self, reqs: &[Request]) -> Vec<Result<Response, ServiceError>> {
-        reqs.iter().map(|r| self.handle(r)).collect()
+        let mut out = Vec::with_capacity(reqs.len());
+        for segment in
+            reqs.split_inclusive(|r| matches!(r, Request::Stats { .. }))
+        {
+            let (concurrent, barrier) = match segment.last() {
+                Some(Request::Stats { .. }) => {
+                    (&segment[..segment.len() - 1], segment.last())
+                }
+                _ => (segment, None),
+            };
+            match concurrent {
+                [] => {}
+                [one] => out.push(self.handle(one)),
+                many => out.extend(self.runner.map(many, |r| self.handle(r))),
+            }
+            if let Some(stats) = barrier {
+                out.push(self.handle(stats));
+            }
+        }
+        out
     }
 
     /// Attribute a timed sweep's phases to the request's span.
@@ -272,8 +302,16 @@ impl SimtEngine {
             // not yet include this request's own bookkeeping (served
             // count, latency), which lands in `handle_in_span` after
             // dispatch returns — so a Stats request never perturbs the
-            // numbers it reports.
-            Request::Stats => Ok(Response::Stats(self.metrics.snapshot())),
+            // numbers it reports. Session scope on the bare engine is
+            // the single-session adapter case: the engine registry IS
+            // the session registry, only the label differs (a
+            // `server::Session` intercepts this variant and snapshots
+            // its own registry instead).
+            Request::Stats { scope } => {
+                let mut snap = self.metrics.snapshot();
+                snap.scope = scope.name();
+                Ok(Response::Stats(snap))
+            }
         }
     }
 
@@ -303,6 +341,7 @@ impl SimtEngine {
 mod tests {
     use super::*;
     use crate::mem::arch::MemoryArchKind;
+    use crate::service::request::StatsScope;
 
     fn run_req(program: &str, mem: MemoryArchKind) -> Request {
         Request::Run { program: program.into(), mem }
@@ -377,9 +416,11 @@ mod tests {
         let req = run_req("transpose32", MemoryArchKind::banked(16));
         engine.handle(&req).unwrap(); // cold: counted miss + capture
         engine.handle(&req).unwrap(); // warm: counted hit, compiled replay
-        let Response::Stats(snap) = engine.handle(&Request::Stats).unwrap() else {
+        let stats = Request::Stats { scope: StatsScope::Engine };
+        let Response::Stats(snap) = engine.handle(&stats).unwrap() else {
             panic!("stats response");
         };
+        assert_eq!(snap.scope, "engine");
         assert!(snap.counter("trace_cache.hits").unwrap() >= 1, "warm run must record a hit");
         assert_eq!(snap.counter("trace_cache.misses"), Some(1));
         assert_eq!(snap.counter("exec.functional_executions"), Some(1));

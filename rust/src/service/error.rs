@@ -37,6 +37,12 @@ pub enum ServiceError {
     /// underlying `std::io::Error` is flattened to its message so the
     /// error stays `Clone` (responses are queued and re-rendered).
     Io { context: String, error: String },
+    /// The server's backpressure bound rejected the request: `in_flight`
+    /// wire lines were already admitted against a dispatcher of depth
+    /// `depth` (DESIGN.md §Server). Retryable by the client; exit
+    /// code 3 so scripted callers can distinguish "back off and retry"
+    /// from usage (2) and execution (1) failures.
+    Overloaded { in_flight: usize, depth: usize },
 }
 
 impl ServiceError {
@@ -47,11 +53,13 @@ impl ServiceError {
 
     /// The process exit code this error maps to — the one place the
     /// CLI's exit policy lives. Usage-class errors (malformed request,
-    /// unknown name) exit 2, execution failures exit 1.
+    /// unknown name) exit 2, execution failures exit 1, overload
+    /// rejections exit 3 (retryable).
     pub fn exit_code(&self) -> i32 {
         match self {
             Self::UnknownProgram(_) | Self::UnknownMemory(_) | Self::BadRequest(_) => 2,
             Self::Sim(_) | Self::Asm(_) | Self::Io { .. } => 1,
+            Self::Overloaded { .. } => 3,
         }
     }
 }
@@ -76,6 +84,10 @@ impl fmt::Display for ServiceError {
             ),
             Self::BadRequest(m) => write!(f, "bad request: {m}"),
             Self::Io { context, error } => write!(f, "{context}: {error}"),
+            Self::Overloaded { in_flight, depth } => write!(
+                f,
+                "server overloaded: {in_flight} requests in flight (depth {depth}); retry later"
+            ),
         }
     }
 }
@@ -123,6 +135,15 @@ mod tests {
             ServiceError::Asm(AsmError { line: 1, msg: "x".into() }).exit_code(),
             1
         );
+        assert_eq!(ServiceError::Overloaded { in_flight: 4, depth: 4 }.exit_code(), 3);
+    }
+
+    #[test]
+    fn overloaded_message_names_the_bound_and_retry() {
+        let msg = ServiceError::Overloaded { in_flight: 5, depth: 4 }.to_string();
+        assert!(msg.contains("5 requests in flight"), "{msg}");
+        assert!(msg.contains("depth 4"), "{msg}");
+        assert!(msg.contains("retry"), "{msg}");
     }
 
     #[test]

@@ -23,12 +23,13 @@
 //! [`SimtEngine::functional_executions`] and asserted in
 //! `rust/tests/service.rs`.
 //!
-//! [`wire`] adds a dependency-free line-delimited JSON codec and
-//! [`wire::serve`] the stdin/stdout loop behind `soft-simt serve`, so
-//! the engine can sit behind any transport (pipes today; sockets, HTTP
-//! or a sharded front-end later without touching the engine). The CLI
-//! (`main.rs`) is a thin client of the same API: construct request,
-//! `engine.handle()`, render response.
+//! [`wire`] adds a dependency-free line-delimited JSON codec and the
+//! transport loop behind `soft-simt serve` — written once against
+//! [`wire::WireHandler`], so the stdin/stdout adapter and every socket
+//! client of a [`crate::server::SocketServer`] (`serve --listen ADDR`,
+//! DESIGN.md §Server) run the identical code path over a shared engine.
+//! The CLI (`main.rs`) is a thin client of the same API: construct
+//! request, `engine.handle()`, render response.
 //!
 //! ```no_run
 //! use soft_simt::prelude::*;
@@ -52,5 +53,5 @@ pub mod wire;
 
 pub use engine::SimtEngine;
 pub use error::{parse_arch, ServiceError};
-pub use request::{ExploreStrategy, Request, TableKind};
+pub use request::{ExploreStrategy, Request, StatsScope, TableKind};
 pub use response::{Listing, Response, SweepOutput, ValidationOutput};

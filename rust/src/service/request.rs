@@ -41,11 +41,15 @@ pub enum Request {
     Disasm { program: String },
     /// The program library and memory-architecture sets.
     List,
-    /// Session telemetry: a snapshot of the engine's metrics registry
-    /// (counters, latency histograms, recent request spans — DESIGN.md
-    /// §Observability). Read-only and cheap; safe to interleave into
-    /// batches.
-    Stats,
+    /// Session telemetry: a snapshot of a metrics registry (counters,
+    /// latency histograms, recent request spans — DESIGN.md
+    /// §Observability). `scope` picks which registry: the engine-global
+    /// one every client shares, or the caller's own per-session
+    /// bookkeeping (DESIGN.md §Server). Read-only and cheap; safe to
+    /// interleave into batches (a stats item is a sequencing barrier in
+    /// the concurrent batch path, so its snapshot still reflects every
+    /// earlier item in the batch).
+    Stats { scope: StatsScope },
 }
 
 impl Request {
@@ -61,7 +65,41 @@ impl Request {
             Request::Asm { .. } => "asm",
             Request::Disasm { .. } => "disasm",
             Request::List => "list",
-            Request::Stats => "stats",
+            Request::Stats { .. } => "stats",
+        }
+    }
+}
+
+/// Which metrics registry a `Stats` request snapshots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatsScope {
+    /// The engine-global registry shared by every client (the default,
+    /// and the wire behavior when no `scope` field is sent).
+    #[default]
+    Engine,
+    /// The caller's own per-session registry (DESIGN.md §Server). On
+    /// the engine directly — i.e. outside any [`crate::server::Session`]
+    /// — the engine registry *is* the session registry (single-session
+    /// adapter semantics), so the snapshot differs only in its reported
+    /// `scope` label.
+    Session,
+}
+
+impl StatsScope {
+    /// Wire name (the `"scope"` field of the JSON encoding, and the
+    /// snapshot's reported `scope`).
+    pub fn name(self) -> &'static str {
+        match self {
+            StatsScope::Engine => "engine",
+            StatsScope::Session => "session",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "engine" => Some(Self::Engine),
+            "session" => Some(Self::Session),
+            _ => None,
         }
     }
 }
@@ -157,9 +195,18 @@ mod tests {
     }
 
     #[test]
+    fn stats_scopes_roundtrip_names() {
+        for scope in [StatsScope::Engine, StatsScope::Session] {
+            assert_eq!(StatsScope::parse(scope.name()), Some(scope));
+        }
+        assert_eq!(StatsScope::parse("global"), None);
+        assert_eq!(StatsScope::default(), StatsScope::Engine);
+    }
+
+    #[test]
     fn ops_are_stable_wire_names() {
         assert_eq!(Request::List.op(), "list");
-        assert_eq!(Request::Stats.op(), "stats");
+        assert_eq!(Request::Stats { scope: StatsScope::default() }.op(), "stats");
         assert_eq!(Request::Sweep { all: false }.op(), "sweep");
         assert_eq!(
             Request::Run {

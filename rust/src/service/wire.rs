@@ -21,6 +21,7 @@
 //! {"op":"disasm","program":"transpose32"}
 //! {"op":"list"}
 //! {"op":"stats"}
+//! {"op":"stats","scope":"session"}
 //! ```
 //!
 //! Responses carry `"ok"` plus structured fields per variant and the
@@ -30,9 +31,10 @@
 
 use super::engine::SimtEngine;
 use super::error::{parse_arch, ServiceError};
-use super::request::{ExploreStrategy, Request, TableKind};
+use super::request::{ExploreStrategy, Request, StatsScope, TableKind};
 use super::response::Response;
-use crate::obs::Phase;
+use crate::obs::{Phase, Span};
+use crate::server::Dispatcher;
 use crate::util::fmt::json_str;
 use std::io::{BufRead, Write};
 
@@ -338,7 +340,17 @@ pub fn request_from_json(v: &Json) -> Result<Request, ServiceError> {
         "asm" => Ok(Request::Asm { source: program("source")?, mem: mem("16-banks")? }),
         "disasm" => Ok(Request::Disasm { program: program("program")? }),
         "list" => Ok(Request::List),
-        "stats" => Ok(Request::Stats),
+        "stats" => {
+            let scope = match opt_str_field(v, "scope")? {
+                None => StatsScope::default(),
+                Some(s) => StatsScope::parse(s).ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "unknown scope '{s}' (try: engine, session)"
+                    ))
+                })?,
+            };
+            Ok(Request::Stats { scope })
+        }
         other => Err(ServiceError::BadRequest(format!("unknown op '{other}'"))),
     }
 }
@@ -410,7 +422,12 @@ pub fn request_to_json(req: &Request) -> String {
             format!("{{\"op\":\"disasm\",\"program\":{}}}", json_str(program))
         }
         Request::List => "{\"op\":\"list\"}".to_string(),
-        Request::Stats => "{\"op\":\"stats\"}".to_string(),
+        // The default (engine) scope encodes bare, so pre-scope clients
+        // and goldens see the exact byte sequence they always did.
+        Request::Stats { scope: StatsScope::Engine } => "{\"op\":\"stats\"}".to_string(),
+        Request::Stats { scope } => {
+            format!("{{\"op\":\"stats\",\"scope\":{}}}", json_str(scope.name()))
+        }
     }
 }
 
@@ -539,18 +556,75 @@ pub fn response_to_json(resp: &Response) -> String {
 // The serve loop.
 // ---------------------------------------------------------------------
 
+/// What a wire transport serves lines against: a bare [`SimtEngine`]
+/// (the single-session CLI adapter) or a [`crate::server::Session`]
+/// (one client of a shared engine, with its own bookkeeping). The
+/// transport ([`serve_with`]) is written once against this trait, so
+/// stdin/stdout and every socket client run the identical code path —
+/// the byte-identity the parity tests pin.
+pub trait WireHandler {
+    /// Open the span covering one wire line, labelled `op`.
+    fn line_span(&self, op: &'static str) -> Span;
+    /// Serve one request inside the line's span (parse/render phases
+    /// accrue to the same span around the dispatch).
+    fn handle_in_span(&self, req: &Request, span: &mut Span)
+        -> Result<Response, ServiceError>;
+    /// Serve a batch line, responses in request order.
+    fn handle_batch(&self, reqs: &[Request]) -> Vec<Result<Response, ServiceError>>;
+    /// Record the finished line span.
+    fn finish_line_span(&self, span: Span);
+}
+
+impl WireHandler for SimtEngine {
+    fn line_span(&self, op: &'static str) -> Span {
+        self.metrics().span(op)
+    }
+
+    fn handle_in_span(&self, req: &Request, span: &mut Span)
+        -> Result<Response, ServiceError> {
+        SimtEngine::handle_in_span(self, req, span)
+    }
+
+    fn handle_batch(&self, reqs: &[Request]) -> Vec<Result<Response, ServiceError>> {
+        SimtEngine::handle_batch(self, reqs)
+    }
+
+    fn finish_line_span(&self, span: Span) {
+        self.metrics().finish_span(span);
+    }
+}
+
 /// Read request lines from `input`, answer each on `output` — the whole
 /// transport of `soft-simt serve`. Blank lines are skipped; a malformed
 /// line yields an `{"ok":false,...}` line and the loop continues; an
 /// array line is answered with an array of responses. Every request in
-/// the session shares `engine`'s trace cache.
+/// the session shares the handler's engine (hence its trace cache).
 ///
-/// Each wire line records one span in the engine's metrics registry:
+/// Each wire line records one span in the handler's metrics registry:
 /// the transport attributes JSON decode to `parse` and encode to
-/// `render` around the engine's own dispatch phases. A batch line is a
-/// single span labelled `"batch"` that accumulates across its items.
-pub fn serve<R: BufRead, W: Write>(
-    engine: &SimtEngine,
+/// `render`. A single-request line dispatches inside that span; a batch
+/// line's span is labelled `"batch"` and covers decode/render, while
+/// its items fan out through [`WireHandler::handle_batch`] (responses
+/// reassembled in submission order) and record their own per-request
+/// spans.
+pub fn serve<H: WireHandler, R: BufRead, W: Write>(
+    handler: &H,
+    input: R,
+    output: W,
+) -> std::io::Result<()> {
+    serve_with(handler, None, input, output)
+}
+
+/// [`serve`] with an optional admission bound: when `limiter` is given,
+/// each non-blank line first takes a [`Dispatcher`] permit (held until
+/// the line's reply is written); past the configured depth the line is
+/// answered `{"ok":false,...,"exit_code":3}` without decoding it —
+/// overload rejection must stay cheap — and the loop continues. The
+/// socket front-end shares one dispatcher across every client; the
+/// stdin adapter passes `None` (one client cannot overload itself).
+pub fn serve_with<H: WireHandler, R: BufRead, W: Write>(
+    handler: &H,
+    limiter: Option<&Dispatcher>,
     input: R,
     mut output: W,
 ) -> std::io::Result<()> {
@@ -559,24 +633,42 @@ pub fn serve<R: BufRead, W: Write>(
         if line.trim().is_empty() {
             continue;
         }
-        let mut span = engine.metrics().span("line");
+        let _permit = match limiter.map(|d| d.admit()) {
+            None => None,
+            Some(Ok(permit)) => Some(permit),
+            Some(Err(e)) => {
+                writeln!(output, "{}", error_to_json(&e))?;
+                output.flush()?;
+                continue;
+            }
+        };
+        let mut span = handler.line_span("line");
         let reply = match span.time(Phase::Parse, || parse_json(&line)) {
             Ok(Json::Arr(items)) => {
                 span.set_op("batch");
-                let mut parts = Vec::with_capacity(items.len());
-                for item in &items {
-                    let result = span
-                        .time(Phase::Parse, || request_from_json(item))
-                        .and_then(|req| engine.handle_in_span(&req, &mut span));
-                    parts.push(span.time(Phase::Render, || result_to_json(&result)));
-                }
+                let decoded: Vec<Result<Request, ServiceError>> =
+                    span.time(Phase::Parse, || {
+                        items.iter().map(request_from_json).collect()
+                    });
+                let valid: Vec<Request> =
+                    decoded.iter().filter_map(|d| d.as_ref().ok()).cloned().collect();
+                let mut handled = handler.handle_batch(&valid).into_iter();
+                let results: Vec<Result<Response, ServiceError>> = decoded
+                    .into_iter()
+                    .map(|d| match d {
+                        Ok(_) => handled.next().expect("one result per valid request"),
+                        Err(e) => Err(e),
+                    })
+                    .collect();
+                let parts: Vec<String> = span
+                    .time(Phase::Render, || results.iter().map(result_to_json).collect());
                 format!("[{}]", parts.join(","))
             }
             Ok(v) => {
                 let result = match span.time(Phase::Parse, || request_from_json(&v)) {
                     Ok(req) => {
                         span.set_op(req.op());
-                        engine.handle_in_span(&req, &mut span)
+                        handler.handle_in_span(&req, &mut span)
                     }
                     Err(e) => Err(e),
                 };
@@ -584,7 +676,7 @@ pub fn serve<R: BufRead, W: Write>(
             }
             Err(e) => error_to_json(&e),
         };
-        engine.metrics().finish_span(span);
+        handler.finish_line_span(span);
         writeln!(output, "{reply}")?;
         output.flush()?;
     }

@@ -1,0 +1,228 @@
+//! Server-layer integration suite: many sessions over one shared
+//! engine. Pins the ISSUE's concurrency guarantees — exactly-once
+//! functional execution per distinct workload under racing clients,
+//! per-session error isolation, warm trace reads taking no shard write
+//! lock, wire-level backpressure rejection, and real TCP / Unix-socket
+//! round-trips through `SocketServer`.
+
+use soft_simt::coordinator::runner::SweepRunner;
+use soft_simt::mem::arch::MemoryArchKind;
+use soft_simt::obs::Counter;
+use soft_simt::server::{Dispatcher, ListenAddr, Session, SocketServer};
+use soft_simt::service::wire;
+use soft_simt::service::{Request, Response, ServiceError, SimtEngine, StatsScope};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
+
+fn shared_engine() -> Arc<SimtEngine> {
+    Arc::new(SimtEngine::with_runner(SweepRunner::new(4)))
+}
+
+fn run_req(program: &str, mem: MemoryArchKind) -> Request {
+    Request::Run { program: program.into(), mem }
+}
+
+fn session_stats(s: &Session) -> soft_simt::obs::MetricsSnapshot {
+    match s.handle(&Request::Stats { scope: StatsScope::Session }) {
+        Ok(Response::Stats(snap)) => snap,
+        other => panic!("session stats: {other:?}"),
+    }
+}
+
+/// M threads × K requests over one engine: every distinct workload is
+/// functionally executed exactly once no matter how the sessions race
+/// on the cold keys — the single-flight store guarantee, observed
+/// end to end.
+#[test]
+fn racing_sessions_capture_each_workload_exactly_once() {
+    let engine = shared_engine();
+    let archs = MemoryArchKind::table3_nine();
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let engine = Arc::clone(&engine);
+            let archs = &archs;
+            scope.spawn(move || {
+                let session = Session::new(engine);
+                for k in 0..4 {
+                    let program = if (t + k) % 2 == 0 { "transpose32" } else { "transpose64" };
+                    let resp = session.handle(&run_req(program, archs[(t + k) % archs.len()]));
+                    assert!(resp.is_ok(), "{program}: {:?}", resp.err());
+                }
+                assert_eq!(session_stats(&session).counter("requests.served"), Some(4));
+            });
+        }
+    });
+    // Two distinct workloads ever requested → exactly two captures,
+    // regardless of which of the 16 racing requests arrived cold.
+    assert_eq!(engine.functional_executions(), 2);
+    assert_eq!(engine.cache().len(), 2);
+    assert_eq!(engine.metrics().get(Counter::SessionsOpened), 4);
+    assert_eq!(engine.metrics().get(Counter::RequestsServed), 16);
+}
+
+/// One client's failure lands on its own books (and the engine's) —
+/// never on a neighbour session's.
+#[test]
+fn session_errors_are_isolated() {
+    let engine = shared_engine();
+    let a = Session::new(Arc::clone(&engine));
+    let b = Session::new(Arc::clone(&engine));
+    let err = a.handle(&run_req("no-such-kernel", MemoryArchKind::banked(16))).unwrap_err();
+    assert!(matches!(err, ServiceError::UnknownProgram(_)));
+    a.handle(&run_req("transpose32", MemoryArchKind::banked(16))).unwrap();
+    b.handle(&run_req("transpose32", MemoryArchKind::banked(4))).unwrap();
+
+    let sa = session_stats(&a);
+    let sb = session_stats(&b);
+    assert_eq!(sa.counter("requests.errors"), Some(1), "a owns its failure");
+    assert_eq!(sa.counter("requests.served"), Some(2));
+    assert_eq!(sb.counter("requests.errors"), Some(0), "b never sees a's failure");
+    assert_eq!(sb.counter("requests.served"), Some(1));
+    assert_eq!(engine.metrics().get(Counter::RequestsErrors), 1);
+    // The shared economy still held: one capture for both sessions.
+    assert_eq!(engine.functional_executions(), 1);
+}
+
+/// The ISSUE's acceptance check: once a workload is captured (and its
+/// compiled form built), concurrent warm traffic takes zero shard
+/// write locks — reads scale like the paper's banked loads.
+#[test]
+fn warm_traffic_takes_no_shard_write_lock() {
+    let engine = shared_engine();
+    // Cold capture, then a second run to build the compiled trace.
+    engine.handle(&run_req("transpose32", MemoryArchKind::banked(16))).unwrap();
+    engine.handle(&run_req("transpose32", MemoryArchKind::mp_4r1w())).unwrap();
+    let cold_locks = engine.metrics().get(Counter::StoreShardWriteLocks);
+    assert!(cold_locks >= 1, "the cold path must have installed cells");
+
+    let archs = MemoryArchKind::table3_nine();
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let engine = Arc::clone(&engine);
+            let archs = &archs;
+            scope.spawn(move || {
+                let session = Session::new(engine);
+                for k in 0..8 {
+                    session.handle(&run_req("transpose32", archs[(t + k) % archs.len()])).unwrap();
+                }
+            });
+        }
+    });
+    assert_eq!(
+        engine.metrics().get(Counter::StoreShardWriteLocks),
+        cold_locks,
+        "32 warm runs across 4 sessions acquired zero shard write locks"
+    );
+    assert_eq!(engine.functional_executions(), 1);
+}
+
+/// Wire-level backpressure: past the dispatcher depth a line is
+/// answered `{"ok":false,...,"exit_code":3}` without being decoded,
+/// and the rejection is counted server-wide.
+#[test]
+fn serve_rejects_lines_past_the_dispatcher_depth() {
+    let engine = shared_engine();
+    let dispatcher = Dispatcher::new(0, Arc::clone(engine.metrics()));
+    let session = Session::new(Arc::clone(&engine));
+    let input = "{\"op\":\"list\"}\nthis line is never even decoded\n";
+    let mut output = Vec::new();
+    wire::serve_with(&session, Some(&dispatcher), input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "every line answered in-band:\n{text}");
+    for line in &lines {
+        assert!(line.contains("\"ok\":false"), "{line}");
+        assert!(line.contains("\"exit_code\":3"), "retryable overload class: {line}");
+        assert!(line.contains("overloaded"), "{line}");
+    }
+    assert_eq!(engine.metrics().get(Counter::OverloadRejections), 2);
+    assert_eq!(engine.metrics().get(Counter::RequestsServed), 0, "nothing reached the engine");
+
+    // With one slot the sequential loop admits every line in turn: the
+    // permit is released when the line's reply is written.
+    let dispatcher = Dispatcher::new(1, Arc::clone(engine.metrics()));
+    let mut output = Vec::new();
+    wire::serve_with(&session, Some(&dispatcher), "{\"op\":\"list\"}\n".as_bytes(), &mut output)
+        .unwrap();
+    let text = String::from_utf8(output).unwrap();
+    assert!(text.contains("\"ok\":true"), "{text}");
+    assert_eq!(dispatcher.in_flight(), 0);
+}
+
+fn drive_client<S: std::io::Read + Write>(stream: S) -> Vec<String> {
+    let mut reader = BufReader::new(stream);
+    let mut replies = Vec::new();
+    for line in [
+        "{\"op\":\"list\"}",
+        "{\"op\":\"run\",\"program\":\"transpose32\",\"mem\":\"16-banks\"}",
+        "[{\"op\":\"stats\",\"scope\":\"session\"},{\"op\":\"stats\"}]",
+    ] {
+        reader.get_mut().write_all(line.as_bytes()).unwrap();
+        reader.get_mut().write_all(b"\n").unwrap();
+        reader.get_mut().flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        replies.push(reply.trim_end().to_string());
+    }
+    replies
+}
+
+fn assert_client_replies(replies: &[String]) {
+    assert_eq!(replies.len(), 3);
+    assert!(replies[0].contains("\"ok\":true") && replies[0].contains("\"op\":\"list\""));
+    assert!(replies[1].contains("\"total_cycles\":"), "{}", replies[1]);
+    assert!(
+        replies[2].contains("\"scope\":\"session\"") && replies[2].contains("\"scope\":\"engine\""),
+        "both stats scopes answered on one batch line: {}",
+        replies[2]
+    );
+    assert!(!replies.iter().any(|r| r.contains("\"ok\":false")), "{replies:?}");
+}
+
+/// Two real TCP clients of one `serve --listen` server, lock-step
+/// request/reply — the socket front-end satellite, end to end.
+#[test]
+fn tcp_clients_share_one_engine() {
+    let engine = shared_engine();
+    let addr = ListenAddr::parse("127.0.0.1:0").unwrap();
+    let server = SocketServer::bind(Arc::clone(&engine), &addr, 8).unwrap();
+    let local = server.local_addr().unwrap();
+    // The accept loop runs for the rest of the process; the test talks
+    // to it and exits (clients disconnect cleanly when dropped).
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn({
+                let local = local.clone();
+                move || drive_client(std::net::TcpStream::connect(&local).unwrap())
+            })
+        })
+        .collect();
+    for client in clients {
+        assert_client_replies(&client.join().unwrap());
+    }
+    assert!(engine.metrics().get(Counter::SessionsOpened) >= 2);
+    assert_eq!(engine.functional_executions(), 1, "both clients shared one capture");
+}
+
+/// The same transport over a Unix domain socket.
+#[cfg(unix)]
+#[test]
+fn unix_socket_client_roundtrips() {
+    let engine = shared_engine();
+    let path = std::env::temp_dir().join(format!("soft-simt-test-{}.sock", std::process::id()));
+    let addr = ListenAddr::parse(&format!("unix:{}", path.display())).unwrap();
+    let server = SocketServer::bind(Arc::clone(&engine), &addr, 8).unwrap();
+    assert_eq!(server.local_addr().unwrap(), path.display().to_string());
+    std::thread::spawn(move || {
+        let _ = server.run();
+    });
+
+    let replies = drive_client(std::os::unix::net::UnixStream::connect(&path).unwrap());
+    assert_client_replies(&replies);
+    assert!(engine.metrics().get(Counter::SessionsOpened) >= 1);
+    let _ = std::fs::remove_file(&path);
+}

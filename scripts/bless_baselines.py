@@ -45,13 +45,26 @@ PLAN = [
     (
         ["BENCH_serve.json", "rust/BENCH_serve.json"],
         "rust/benches/baselines/BENCH_serve.json",
-        ["cold_median_ms", "warm_median_ms"],
+        [
+            "cold_median_ms",
+            "warm_median_ms",
+            "concurrent_c1_p50_us",
+            "concurrent_c1_p99_us",
+            "concurrent_c1_throughput_rps",
+            "concurrent_c4_p50_us",
+            "concurrent_c4_p99_us",
+            "concurrent_c4_throughput_rps",
+            "concurrent_c16_p50_us",
+            "concurrent_c16_p99_us",
+            "concurrent_c16_throughput_rps",
+        ],
     ),
 ]
 
 
 def check_null() -> int:
-    needed = False
+    unblessed = 0
+    files_with_nulls = set()
     for _, baseline, metrics in PLAN:
         baseline_path = Path(baseline)
         if not baseline_path.is_file():
@@ -65,10 +78,14 @@ def check_null() -> int:
         for metric in metrics:
             if base.get(metric) is None:
                 print(f"unblessed: {baseline}: {metric}")
-                needed = True
-    if not needed:
+                unblessed += 1
+                files_with_nulls.add(baseline)
+    if unblessed:
+        print(f"summary: {unblessed} gated metric(s) unblessed across "
+              f"{len(files_with_nulls)} baseline file(s)")
+    else:
         print("all gated baseline metrics already blessed")
-    return 0 if needed else 1
+    return 0 if unblessed else 1
 
 
 def main() -> int:

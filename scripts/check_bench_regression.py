@@ -4,6 +4,7 @@
 Usage:
   check_bench_regression.py --current CAND [CAND ...] --baseline BASE \
       --metrics NAME [NAME ...] [--max-regression 1.20] \
+      [--min-throughput-metrics NAME [NAME ...]] \
       [--floor NAME=VALUE [NAME=VALUE ...]] \
       [--ceiling NAME=VALUE [NAME=VALUE ...]]
 
@@ -19,6 +20,10 @@ Usage:
 - Metrics are medians in milliseconds: lower is better, and the gate
   fails when current > baseline * max_regression (default 1.20 = the
   >20% regression budget of ISSUE 4).
+- --min-throughput-metrics is the baseline-relative higher-is-better
+  twin (requests/sec from the serve saturation bench): the gate fails
+  when current < baseline / max_regression, and a null/absent baseline
+  is skipped with the same bless notice.
 - Floors are higher-is-better ABSOLUTE gates, independent of the
   baseline file: `--floor simd_speedup=4.0` fails when the current
   JSON's `simd_speedup` is below 4.0 or missing. Use floors for
@@ -45,12 +50,14 @@ def main() -> int:
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--metrics", nargs="*", default=[])
     ap.add_argument("--max-regression", type=float, default=1.20)
+    ap.add_argument("--min-throughput-metrics", nargs="*", default=[])
     ap.add_argument("--floor", nargs="*", default=[], metavar="NAME=VALUE")
     ap.add_argument("--ceiling", nargs="*", default=[], metavar="NAME=VALUE")
     args = ap.parse_args()
-    if not args.metrics and not args.floor and not args.ceiling:
-        print("error: nothing to check (need --metrics, --floor and/or --ceiling)",
-              file=sys.stderr)
+    if (not args.metrics and not args.min_throughput_metrics
+            and not args.floor and not args.ceiling):
+        print("error: nothing to check (need --metrics, --min-throughput-metrics, "
+              "--floor and/or --ceiling)", file=sys.stderr)
         return 2
 
     def parse_thresholds(specs, flag):
@@ -105,6 +112,26 @@ def main() -> int:
         line = (f"{verdict:5} {metric}: current {cur:.3f} vs baseline {base:.3f} "
                 f"(budget {budget:.3f}, x{args.max_regression:.2f})")
         if cur > budget:
+            print(line, file=sys.stderr)
+            failed = True
+        else:
+            print(line)
+    for metric in args.min_throughput_metrics:
+        base = baseline.get(metric)
+        cur = current.get(metric)
+        if base is None:
+            print(f"skip  {metric}: no committed baseline yet (null/absent) — "
+                  f"bless {baseline_path} from the bench-json artifact of a trusted CI run")
+            continue
+        if cur is None:
+            print(f"FAIL  {metric}: missing from {current_path}", file=sys.stderr)
+            failed = True
+            continue
+        budget = base / args.max_regression
+        verdict = "FAIL" if cur < budget else "ok"
+        line = (f"{verdict:5} {metric}: current {cur:.3f} vs baseline {base:.3f} "
+                f"(budget {budget:.3f}, /{args.max_regression:.2f}, higher is better)")
+        if cur < budget:
             print(line, file=sys.stderr)
             failed = True
         else:

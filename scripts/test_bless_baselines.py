@@ -1,0 +1,113 @@
+"""Unit tests for bless_baselines.py (run by the CI python step:
+`python3 -m unittest discover -s scripts -p 'test_*.py'`).
+
+Pins the two behaviors bless.yml's decide job keys off: the fold path
+copies exactly the gated metrics into a baseline (preserving its note),
+and --check-null reports every null gated metric with an end summary,
+exiting 0 while a bless is still needed and 1 once everything is
+blessed.
+"""
+
+import io
+import json
+import sys
+import tempfile
+import unittest
+from contextlib import redirect_stdout
+from pathlib import Path
+from unittest import mock
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import bless_baselines  # noqa: E402
+
+
+class BlessHarness(unittest.TestCase):
+    def setUp(self):
+        self.tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self.tmp.cleanup)
+        self.dir = Path(self.tmp.name)
+
+    def write(self, name, payload):
+        path = self.dir / name
+        path.write_text(json.dumps(payload))
+        return str(path)
+
+    def patched_plan(self, plan):
+        return mock.patch.object(bless_baselines, "PLAN", plan)
+
+
+class CheckNullTests(BlessHarness):
+    def test_null_metrics_are_listed_and_summarized(self):
+        base_a = self.write("a.json", {"m1": None, "m2": 3.0})
+        base_b = self.write("b.json", {"m3": None})
+        plan = [([], base_a, ["m1", "m2"]), ([], base_b, ["m3"])]
+        out = io.StringIO()
+        with self.patched_plan(plan), redirect_stdout(out):
+            code = bless_baselines.check_null()
+        self.assertEqual(code, 0, "exit 0 = a bless is still needed")
+        text = out.getvalue()
+        self.assertIn(f"unblessed: {base_a}: m1", text)
+        self.assertIn(f"unblessed: {base_b}: m3", text)
+        self.assertNotIn(f"unblessed: {base_a}: m2", text, "blessed metrics are not listed")
+        self.assertIn("summary: 2 gated metric(s) unblessed across 2 baseline file(s)", text)
+
+    def test_absent_metric_counts_as_unblessed(self):
+        base = self.write("a.json", {"other": 1.0})
+        out = io.StringIO()
+        with self.patched_plan([([], base, ["m1"])]), redirect_stdout(out):
+            code = bless_baselines.check_null()
+        self.assertEqual(code, 0)
+        self.assertIn("summary: 1 gated metric(s) unblessed across 1 baseline file(s)",
+                      out.getvalue())
+
+    def test_fully_blessed_exits_one_with_no_summary(self):
+        base = self.write("a.json", {"m1": 1.0, "m2": 2.0})
+        out = io.StringIO()
+        with self.patched_plan([([], base, ["m1", "m2"])]), redirect_stdout(out):
+            code = bless_baselines.check_null()
+        self.assertEqual(code, 1, "exit 1 = nothing left to bless")
+        self.assertIn("all gated baseline metrics already blessed", out.getvalue())
+        self.assertNotIn("summary:", out.getvalue())
+
+    def test_missing_baseline_file_is_io_error(self):
+        with self.patched_plan([([], str(self.dir / "gone.json"), ["m1"])]):
+            code = bless_baselines.check_null()
+        self.assertEqual(code, 2)
+
+
+class FoldTests(BlessHarness):
+    def test_fold_copies_gated_metrics_and_preserves_note(self):
+        cur = self.write("fresh.json", {"m1": 4.5, "m2": 6.0, "untracked": 9.9})
+        base = self.write("base.json", {"note": "keep me", "m1": None, "m2": None})
+        with self.patched_plan([([cur], base, ["m1", "m2"])]), \
+                mock.patch.object(sys, "argv", ["bless_baselines.py"]), \
+                redirect_stdout(io.StringIO()):
+            code = bless_baselines.main()
+        self.assertEqual(code, 0)
+        blessed = json.loads(Path(base).read_text())
+        self.assertEqual(blessed["m1"], 4.5)
+        self.assertEqual(blessed["m2"], 6.0)
+        self.assertEqual(blessed["note"], "keep me")
+        self.assertNotIn("untracked", blessed, "a baseline is a contract, not a log")
+
+    def test_fold_fails_when_fresh_json_lacks_a_gated_metric(self):
+        cur = self.write("fresh.json", {"m1": 4.5})
+        base = self.write("base.json", {"m1": None, "m2": None})
+        with self.patched_plan([([cur], base, ["m1", "m2"])]), \
+                mock.patch.object(sys, "argv", ["bless_baselines.py"]), \
+                redirect_stdout(io.StringIO()):
+            code = bless_baselines.main()
+        self.assertEqual(code, 2)
+
+    def test_serve_plan_gates_the_saturation_keys(self):
+        # The real PLAN must gate every saturation metric the serve
+        # bench emits — drift here silently un-gates the new keys.
+        serve = next(e for e in bless_baselines.PLAN
+                     if e[1].endswith("BENCH_serve.json"))
+        for c in (1, 4, 16):
+            for suffix in ("p50_us", "p99_us", "throughput_rps"):
+                self.assertIn(f"concurrent_c{c}_{suffix}", serve[2])
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -79,6 +79,47 @@ class MetricsModeTests(GateHarness):
         self.assertEqual(code, 2)
 
 
+class ThroughputModeTests(GateHarness):
+    """--min-throughput-metrics: baseline-relative, higher is better."""
+
+    def test_throughput_within_budget_passes(self):
+        cur = self.write("cur.json", {"concurrent_c16_throughput_rps": 900.0})
+        base = self.write("base.json", {"concurrent_c16_throughput_rps": 1000.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--min-throughput-metrics", "concurrent_c16_throughput_rps",
+                             "--max-regression", "1.20")
+        self.assertEqual(code, 0, "900 >= 1000/1.20 is inside the budget")
+
+    def test_throughput_collapse_fails(self):
+        cur = self.write("cur.json", {"concurrent_c16_throughput_rps": 700.0})
+        base = self.write("base.json", {"concurrent_c16_throughput_rps": 1000.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--min-throughput-metrics", "concurrent_c16_throughput_rps",
+                             "--max-regression", "1.20")
+        self.assertEqual(code, 1, "700 < 1000/1.20 busts the budget")
+
+    def test_null_throughput_baseline_is_skipped(self):
+        cur = self.write("cur.json", {"concurrent_c16_throughput_rps": 1.0})
+        base = self.write("base.json", {"concurrent_c16_throughput_rps": None})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--min-throughput-metrics", "concurrent_c16_throughput_rps")
+        self.assertEqual(code, 0, "null baseline means 'not blessed yet', never a failure")
+
+    def test_throughput_missing_from_current_fails(self):
+        cur = self.write("cur.json", {})
+        base = self.write("base.json", {"concurrent_c16_throughput_rps": 1000.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--min-throughput-metrics", "concurrent_c16_throughput_rps")
+        self.assertEqual(code, 1)
+
+    def test_improved_throughput_passes(self):
+        cur = self.write("cur.json", {"concurrent_c16_throughput_rps": 2000.0})
+        base = self.write("base.json", {"concurrent_c16_throughput_rps": 1000.0})
+        code = self.run_gate("--current", cur, "--baseline", base,
+                             "--min-throughput-metrics", "concurrent_c16_throughput_rps")
+        self.assertEqual(code, 0)
+
+
 class FloorModeTests(GateHarness):
     def test_floor_met_passes(self):
         cur = self.write("cur.json", {"simd_speedup": 5.1})

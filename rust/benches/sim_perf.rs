@@ -248,6 +248,36 @@ fn main() {
         * 100.0;
     println!("instrumented packed replay overhead: {instrumented_overhead_pct:.2}%");
 
+    // The PR-9 divergent kernels on the lane-packed replayer: their
+    // traces carry non-full lane masks (owner-predicated
+    // compare-exchange stages; skewed per-lane row loops), so these two
+    // medians track the masked-popcount path per family.
+    let div_compiled: Vec<CompiledTrace> = ["bitonic1024", "spmv1024"]
+        .iter()
+        .map(|p| {
+            let job = BenchJob::new(p.to_string(), MemoryArchKind::banked(16));
+            CompiledTrace::compile(&job.capture_trace().unwrap())
+        })
+        .collect();
+    let bitonic = b3
+        .bench("replay_9archs_bitonic1024_lane_packed", || {
+            replay_many_packed(&div_compiled[0], &nine, u64::MAX)
+                .into_iter()
+                .map(|r| r.unwrap().total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", bitonic.line());
+    let spmv = b3
+        .bench("replay_9archs_spmv1024_lane_packed", || {
+            replay_many_packed(&div_compiled[1], &nine, u64::MAX)
+                .into_iter()
+                .map(|r| r.unwrap().total_cycles())
+                .sum::<u64>()
+        })
+        .clone();
+    println!("{}", spmv.line());
+
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -263,7 +293,9 @@ fn main() {
          \"replay_packed_median_ms\": {packed_ms:.3},\n  \
          \"simd_speedup\": {simd_speedup:.3},\n  \
          \"replay_packed_instrumented_median_ms\": {instr_ms:.3},\n  \
-         \"instrumented_overhead_pct\": {instrumented_overhead_pct:.3}\n}}\n",
+         \"instrumented_overhead_pct\": {instrumented_overhead_pct:.3},\n  \
+         \"bitonic_replay_median_ms\": {bitonic_ms:.3},\n  \
+         \"spmv_replay_median_ms\": {spmv_ms:.3}\n}}\n",
         cells = sweep_jobs.len(),
         base_ms = base.median().as_secs_f64() * 1e3,
         cached_ms = cached.median().as_secs_f64() * 1e3,
@@ -271,6 +303,8 @@ fn main() {
         batched_ms = batched.median().as_secs_f64() * 1e3,
         packed_ms = packed.median().as_secs_f64() * 1e3,
         instr_ms = instrumented.median().as_secs_f64() * 1e3,
+        bitonic_ms = bitonic.median().as_secs_f64() * 1e3,
+        spmv_ms = spmv.median().as_secs_f64() * 1e3,
     );
     match std::fs::write("BENCH_sweep.json", &json) {
         Ok(()) => println!("wrote BENCH_sweep.json"),

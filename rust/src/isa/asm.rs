@@ -13,7 +13,7 @@
 //!     ld    r3, [r2]      ; shared-memory read
 //!     st    [r2], r3      ; blocking write
 //!     stnb  [r2], r3      ; non-blocking write
-//!     bnz   r4, start     ; uniform branch (label or absolute pc)
+//!     bnz   r4, start     ; per-lane branch (label or absolute pc)
 //!     halt
 //! ```
 //!

@@ -1,0 +1,201 @@
+//! Control-flow analysis over the instruction stream: immediate
+//! post-dominators, the reconvergence points of the divergence model.
+//!
+//! When a `bnz` splits the block (some lanes take the branch, some fall
+//! through), the execution core serializes the two paths and rejoins them
+//! at the branch's *immediate post-dominator* — the first instruction
+//! every path from the branch to program exit must pass through
+//! (DESIGN.md §Divergence). This module computes that point for every
+//! instruction, once per program, from the static CFG:
+//!
+//! * `halt` flows to a single virtual exit node;
+//! * `jmp` flows to its target;
+//! * `bnz` flows to both its target and the fall-through;
+//! * everything else falls through;
+//! * a control transfer outside the program flows to exit (execution
+//!   faults there, which ends the path).
+//!
+//! The algorithm is Cooper–Harvey–Kennedy ("A Simple, Fast Dominance
+//! Algorithm") run on the reversed CFG with the exit node as the root, so
+//! its immediate *dominators* are our immediate *post*-dominators. It is
+//! effectively linear for the structured programs the builder emits and
+//! needs no per-node bitsets, so even a pathological 64 Ki-instruction
+//! program stays cheap.
+
+use crate::isa::inst::Instruction;
+use crate::isa::opcode::Opcode;
+
+/// Sentinel for "no post-dominator inside the program": the only common
+/// point past this instruction is program exit. A reconvergence stack
+/// entry carrying this value can never match a real PC, so paths under it
+/// retire through `halt` alone.
+pub const EXIT: usize = usize::MAX;
+
+/// Immediate post-dominator of every instruction (`EXIT` where none
+/// exists inside the program, e.g. a branch whose arms halt separately,
+/// or code that cannot reach `halt` at all).
+pub fn immediate_postdoms(insts: &[Instruction]) -> Vec<usize> {
+    let n = insts.len();
+    let exit = n; // virtual exit node appended after the last instruction
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (pc, inst) in insts.iter().enumerate() {
+        let clamp = |t: usize| if t < n { t } else { exit };
+        let fall = clamp(pc + 1);
+        match inst.op {
+            Opcode::Halt => succ[pc].push(exit),
+            Opcode::Jmp => succ[pc].push(clamp(inst.imm as usize)),
+            Opcode::Bnz => {
+                let target = clamp(inst.imm as usize);
+                succ[pc].push(target);
+                if fall != target {
+                    succ[pc].push(fall);
+                }
+            }
+            _ => succ[pc].push(fall),
+        }
+    }
+
+    // Adjacency of the reversed CFG (edges exit-ward become edges
+    // entry-ward): the DFS below walks it from the exit root.
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+    for (pc, ss) in succ.iter().enumerate() {
+        for &s in ss {
+            preds[s].push(pc);
+        }
+    }
+
+    // Postorder of the reversed CFG from exit. Nodes never reached here
+    // cannot reach exit in the original CFG: their post-dominators are
+    // undefined and they report `EXIT`.
+    let mut order = Vec::with_capacity(n + 1);
+    let mut number = vec![usize::MAX; n + 1];
+    let mut visited = vec![false; n + 1];
+    let mut dfs = vec![(exit, 0usize)];
+    visited[exit] = true;
+    while let Some(frame) = dfs.last_mut() {
+        let (node, edge) = (frame.0, frame.1);
+        if edge < preds[node].len() {
+            frame.1 += 1;
+            let next = preds[node][edge];
+            if !visited[next] {
+                visited[next] = true;
+                dfs.push((next, 0));
+            }
+        } else {
+            dfs.pop();
+            number[node] = order.len();
+            order.push(node);
+        }
+    }
+
+    // Cooper–Harvey–Kennedy fixpoint in reverse postorder. `idom` (of the
+    // reversed graph) is indexed by node; MAX marks "not yet known".
+    let mut idom = vec![usize::MAX; n + 1];
+    idom[exit] = exit;
+    let rpo: Vec<usize> = order.iter().rev().copied().filter(|&v| v != exit).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in &rpo {
+            let mut new_idom = usize::MAX;
+            // Predecessors of `b` in the reversed graph are its CFG
+            // successors; only those already processed participate.
+            for &p in &succ[b] {
+                if idom[p] == usize::MAX {
+                    continue;
+                }
+                new_idom = if new_idom == usize::MAX {
+                    p
+                } else {
+                    intersect(p, new_idom, &idom, &number)
+                };
+            }
+            if new_idom != usize::MAX && idom[b] != new_idom {
+                idom[b] = new_idom;
+                changed = true;
+            }
+        }
+    }
+
+    (0..n)
+        .map(|pc| if idom[pc] == usize::MAX || idom[pc] == exit { EXIT } else { idom[pc] })
+        .collect()
+}
+
+/// Walk two nodes up the (post-)dominator tree to their common ancestor,
+/// comparing by postorder number (lower = further from the root).
+fn intersect(mut a: usize, mut b: usize, idom: &[usize], number: &[usize]) -> usize {
+    while a != b {
+        while number[a] < number[b] {
+            a = idom[a];
+        }
+        while number[b] < number[a] {
+            b = idom[b];
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn ipdoms_of(src: &str) -> Vec<usize> {
+        let p = assemble(src).expect("assembles");
+        let insts: Vec<Instruction> =
+            p.encode().iter().map(|&w| Instruction::decode(w).unwrap()).collect();
+        immediate_postdoms(&insts)
+    }
+
+    #[test]
+    fn straight_line_postdominates_by_fallthrough() {
+        let pd = ipdoms_of(".threads 16\n tid r0\n iaddi r1, r0, 1\n halt\n");
+        assert_eq!(pd, vec![1, 2, EXIT]);
+    }
+
+    #[test]
+    fn if_else_reconverges_at_the_join() {
+        // 0 tid, 1 bnz -> 3, 2 iaddi (fall arm), 3 iaddi (join), 4 halt
+        let pd = ipdoms_of(
+            ".threads 16\n tid r0\n bnz r0, join\n iaddi r1, r0, 1\njoin:\n iaddi r2, r0, 2\n halt\n",
+        );
+        assert_eq!(pd[1], 3, "branch reconverges at the label both paths reach");
+        assert_eq!(pd[2], 3);
+    }
+
+    #[test]
+    fn loop_branch_reconverges_at_fallthrough() {
+        // 0 tid, 1 iaddi, 2 iaddi (body), 3 bnz -> 2, 4 halt
+        let pd = ipdoms_of(
+            ".threads 16\n tid r0\n iaddi r1, r0, 0\nbody:\n iaddi r1, r1, 1\n bnz r1, body\n halt\n",
+        );
+        assert_eq!(pd[3], 4, "back-edge branch reconverges at loop exit");
+    }
+
+    #[test]
+    fn arms_that_halt_separately_have_no_join() {
+        // 0 tid, 1 bnz -> 3, 2 halt (fall arm), 3 halt (taken arm)
+        let pd = ipdoms_of(".threads 16\n tid r0\n bnz r0, taken\n halt\ntaken:\n halt\n");
+        assert_eq!(pd[1], EXIT, "only the virtual exit joins the two halts");
+    }
+
+    #[test]
+    fn out_of_range_target_counts_as_an_exit_edge() {
+        // bnz to a PC past the end: the taken edge leaves the program, so
+        // the branch's only in-program continuation is the fall-through —
+        // but exit-bound paths keep the join at EXIT.
+        let p = crate::isa::program::Program {
+            name: "oob".into(),
+            threads: 16,
+            insts: vec![
+                Instruction::i(Opcode::Bnz, 0, 0, 99),
+                Instruction::z(Opcode::Halt),
+            ],
+        };
+        let insts: Vec<Instruction> =
+            p.encode().iter().map(|&w| Instruction::decode(w).unwrap()).collect();
+        let pd = immediate_postdoms(&insts);
+        assert_eq!(pd[0], EXIT);
+    }
+}

@@ -10,13 +10,16 @@
 //! | `INT OPs`        | register-register integer ALU        |
 //! | `Immediate OPs`  | any op carrying an immediate operand |
 //! | `FP OPs`         | IEEE-754 single-precision ALU        |
-//! | `Other OPs`      | TID/NOP/HALT/uniform control flow    |
+//! | `Other OPs`      | TID/NOP/HALT/control flow            |
 //! | `Load/Store`     | shared-memory LD / ST / STNB         |
 //!
 //! Sixteen lanes execute each instruction for every thread in the block
-//! (threads/16 *operations* per instruction); see [`crate::sim`].
+//! (threads/16 *operations* per instruction); see [`crate::sim`]. Control
+//! flow may diverge per lane: [`cfg`] computes the immediate
+//! post-dominators the execution core reconverges at.
 
 pub mod asm;
+pub mod cfg;
 pub mod inst;
 pub mod opcode;
 pub mod program;

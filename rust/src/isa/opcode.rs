@@ -90,9 +90,10 @@ pub enum Opcode {
     Nop,
     /// stop the block
     Halt,
-    /// uniform unconditional jump
+    /// unconditional jump (uniform by construction)
     Jmp,
-    /// uniform branch if rd != 0 (must be uniform across threads)
+    /// per-lane branch if rd != 0; lanes that disagree diverge onto the
+    /// reconvergence stack (see `sim::exec`)
     Bnz,
 }
 

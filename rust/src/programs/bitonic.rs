@@ -1,0 +1,236 @@
+//! Bitonic sort — the first *divergent* kernel family: per-step owner
+//! predication plus a data-dependent compare-exchange branch.
+//!
+//! The classic in-place bitonic network, fully unrolled: for each stage
+//! pair `(k, j)` (`k = 2,4,..,N`; `j = k/2,..,1`) thread `i` with
+//! `i & j == 0` owns the pair `(i, i + j)` and compare-exchanges it in
+//! the direction selected by bit `k` of `i`. Two divergence shapes per
+//! step:
+//!
+//! * the **owner branch** `bnz (tid & j), skip` predicates half the lanes
+//!   off — deterministic divergence, whole warps idle once `j >= 16`
+//!   (their memory ops issue with empty masks), intra-warp half-masks
+//!   below;
+//! * the **swap branch** is decided by the *loaded data* — both arms are
+//!   pure register moves, so the memory/FP op counts stay closed-form
+//!   (the golden model below) even though the executed instruction
+//!   stream is input-dependent.
+//!
+//! Values are masked to 31 bits so the sign of a wrapping subtraction is
+//! an exact comparison (the ISA has no compare instruction). The host
+//! reference is simply the sorted input: the network sorts ascending for
+//! any input, which the machine/host equivalence tests lean on.
+
+use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
+use crate::isa::program::Program;
+use crate::util::bits::log2_exact;
+use crate::util::XorShift64;
+
+/// Placement metadata for a bitonic run.
+#[derive(Debug, Clone, Copy)]
+pub struct BitonicPlan {
+    /// Element count N = thread count (power of two, 64..=2048).
+    pub n: u32,
+    /// Compare-exchange steps: log2(N)·(log2(N)+1)/2.
+    pub steps: u32,
+}
+
+impl BitonicPlan {
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (64..=2048).contains(&n));
+        let logn = log2_exact(n);
+        Self { n, steps: logn * (logn + 1) / 2 }
+    }
+}
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (64..=2048).contains(&n)
+}
+
+/// Generate the bitonic program for an N-element array at word 0.
+pub fn bitonic_program(n: u32) -> (BitonicPlan, Program) {
+    let plan = BitonicPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &BitonicPlan) -> Program {
+    let n = plan.n;
+    let mut b = ProgramBuilder::new(format!("bitonic{n}"), n);
+
+    let tid = 0u8; // conventional
+    b.tid(tid);
+    let own = b.alloc();
+    let laddr = b.alloc();
+    let av = b.alloc();
+    let bv = b.alloc();
+    let dir = b.alloc();
+    let gt = b.alloc();
+    let lt = b.alloc();
+    let sw = b.alloc();
+    let lo = b.alloc();
+    let hi = b.alloc();
+
+    let mut k = 2u32;
+    while k <= n {
+        let logk = log2_exact(k);
+        let mut j = k / 2;
+        while j >= 1 {
+            // Owner predicate: lanes with tid & j != 0 sit this step out.
+            b.iandi(own, tid, j as u16);
+            let skip = b.bnz_fwd(own);
+
+            b.ld(av, tid); // a = data[i]
+            b.iaddi(laddr, tid, j as i32); // partner = i + j (i & j == 0)
+            b.ld(bv, laddr); // b = data[i + j]
+
+            // Direction bit: 0 = ascending (min at i), 1 = descending.
+            b.iandi(dir, tid, k as u16);
+            b.ishri(dir, dir, logk as u16);
+
+            // Sign-bit comparisons (values are < 2^31, so exact):
+            // gt = (a > b), lt = (a < b).
+            b.isub(gt, bv, av);
+            b.ishri(gt, gt, 31);
+            b.isub(lt, av, bv);
+            b.ishri(lt, lt, 31);
+            // swap = dir == 0 ? gt : lt  —  gt ^ ((gt ^ lt) & dir).
+            b.ixor(sw, gt, lt);
+            b.iand(sw, sw, dir);
+            b.ixor(sw, sw, gt);
+
+            // Data-dependent select: both arms are register moves only,
+            // so the traced memory/FP ops below stay input-independent.
+            b.iaddi(lo, av, 0);
+            b.iaddi(hi, bv, 0);
+            let doswap = b.bnz_fwd(sw);
+            let store = b.jmp_fwd();
+            let at = b.pc();
+            b.patch_target(doswap, at);
+            b.iaddi(lo, bv, 0);
+            b.iaddi(hi, av, 0);
+            let at = b.pc();
+            b.patch_target(store, at);
+            b.st(tid, lo);
+            b.st(laddr, hi);
+
+            let at = b.pc();
+            b.patch_target(skip, at);
+            j /= 2;
+        }
+        k *= 2;
+    }
+    b.halt();
+    b.build()
+}
+
+/// Host reference: a full bitonic network sorts ascending.
+pub fn reference_bitonic(input: &[u32]) -> Vec<u32> {
+    let mut out = input.to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// Build the registered workload for `bitonic{n}`.
+pub fn workload(n: u32) -> Workload {
+    let plan = BitonicPlan::new(n);
+    let (_, program) = bitonic_program(n);
+    Workload::new(program, (plan.n as usize).next_power_of_two())
+        .with_fill(move |mem, seed| {
+            let mut rng = XorShift64::new(seed);
+            for i in 0..plan.n {
+                // 31-bit values keep the kernel's sign-trick compare exact.
+                mem.write_word(i, rng.next_u32() >> 1);
+            }
+        })
+        .with_expected(move |seed| {
+            let mut rng = XorShift64::new(seed);
+            let input: Vec<u32> = (0..plan.n).map(|_| rng.next_u32() >> 1).collect();
+            ExpectedImage { base: 0, words: reference_bitonic(&input) }
+        })
+}
+
+/// Analytical golden model: every step issues exactly 2 loads + 2 stores
+/// over the whole block (divergence masks lanes off but never removes a
+/// warp's op slot), so counts are closed-form despite the data-dependent
+/// swap branch. No FP work — it's an integer sort.
+pub fn model(n: u32) -> OpCountModel {
+    let steps = BitonicPlan::new(n).steps as u64;
+    let warps = n as u64 / 16;
+    OpCountModel {
+        d_load_ops: steps * 2 * warps,
+        tw_load_ops: 0,
+        store_ops: steps * 2 * warps,
+        fp_ops: 0,
+    }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "bitonic",
+    prefix: "bitonic",
+    title: "Bitonic Sort (divergent)",
+    grammar: "bitonicN — N power of two, 64..=2048",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[256, 1024],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_bitonic(n: u32, arch: MemoryArchKind, seed: u64) -> (Vec<u32>, Vec<u32>) {
+        let w = workload(n);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(arch).with_mem_words(w.mem_words()).with_fast_timing(),
+        );
+        w.load_input(&mut m, seed);
+        let input = m.read_image(0, n as usize);
+        m.run_program(w.program()).expect("bitonic runs");
+        (input, m.read_image(0, n as usize))
+    }
+
+    #[test]
+    fn sorts_on_all_paper_archs() {
+        for arch in MemoryArchKind::table3_nine() {
+            let (input, out) = run_bitonic(128, arch, 11);
+            assert_eq!(out, reference_bitonic(&input), "{arch}");
+        }
+    }
+
+    #[test]
+    fn sorts_multiple_seeds_at_larger_sizes() {
+        for seed in [1, 2, 42] {
+            let (input, out) = run_bitonic(512, MemoryArchKind::banked(16), seed);
+            assert_eq!(out, reference_bitonic(&input), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn model_matches_traced_ops() {
+        let w = workload(256);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked(16))
+                .with_mem_words(w.mem_words())
+                .with_fast_timing(),
+        );
+        w.load_input(&mut m, 7);
+        m.run_program(w.program()).expect("runs");
+        let trace = m.mem_trace().expect("trace captured");
+        assert_eq!(OpCountModel::of_trace(trace), model(256));
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_rejected() {
+        BitonicPlan::new(32);
+    }
+}

@@ -120,8 +120,63 @@ impl ProgramBuilder {
         self.emit(Instruction::i(Opcode::Ishri, rd, ra, imm));
     }
 
+    pub fn ixori(&mut self, rd: u8, ra: u8, imm: u16) {
+        self.emit(Instruction::i(Opcode::Ixori, rd, ra, imm));
+    }
+
     pub fn iadd(&mut self, rd: u8, ra: u8, rb: u8) {
         self.emit(Instruction::r(Opcode::Iadd, rd, ra, rb));
+    }
+
+    pub fn isub(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Isub, rd, ra, rb));
+    }
+
+    pub fn iand(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Iand, rd, ra, rb));
+    }
+
+    pub fn ixor(&mut self, rd: u8, ra: u8, rb: u8) {
+        self.emit(Instruction::r(Opcode::Ixor, rd, ra, rb));
+    }
+
+    // --- control flow ---------------------------------------------------
+
+    /// Branch to `target` where `rd != 0` — per-lane: disagreeing lanes
+    /// diverge and reconverge at the branch's post-dominator.
+    pub fn bnz(&mut self, rd: u8, target: u16) {
+        self.emit(Instruction::i(Opcode::Bnz, rd, 0, target));
+    }
+
+    /// Unconditional jump.
+    pub fn jmp(&mut self, target: u16) {
+        self.emit(Instruction::i(Opcode::Jmp, 0, 0, target));
+    }
+
+    /// Emit a forward branch whose target is not yet known; patch it with
+    /// [`Self::patch_target`] once the label PC is reached.
+    pub fn bnz_fwd(&mut self, rd: u8) -> u16 {
+        let at = self.pc();
+        self.bnz(rd, 0);
+        at
+    }
+
+    /// Emit a forward jump whose target is not yet known.
+    pub fn jmp_fwd(&mut self) -> u16 {
+        let at = self.pc();
+        self.jmp(0);
+        at
+    }
+
+    /// Resolve a forward branch/jump emitted by [`Self::bnz_fwd`] /
+    /// [`Self::jmp_fwd`] to `target`.
+    pub fn patch_target(&mut self, at: u16, target: u16) {
+        let inst = &mut self.insts[at as usize];
+        assert!(
+            matches!(inst.op, Opcode::Bnz | Opcode::Jmp),
+            "patch_target on non-branch at pc {at}"
+        );
+        inst.imm = target;
     }
 
     pub fn ld(&mut self, rd: u8, raddr: u8) {

@@ -17,11 +17,20 @@
 //! - [`stencil`] — periodic halo reads, read-roofline traffic;
 //! - [`gemm`] — tiled FP matmul (broadcast + consecutive loads, FP-dense).
 //!
+//! Two *divergent* families exercise the per-lane divergence model
+//! (data-dependent control flow, masked memory ops):
+//!
+//! - [`bitonic`] — compare-exchange sort: owner predication plus a
+//!   data-dependent swap branch;
+//! - [`spmv`] — CSR gather with skewed row lengths: per-lane loop trip
+//!   counts and a data-dependent `x[col]` gather.
+//!
 //! Every family registers one [`registry::KernelFamily`] — name grammar,
 //! builder, analytical op-count golden model, sweep members — and every
 //! consumer (sweeps, validation, the advisor, the service `List`)
 //! enumerates [`registry::REGISTRY`] instead of keeping its own list.
 
+pub mod bitonic;
 pub mod builder;
 pub mod fft;
 pub mod gemm;
@@ -30,6 +39,7 @@ pub mod library;
 pub mod reduction;
 pub mod registry;
 pub mod scan;
+pub mod spmv;
 pub mod stencil;
 pub mod transpose;
 

@@ -1,0 +1,309 @@
+//! CSR sparse matrix–vector product — divergent loop trip counts plus a
+//! data-dependent gather.
+//!
+//! One thread per row of an N-row CSR matrix with *skewed* row lengths:
+//! every 16th row carries [`HEAVY_LEN`] nonzeros, the rest [`LIGHT_LEN`]
+//! — one heavy lane per warp, the worst case for lockstep execution.
+//! Each thread loads its row's length and start offset *from memory* and
+//! runs a data-driven accumulation loop (`bnz cnt, body`): light lanes
+//! fall out after 4 trips while the heavy lane keeps the block looping to
+//! 32, so the loop body's memory ops issue under progressively sparser
+//! masks. The `x[col[k]]` gather inside the body hits banks decided by
+//! the random column indices — the data-dependent conflict profile the
+//! paper's configurable memories are for.
+//!
+//! Memory image (word addresses, `nnz = 23·N/4`):
+//!
+//! | region | range                    |
+//! |--------|--------------------------|
+//! | x      | `[0, N)`                 |
+//! | y      | `[N, 2N)`                |
+//! | len    | `[2N, 3N)`               |
+//! | ptr    | `[3N, 4N)`               |
+//! | col    | `[4N, 4N+nnz)`           |
+//! | val    | `[4N+nnz, 4N+2nnz)` (f32)|
+//!
+//! The host reference accumulates with `f32::mul_add` in the same order
+//! as the kernel's `fma`, so machine and host images match bit for bit.
+
+use super::builder::ProgramBuilder;
+use super::registry::{ExpectedImage, KernelFamily, OpCountModel, SweepArchs, Workload};
+use crate::isa::program::Program;
+use crate::util::XorShift64;
+
+/// Nonzeros in a heavy row (rows `r % 16 == 0` — lane 0 of every warp).
+pub const HEAVY_LEN: u32 = 32;
+/// Nonzeros in every other row.
+pub const LIGHT_LEN: u32 = 4;
+
+/// Placement metadata for an SpMV run.
+#[derive(Debug, Clone, Copy)]
+pub struct SpmvPlan {
+    /// Rows N = thread count (power of two, 64..=2048).
+    pub n: u32,
+    /// Total nonzeros across all rows.
+    pub nnz: u32,
+}
+
+impl SpmvPlan {
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two() && (64..=2048).contains(&n));
+        let heavy = n / 16;
+        Self { n, nnz: heavy * HEAVY_LEN + (n - heavy) * LIGHT_LEN }
+    }
+
+    pub fn row_len(&self, r: u32) -> u32 {
+        if r % 16 == 0 {
+            HEAVY_LEN
+        } else {
+            LIGHT_LEN
+        }
+    }
+
+    /// CSR row-start offsets (deterministic: lengths depend only on N).
+    pub fn row_ptrs(&self) -> Vec<u32> {
+        let mut ptrs = Vec::with_capacity(self.n as usize);
+        let mut at = 0u32;
+        for r in 0..self.n {
+            ptrs.push(at);
+            at += self.row_len(r);
+        }
+        ptrs
+    }
+
+    pub fn y_base(&self) -> u32 {
+        self.n
+    }
+    pub fn len_base(&self) -> u32 {
+        2 * self.n
+    }
+    pub fn ptr_base(&self) -> u32 {
+        3 * self.n
+    }
+    pub fn col_base(&self) -> u32 {
+        4 * self.n
+    }
+    pub fn val_base(&self) -> u32 {
+        4 * self.n + self.nnz
+    }
+    /// Words the image occupies (before rounding to a power of two).
+    pub fn words(&self) -> u32 {
+        4 * self.n + 2 * self.nnz
+    }
+}
+
+fn valid(n: u32) -> bool {
+    n.is_power_of_two() && (64..=2048).contains(&n)
+}
+
+/// Generate the SpMV program for an N-row matrix.
+pub fn spmv_program(n: u32) -> (SpmvPlan, Program) {
+    let plan = SpmvPlan::new(n);
+    let program = build(&plan);
+    (plan, program)
+}
+
+/// Generate from an explicit plan.
+pub fn build(plan: &SpmvPlan) -> Program {
+    let mut b = ProgramBuilder::new(format!("spmv{}", plan.n), plan.n);
+
+    let tid = 0u8; // conventional: one thread per row
+    b.tid(tid);
+    let addr = b.alloc();
+    let cnt = b.alloc();
+    let cp = b.alloc();
+    let vp = b.alloc();
+    let col = b.alloc();
+    let xv = b.alloc();
+    let vv = b.alloc();
+    let acc = b.alloc();
+
+    // Row descriptor loads: trip count and start offset come from memory,
+    // so the loop below is genuinely data-driven.
+    b.iaddi(addr, tid, plan.len_base() as i32);
+    b.ld(cnt, addr);
+    b.iaddi(addr, tid, plan.ptr_base() as i32);
+    b.ld(cp, addr);
+    b.iaddi(vp, cp, plan.val_base() as i32);
+    b.iaddi(cp, cp, plan.col_base() as i32);
+    b.fconst(acc, 0.0);
+
+    // Do-while over the row's nonzeros (every row has at least one).
+    // Light lanes retire after 4 trips; the heavy lane in each warp keeps
+    // the block looping to 32 under shrinking masks.
+    let body = b.pc();
+    b.ld(col, cp); // column index
+    b.ld(xv, col); // x gather — banks decided by the data
+    b.ld(vv, vp);
+    b.fma(acc, vv, xv); // acc += val·x, host order identical
+    b.iaddi(cp, cp, 1);
+    b.iaddi(vp, vp, 1);
+    b.iaddi(cnt, cnt, -1);
+    b.bnz(cnt, body);
+
+    b.iaddi(addr, tid, plan.y_base() as i32);
+    b.st(addr, acc);
+    b.halt();
+    b.build()
+}
+
+/// Deterministic-given-seed CSR content: column indices, values, and the
+/// dense vector. Shared by the fill and the host reference so both draw
+/// the identical stream.
+fn gen_input(plan: &SpmvPlan, seed: u64) -> (Vec<u32>, Vec<f32>, Vec<f32>) {
+    let mut rng = XorShift64::new(seed);
+    let cols: Vec<u32> = (0..plan.nnz).map(|_| rng.below(plan.n)).collect();
+    let vals: Vec<f32> = (0..plan.nnz).map(|_| rng.signed_f32()).collect();
+    let x: Vec<f32> = (0..plan.n).map(|_| rng.signed_f32()).collect();
+    (cols, vals, x)
+}
+
+/// Host reference: per-row sequential `mul_add` in nonzero order — the
+/// exact FP sequence the kernel's `fma` loop performs per lane.
+pub fn reference_spmv(plan: &SpmvPlan, cols: &[u32], vals: &[f32], x: &[f32]) -> Vec<f32> {
+    let ptrs = plan.row_ptrs();
+    (0..plan.n)
+        .map(|r| {
+            let start = ptrs[r as usize] as usize;
+            let end = start + plan.row_len(r) as usize;
+            let mut acc = 0.0f32;
+            for k in start..end {
+                acc = vals[k].mul_add(x[cols[k] as usize], acc);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Build the registered workload for `spmv{n}`.
+pub fn workload(n: u32) -> Workload {
+    let plan = SpmvPlan::new(n);
+    let (_, program) = spmv_program(n);
+    Workload::new(program, (plan.words() as usize).next_power_of_two())
+        .with_fill(move |mem, seed| {
+            let (cols, vals, x) = gen_input(&plan, seed);
+            for (i, &v) in x.iter().enumerate() {
+                mem.write_word(i as u32, v.to_bits());
+            }
+            for r in 0..plan.n {
+                mem.write_word(plan.len_base() + r, plan.row_len(r));
+            }
+            for (r, &p) in plan.row_ptrs().iter().enumerate() {
+                mem.write_word(plan.ptr_base() + r as u32, p);
+            }
+            for (k, &c) in cols.iter().enumerate() {
+                mem.write_word(plan.col_base() + k as u32, c);
+            }
+            for (k, &v) in vals.iter().enumerate() {
+                mem.write_word(plan.val_base() + k as u32, v.to_bits());
+            }
+        })
+        .with_expected(move |seed| {
+            let (cols, vals, x) = gen_input(&plan, seed);
+            let y = reference_spmv(&plan, &cols, &vals, &x);
+            ExpectedImage {
+                base: plan.y_base(),
+                words: y.iter().map(|v| v.to_bits()).collect(),
+            }
+        })
+}
+
+/// Analytical golden model: the loop always runs to the heavy length
+/// (every warp holds a heavy lane, so the block never exits earlier) and
+/// each executed memory/FP instruction issues one op slot per warp
+/// regardless of mask: 2 descriptor loads + 3 loads and 1 fma per trip,
+/// one store.
+pub fn model(n: u32) -> OpCountModel {
+    let warps = n as u64 / 16;
+    let trips = HEAVY_LEN as u64;
+    OpCountModel {
+        d_load_ops: (2 + 3 * trips) * warps,
+        tw_load_ops: 0,
+        store_ops: warps,
+        fp_ops: trips * warps,
+    }
+}
+
+pub const FAMILY: KernelFamily = KernelFamily {
+    family: "spmv",
+    prefix: "spmv",
+    title: "CSR SpMV (skewed rows)",
+    grammar: "spmvN — N rows, power of two, 64..=2048",
+    valid,
+    build: workload,
+    model,
+    sweep_params: &[256, 1024],
+    sweep_archs: SweepArchs::Table3,
+    paper: false,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::arch::MemoryArchKind;
+    use crate::sim::config::MachineConfig;
+    use crate::sim::machine::Machine;
+
+    fn run_spmv(n: u32, arch: MemoryArchKind, seed: u64) -> (Vec<u32>, Vec<u32>) {
+        let plan = SpmvPlan::new(n);
+        let w = workload(n);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(arch).with_mem_words(w.mem_words()).with_fast_timing(),
+        );
+        w.load_input(&mut m, seed);
+        m.run_program(w.program()).expect("spmv runs");
+        let (cols, vals, x) = gen_input(&plan, seed);
+        let want: Vec<u32> =
+            reference_spmv(&plan, &cols, &vals, &x).iter().map(|v| v.to_bits()).collect();
+        (m.read_image(plan.y_base(), plan.n as usize), want)
+    }
+
+    #[test]
+    fn bit_exact_on_all_paper_archs() {
+        for arch in MemoryArchKind::table3_nine() {
+            let (got, want) = run_spmv(128, arch, 9);
+            assert_eq!(got, want, "{arch}");
+        }
+    }
+
+    #[test]
+    fn bit_exact_across_seeds() {
+        for seed in [1, 3, 77] {
+            let (got, want) = run_spmv(256, MemoryArchKind::mp_4r1w(), seed);
+            assert_eq!(got, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn model_matches_traced_ops() {
+        let w = workload(256);
+        let mut m = Machine::new(
+            MachineConfig::for_arch(MemoryArchKind::banked(16))
+                .with_mem_words(w.mem_words())
+                .with_fast_timing(),
+        );
+        w.load_input(&mut m, 5);
+        m.run_program(w.program()).expect("runs");
+        let trace = m.mem_trace().expect("trace captured");
+        assert_eq!(OpCountModel::of_trace(trace), model(256));
+    }
+
+    #[test]
+    fn skew_gives_one_heavy_lane_per_warp() {
+        let plan = SpmvPlan::new(256);
+        assert_eq!(plan.nnz, 23 * 256 / 4);
+        assert_eq!(plan.row_len(0), HEAVY_LEN);
+        assert_eq!(plan.row_len(16), HEAVY_LEN);
+        assert_eq!(plan.row_len(1), LIGHT_LEN);
+        let ptrs = plan.row_ptrs();
+        assert_eq!(ptrs[0], 0);
+        assert_eq!(ptrs[1], HEAVY_LEN);
+        assert_eq!(*ptrs.last().unwrap() + plan.row_len(plan.n - 1), plan.nnz);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_rejected() {
+        SpmvPlan::new(32);
+    }
+}

@@ -67,7 +67,52 @@ impl ListenAddr {
 enum Listener {
     Tcp(TcpListener),
     #[cfg(unix)]
-    Unix(UnixListener, PathBuf),
+    Unix {
+        listener: UnixListener,
+        path: PathBuf,
+        /// `(dev, ino)` of the socket file *this instance* created —
+        /// `Drop` unlinks the path only while it still names that file,
+        /// so a server that replaced us keeps its socket.
+        bound_id: Option<(u64, u64)>,
+    },
+}
+
+/// `(dev, ino)` identity of a path, if it can be stat'ed.
+#[cfg(unix)]
+fn file_id(path: &std::path::Path) -> Option<(u64, u64)> {
+    use std::os::unix::fs::MetadataExt;
+    std::fs::symlink_metadata(path).ok().map(|m| (m.dev(), m.ino()))
+}
+
+/// Remove a *stale* Unix socket file at `path`, if any: an existing
+/// socket nobody answers on (a previous server died without cleanup).
+/// A socket with a live listener is left in place — the caller's bind
+/// then fails with `AddrInUse` instead of hijacking the running server's
+/// clients. Non-socket files are never touched (bind fails naturally).
+#[cfg(unix)]
+fn remove_stale_socket(path: &std::path::Path) -> std::io::Result<()> {
+    use std::os::unix::fs::FileTypeExt;
+    let meta = match std::fs::symlink_metadata(path) {
+        Ok(m) => m,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e),
+    };
+    if !meta.file_type().is_socket() {
+        return Ok(()); // not ours to delete; UnixListener::bind will error
+    }
+    match std::os::unix::net::UnixStream::connect(path) {
+        // Someone is serving on it right now — refuse to unlink.
+        Ok(_) => Err(std::io::Error::new(
+            std::io::ErrorKind::AddrInUse,
+            format!("{} already has a live server", path.display()),
+        )),
+        // Connect-probe failed: the socket is an orphan; reclaim it.
+        Err(_) => match std::fs::remove_file(path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e),
+        },
+    }
 }
 
 /// The accept loop behind `serve --listen`. See the module docs.
@@ -80,8 +125,10 @@ pub struct SocketServer {
 
 impl SocketServer {
     /// Bind the address and set up the shared dispatcher (`depth` bounds
-    /// in-flight wire lines across *all* clients). A stale Unix socket
-    /// file from a previous run is removed first.
+    /// in-flight wire lines across *all* clients). A *stale* Unix socket
+    /// file from a previous run (nobody answers a connect probe) is
+    /// removed first; a live one refuses the bind with `AddrInUse`, and
+    /// a non-socket file at the path is never deleted.
     pub fn bind(
         engine: Arc<SimtEngine>,
         addr: &ListenAddr,
@@ -91,12 +138,9 @@ impl SocketServer {
             ListenAddr::Tcp(hostport) => Listener::Tcp(TcpListener::bind(hostport)?),
             #[cfg(unix)]
             ListenAddr::Unix(path) => {
-                match std::fs::remove_file(path) {
-                    Ok(()) => {}
-                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-                    Err(e) => return Err(e),
-                }
-                Listener::Unix(UnixListener::bind(path)?, path.clone())
+                remove_stale_socket(path)?;
+                let listener = UnixListener::bind(path)?;
+                Listener::Unix { listener, path: path.clone(), bound_id: file_id(path) }
             }
         };
         let dispatcher =
@@ -111,7 +155,7 @@ impl SocketServer {
         match &self.listener {
             Listener::Tcp(l) => l.local_addr().ok().map(|a| a.to_string()),
             #[cfg(unix)]
-            Listener::Unix(_, path) => Some(path.display().to_string()),
+            Listener::Unix { path, .. } => Some(path.display().to_string()),
         }
     }
 
@@ -140,7 +184,7 @@ impl SocketServer {
                 }
             }
             #[cfg(unix)]
-            Listener::Unix(l, _) => {
+            Listener::Unix { listener: l, .. } => {
                 for stream in l.incoming() {
                     let stream = stream?;
                     let reader = match stream.try_clone() {
@@ -179,9 +223,15 @@ impl SocketServer {
 
 impl Drop for SocketServer {
     fn drop(&mut self) {
+        // Unlink only the socket file this instance created: if the path
+        // has since been replaced (another server reclaimed it, or the
+        // user put something else there), its `(dev, ino)` no longer
+        // matches and the file is left alone.
         #[cfg(unix)]
-        if let Listener::Unix(_, path) = &self.listener {
-            let _ = std::fs::remove_file(path);
+        if let Listener::Unix { path, bound_id, .. } = &self.listener {
+            if bound_id.is_some() && file_id(path) == *bound_id {
+                let _ = std::fs::remove_file(path);
+            }
         }
     }
 }
@@ -222,5 +272,76 @@ mod tests {
         assert!(local.starts_with("127.0.0.1:"), "{local}");
         assert!(!local.ends_with(":0"), "port resolved: {local}");
         assert_eq!(server.dispatcher().depth(), 4);
+    }
+
+    #[cfg(unix)]
+    fn test_engine() -> Arc<SimtEngine> {
+        Arc::new(SimtEngine::with_runner(crate::coordinator::runner::SweepRunner::new(1)))
+    }
+
+    #[cfg(unix)]
+    fn temp_sock(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("soft-simt-{tag}-{}.sock", std::process::id()))
+    }
+
+    /// A live server's socket must not be hijacked: the second bind on
+    /// the same path fails with `AddrInUse` and the first server's file
+    /// survives. A *stale* socket file (its server gone without cleanup)
+    /// is reclaimed.
+    #[cfg(unix)]
+    #[test]
+    fn bind_reclaims_stale_sockets_but_refuses_live_ones() {
+        let path = temp_sock("stale-live");
+        let addr = ListenAddr::parse(&format!("unix:{}", path.display())).unwrap();
+
+        let live = SocketServer::bind(test_engine(), &addr, 2).unwrap();
+        let err = SocketServer::bind(test_engine(), &addr, 2)
+            .expect_err("second bind on a live socket must fail");
+        assert_eq!(err.kind(), std::io::ErrorKind::AddrInUse, "{err}");
+        assert!(path.exists(), "the live server's socket survives the refused bind");
+        drop(live);
+        assert!(!path.exists(), "drop cleans up the owner's socket");
+
+        // A stale socket: bound directly (no SocketServer cleanup), its
+        // listener dropped — the file remains, nobody answers.
+        drop(UnixListener::bind(&path).unwrap());
+        assert!(path.exists(), "orphaned socket file left behind");
+        let server = SocketServer::bind(test_engine(), &addr, 2)
+            .expect("stale socket is reclaimed");
+        assert_eq!(server.local_addr().unwrap(), path.display().to_string());
+        drop(server);
+        assert!(!path.exists());
+    }
+
+    /// Drop unlinks only the file this instance bound: once the path
+    /// names something else (here: a successor's socket), the dying
+    /// server leaves it alone.
+    #[cfg(unix)]
+    #[test]
+    fn drop_leaves_a_replaced_socket_path_alone() {
+        let path = temp_sock("replaced");
+        let addr = ListenAddr::parse(&format!("unix:{}", path.display())).unwrap();
+
+        let old = SocketServer::bind(test_engine(), &addr, 2).unwrap();
+        // Simulate the old server dying *after* a successor reclaimed the
+        // path: remove its file, bind a new socket at the same path.
+        std::fs::remove_file(&path).unwrap();
+        let _successor = UnixListener::bind(&path).unwrap();
+        drop(old);
+        assert!(path.exists(), "the successor's socket must survive the old drop");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A non-socket file at the path is never deleted — bind fails, the
+    /// file survives.
+    #[cfg(unix)]
+    #[test]
+    fn bind_never_deletes_a_non_socket_file() {
+        let path = temp_sock("regular-file");
+        std::fs::write(&path, b"not a socket").unwrap();
+        let addr = ListenAddr::parse(&format!("unix:{}", path.display())).unwrap();
+        assert!(SocketServer::bind(test_engine(), &addr, 2).is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"not a socket");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -221,6 +221,11 @@ impl<'a> Parser<'a> {
                         b't' => out.push('\t'),
                         b'u' => {
                             let hi = self.hex4()?;
+                            if (0xDC00..0xE000).contains(&hi) {
+                                // A low surrogate with no preceding high
+                                // half — same class as a lone high one.
+                                return Err("lone surrogate".into());
+                            }
                             let c = if (0xD800..0xDC00).contains(&hi) {
                                 // Surrogate pair: require \uXXXX low half.
                                 if self.peek() == Some(b'\\') {
@@ -263,7 +268,13 @@ impl<'a> Parser<'a> {
         if end > self.bytes.len() {
             return Err("truncated \\u escape".into());
         }
-        let s = std::str::from_utf8(&self.bytes[self.pos..end]).map_err(|_| "bad \\u escape")?;
+        // Exactly four hex digits — `from_str_radix` alone would also
+        // accept a leading `+` (`\u+12f` must not parse as an escape).
+        let digits = &self.bytes[self.pos..end];
+        if !digits.iter().all(|b| b.is_ascii_hexdigit()) {
+            return Err("bad \\u escape".into());
+        }
+        let s = std::str::from_utf8(digits).map_err(|_| "bad \\u escape")?;
         let v = u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape")?;
         self.pos = end;
         Ok(v)
@@ -720,6 +731,66 @@ mod tests {
         // A high surrogate must be followed by a valid low surrogate.
         assert!(parse_json("\"\\ud83d\\u0041\"").is_err(), "bad low surrogate rejected");
         assert!(parse_json("\"\\ud83dx\"").is_err(), "lone surrogate rejected");
+    }
+
+    #[test]
+    fn rejects_lone_and_malformed_unicode_escapes() {
+        for (bad, why) in [
+            ("\"\\udc00\"", "unpaired low surrogate"),
+            ("\"\\udfff\"", "unpaired low surrogate (top of range)"),
+            ("\"\\ud800\"", "high surrogate at end of string"),
+            ("\"\\ud800\\n\"", "high surrogate followed by a non-u escape"),
+            ("\"\\ud800\\ud800\"", "high surrogate followed by another high"),
+            ("\"\\u+12f\"", "sign accepted by from_str_radix is not a hex digit"),
+            ("\"\\u12\"", "truncated escape"),
+            ("\"\\u12g4\"", "non-hex digit"),
+        ] {
+            assert!(parse_json(bad).is_err(), "{why}: {bad}");
+        }
+        // The boundary neighbours still parse.
+        assert_eq!(parse_json("\"\\ud7ff\"").unwrap(), Json::Str("\u{D7FF}".into()));
+        assert_eq!(parse_json("\"\\ue000\"").unwrap(), Json::Str("\u{E000}".into()));
+    }
+
+    /// Escape/unescape round-trip: any string `json_str` encodes — raw
+    /// multibyte UTF-8 (including chars above U+FFFF), control chars,
+    /// quotes, backslashes — parses back to the identical string.
+    #[test]
+    fn escape_roundtrip_on_random_strings() {
+        use crate::util::proptest::check;
+        check("parse_json(json_str(s)) == s", 200, |rng| {
+            let len = rng.below(24) as usize;
+            let s: String = (0..len)
+                .map(|_| match rng.below(6) {
+                    // Printable ASCII, quotes and backslashes included.
+                    0 | 1 => char::from_u32(0x20 + rng.below(0x5F)).unwrap(),
+                    // Control characters (the \uXXXX emit path).
+                    2 => char::from_u32(rng.below(0x20)).unwrap(),
+                    // Multibyte BMP.
+                    3 => ['é', 'ß', '中', '\u{D7FF}', '\u{E000}'][rng.below(5) as usize],
+                    // Above U+FFFF (would need a surrogate pair if the
+                    // encoder escaped it; it emits raw UTF-8 instead).
+                    4 => ['\u{1F600}', '\u{10000}', '\u{10FFFF}'][rng.below(3) as usize],
+                    _ => ['\n', '\t', '\r', '"', '\\'][rng.below(5) as usize],
+                })
+                .collect();
+            let encoded = json_str(&s);
+            assert_eq!(parse_json(&encoded).unwrap(), Json::Str(s), "via {encoded}");
+        });
+    }
+
+    /// Escaped surrogate *pairs* decode to the astral scalar — the other
+    /// direction of the round-trip (our encoder never emits pairs, but
+    /// clients may).
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        for (pair, want) in [
+            ("\"\\ud800\\udc00\"", '\u{10000}'),
+            ("\"\\ud83d\\ude00\"", '\u{1F600}'),
+            ("\"\\udbff\\udfff\"", '\u{10FFFF}'),
+        ] {
+            assert_eq!(parse_json(pair).unwrap(), Json::Str(want.to_string()), "{pair}");
+        }
     }
 
     #[test]

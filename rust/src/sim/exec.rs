@@ -1,11 +1,17 @@
 //! Functional execution core — the architecture-independent half of the
 //! decoupled simulator (DESIGN.md §Two-phase).
 //!
-//! A program's *functional* behaviour (decode, ALU results, the branch
-//! directions taken, and the address stream every memory instruction
+//! A program's *functional* behaviour (decode, ALU results, the per-lane
+//! branch outcomes, and the address stream every memory instruction
 //! emits) is identical across all nine shared-memory architectures — the
 //! `all_archs_functionally_identical_on_random_programs` property test is
 //! the executable statement of that fact. Only memory *timing* differs.
+//!
+//! Control flow may *diverge*: lanes that disagree on a `bnz` are split
+//! onto a reconvergence stack (taken path first) and serialized until
+//! they rejoin at the branch's immediate post-dominator
+//! ([`crate::isa::cfg`], DESIGN.md §Divergence). The per-op lane masks in
+//! the trace carry the divergence to every replay path unchanged.
 //!
 //! [`execute`] therefore runs a program **once**, against any word-level
 //! memory ([`ExecMemory`]), and emits a complete [`MemTrace`]: the full
@@ -30,8 +36,10 @@ use std::ops::Range;
 pub enum SimError {
     /// A lane addressed past the end of shared memory.
     InvalidAddress { pc: usize, thread: u32, addr: u32, words: usize },
-    /// Threads disagreed on a branch direction.
-    DivergentBranch { pc: usize },
+    /// The reconvergence stack emptied at a reconvergence point — a
+    /// malformed divergence structure (structured divergence itself is
+    /// legal and never errors).
+    ReconvergenceUnderflow { pc: usize },
     /// Branch target outside the program.
     BadJumpTarget { pc: usize, target: u16 },
     /// The run exceeded `max_cycles` (runaway loop guard).
@@ -53,8 +61,8 @@ impl std::fmt::Display for SimError {
                 f,
                 "pc {pc}: thread {thread} addressed {addr} beyond shared memory ({words} words)"
             ),
-            SimError::DivergentBranch { pc } => {
-                write!(f, "pc {pc}: divergent branch (threads disagree)")
+            SimError::ReconvergenceUnderflow { pc } => {
+                write!(f, "pc {pc}: reconvergence stack underflow (malformed divergence)")
             }
             SimError::BadJumpTarget { pc, target } => {
                 write!(f, "pc {pc}: jump target {target} outside program")
@@ -304,11 +312,101 @@ impl Default for ExecParams {
     }
 }
 
+/// Dense per-thread active set for the whole block. Wider than a
+/// [`LaneMask`] (blocks span many warps); maintains a popcount so the
+/// all-active fast path is a single compare.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct ActiveSet {
+    words: Vec<u64>,
+    active: u32,
+}
+
+impl ActiveSet {
+    fn full(threads: u32) -> Self {
+        let n = (threads as usize).div_ceil(64);
+        let mut words = vec![u64::MAX; n];
+        let rem = threads as usize % 64;
+        if rem != 0 {
+            *words.last_mut().expect("threads > 0") = (1u64 << rem) - 1;
+        }
+        Self { words, active: threads }
+    }
+
+    fn empty_like(&self) -> Self {
+        Self { words: vec![0; self.words.len()], active: 0 }
+    }
+
+    /// Insert a thread not currently in the set.
+    fn insert(&mut self, t: u32) {
+        self.words[t as usize / 64] |= 1 << (t % 64);
+        self.active += 1;
+    }
+
+    fn contains(&self, t: u32) -> bool {
+        self.words[t as usize / 64] >> (t % 64) & 1 != 0
+    }
+
+    fn is_empty(&self) -> bool {
+        self.active == 0
+    }
+
+    fn is_full(&self, threads: u32) -> bool {
+        self.active == threads
+    }
+
+    fn subtract(&mut self, other: &Self) {
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w &= !o;
+        }
+        self.active = self.words.iter().map(|w| w.count_ones()).sum();
+    }
+
+    fn union(&mut self, other: &Self) {
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= o;
+        }
+        self.active = self.words.iter().map(|w| w.count_ones()).sum();
+    }
+
+    fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.words.iter().enumerate().flat_map(|(i, &w)| {
+            let mut m = w;
+            std::iter::from_fn(move || {
+                if m == 0 {
+                    return None;
+                }
+                let bit = m.trailing_zeros();
+                m &= m - 1;
+                Some(i as u32 * 64 + bit)
+            })
+        })
+    }
+}
+
+/// One entry of the SIMT reconvergence stack. The top entry is the
+/// running path: it executes at `pc` under `mask` until `pc` reaches
+/// `rpc` (its reconvergence point), at which point it pops and the entry
+/// below — the other arm of the split, or the join carrying the
+/// pre-divergence mask — resumes.
+struct PathEntry {
+    pc: usize,
+    rpc: usize,
+    mask: ActiveSet,
+}
+
 /// Run `program` to `halt` against `mem`, returning the complete trace.
 ///
 /// The program is round-tripped through its binary encoding first — the
 /// execution core consumes what the assembler would produce, keeping the
 /// decode path honest.
+///
+/// Divergent `bnz` outcomes split the block onto a reconvergence stack:
+/// the taken path runs first, the fall-through path second, and both
+/// rejoin at the branch's immediate post-dominator. A path that halts
+/// while other paths remain retires its lanes (charged as one Other-class
+/// instruction); the final halt is charged by the replayer's finish
+/// sequence exactly as in the uniform case, so uniform programs trace
+/// bit-identically to the pre-divergence model.
 pub fn execute<M: ExecMemory>(
     program: &Program,
     mem: &mut M,
@@ -336,8 +434,44 @@ pub fn execute<M: ExecMemory>(
     // Memory operations buffered so far (the capture-size guard).
     let mut trace_ops = 0u64;
 
-    let mut pc = 0usize;
+    // SIMT reconvergence stack: the outer frame runs the full block with
+    // rpc = EXIT (it can only retire through `halt`). Post-dominators are
+    // computed lazily on the first divergent branch — the overwhelmingly
+    // common uniform program never pays for the CFG analysis.
+    let mut stack = vec![PathEntry {
+        pc: 0,
+        rpc: crate::isa::cfg::EXIT,
+        mask: ActiveSet::full(threads),
+    }];
+    // Lanes retired by a path-level halt while other paths kept running.
+    // Join entries were pushed before those lanes halted, so every entry
+    // is filtered against this set when it resumes.
+    let mut exited = stack[0].mask.empty_like();
+    let mut ipdoms: Option<Vec<usize>> = None;
+
     loop {
+        let Some(top) = stack.last_mut() else {
+            // Every lane retired through a path-level halt.
+            break;
+        };
+        if !exited.is_empty() {
+            top.mask.subtract(&exited);
+        }
+        if top.mask.is_empty() {
+            stack.pop();
+            continue;
+        }
+        if top.pc == top.rpc {
+            // Path reached its reconvergence point: the entry below
+            // (sibling arm or join) resumes.
+            let at = top.pc;
+            stack.pop();
+            if stack.is_empty() {
+                return Err(SimError::ReconvergenceUnderflow { pc: at });
+            }
+            continue;
+        }
+        let pc = top.pc;
         if pc >= insts.len() {
             return Err(SimError::MissingHalt);
         }
@@ -347,7 +481,7 @@ pub fn execute<M: ExecMemory>(
         let inst = insts[pc];
         match inst.op.class() {
             OpClass::Int | OpClass::Imm | OpClass::Fp => {
-                exec_alu(&mut regs, inst, threads);
+                exec_alu(&mut regs, inst, threads, &top.mask);
                 match inst.op.class() {
                     OpClass::Int => charges.int_cycles += n_ops,
                     OpClass::Imm => charges.imm_cycles += n_ops,
@@ -357,18 +491,29 @@ pub fn execute<M: ExecMemory>(
                 charges.operations += n_ops;
                 charges.instructions += 1;
                 clock_floor += n_ops;
-                pc += 1;
+                top.pc += 1;
             }
             OpClass::Other => match inst.op {
                 Opcode::Halt => {
+                    if stack.len() == 1 {
+                        // The whole remaining block retires; the replayer
+                        // charges the final halt in its finish sequence.
+                        clock_floor += 1;
+                        break;
+                    }
+                    // A proper subset of the block halted early: the halt
+                    // issues like any Other-class op, its lanes retire.
+                    charges.other_cycles += 1;
+                    charges.instructions += 1;
                     clock_floor += 1;
-                    break;
+                    let done = stack.pop().expect("stack.len() > 1");
+                    exited.union(&done.mask);
                 }
                 Opcode::Nop => {
                     charges.other_cycles += 1;
                     charges.instructions += 1;
                     clock_floor += 1;
-                    pc += 1;
+                    top.pc += 1;
                 }
                 Opcode::Jmp => {
                     let target = inst.imm as usize;
@@ -378,59 +523,89 @@ pub fn execute<M: ExecMemory>(
                     charges.other_cycles += 1;
                     charges.instructions += 1;
                     clock_floor += 1;
-                    pc = target;
+                    top.pc = target;
                 }
                 Opcode::Bnz => {
-                    let taken = regs.get(0, inst.rd) != 0;
-                    for t in 1..threads {
-                        if (regs.get(t, inst.rd) != 0) != taken {
-                            return Err(SimError::DivergentBranch { pc });
+                    // Partition the active lanes on the per-lane
+                    // predicate. The branch issues one Other-class cycle
+                    // whether uniform or divergent; a divergent split's
+                    // extra cost emerges from serializing both paths.
+                    let mut taken = top.mask.empty_like();
+                    let mut fall = top.mask.empty_like();
+                    for t in top.mask.iter() {
+                        if regs.get(t, inst.rd) != 0 {
+                            taken.insert(t);
+                        } else {
+                            fall.insert(t);
                         }
                     }
                     charges.other_cycles += 1;
                     charges.instructions += 1;
                     clock_floor += 1;
-                    if taken {
-                        let target = inst.imm as usize;
+                    let target = inst.imm as usize;
+                    if taken.is_empty() {
+                        top.pc += 1;
+                    } else {
                         if target >= insts.len() {
                             return Err(SimError::BadJumpTarget { pc, target: inst.imm });
                         }
-                        pc = target;
-                    } else {
-                        pc += 1;
+                        if fall.is_empty() {
+                            top.pc = target;
+                        } else {
+                            // Divergent: the running entry becomes the
+                            // join at the branch's immediate
+                            // post-dominator; the fall-through arm stacks
+                            // below the taken arm, so taken runs first.
+                            let rpc = *ipdoms
+                                .get_or_insert_with(|| {
+                                    crate::isa::cfg::immediate_postdoms(&insts)
+                                })
+                                .get(pc)
+                                .unwrap_or(&crate::isa::cfg::EXIT);
+                            top.pc = rpc;
+                            stack.push(PathEntry { pc: pc + 1, rpc, mask: fall });
+                            stack.push(PathEntry { pc: target, rpc, mask: taken });
+                        }
                     }
                 }
                 Opcode::Tid => {
-                    for t in 0..threads {
-                        regs.set(t, inst.rd, t);
+                    if top.mask.is_full(threads) {
+                        for t in 0..threads {
+                            regs.set(t, inst.rd, t);
+                        }
+                    } else {
+                        for t in top.mask.iter() {
+                            regs.set(t, inst.rd, t);
+                        }
                     }
                     charges.other_cycles += n_ops;
                     charges.operations += n_ops;
                     charges.instructions += 1;
                     clock_floor += n_ops;
-                    pc += 1;
+                    top.pc += 1;
                 }
                 _ => unreachable!("all Other opcodes handled"),
             },
             OpClass::Load => {
-                let mi = exec_load(&mut regs, inst, threads, pc, mem, mem_words, params)?;
+                let mi =
+                    exec_load(&mut regs, inst, threads, pc, mem, mem_words, params, &top.mask)?;
                 clock_floor += mi.ops.len() as u64;
                 trace_ops += mi.ops.len() as u64;
                 if trace_ops > params.max_trace_ops {
                     return Err(SimError::TraceLimit { ops: trace_ops });
                 }
                 segments.push(TraceSegment { before: std::mem::take(&mut charges), mem: mi });
-                pc += 1;
+                top.pc += 1;
             }
             OpClass::Store => {
-                let mi = exec_store(&mut regs, inst, threads, pc, mem, mem_words)?;
+                let mi = exec_store(&mut regs, inst, threads, pc, mem, mem_words, &top.mask)?;
                 clock_floor += mi.ops.len() as u64;
                 trace_ops += mi.ops.len() as u64;
                 if trace_ops > params.max_trace_ops {
                     return Err(SimError::TraceLimit { ops: trace_ops });
                 }
                 segments.push(TraceSegment { before: std::mem::take(&mut charges), mem: mi });
-                pc += 1;
+                top.pc += 1;
             }
         }
     }
@@ -438,37 +613,54 @@ pub fn execute<M: ExecMemory>(
     Ok(MemTrace { program: program.name.clone(), threads, mem_words, segments, tail: charges })
 }
 
-/// Execute an ALU instruction for every thread.
+/// Execute an ALU instruction for every *active* thread (inactive lanes
+/// are predicated off: no register writes).
 ///
 /// §Perf: the opcode dispatch is hoisted *outside* the thread loop (one
 /// specialized tight loop per opcode) — this function is the simulator's
-/// hottest path (≈27% before the split; see EXPERIMENTS.md §Perf).
-fn exec_alu(regs: &mut RegFile, inst: Instruction, threads: u32) {
+/// hottest path (≈27% before the split; see EXPERIMENTS.md §Perf). The
+/// all-active case keeps the original dense loops; only divergent
+/// regions pay for the sparse set-bit walk.
+fn exec_alu(regs: &mut RegFile, inst: Instruction, threads: u32, active: &ActiveSet) {
     use Opcode::*;
     let imm = inst.imm as u32;
     let (rd, ra, rb) = (inst.rd, inst.ra, inst.rb);
+    let all = active.is_full(threads);
+    macro_rules! for_active {
+        (|$t:ident| $body:expr) => {
+            if all {
+                for $t in 0..threads {
+                    $body
+                }
+            } else {
+                for $t in active.iter() {
+                    $body
+                }
+            }
+        };
+    }
     macro_rules! int_rr {
         ($f:expr) => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let v = $f(regs.get(t, ra), regs.get(t, rb));
                 regs.set(t, rd, v);
-            }
+            })
         };
     }
     macro_rules! int_ri {
         ($f:expr) => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let v = $f(regs.get(t, ra));
                 regs.set(t, rd, v);
-            }
+            })
         };
     }
     macro_rules! fp_rr {
         ($f:expr) => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let v = $f(regs.get_f32(t, ra), regs.get_f32(t, rb));
                 regs.set_f32(t, rd, v);
-            }
+            })
         };
     }
     match inst.op {
@@ -488,43 +680,46 @@ fn exec_alu(regs: &mut RegFile, inst: Instruction, threads: u32) {
         Ishli => int_ri!(|a: u32| a << (imm & 31)),
         Ishri => int_ri!(|a: u32| a >> (imm & 31)),
         Ldi => {
-            for t in 0..threads {
+            for_active!(|t| {
                 regs.set(t, rd, imm);
-            }
+            })
         }
         Lui => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let low = regs.get(t, rd) & 0xFFFF;
                 regs.set(t, rd, (imm << 16) | low);
-            }
+            })
         }
         Fadd => fp_rr!(|a, b| a + b),
         Fsub => fp_rr!(|a, b| a - b),
         Fmul => fp_rr!(|a, b| a * b),
         Fma => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let acc = regs.get_f32(t, rd);
                 let v = regs.get_f32(t, ra).mul_add(regs.get_f32(t, rb), acc);
                 regs.set_f32(t, rd, v);
-            }
+            })
         }
         Fneg => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let v = -regs.get_f32(t, ra);
                 regs.set_f32(t, rd, v);
-            }
+            })
         }
         Itof => {
-            for t in 0..threads {
+            for_active!(|t| {
                 let v = regs.get(t, ra) as i32 as f32;
                 regs.set_f32(t, rd, v);
-            }
+            })
         }
         _ => unreachable!("not an ALU opcode"),
     }
 }
 
 /// Gather one warp's addresses from register `ra`, with bounds checks.
+/// Only lanes that are both live (within the block) and active (not
+/// predicated off by divergence) participate: inactive lanes contribute
+/// no address, no mask bit, and no bounds check.
 fn warp_addrs(
     regs: &RegFile,
     ra: u8,
@@ -532,6 +727,7 @@ fn warp_addrs(
     threads: u32,
     pc: usize,
     mem_words: usize,
+    active: &ActiveSet,
 ) -> Result<([u32; LANES], LaneMask), SimError> {
     let base_t = warp * LANES as u32;
     let mut addrs = [0u32; LANES];
@@ -540,6 +736,9 @@ fn warp_addrs(
         let t = base_t + lane as u32;
         if t >= threads {
             break;
+        }
+        if !active.contains(t) {
+            continue;
         }
         let addr = regs.get(t, ra);
         if addr as usize >= mem_words {
@@ -570,6 +769,7 @@ fn classify_load(
     LoadClass::Data
 }
 
+#[allow(clippy::too_many_arguments)]
 fn exec_load<M: ExecMemory>(
     regs: &mut RegFile,
     inst: Instruction,
@@ -578,12 +778,13 @@ fn exec_load<M: ExecMemory>(
     mem: &mut M,
     mem_words: usize,
     params: &ExecParams,
+    active: &ActiveSet,
 ) -> Result<MemInstr, SimError> {
     let n_warps = (threads as usize).div_ceil(LANES);
     let mut ops = Vec::with_capacity(n_warps);
     let mut class = LoadClass::Data;
     for w in 0..n_warps {
-        let (addrs, mask) = warp_addrs(regs, inst.ra, w as u32, threads, pc, mem_words)?;
+        let (addrs, mask) = warp_addrs(regs, inst.ra, w as u32, threads, pc, mem_words, active)?;
         if w == 0 {
             class = classify_load(&addrs, mask, &params.tw_region);
         }
@@ -606,12 +807,13 @@ fn exec_store<M: ExecMemory>(
     pc: usize,
     mem: &mut M,
     mem_words: usize,
+    active: &ActiveSet,
 ) -> Result<MemInstr, SimError> {
     let n_warps = (threads as usize).div_ceil(LANES);
     let blocking = inst.op == Opcode::St;
     let mut ops = Vec::with_capacity(n_warps);
     for w in 0..n_warps {
-        let (addrs, mask) = warp_addrs(regs, inst.ra, w as u32, threads, pc, mem_words)?;
+        let (addrs, mask) = warp_addrs(regs, inst.ra, w as u32, threads, pc, mem_words, active)?;
         let base_t = w as u32 * LANES as u32;
         // Lanes commit in ascending order: on address collisions the
         // highest lane writes last and wins — the same resolution as the
@@ -784,6 +986,145 @@ loop:
             }
             other => panic!("expected InvalidAddress, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn nested_if_else_reconverges_with_exact_charges() {
+        // Outer split on tid bit 0, inner split (evens only) on bit 1.
+        // All three arms rejoin at the store, which must therefore issue
+        // with the full mask again.
+        let src = "
+.threads 32
+    tid   r0
+    iandi r1, r0, 1
+    bnz   r1, odd
+    iandi r2, r0, 2
+    bnz   r2, even2
+    ldi   r3, 100
+    jmp   join
+even2:
+    ldi   r3, 200
+    jmp   join
+odd:
+    ldi   r3, 300
+join:
+    st    [r0], r3
+    halt
+";
+        let (mem, trace) = run(src);
+        for t in 0..32u32 {
+            let want = if t % 2 == 1 {
+                300
+            } else if t % 4 == 2 {
+                200
+            } else {
+                100
+            };
+            assert_eq!(mem.read_word(t), want, "thread {t}");
+        }
+        // One memory instruction: the reconverged store, full masks.
+        assert_eq!(trace.segments.len(), 1);
+        let seg = &trace.segments[0];
+        assert_eq!(seg.mem.kind, MemAccessKind::Store { blocking: true });
+        assert_eq!(seg.mem.ops.len(), 2);
+        assert!(seg.mem.ops.iter().all(|&(_, m)| m == 0xFFFF));
+        // Exact serialized charges: tid + 2 bnz + 2 jmp = 6 other cycles;
+        // 5 immediate-class instructions at 2 ops each = 10 imm cycles;
+        // 10 dynamic instructions (both outer arms and both inner arms).
+        assert_eq!(seg.before.other_cycles, 6);
+        assert_eq!(seg.before.imm_cycles, 10);
+        assert_eq!(seg.before.int_cycles, 0);
+        assert_eq!(seg.before.instructions, 10);
+        assert_eq!(seg.before.operations, 12);
+        assert_eq!(trace.tail, AluCharges::default());
+    }
+
+    #[test]
+    fn taken_path_executes_first() {
+        // Both arms store to word 5. The taken arm (odd lanes, 111) must
+        // run first, so the fall-through arm's 222 lands last and wins —
+        // and the trace records the stores in that order.
+        let src = "
+.threads 16
+    tid   r0
+    ldi   r1, 5
+    iandi r2, r0, 1
+    bnz   r2, taken
+    ldi   r3, 222
+    st    [r1], r3
+    jmp   join
+taken:
+    ldi   r3, 111
+    st    [r1], r3
+join:
+    halt
+";
+        let (mem, trace) = run(src);
+        let masks: Vec<LaneMask> = trace.segments.iter().map(|s| s.mem.ops[0].1).collect();
+        assert_eq!(masks, vec![0xAAAA, 0x5555], "taken (odd) store first, then fall-through");
+        assert_eq!(mem.read_word(5), 222);
+    }
+
+    #[test]
+    fn loop_with_early_exit_lanes_reconverges_at_loop_exit() {
+        // Per-lane trip counts 1..=4 (tid & 3 + 1): lanes drop out of the
+        // loop over successive iterations, and the store after the loop
+        // issues fully reconverged.
+        let src = "
+.threads 16
+    tid   r0
+    iandi r1, r0, 3
+    iaddi r1, r1, 1
+    ldi   r2, 0
+body:
+    iaddi r2, r2, 1
+    iaddi r1, r1, -1
+    bnz   r1, body
+    st    [r0], r2
+    halt
+";
+        let (mem, trace) = run(src);
+        for t in 0..16u32 {
+            assert_eq!(mem.read_word(t), (t & 3) + 1, "thread {t} trip count");
+        }
+        assert_eq!(trace.segments.len(), 1);
+        let seg = &trace.segments[0];
+        assert_eq!(seg.mem.ops.len(), 1);
+        assert_eq!(seg.mem.ops[0].1, 0xFFFF, "store issues fully reconverged");
+        // The body runs max-trip = 4 times under shrinking masks: 3
+        // prologue + 4*2 body immediates = 11 imm cycles, tid + 4 bnz =
+        // 5 other cycles, 4 + 4*3 = 16 dynamic instructions.
+        assert_eq!(seg.before.imm_cycles, 11);
+        assert_eq!(seg.before.other_cycles, 5);
+        assert_eq!(seg.before.instructions, 16);
+        assert_eq!(trace.tail, AluCharges::default());
+    }
+
+    #[test]
+    fn early_halt_retires_lanes_without_reactivation() {
+        // Even lanes halt before the store; the branch has no in-program
+        // post-dominator (one arm halts), so the join carries EXIT and
+        // the odd lanes run to their own halt. Both path-halts are
+        // charged as Other-class instructions in the tail.
+        let src = "
+.threads 16
+    tid   r0
+    iandi r1, r0, 1
+    bnz   r1, cont
+    halt
+cont:
+    ldi   r2, 9
+    st    [r0], r2
+    halt
+";
+        let (mem, trace) = run(src);
+        for t in 0..16u32 {
+            assert_eq!(mem.read_word(t), if t % 2 == 1 { 9 } else { 0 });
+        }
+        assert_eq!(trace.segments.len(), 1);
+        assert_eq!(trace.segments[0].mem.ops[0].1, 0xAAAA);
+        assert_eq!(trace.tail.other_cycles, 2, "both path-halts issue");
+        assert_eq!(trace.tail.instructions, 2);
     }
 
     #[test]

@@ -18,9 +18,12 @@
 //! with a trace cache ([`crate::coordinator::job::TraceCache`]) so one
 //! functional execution times all nine memories.
 //!
-//! Uniform control flow only: `jmp`/`bnz` must take the same direction in
-//! every thread (SIMT divergence is out of the paper's scope and the
-//! simulator reports it as an error rather than silently mis-timing).
+//! Control flow may diverge per lane: a `bnz` whose threads disagree
+//! splits the block onto a reconvergence stack (taken path first) and
+//! serializes both paths until they rejoin at the branch's immediate
+//! post-dominator ([`crate::isa::cfg`], DESIGN.md §Divergence). The
+//! resulting per-op lane masks flow through the trace, so every replay
+//! path times divergent programs identically.
 //!
 //! Errors are [`SimError`] throughout (a proper `std::error::Error`;
 //! typed ISA failures like [`crate::isa::program::DecodeError`] fold in
@@ -283,16 +286,25 @@ loop:
     }
 
     #[test]
-    fn divergent_branch_detected() {
+    fn divergent_branch_executes() {
+        // Thread 0 falls through the branch and stores; every other
+        // thread jumps straight to the halt. Divergence is a first-class
+        // execution mode now, not an error.
         let src = "
 .threads 32
     tid  r0
-    bnz  r0, 0
+    bnz  r0, skip
+    ldi  r1, 7
+    st   [r0], r1
+skip:
     halt
 ";
         let p = assemble(src).unwrap();
         let mut m = machine(MemoryArchKind::banked(4));
-        assert!(matches!(m.run_program(&p), Err(SimError::DivergentBranch { pc: 1 })));
+        let r = m.run_program(&p).expect("divergent program executes");
+        assert_eq!(m.mem().peek(0), 7, "only thread 0 stored");
+        assert_eq!(m.mem().peek(1), 0);
+        assert!(r.total_cycles() > 0);
     }
 
     #[test]

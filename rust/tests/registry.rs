@@ -20,6 +20,8 @@ fn extra_params(family: &str) -> &'static [u32] {
         "histogram" => &[64, 512],
         "stencil" => &[64, 256],
         "gemm" => &[8, 16],
+        "bitonic" => &[64, 2048],
+        "spmv" => &[64, 2048],
         other => panic!("unknown family {other}"),
     }
 }
@@ -54,7 +56,7 @@ fn analytical_models_match_the_functional_executor() {
 fn analytical_models_match_run_reports() {
     let members = [
         "transpose32", "fft4096r8", "reduction256", "scan256", "histogram256", "stencil256",
-        "gemm16",
+        "gemm16", "bitonic256", "spmv256",
     ];
     for name in members {
         let model = registry::model_by_name(name).expect("model");
@@ -83,6 +85,7 @@ fn every_registered_name_parses_and_builds() {
     for junk in [
         "transpose2048", "fft4096r2", "reduction8192", "scan32", "scan6144",
         "histogram8192", "stencil32", "gemm128", "gemm4", "scan", "gemm", "frobnicate",
+        "bitonic32", "bitonic4096", "bitonic100", "spmv32", "spmv4096", "spmv",
     ] {
         assert!(!registry::is_known_program(junk), "{junk} must be rejected");
         assert!(registry::program_by_name(junk).is_none());
@@ -122,8 +125,9 @@ fn no_independent_workload_name_lists() {
     matrix_names.dedup();
     assert_eq!(matrix_names, registered, "sweep matrix == registry enumeration");
 
-    // The acceptance floor: 100+ cells across 7+ families.
-    assert!(jobs.len() >= 100, "matrix cells: {}", jobs.len());
+    // The acceptance floor: 150 cells across 9 families (PR 9 added
+    // the divergent bitonic + spmv rows).
+    assert!(jobs.len() >= 150, "matrix cells: {}", jobs.len());
     let families: std::collections::HashSet<&str> = registered
         .iter()
         .map(|n| registry::parse(n).expect("registered names parse").0.family)
@@ -140,6 +144,28 @@ fn no_independent_workload_name_lists() {
     for job in BenchJob::paper_sweep() {
         let (fam, _) = registry::parse(&job.program).expect("paper members parse");
         assert!(fam.paper, "{} in the paper sweep must be a paper family", job.program);
+    }
+}
+
+/// The divergent kernels run end-to-end through the engine cold (trace
+/// capture + reference replay) and warm (compiled replay off the session
+/// cache) with identical reports — the lane masks recorded per memory op
+/// carry the divergence through both replay paths bit for bit.
+#[test]
+fn divergent_kernels_run_cold_and_warm_through_the_engine() {
+    let engine = SimtEngine::new();
+    for name in ["bitonic256", "spmv256"] {
+        let req = Request::Run { program: name.into(), mem: MemoryArchKind::mp_4r1w() };
+        let Response::Run(cold) = engine.handle(&req).unwrap() else { panic!("run answers run") };
+        let Response::Run(warm) = engine.handle(&req).unwrap() else { panic!("run answers run") };
+        assert_eq!(cold.stats, warm.stats, "{name}: cold (reference) vs warm (compiled) stats");
+        assert_eq!(cold.elapsed_cycles, warm.elapsed_cycles, "{name}: elapsed diverged");
+        assert!(cold.total_cycles() > 0);
+
+        let model = registry::model_by_name(name).expect("model");
+        assert_eq!(cold.stats.d_load_ops, model.d_load_ops, "{name} d loads");
+        assert_eq!(cold.stats.store_ops, model.store_ops, "{name} stores");
+        assert_eq!(cold.stats.fp_cycles, model.fp_ops, "{name} fp ops");
     }
 }
 

@@ -72,6 +72,71 @@ fn random_program(rng: &mut XorShift64, mem_words: usize, max_len: usize) -> Pro
     Program::new("diff-fuzz", threads, insts)
 }
 
+/// Extend a random program with *divergence gadgets* — self-contained
+/// instruction sequences whose `bnz` outcomes split the block on
+/// tid-derived (per-lane) predicates, yet always terminate:
+///
+/// - a **forward skip** over two filler instructions (if-shaped split,
+///   reconverging at the branch's immediate post-dominator);
+/// - a **masked store** (a store issued under the skip's half mask — the
+///   trace records the divergent lane mask);
+/// - a **bounded data-dependent loop** (1..=4 trips per lane, lanes
+///   falling out over successive iterations).
+///
+/// Interleaved with the divergence-free generator's instruction mix, so
+/// the resulting traces carry divergent masks *and* everything the base
+/// fuzzer exercises.
+fn random_divergent_program(rng: &mut XorShift64, mem_words: usize, max_len: usize) -> Program {
+    let base = random_program(rng, mem_words, max_len);
+    let addr_mask = (mem_words - 1) as u16;
+    let mut insts: Vec<Instruction> = Vec::new();
+    // Re-walk the base program, injecting gadgets between instructions
+    // (dropping the base halt; we append our own).
+    for &inst in base.insts[..base.insts.len() - 1].iter() {
+        insts.push(inst);
+        if !rng.chance(0.35) {
+            continue;
+        }
+        let p = 1 + rng.below(30) as u8;
+        match rng.below(3) {
+            0 => {
+                // Forward skip: lanes with tid bit set jump over 2 fillers.
+                let bit = 1u16 << rng.below(3);
+                insts.push(Instruction::i(Opcode::Iandi, p, 0, bit));
+                let target = (insts.len() + 3) as u16;
+                insts.push(Instruction::i(Opcode::Bnz, p, 0, target));
+                insts.push(Instruction::i(Opcode::Iaddi, p, p, 1));
+                insts.push(Instruction::i(Opcode::Ixori, p, p, 3));
+            }
+            1 => {
+                // Masked store: half the lanes skip a strided store, so
+                // the trace records a genuinely divergent lane mask.
+                let a = 1 + rng.below(30) as u8;
+                let stride = 1 + rng.below(9) as u16;
+                insts.push(Instruction::i(Opcode::Iandi, p, 0, 1));
+                let target = (insts.len() + 4) as u16;
+                insts.push(Instruction::i(Opcode::Bnz, p, 0, target));
+                insts.push(Instruction::i(Opcode::Imuli, a, 0, stride));
+                insts.push(Instruction::i(Opcode::Iandi, a, a, addr_mask));
+                insts.push(Instruction::r(Opcode::St, 0, a, p));
+            }
+            _ => {
+                // Bounded loop: (tid & 3) + 1 trips, lanes retiring as
+                // their counters hit zero — 1..=4 iterations, terminates.
+                insts.push(Instruction::i(Opcode::Iandi, p, 0, 3));
+                insts.push(Instruction::i(Opcode::Iaddi, p, p, 1));
+                let body = insts.len() as u16;
+                insts.push(Instruction::i(Opcode::Ixori, p, p, 8));
+                insts.push(Instruction::i(Opcode::Ixori, p, p, 8));
+                insts.push(Instruction::i(Opcode::Iaddi, p, p, 0xFFFF));
+                insts.push(Instruction::i(Opcode::Bnz, p, 0, body));
+            }
+        }
+    }
+    insts.push(Instruction::z(Opcode::Halt));
+    Program::new("diff-fuzz-div", base.threads, insts)
+}
+
 /// Capture the program's trace on a flat memory of `mem_words`, with a
 /// random twiddle region half the time (so both load classes appear).
 fn capture(rng: &mut XorShift64, program: &Program, mem_words: usize) -> MemTrace {
@@ -143,6 +208,38 @@ fn replay_many_identical_to_reference_on_random_programs() {
             assert_reports_identical(&batched, &reference, &format!("{arch} (batched)"));
             let single = replay_compiled(&compiled, *arch, u64::MAX).unwrap();
             assert_reports_identical(&single, &reference, &format!("{arch} (single)"));
+        }
+    });
+}
+
+/// Divergence differential (ISSUE 9): random *divergent* programs —
+/// per-lane branch outcomes, masked stores, bounded data-dependent
+/// loops — must charge bit-identically through all three replay paths
+/// (reference `replay`, compiled `replay_many`, lane-packed
+/// `replay_many_packed`) across the nine paper architectures plus random
+/// parametric points. The per-op lane masks in the trace are the only
+/// carrier of divergence, so this pins that every replayer honours them.
+#[test]
+fn divergent_programs_replay_identically_on_all_paths() {
+    check("packed == scalar == reference on random divergent programs", 25, |rng| {
+        let mem_words = 1usize << (10 + rng.below(4));
+        let program = random_divergent_program(rng, mem_words, 20);
+        let trace = capture(rng, &program, mem_words);
+        let compiled = CompiledTrace::compile(&trace);
+
+        let mut archs = MemoryArchKind::table3_nine();
+        for _ in 0..4 {
+            archs.push(random_parametric_arch(rng));
+        }
+        let scalar = replay_many(&compiled, &archs, u64::MAX);
+        let packed = replay_many_packed(&compiled, &archs, u64::MAX);
+        for ((arch, s), p) in archs.iter().zip(&scalar).zip(&packed) {
+            let mem = arch.build(mem_words);
+            let reference = replay(&trace, mem.as_ref(), u64::MAX).expect("reference replays");
+            let s = s.as_ref().expect("scalar replay succeeds");
+            let p = p.as_ref().expect("packed replay succeeds");
+            assert_reports_identical(s, &reference, &format!("{arch} (scalar, divergent)"));
+            assert_reports_identical(p, &reference, &format!("{arch} (packed, divergent)"));
         }
     });
 }

@@ -149,6 +149,44 @@ fn serve_rejects_lines_past_the_dispatcher_depth() {
     assert_eq!(dispatcher.in_flight(), 0);
 }
 
+/// Batch-shape pins for `Session::handle_batch`'s `split_inclusive`
+/// segmentation: an *empty* batch line answers with an empty array (no
+/// panic, nothing served), and a batch that *starts* with a `Stats`
+/// barrier answers it first, in request order, before the concurrent
+/// remainder.
+#[test]
+fn empty_and_stats_first_batches_answer_in_shape() {
+    let engine = shared_engine();
+    let session = Session::new(Arc::clone(&engine));
+
+    // Empty batch: zero segments, zero responses.
+    assert!(session.handle_batch(&[]).is_empty());
+    assert_eq!(session_stats(&session).counter("requests.served"), Some(1), "only the stats probe");
+
+    // Stats-first batch: the barrier is the whole first segment (its
+    // concurrent prefix is empty — the `[] => {}` arm), and the run
+    // behind it still executes.
+    let batch = [
+        Request::Stats { scope: StatsScope::Session },
+        run_req("transpose32", MemoryArchKind::banked(16)),
+    ];
+    let replies = session.handle_batch(&batch);
+    assert_eq!(replies.len(), 2);
+    assert!(matches!(replies[0], Ok(Response::Stats(_))), "stats answered first: {replies:?}");
+    assert!(matches!(replies[1], Ok(Response::Run(_))), "run answered second: {replies:?}");
+
+    // Same shapes through the wire: "[]" answers "[]" on its own line.
+    let mut output = Vec::new();
+    let input = "[]\n[{\"op\":\"stats\"},{\"op\":\"list\"}]\n";
+    wire::serve_with(&session, None, input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "{text}");
+    assert_eq!(lines[0], "[]", "empty batch answers an empty array");
+    assert!(lines[1].starts_with("[{\"ok\":true,\"op\":\"stats\""), "{}", lines[1]);
+    assert!(lines[1].contains("\"op\":\"list\""), "{}", lines[1]);
+}
+
 fn drive_client<S: std::io::Read + Write>(stream: S) -> Vec<String> {
     let mut reader = BufReader::new(stream);
     let mut replies = Vec::new();

@@ -40,7 +40,13 @@ PLAN = [
     (
         ["BENCH_sweep.json", "rust/BENCH_sweep.json"],
         "rust/benches/baselines/BENCH_sweep.json",
-        ["trace_cached_median_ms", "replay_batched_median_ms", "replay_packed_median_ms"],
+        [
+            "trace_cached_median_ms",
+            "replay_batched_median_ms",
+            "replay_packed_median_ms",
+            "bitonic_replay_median_ms",
+            "spmv_replay_median_ms",
+        ],
     ),
     (
         ["BENCH_serve.json", "rust/BENCH_serve.json"],

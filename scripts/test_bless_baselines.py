@@ -108,6 +108,13 @@ class FoldTests(BlessHarness):
             for suffix in ("p50_us", "p99_us", "throughput_rps"):
                 self.assertIn(f"concurrent_c{c}_{suffix}", serve[2])
 
+    def test_sweep_plan_gates_the_divergent_kernel_keys(self):
+        # Same drift guard for the PR-9 divergent-kernel replay medians.
+        sweep = next(e for e in bless_baselines.PLAN
+                     if e[1].endswith("BENCH_sweep.json"))
+        for key in ("bitonic_replay_median_ms", "spmv_replay_median_ms"):
+            self.assertIn(key, sweep[2])
+
 
 if __name__ == "__main__":
     unittest.main()

@@ -6,7 +6,10 @@
 use soft_simt::benchkit::Bencher;
 use soft_simt::coordinator::job::{BenchJob, TraceCache};
 use soft_simt::coordinator::runner::SweepRunner;
-use soft_simt::explore::{explore, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving};
+use soft_simt::explore::{
+    explore, explore_system, DesignSpace, Exhaustive, SearchStrategy, SuccessiveHalving,
+    SystemSpace,
+};
 use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::programs::library::program_by_name;
 use soft_simt::sim::compiled::{replay_many, CompiledTrace};
@@ -54,6 +57,28 @@ fn main() {
         );
         summaries.push((name, result, s));
     }
+
+    // ISSUE 10: the system explorer over its parametric space — {1,2,4}
+    // cores × {16,32,64} lanes × paper nine × 3 capacities — cold-cache
+    // each iteration, the same measured unit as the flat strategies.
+    let sys_space = SystemSpace::parametric(dataset_kb);
+    let sys_result = {
+        let cache = TraceCache::new();
+        explore_system(program, &sys_space, &cache).unwrap()
+    };
+    assert_eq!(sys_result.captures, 1);
+    let sys_s = b
+        .bench(format!("explore_{program}_system_cold"), || {
+            let cache = TraceCache::new();
+            explore_system(program, &sys_space, &cache).unwrap().points_scored
+        })
+        .clone();
+    println!(
+        "{}  ({} system points, {} system replays)",
+        sys_s.line(),
+        sys_result.points_scored,
+        sys_result.replays
+    );
 
     // The PR's inner-loop win, isolated: the explorer's full arch set
     // charged from ONE compiled-trace walk (replay_many) vs the legacy
@@ -132,8 +157,14 @@ fn main() {
          \"replay_batched_archset_ms\": {batched_ms:.3},\n  \
          \"batch_speedup\": {batch_speedup:.3},\n  \
          \"replay_packed_archset_ms\": {packed_ms:.3},\n  \
-         \"simd_speedup\": {simd_speedup:.3}\n}}\n",
+         \"simd_speedup\": {simd_speedup:.3},\n  \
+         \"system_explore_median_ms\": {sys_ms:.3},\n  \
+         \"system_points\": {sys_points},\n  \
+         \"system_replays\": {sys_replays}\n}}\n",
         archs = space.arch_count(),
+        sys_ms = sys_s.median().as_secs_f64() * 1e3,
+        sys_points = sys_result.points_scored,
+        sys_replays = sys_result.replays,
         ex_ms = ex_s.median().as_secs_f64() * 1e3,
         ex_pps = ex_res.points_scored as f64 / ex_s.median().as_secs_f64(),
         ha_ms = ha_s.median().as_secs_f64() * 1e3,

@@ -17,6 +17,7 @@
 
 use super::table1;
 use crate::mem::arch::MemoryArchKind;
+use crate::mem::LANES;
 
 /// One Agilex sector, in ALM footprint.
 pub const SECTOR_ALMS: u32 = 16_640;
@@ -155,6 +156,59 @@ pub fn processor_footprint(arch: MemoryArchKind, size_kb: u32) -> Option<Footpri
     Some(Footprint { memory_alms: memory, rest_alms: rest, m20k: m20k_count(arch, size_kb) })
 }
 
+/// Arbitration-mux ALMs per shared-memory lane per *extra* core: each
+/// core past the first adds one request-select mux level across the
+/// memory's lane-wide datapath (address + data + enable ≈ 3 packed
+/// 8:1-mux ALMs per lane, × the round-robin grant logic). Small next to
+/// a core (7.1 K ALMs) but real: a p8x64 system pays ~10.7 K ALMs of
+/// arbitration — most of a sector.
+const SYSTEM_ARBITER_ALMS_PER_LANE: u32 = 24;
+
+/// Whole-*system* footprint: `processors` cores of `lanes` lanes
+/// sharing one `arch` memory of `size_kb` (the system explorer's area
+/// model, [`crate::explore::system`]).
+///
+/// Composition, per the Table I split [`processor_footprint`] uses:
+///
+/// - the shared memory is counted **once** ([`memory_alms`] and
+///   [`m20k_count`] — replication across cores is the whole point of a
+///   shared banked memory);
+/// - the shared access controllers (read/write sort network or R/W
+///   control) are counted **once** — cores arbitrate into one
+///   controller front-end;
+/// - each core pays the Table I core total scaled by its datapath width
+///   in [`LANES`]-wide groups (SPs dominate the core, and they scale
+///   linearly with lanes);
+/// - each core past the first adds an arbitration-mux stage across the
+///   memory datapath ([`SYSTEM_ARBITER_ALMS_PER_LANE`]).
+///
+/// At `processors=1, lanes=16` this is exactly
+/// [`processor_footprint`] — pinned by tests.
+pub fn system_footprint(
+    processors: u32,
+    lanes: u32,
+    arch: MemoryArchKind,
+    size_kb: u32,
+) -> Option<Footprint> {
+    assert!(
+        processors >= 1 && lanes >= LANES as u32 && lanes % LANES as u32 == 0,
+        "unconstructible system shape: {processors} cores × {lanes} lanes"
+    );
+    let memory = memory_alms(arch, size_kb)?;
+    let ctl = match arch {
+        MemoryArchKind::Banked { banks, .. } => banked_ctl_alms(banks),
+        MemoryArchKind::MultiPort { .. } => MP_RW_CONTROL_ALMS,
+    };
+    let groups = lanes / LANES as u32;
+    let cores = processors * table1::core_total().alms * groups;
+    let arbiter = (processors - 1) * lanes * SYSTEM_ARBITER_ALMS_PER_LANE;
+    Some(Footprint {
+        memory_alms: memory,
+        rest_alms: cores + ctl + arbiter,
+        m20k: m20k_count(arch, size_kb),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +344,72 @@ mod tests {
         assert_eq!(max_capacity_kb(MemoryArchKind::banked(2)), 56);
         // Rooflines still bind.
         assert_eq!(processor_footprint(MemoryArchKind::banked(2), 57), None);
+    }
+
+    #[test]
+    fn system_footprint_reduces_to_processor_footprint() {
+        // The system model's P=1, 16-lane anchor: exactly the
+        // single-processor footprint, for every paper architecture and
+        // several capacities.
+        for arch in MemoryArchKind::table3_nine() {
+            for kb in [8u32, 64, 112] {
+                assert_eq!(
+                    system_footprint(1, 16, arch, kb),
+                    processor_footprint(arch, kb),
+                    "{arch} @ {kb} KB"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn system_footprint_shares_memory_and_scales_cores() {
+        let b16 = MemoryArchKind::banked(16);
+        let one = system_footprint(1, 16, b16, 64).unwrap();
+        let four = system_footprint(4, 16, b16, 64).unwrap();
+        // Memory (ALMs and M20Ks) is shared, not replicated.
+        assert_eq!(four.memory_alms, one.memory_alms);
+        assert_eq!(four.m20k, one.m20k);
+        // Cores replicate: 4 cores cost more than 3× but less than 4×
+        // the single-processor rest (the shared controller amortizes,
+        // the arbiter adds back).
+        assert!(four.rest_alms > 3 * table1::core_total().alms);
+        assert!(four.rest_alms < 4 * one.rest_alms);
+        // Wider lanes scale the core block too.
+        let wide = system_footprint(1, 64, b16, 64).unwrap();
+        assert_eq!(
+            wide.rest_alms - banked_ctl_alms(16),
+            4 * table1::core_total().alms
+        );
+    }
+
+    #[test]
+    fn system_footprint_monotone_in_processors_and_lanes() {
+        let b16 = MemoryArchKind::banked(16);
+        let mut prev = 0u32;
+        for p in [1u32, 2, 4, 8] {
+            let t = system_footprint(p, 32, b16, 64).unwrap().total_alms();
+            assert!(t > prev, "p{p}: {t} <= {prev}");
+            prev = t;
+        }
+        let mut prev = 0u32;
+        for lanes in [16u32, 32, 64] {
+            let t = system_footprint(2, lanes, b16, 64).unwrap().total_alms();
+            assert!(t > prev, "{lanes} lanes: {t} <= {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn system_footprint_respects_rooflines() {
+        assert_eq!(system_footprint(4, 32, MemoryArchKind::mp_4r1w(), 113), None);
+        assert!(system_footprint(4, 32, MemoryArchKind::banked(16), 448).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "unconstructible system shape")]
+    fn system_footprint_rejects_ragged_lanes() {
+        let _ = system_footprint(2, 24, MemoryArchKind::banked(16), 64);
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 use super::job::TraceCache;
 use super::runner::SweepRunner;
+use crate::explore::system::{SystemEvaluator, SystemPoint};
 use crate::explore::{explore, DesignSpace, Exhaustive};
 use crate::mem::arch::MemoryArchKind;
 use crate::mem::mapping::BankMapping;
@@ -47,12 +48,24 @@ pub struct Candidate {
 }
 
 /// The advisor's output: candidates sorted by time, plus the two
-/// recommendations the paper's decision rule produces.
+/// recommendations the paper's decision rule produces and the system
+/// model's scale-out footnote.
 #[derive(Debug, Clone)]
 pub struct Advice {
     pub program: String,
     pub dataset_kb: u32,
     pub candidates: Vec<Candidate>,
+    /// The best {1,2,4}-core shape of the fastest placeable memory under
+    /// the system contention + Fmax model ([`crate::explore::system`]),
+    /// by throughput per ALM. `None` only if no candidate is placeable.
+    pub scale_out: Option<ScaleOut>,
+}
+
+/// One system-model data point for the advisor's scale-out footnote.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleOut {
+    pub point: SystemPoint,
+    pub throughput_per_alm: f64,
 }
 
 /// Candidate set: the paper's nine plus XOR-mapped banked variants.
@@ -110,7 +123,45 @@ pub fn advise_with(
         })
         .collect();
     candidates.sort_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap());
-    Ok(Advice { program: program.to_string(), dataset_kb, candidates })
+    let scale_out = scale_out_for(program, dataset_kb, &candidates, cache)?;
+    Ok(Advice { program: program.to_string(), dataset_kb, candidates, scale_out })
+}
+
+/// The advisor's system-model footnote: score the fastest placeable
+/// candidate at {1,2,4} cores × 16 lanes and keep the best throughput
+/// per ALM. Rides the same trace cache — no new functional execution.
+fn scale_out_for(
+    program: &str,
+    dataset_kb: u32,
+    candidates: &[Candidate],
+    cache: &TraceCache,
+) -> Result<Option<ScaleOut>, SimError> {
+    let Some(fastest) = candidates.iter().find(|c| c.footprint_alms.is_some()) else {
+        return Ok(None);
+    };
+    let sys = SystemEvaluator::new(program, cache)?;
+    let mut best: Option<ScaleOut> = None;
+    for processors in [1u32, 2, 4] {
+        let point = SystemPoint {
+            processors,
+            lanes: 16,
+            mem: fastest.arch,
+            capacity_kb: dataset_kb.max(1),
+        };
+        if !point.is_valid() {
+            continue;
+        }
+        let cost = sys.score(point)?;
+        let Some(throughput_per_alm) = cost.throughput_per_alm(sys.stream_ops(), processors)
+        else {
+            continue;
+        };
+        // Strictly-greater keeps the smallest winning core count on ties.
+        if best.map_or(true, |b| throughput_per_alm > b.throughput_per_alm) {
+            best = Some(ScaleOut { point, throughput_per_alm });
+        }
+    }
+    Ok(best)
 }
 
 impl Advice {
@@ -153,14 +204,23 @@ impl Advice {
                     .unwrap_or_else(|| "-".into()),
             ]);
         }
-        format!(
+        let mut out = format!(
             "advisor: {} ({} KB dataset)\n{}\nfastest: {}   most perf/area: {}\n",
             self.program,
             self.dataset_kb,
             t.render(),
             self.fastest().arch.label(),
             self.most_efficient().arch.label(),
-        )
+        );
+        if let Some(s) = &self.scale_out {
+            out.push_str(&format!(
+                "scale-out (system model): {} — {:.6} ops/us/ALM at {:.0} MHz\n",
+                s.point.label(),
+                s.throughput_per_alm,
+                s.point.fmax_mhz(),
+            ));
+        }
+        out
     }
 }
 
@@ -208,6 +268,28 @@ mod tests {
         if let MemoryArchKind::Banked { banks, .. } = eff.arch {
             assert!(banks <= 8, "perf/area winner should be a small banked core");
         }
+    }
+
+    #[test]
+    fn scale_out_footnote_scores_the_fastest_memory() {
+        let advice = advise("transpose32").unwrap();
+        let s = advice.scale_out.expect("placeable fastest candidate");
+        assert_eq!(s.point.lanes, 16);
+        assert!([1, 2, 4].contains(&s.point.processors));
+        assert_eq!(s.point.mem, advice.fastest().arch);
+        assert_eq!(s.point.capacity_kb, advice.dataset_kb.max(1));
+        assert!(s.throughput_per_alm > 0.0);
+        let out = advice.render();
+        assert!(out.contains("scale-out (system model): p"), "{out}");
+    }
+
+    #[test]
+    fn scale_out_shares_the_advice_trace() {
+        let runner = SweepRunner::new(2);
+        let cache = TraceCache::new();
+        let advice = advise_with("transpose32", &runner, &cache).unwrap();
+        assert!(advice.scale_out.is_some());
+        assert_eq!(cache.len(), 1, "the footnote rides the advisor's one capture");
     }
 
     #[test]

@@ -167,6 +167,14 @@ impl Evaluator {
         &self.program
     }
 
+    /// The workload's compiled trace — shared with the system-level
+    /// evaluator ([`crate::explore::system`]), which layers inter-core
+    /// contention onto the same per-op cost vectors instead of capturing
+    /// or compiling anything of its own.
+    pub(crate) fn compiled(&self) -> &CompiledTrace {
+        &self.compiled
+    }
+
     /// Workload dataset size in KB (the capacity floor).
     pub fn dataset_kb(&self) -> u32 {
         self.dataset_kb

@@ -24,7 +24,10 @@
 //!   [`strategy::Exhaustive`] grid search and dominance-based
 //!   [`strategy::SuccessiveHalving`] pruning (provably frontier-exact);
 //! - [`pareto::ParetoFront`] — incremental two-objective frontier;
-//! - [`result::ExploreResult`] — scorecards, frontier, text + JSON.
+//! - [`result::ExploreResult`] — scorecards, frontier, text + JSON;
+//! - [`system`] — the system-scale extension: {processors × lanes ×
+//!   memory × capacity} points scored under an inter-core contention +
+//!   Fmax + throughput-per-ALM model, from the same single capture.
 //!
 //! The advisor ([`crate::coordinator::advisor`]) is a thin consumer: the
 //! paper's nine architectures plus the XOR extensions are just one small
@@ -35,12 +38,17 @@ pub mod pareto;
 pub mod result;
 pub mod space;
 pub mod strategy;
+pub mod system;
 
 pub use eval::{Evaluator, PointCost};
 pub use pareto::{Cost, ParetoFront};
 pub use result::{ExploreResult, ScoredPoint};
 pub use space::{DesignPoint, DesignSpace};
 pub use strategy::{Exhaustive, SearchStrategy, SuccessiveHalving};
+pub use system::{
+    explore_system, ScoredSystemPoint, SystemEvaluator, SystemExploreResult, SystemPoint,
+    SystemSpace,
+};
 
 use crate::coordinator::job::TraceCache;
 use crate::coordinator::runner::SweepRunner;

@@ -1,0 +1,1016 @@
+//! System-scale exploration: multi-processor × lanes × memory × capacity
+//! (ROADMAP item 4, DESIGN.md §Explore).
+//!
+//! The paper evaluates one 32-lane processor against nine memories, but
+//! pitches the banked memories as reusable building blocks; the scalable
+//! soft-GPGPU line (arXiv:2401.04261) and the 950 MHz re-pipelined SIMT
+//! processor (arXiv:2504.07538) show the real design question is *arrays
+//! of cores sharing a banked memory at a target clock*. This module
+//! extends the explorer to that space:
+//!
+//! - [`SystemPoint`] — `{processors, lanes, mem, capacity_kb}` with a
+//!   parse/label grammar (`p4x32:banked16@64`) extending
+//!   [`crate::mem::arch::PARSE_GRAMMAR`];
+//! - an **inter-core contention model** layered on compiled-trace
+//!   replay: `P` cores interleave independent warp streams onto the
+//!   shared banks, so each memory operation pays its single-core cost
+//!   plus `(P−1) × ⌈active / divisor⌉` arbitration-conflict cycles,
+//!   where the divisor is the bank count (banked) or the port count
+//!   (multiport) — the expected extra occupancy the other `P−1` streams
+//!   add, computed from the per-op occupancy vectors already stored in
+//!   [`crate::mem::compiled`]. No new functional executions; **P=1 is
+//!   bit-identical to [`crate::sim::compiled::replay_compiled`]**
+//!   (pinned by tests here and in `rust/tests/explore.rs`);
+//! - a **lane-scaling model**: `lanes/16` lane groups retire the ALU
+//!   stream proportionally faster (`⌈cycles/groups⌉`) while the memory
+//!   stream is unchanged — wider datapaths don't add bank ports;
+//! - a per-point **Fmax model** ([`SystemPoint::fmax_mhz`]): anchored on
+//!   the paper's 771 MHz (banked) / 600 MHz (4R-2W) clocks; wider banked
+//!   datapaths need the deeper pipelining of arXiv:2504.07538 and scale
+//!   toward its 950 MHz ceiling ([`timing::DEEP_FMAX_MHZ`]), while
+//!   multiport points stay mux-limited at their paper clocks; every
+//!   processor doubling costs [`ARBITRATION_FMAX_PENALTY`] of clock for
+//!   the shared-memory arbiter stage;
+//! - a **throughput-per-ALM objective**: `ops × P / (cycles/fmax) /
+//!   total ALMs`, the paper's perf-per-area criterion generalized to a
+//!   system ([`SystemCost::throughput_per_alm`]), with the footprint
+//!   from [`footprint::system_footprint`] (shared memory once, `P`
+//!   scaled cores, an arbiter per extra core);
+//! - [`SystemSpace`] / [`explore_system`] — the builder and the
+//!   exhaustive scorer. Scoring a whole `{1,2,4} × {16,32,64} ×
+//!   paper-nine × capacities` space costs **one functional execution**
+//!   (the capture flows through the same [`Evaluator`] the flat explorer
+//!   uses) and one closed-form system replay per distinct
+//!   `(processors, lanes, memory)` triple, memoized across capacities.
+//!
+//! The Pareto frontier reuses [`ParetoFront`] with the time axis in
+//! integer nanoseconds (cycles scaled by the point's Fmax) — the
+//! generalization of the flat explorer's cycles × ALMs objective to a
+//! space where points run at different clocks.
+
+use crate::area::footprint::{self, Footprint};
+use crate::coordinator::job::TraceCache;
+use crate::explore::eval::Evaluator;
+use crate::explore::pareto::{Cost, ParetoFront};
+use crate::mem::arch::MemoryArchKind;
+use crate::mem::compiled::{ArchCost, ACTIVE_SLOT, FAMILY_COUNT};
+use crate::mem::controller::WritePipeline;
+use crate::mem::{timing, OpKind, LANES};
+use crate::sim::compiled::{CompiledInstr, CompiledTrace};
+use crate::sim::config::MachineConfig;
+use crate::sim::exec::{MemAccessKind, SimError};
+use crate::util::fmt::{json_str, with_commas, TextTable};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Largest constructible core count (power-of-two array sizes only, the
+/// scalable-GPGPU line's replication unit).
+pub const MAX_PROCESSORS: u32 = 8;
+
+/// Widest constructible datapath: 4 lane groups of [`LANES`].
+pub const MAX_LANES: u32 = 64;
+
+/// Fractional Fmax lost per processor-count doubling to the shared
+/// memory arbiter stage (4% per doubling — one extra mux level each).
+pub const ARBITRATION_FMAX_PENALTY: f64 = 0.04;
+
+/// One system design point: `processors` cores of `lanes` lanes sharing
+/// one `mem` memory of `capacity_kb`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SystemPoint {
+    pub processors: u32,
+    pub lanes: u32,
+    pub mem: MemoryArchKind,
+    pub capacity_kb: u32,
+}
+
+impl SystemPoint {
+    /// The paper's single-processor baseline around `mem`.
+    pub fn single(mem: MemoryArchKind, capacity_kb: u32) -> Self {
+        Self { processors: 1, lanes: LANES as u32, mem, capacity_kb }
+    }
+
+    /// Constructible: power-of-two core count up to [`MAX_PROCESSORS`],
+    /// a power-of-two number of [`LANES`]-wide lane groups up to
+    /// [`MAX_LANES`], a valid memory, and a non-zero capacity.
+    pub fn is_valid(&self) -> bool {
+        self.processors.is_power_of_two()
+            && self.processors <= MAX_PROCESSORS
+            && self.lanes % LANES as u32 == 0
+            && (self.lanes / LANES as u32).is_power_of_two()
+            && self.lanes <= MAX_LANES
+            && self.mem.is_valid()
+            && self.capacity_kb > 0
+    }
+
+    /// Datapath width in [`LANES`]-wide groups (1, 2 or 4).
+    pub fn lane_groups(&self) -> u32 {
+        self.lanes / LANES as u32
+    }
+
+    /// Canonical label, `p{procs}x{lanes}:{memory}@{capacity}` — e.g.
+    /// `p4x32:banked16@64`. Round-trips through [`SystemPoint::parse`]
+    /// (property-tested over every constructible point).
+    pub fn label(&self) -> String {
+        format!(
+            "p{}x{}:{}@{}",
+            self.processors,
+            self.lanes,
+            self.mem.compact_label(),
+            self.capacity_kb
+        )
+    }
+
+    /// Parse a [`SystemPoint::label`]-style string (the system clause of
+    /// [`crate::mem::arch::PARSE_GRAMMAR`]). Case-insensitive; the
+    /// memory part accepts anything [`MemoryArchKind::parse`] does.
+    /// Returns `None` for malformed or unconstructible points.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        let rest = s.strip_prefix('p')?;
+        let (procs, rest) = rest.split_once('x')?;
+        let (lanes, rest) = rest.split_once(':')?;
+        let (mem, cap) = rest.rsplit_once('@')?;
+        let point = Self {
+            processors: procs.parse().ok()?,
+            lanes: lanes.parse().ok()?,
+            mem: MemoryArchKind::parse(mem)?,
+            capacity_kb: cap.parse().ok()?,
+        };
+        point.is_valid().then_some(point)
+    }
+
+    /// Modeled clock for this point, in MHz.
+    ///
+    /// Anchors: a single 16-lane core keeps its memory's paper clock
+    /// exactly ([`MemoryArchKind::fmax_mhz`] — 771 MHz banked, 600 MHz
+    /// 4R-2W). Wider banked datapaths require the deeper pipelining of
+    /// arXiv:2504.07538 and interpolate toward its 950 MHz ceiling
+    /// (half-way at 32 lanes, fully at 64); multiport memories stay
+    /// limited by their replicated-port muxing and keep the base clock
+    /// at any width. Every processor-count doubling then costs
+    /// [`ARBITRATION_FMAX_PENALTY`] for the shared-memory arbiter stage.
+    pub fn fmax_mhz(&self) -> f64 {
+        let base = self.mem.fmax_mhz();
+        let depth_frac = match self.mem {
+            MemoryArchKind::Banked { .. } => {
+                (self.lane_groups().trailing_zeros() as f64 / 2.0).min(1.0)
+            }
+            MemoryArchKind::MultiPort { .. } => 0.0,
+        };
+        let deep = base + (timing::DEEP_FMAX_MHZ - base) * depth_frac;
+        deep * (1.0 - ARBITRATION_FMAX_PENALTY * f64::from(self.processors.trailing_zeros()))
+    }
+}
+
+/// Arbitration divisor of `mem` for `kind` operations: how many
+/// concurrent lane requests the memory retires per cycle — banks
+/// (banked) or ports (multiport, write side halved under the
+/// virtual-bank write restriction exactly as the timing model's cost
+/// divisor is).
+fn contention_divisor(mem: MemoryArchKind, kind: OpKind) -> u64 {
+    match mem {
+        MemoryArchKind::Banked { banks, .. } => banks.into(),
+        MemoryArchKind::MultiPort { read_ports, write_ports, vb } => match kind {
+            OpKind::Read => read_ports.into(),
+            OpKind::Write => if vb { 2 } else { write_ports.into() },
+        },
+    }
+}
+
+/// Per-point replay state — the system-level mirror of the private
+/// `ArchState` in [`crate::sim::compiled`]: the same clock/write-pipeline
+/// advance sequence per compiled instruction, with two extensions that
+/// both reduce to the identity at `P=1, lanes=16`:
+///
+/// - every memory operation costs `(P−1) × ⌈active/divisor⌉` extra
+///   arbitration cycles (zero extra streams at `P=1`);
+/// - ALU charges advance the clock by `⌈cycles/lane_groups⌉` (the whole
+///   charge at one lane group).
+struct SystemState {
+    cost: ArchCost,
+    read_div: u64,
+    write_div: u64,
+    /// `P − 1`: competing warp streams on the shared memory.
+    extra_streams: u64,
+    /// Datapath width in lane groups (ALU throughput multiplier).
+    alu_div: u64,
+    now: u64,
+    pipe: WritePipeline,
+}
+
+impl SystemState {
+    fn new(trace: &CompiledTrace, point: SystemPoint) -> Self {
+        let cost = trace.arch_cost(point.mem);
+        Self {
+            pipe: WritePipeline::new(cost.write_buffer_ops()),
+            read_div: contention_divisor(point.mem, OpKind::Read),
+            write_div: contention_divisor(point.mem, OpKind::Write),
+            extra_streams: u64::from(point.processors - 1),
+            alu_div: u64::from(point.lane_groups()),
+            cost,
+            now: 0,
+        }
+    }
+
+    /// Single-core closed-form cost of operation `op` plus the modeled
+    /// arbitration conflicts the other `P−1` streams add.
+    #[inline]
+    fn op_cost(&self, trace: &CompiledTrace, kind: OpKind, op: usize) -> u32 {
+        let row = trace.gather_row(op);
+        let active = row[ACTIVE_SLOT];
+        let base = self.cost.op_cost(kind, &row[..FAMILY_COUNT], active);
+        let div = match kind {
+            OpKind::Read => self.read_div,
+            OpKind::Write => self.write_div,
+        };
+        base + (self.extra_streams * u64::from(active).div_ceil(div)) as u32
+    }
+
+    /// Charge one compiled memory instruction — the exact clock-advance
+    /// sequence of the single-core replayer, with the contention and
+    /// lane-scaling terms folded in.
+    fn charge(&mut self, trace: &CompiledTrace, instr: &CompiledInstr) {
+        self.now += instr.before.cycles().div_ceil(self.alu_div);
+        match instr.kind {
+            MemAccessKind::Load(_) => {
+                let mut attributed = u64::from(self.cost.overhead(OpKind::Read));
+                for op in instr.ops.clone() {
+                    attributed += u64::from(self.op_cost(trace, OpKind::Read, op));
+                }
+                self.now += attributed;
+            }
+            MemAccessKind::Store { blocking } => {
+                let overhead = self.cost.overhead(OpKind::Write);
+                let mut iss = self.now;
+                for op in instr.ops.clone() {
+                    let cost = self.op_cost(trace, OpKind::Write, op);
+                    iss = self.pipe.issue_nonblocking(iss, cost, overhead);
+                }
+                self.now = if blocking { self.pipe.drain(iss) } else { iss };
+            }
+        }
+    }
+
+    /// Tail charges + the halt/drain sequence; returns elapsed cycles.
+    fn finish(mut self, trace: &CompiledTrace, max_cycles: u64) -> Result<u64, SimError> {
+        self.now += trace.tail_charges().cycles().div_ceil(self.alu_div);
+        if self.now > max_cycles {
+            return Err(SimError::CycleLimit { limit: max_cycles });
+        }
+        self.now += 1;
+        Ok(self.pipe.drain(self.now))
+    }
+}
+
+/// Replay `trace` under the system model of `point`. At
+/// `processors=1, lanes=16` the charge sequence is exactly the
+/// single-core one, so the result is bit-identical to
+/// [`crate::sim::compiled::replay_compiled`]'s elapsed cycles.
+pub(crate) fn replay_system(
+    trace: &CompiledTrace,
+    point: SystemPoint,
+    max_cycles: u64,
+) -> Result<u64, SimError> {
+    let mut state = SystemState::new(trace, point);
+    for instr in trace.instrs() {
+        state.charge(trace, instr);
+        if state.now > max_cycles {
+            return Err(SimError::CycleLimit { limit: max_cycles });
+        }
+    }
+    state.finish(trace, max_cycles)
+}
+
+/// The scored objectives of one system point.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemCost {
+    /// Modeled shared-memory-clock cycles to retire one workload stream
+    /// under `P`-way contention.
+    pub cycles: u64,
+    /// Modeled clock ([`SystemPoint::fmax_mhz`]).
+    pub fmax_mhz: f64,
+    /// Wall time at the modeled clock.
+    pub time_us: f64,
+    /// System footprint ([`footprint::system_footprint`]); `None` over
+    /// the memory's capacity roofline.
+    pub footprint: Option<Footprint>,
+}
+
+impl SystemCost {
+    pub fn alms(&self) -> Option<u32> {
+        self.footprint.map(|f| f.total_alms())
+    }
+
+    /// The system objective: total operation throughput per ALM —
+    /// `ops × P / time_us / alms` (each of the `P` cores retires its own
+    /// copy of the workload's operation stream in the modeled time).
+    pub fn throughput_per_alm(&self, ops: u64, processors: u32) -> Option<f64> {
+        self.alms()
+            .map(|alms| (ops * u64::from(processors)) as f64 / self.time_us / f64::from(alms))
+    }
+
+    /// Objective-space position for the frontier: wall time in integer
+    /// nanoseconds × ALMs (both minimized; integer-valued so frontier
+    /// membership is exactly reproducible). `None` over the roofline.
+    pub fn objective(&self) -> Option<Cost> {
+        self.alms().map(|alms| Cost { cycles: self.time_ns(), alms })
+    }
+
+    /// Wall time in integer nanoseconds (`cycles / fmax` rounded).
+    pub fn time_ns(&self) -> u64 {
+        (self.cycles as f64 * 1000.0 / self.fmax_mhz).round() as u64
+    }
+}
+
+/// Workload-bound system evaluator: wraps the flat [`Evaluator`] (one
+/// shared capture + compile through the [`TraceCache`]) and memoizes one
+/// closed-form system replay per distinct `(processors, lanes, memory)`
+/// triple — capacity only enters through the footprint model, exactly as
+/// in the flat explorer.
+pub struct SystemEvaluator {
+    eval: Evaluator,
+    replays: Mutex<HashMap<(u32, u32, MemoryArchKind), u64>>,
+    replay_count: AtomicU64,
+}
+
+impl SystemEvaluator {
+    pub fn new(program: &str, cache: &TraceCache) -> Result<Self, SimError> {
+        Ok(Self {
+            eval: Evaluator::new(program, cache)?,
+            replays: Mutex::new(HashMap::new()),
+            replay_count: AtomicU64::new(0),
+        })
+    }
+
+    pub fn program(&self) -> &str {
+        self.eval.program()
+    }
+
+    pub fn dataset_kb(&self) -> u32 {
+        self.eval.dataset_kb()
+    }
+
+    /// Functional executions triggered: 0 (warm cache) or 1, no matter
+    /// how many system points are scored.
+    pub fn captures(&self) -> u64 {
+        self.eval.captures()
+    }
+
+    /// Distinct `(processors, lanes, memory)` system replays so far.
+    pub fn replays(&self) -> u64 {
+        self.replay_count.load(Ordering::Relaxed)
+    }
+
+    /// Total 16-wide operations in one workload stream (the numerator of
+    /// the throughput objective, before the `× P` stream count).
+    pub fn stream_ops(&self) -> u64 {
+        self.eval.compiled().base_stats().operations
+    }
+
+    /// The flat single-core evaluator sharing this one's trace — the
+    /// `P=1, lanes=16` baseline the bit-identity tests compare against.
+    pub fn flat(&self) -> &Evaluator {
+        &self.eval
+    }
+
+    /// Modeled cycles for `point` (memoized per `(P, lanes, memory)`).
+    pub fn replay(&self, point: SystemPoint) -> Result<u64, SimError> {
+        let key = (point.processors, point.lanes, point.mem);
+        if let Some(&cycles) = self.replays.lock().unwrap().get(&key) {
+            return Ok(cycles);
+        }
+        let cycles =
+            replay_system(self.eval.compiled(), point, MachineConfig::DEFAULT_MAX_CYCLES)?;
+        self.replay_count.fetch_add(1, Ordering::Relaxed);
+        self.replays.lock().unwrap().insert(key, cycles);
+        Ok(cycles)
+    }
+
+    /// Exact score of one system point.
+    pub fn score(&self, point: SystemPoint) -> Result<SystemCost, SimError> {
+        let cycles = self.replay(point)?;
+        let fmax_mhz = point.fmax_mhz();
+        Ok(SystemCost {
+            cycles,
+            fmax_mhz,
+            time_us: cycles as f64 / fmax_mhz,
+            footprint: footprint::system_footprint(
+                point.processors,
+                point.lanes,
+                point.mem,
+                point.capacity_kb,
+            ),
+        })
+    }
+}
+
+/// Builder for a system design space: core counts × lane widths ×
+/// memories × capacities, enumerated in insertion order with
+/// unconstructible combinations filtered out.
+#[derive(Debug, Clone, Default)]
+pub struct SystemSpace {
+    processors: Vec<u32>,
+    lanes: Vec<u32>,
+    archs: Vec<MemoryArchKind>,
+    capacities_kb: Vec<u32>,
+    /// Minimum modeled clock a point must reach (MHz), if any.
+    min_fmax_mhz: Option<f64>,
+}
+
+impl SystemSpace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Candidate core counts (deduplicated, sorted).
+    pub fn processors(mut self, counts: impl IntoIterator<Item = u32>) -> Self {
+        for p in counts {
+            if !self.processors.contains(&p) {
+                self.processors.push(p);
+            }
+        }
+        self.processors.sort_unstable();
+        self
+    }
+
+    /// Candidate datapath widths in lanes (deduplicated, sorted).
+    pub fn lanes(mut self, widths: impl IntoIterator<Item = u32>) -> Self {
+        for l in widths {
+            if !self.lanes.contains(&l) {
+                self.lanes.push(l);
+            }
+        }
+        self.lanes.sort_unstable();
+        self
+    }
+
+    /// Add one memory architecture (deduplicated, insertion-ordered).
+    /// Panics on a descriptor [`MemoryArchKind::is_valid`] rejects, like
+    /// the flat [`crate::explore::DesignSpace`] builder.
+    pub fn arch(mut self, kind: MemoryArchKind) -> Self {
+        assert!(kind.is_valid(), "invalid architecture descriptor {kind:?}");
+        if !self.archs.contains(&kind) {
+            self.archs.push(kind);
+        }
+        self
+    }
+
+    /// Add several memory architectures.
+    pub fn archs(mut self, kinds: impl IntoIterator<Item = MemoryArchKind>) -> Self {
+        for k in kinds {
+            self = self.arch(k);
+        }
+        self
+    }
+
+    /// Candidate shared-memory capacities in KB (deduplicated, sorted).
+    pub fn capacities_kb(mut self, kbs: impl IntoIterator<Item = u32>) -> Self {
+        for kb in kbs {
+            if !self.capacities_kb.contains(&kb) {
+                self.capacities_kb.push(kb);
+            }
+        }
+        self.capacities_kb.sort_unstable();
+        self
+    }
+
+    /// Keep only points whose modeled clock ([`SystemPoint::fmax_mhz`])
+    /// reaches `mhz` — the spec's `target_clock_mhz` filter.
+    pub fn target_clock_mhz(mut self, mhz: f64) -> Self {
+        self.min_fmax_mhz = Some(mhz);
+        self
+    }
+
+    /// Enumerate the constructible points: processors × lanes × archs ×
+    /// capacities, [`SystemPoint::is_valid`]-filtered (plus the
+    /// target-clock filter, when set).
+    pub fn points(&self) -> Vec<SystemPoint> {
+        let mut out = Vec::new();
+        for &processors in &self.processors {
+            for &lanes in &self.lanes {
+                for &arch in &self.archs {
+                    for &capacity_kb in &self.capacities_kb {
+                        let p = SystemPoint { processors, lanes, mem: arch, capacity_kb };
+                        let fast_enough =
+                            self.min_fmax_mhz.map_or(true, |mhz| p.fmax_mhz() >= mhz);
+                        if p.is_valid() && fast_enough {
+                            out.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Distinct `(processors, lanes, memory)` replay triples the space
+    /// needs — the cost of scoring it, independent of capacity count.
+    pub fn replay_triples(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        for p in self.points() {
+            seen.insert((p.processors, p.lanes, p.mem));
+        }
+        seen.len()
+    }
+
+    /// The acceptance-criteria space: {1,2,4} cores × {16,32,64} lanes ×
+    /// the paper nine × three capacities from the dataset size up.
+    pub fn parametric(dataset_kb: u32) -> Self {
+        let d = dataset_kb.max(1);
+        Self::new()
+            .processors([1, 2, 4])
+            .lanes([16, 32, 64])
+            .archs(MemoryArchKind::table3_nine())
+            .capacities_kb([d, 2 * d, 4 * d])
+    }
+}
+
+/// One exactly-scored system point.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoredSystemPoint {
+    pub point: SystemPoint,
+    pub cycles: u64,
+    pub fmax_mhz: f64,
+    pub time_us: f64,
+    pub time_ns: u64,
+    pub footprint_alms: Option<u32>,
+    pub throughput_per_alm: Option<f64>,
+}
+
+impl ScoredSystemPoint {
+    pub fn new(point: SystemPoint, cost: &SystemCost, stream_ops: u64) -> Self {
+        Self {
+            point,
+            cycles: cost.cycles,
+            fmax_mhz: cost.fmax_mhz,
+            time_us: cost.time_us,
+            time_ns: cost.time_ns(),
+            footprint_alms: cost.alms(),
+            throughput_per_alm: cost.throughput_per_alm(stream_ops, point.processors),
+        }
+    }
+}
+
+/// The system explorer's output for one workload.
+#[derive(Debug, Clone)]
+pub struct SystemExploreResult {
+    pub program: String,
+    pub dataset_kb: u32,
+    pub points_total: usize,
+    pub points_scored: usize,
+    /// Distinct `(processors, lanes, memory)` system replays performed.
+    pub replays: u64,
+    /// Functional executions triggered (0 on a warm cache, else 1).
+    pub captures: u64,
+    /// Exact scores in enumeration order.
+    pub scored: Vec<ScoredSystemPoint>,
+    /// The time × ALMs Pareto frontier, sorted by time ascending.
+    pub front: Vec<ScoredSystemPoint>,
+}
+
+impl SystemExploreResult {
+    /// The frontier of a scorecard: wall-time nanoseconds × ALMs, both
+    /// minimized (unplaceable over-roofline points never enter).
+    pub fn frontier_of(scored: &[ScoredSystemPoint]) -> Vec<ScoredSystemPoint> {
+        let mut front: ParetoFront<ScoredSystemPoint> = ParetoFront::new();
+        for s in scored {
+            if let Some(alms) = s.footprint_alms {
+                front.insert(Cost { cycles: s.time_ns, alms }, *s);
+            }
+        }
+        front.into_sorted().into_iter().map(|(_, s)| s).collect()
+    }
+
+    /// Scorecard ranked by the system objective: throughput per ALM,
+    /// best first (unplaceable points last; ties break by area then
+    /// label for determinism).
+    pub fn ranked(&self) -> Vec<ScoredSystemPoint> {
+        let mut v = self.scored.clone();
+        v.sort_by(|a, b| {
+            let ta = a.throughput_per_alm.unwrap_or(f64::NEG_INFINITY);
+            let tb = b.throughput_per_alm.unwrap_or(f64::NEG_INFINITY);
+            tb.partial_cmp(&ta)
+                .unwrap()
+                .then(a.footprint_alms.unwrap_or(u32::MAX).cmp(&b.footprint_alms.unwrap_or(u32::MAX)))
+                .then(a.point.label().cmp(&b.point.label()))
+        });
+        v
+    }
+
+    fn row_of(s: &ScoredSystemPoint) -> [String; 6] {
+        [
+            s.point.label(),
+            with_commas(s.cycles),
+            format!("{:.0}", s.fmax_mhz),
+            format!("{:.2}", s.time_us),
+            s.footprint_alms.map(|a| a.to_string()).unwrap_or_else(|| "over cap".into()),
+            s.throughput_per_alm.map(|v| format!("{v:.4}")).unwrap_or_else(|| "-".into()),
+        ]
+    }
+
+    /// Full text report: summary, frontier, top of the ranked scorecard.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "system explore: {} ({} KB dataset)\n\
+             space: {} points, {} scored — {} system replays, \
+             {} functional execution(s)\n\nPareto frontier (time × ALMs):\n",
+            self.program, self.dataset_kb, self.points_total, self.points_scored, self.replays,
+            self.captures,
+        );
+        let headers = ["system", "cycles", "fmax MHz", "time (us)", "ALMs", "thr/ALM"];
+        let mut t = TextTable::new(headers);
+        for s in &self.front {
+            t.row(Self::row_of(s));
+        }
+        out.push_str(&t.render());
+        let ranked = self.ranked();
+        let top = ranked.len().min(10);
+        out.push_str(&format!(
+            "\ntop {top} of {} scored points by throughput per ALM:\n",
+            ranked.len()
+        ));
+        let mut t = TextTable::new(headers);
+        for s in &ranked[..top] {
+            t.row(Self::row_of(s));
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    /// Serialize to JSON (hand-rolled; the crate is dependency-free).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"program\": {},\n", json_str(&self.program)));
+        out.push_str(&format!("  \"dataset_kb\": {},\n", self.dataset_kb));
+        out.push_str(&format!("  \"points_total\": {},\n", self.points_total));
+        out.push_str(&format!("  \"points_scored\": {},\n", self.points_scored));
+        out.push_str(&format!("  \"replays\": {},\n", self.replays));
+        out.push_str(&format!("  \"captures\": {},\n", self.captures));
+        out.push_str("  \"front\": ");
+        out.push_str(&json_system_points(&self.front, "  "));
+        out.push_str(",\n  \"scorecard\": ");
+        out.push_str(&json_system_points(&self.scored, "  "));
+        out.push_str("\n}\n");
+        out
+    }
+}
+
+fn json_system_points(points: &[ScoredSystemPoint], indent: &str) -> String {
+    if points.is_empty() {
+        return "[]".to_string();
+    }
+    let rows: Vec<String> = points
+        .iter()
+        .map(|s| {
+            format!(
+                "{indent}  {{\"system\": {}, \"processors\": {}, \"lanes\": {}, \
+                 \"memory\": {}, \"capacity_kb\": {}, \"cycles\": {}, \"fmax_mhz\": {:.1}, \
+                 \"time_us\": {:.4}, \"alms\": {}, \"throughput_per_alm\": {}}}",
+                json_str(&s.point.label()),
+                s.point.processors,
+                s.point.lanes,
+                json_str(&s.point.mem.compact_label()),
+                s.point.capacity_kb,
+                s.cycles,
+                s.fmax_mhz,
+                s.time_us,
+                s.footprint_alms.map(|a| a.to_string()).unwrap_or_else(|| "null".into()),
+                s.throughput_per_alm.map(|v| format!("{v:.6}")).unwrap_or_else(|| "null".into()),
+            )
+        })
+        .collect();
+    format!("[\n{}\n{indent}]", rows.join(",\n"))
+}
+
+/// Explore the system space for one workload: one functional execution
+/// at most (zero on a warm `cache`), one closed-form system replay per
+/// distinct `(processors, lanes, memory)` triple, one footprint lookup
+/// per point. Scoring is exhaustive — the space is small (hundreds of
+/// points) and every replay is a closed-form trace charge, so the flat
+/// explorer's lower-bound pruning has nothing worthwhile to cull.
+pub fn explore_system(
+    program: &str,
+    space: &SystemSpace,
+    cache: &TraceCache,
+) -> Result<SystemExploreResult, SimError> {
+    let points = space.points();
+    if points.is_empty() {
+        return Err(SimError::BadProgram(format!(
+            "system design space for '{program}' is empty (need processors, lanes, \
+             memories and capacities)"
+        )));
+    }
+    let eval = SystemEvaluator::new(program, cache)?;
+    let stream_ops = eval.stream_ops();
+    let mut scored = Vec::with_capacity(points.len());
+    for &p in &points {
+        scored.push(ScoredSystemPoint::new(p, &eval.score(p)?, stream_ops));
+    }
+    assert!(
+        eval.captures() <= 1,
+        "system explore must functionally execute at most once (got {})",
+        eval.captures()
+    );
+    let front = SystemExploreResult::frontier_of(&scored);
+    Ok(SystemExploreResult {
+        program: program.to_string(),
+        dataset_kb: eval.dataset_kb(),
+        points_total: points.len(),
+        points_scored: scored.len(),
+        replays: eval.replays(),
+        captures: eval.captures(),
+        scored,
+        front,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::mapping::BankMapping;
+    use crate::mem::{FULL_MASK, LaneMask};
+    use crate::sim::compiled::replay_compiled;
+    use crate::sim::exec::{LoadClass, MemInstr, MemTrace};
+    use crate::util::proptest::check;
+    use crate::util::rng::XorShift64;
+
+    fn pt(p: u32, l: u32, mem: MemoryArchKind, cap: u32) -> SystemPoint {
+        SystemPoint { processors: p, lanes: l, mem, capacity_kb: cap }
+    }
+
+    #[test]
+    fn label_grammar_examples() {
+        let p = pt(4, 32, MemoryArchKind::banked(16), 64);
+        assert_eq!(p.label(), "p4x32:banked16@64");
+        assert_eq!(SystemPoint::parse("p4x32:banked16@64"), Some(p));
+        // Mapping suffixes, multiport and case-insensitivity all parse.
+        assert_eq!(
+            SystemPoint::parse("P2x64:Banked8-Offset3@128"),
+            Some(pt(2, 64, MemoryArchKind::Banked { banks: 8, mapping: BankMapping::Offset { shift: 3 } }, 128))
+        );
+        assert_eq!(
+            SystemPoint::parse("p1x16:4r-2w@8"),
+            Some(pt(1, 16, MemoryArchKind::mp_4r2w(), 8))
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_unconstructible() {
+        for s in [
+            "",
+            "p4x32",
+            "4x32:banked16@64",      // missing the p prefix
+            "p4x32:banked16",        // missing capacity
+            "p3x32:banked16@64",     // non-power-of-two cores
+            "p4x24:banked16@64",     // non-power-of-two lane groups
+            "p16x32:banked16@64",    // over MAX_PROCESSORS
+            "p4x128:banked16@64",    // over MAX_LANES
+            "p4x32:banked7@64",      // invalid memory
+            "p4x32:banked16@0",      // zero capacity
+            "p4x32:@64",
+        ] {
+            assert_eq!(SystemPoint::parse(s), None, "{s:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn parse_label_roundtrip_over_constructible_points() {
+        // Satellite: parse ∘ label = id over every constructible point.
+        let mappings = [
+            BankMapping::Lsb,
+            BankMapping::Offset { shift: 1 },
+            BankMapping::offset(),
+            BankMapping::Offset { shift: 3 },
+            BankMapping::Xor,
+        ];
+        check("system_point_roundtrip", 300, |rng: &mut XorShift64| {
+            let processors = 1 << rng.below(4);
+            let lanes = 16 << rng.below(3);
+            let mem = if rng.chance(0.5) {
+                MemoryArchKind::Banked {
+                    banks: 2 << rng.below(5),
+                    mapping: mappings[rng.below(mappings.len() as u32) as usize],
+                }
+            } else {
+                MemoryArchKind::MultiPort {
+                    read_ports: 1 << rng.below(4),
+                    write_ports: 1 + rng.below(2),
+                    vb: false,
+                }
+            };
+            let mem = if rng.chance(0.2) { MemoryArchKind::mp_4r1w_vb() } else { mem };
+            let p = pt(processors, lanes, mem, 1 + rng.below(512));
+            assert!(p.is_valid(), "{p:?}");
+            assert_eq!(SystemPoint::parse(&p.label()), Some(p), "{}", p.label());
+        });
+    }
+
+    #[test]
+    fn fmax_anchors() {
+        // A single 16-lane core keeps its memory's paper clock exactly.
+        assert_eq!(pt(1, 16, MemoryArchKind::banked(16), 64).fmax_mhz(), 771.0);
+        assert_eq!(pt(1, 16, MemoryArchKind::mp_4r2w(), 64).fmax_mhz(), 600.0);
+        // 64 banked lanes reach the arXiv:2504.07538 deep-pipeline clock.
+        assert_eq!(pt(1, 64, MemoryArchKind::banked(16), 64).fmax_mhz(), 950.0);
+        // Multiport stays mux-limited at any width.
+        assert_eq!(pt(1, 64, MemoryArchKind::mp_4r1w(), 64).fmax_mhz(), 771.0);
+        // More cores only ever lower the clock.
+        let f1 = pt(1, 32, MemoryArchKind::banked(16), 64).fmax_mhz();
+        let f2 = pt(2, 32, MemoryArchKind::banked(16), 64).fmax_mhz();
+        let f4 = pt(4, 32, MemoryArchKind::banked(16), 64).fmax_mhz();
+        assert!(f1 > f2 && f2 > f4);
+        assert!((f1 + f2 + f4) / 3.0 > 600.0, "penalties stay moderate");
+    }
+
+    fn seq_addrs(stride: u32) -> [u32; LANES] {
+        let mut a = [0u32; LANES];
+        for (l, x) in a.iter_mut().enumerate() {
+            *x = l as u32 * stride;
+        }
+        a
+    }
+
+    /// A trace mixing conflict-heavy loads and stores of every kind.
+    fn conflict_trace(rng: &mut XorShift64) -> MemTrace {
+        let n = 1 + rng.below(5) as usize;
+        let mut instrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let n_ops = 1 + rng.below(6) as usize;
+            let ops: Vec<([u32; LANES], LaneMask)> = (0..n_ops)
+                .map(|_| {
+                    let stride = [1u32, 2, 4, 16][rng.below(4) as usize];
+                    (seq_addrs(stride), (rng.next_u32() as LaneMask) | 1)
+                })
+                .collect();
+            let kind = match rng.below(4) {
+                0 => MemAccessKind::Load(LoadClass::Data),
+                1 => MemAccessKind::Load(LoadClass::Twiddle),
+                2 => MemAccessKind::Store { blocking: true },
+                _ => MemAccessKind::Store { blocking: false },
+            };
+            instrs.push(MemInstr { kind, ops });
+        }
+        MemTrace::from_mem_instrs("prop", 1024, instrs)
+    }
+
+    #[test]
+    fn p1_l16_bit_identical_to_single_core_replay() {
+        // The tentpole's pinned invariant, over random traces × the
+        // paper nine: the system replay at P=1, 16 lanes equals the
+        // single-core compiled replay's elapsed cycles exactly.
+        check("system_p1_bit_identity", 40, |rng: &mut XorShift64| {
+            let ct = CompiledTrace::compile(&conflict_trace(rng));
+            for arch in MemoryArchKind::table3_nine() {
+                let single = replay_compiled(&ct, arch, u64::MAX).unwrap().total_cycles();
+                let system = replay_system(&ct, pt(1, 16, arch, 8), u64::MAX).unwrap();
+                assert_eq!(system, single, "{arch}");
+            }
+        });
+    }
+
+    #[test]
+    fn more_processors_never_decrease_cycles() {
+        // Satellite monotonicity proptest: adding processors adds
+        // arbitration conflicts, never removes them.
+        check("system_processor_monotonicity", 40, |rng: &mut XorShift64| {
+            let ct = CompiledTrace::compile(&conflict_trace(rng));
+            for arch in MemoryArchKind::table3_nine() {
+                for lanes in [16u32, 32, 64] {
+                    let mut prev = 0u64;
+                    for p in [1u32, 2, 4, 8] {
+                        let c = replay_system(&ct, pt(p, lanes, arch, 8), u64::MAX).unwrap();
+                        assert!(c >= prev, "{arch} p{p}x{lanes}: {c} < {prev}");
+                        prev = c;
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn wider_lanes_never_increase_cycles() {
+        check("system_lane_monotonicity", 40, |rng: &mut XorShift64| {
+            let ct = CompiledTrace::compile(&conflict_trace(rng));
+            for arch in MemoryArchKind::table3_nine() {
+                for p in [1u32, 4] {
+                    let mut prev = u64::MAX;
+                    for lanes in [16u32, 32, 64] {
+                        let c = replay_system(&ct, pt(p, lanes, arch, 8), u64::MAX).unwrap();
+                        assert!(c <= prev, "{arch} p{p}x{lanes}: {c} > {prev}");
+                        prev = c;
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn contention_scales_with_active_lanes_and_banks() {
+        // One fully-conflicted full-mask load op: banked16 base cost 16.
+        // Each extra stream adds ceil(16/16) = 1 cycle of arbitration.
+        let mi = MemInstr {
+            kind: MemAccessKind::Load(LoadClass::Data),
+            ops: vec![(seq_addrs(16), FULL_MASK)],
+        };
+        let ct = CompiledTrace::compile(&MemTrace::from_mem_instrs("one", 256, vec![mi]));
+        let b16 = MemoryArchKind::banked(16);
+        let base = replay_system(&ct, pt(1, 16, b16, 8), u64::MAX).unwrap();
+        for p in [2u32, 4, 8] {
+            let c = replay_system(&ct, pt(p, 16, b16, 8), u64::MAX).unwrap();
+            assert_eq!(c, base + u64::from(p - 1), "p{p}");
+        }
+        // Fewer banks arbitrate more per stream: ceil(16/4) = 4.
+        let b4 = MemoryArchKind::banked(4);
+        let base4 = replay_system(&ct, pt(1, 16, b4, 8), u64::MAX).unwrap();
+        let c4 = replay_system(&ct, pt(2, 16, b4, 8), u64::MAX).unwrap();
+        assert_eq!(c4, base4 + 4);
+    }
+
+    #[test]
+    fn space_parametric_shape_and_replay_triples() {
+        let s = SystemSpace::parametric(8);
+        let pts = s.points();
+        assert_eq!(pts.len(), 3 * 3 * 9 * 3, "{{1,2,4}} × {{16,32,64}} × nine × 3 caps");
+        assert_eq!(s.replay_triples(), 3 * 3 * 9);
+        let set: std::collections::HashSet<_> = pts.iter().collect();
+        assert_eq!(set.len(), pts.len());
+        for p in &pts {
+            assert!(p.is_valid());
+        }
+    }
+
+    #[test]
+    fn space_filters_unconstructible_combinations() {
+        let s = SystemSpace::new()
+            .processors([1, 3, 16])
+            .lanes([16, 48])
+            .arch(MemoryArchKind::banked(8))
+            .capacities_kb([8]);
+        assert_eq!(s.points().len(), 1, "only p1x16 survives");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid architecture")]
+    fn space_rejects_invalid_arch() {
+        let _ = SystemSpace::new().arch(MemoryArchKind::Banked {
+            banks: 7,
+            mapping: BankMapping::Lsb,
+        });
+    }
+
+    #[test]
+    fn explore_system_end_to_end_single_capture() {
+        let cache = TraceCache::new();
+        let space = SystemSpace::parametric(8);
+        let r = explore_system("transpose32", &space, &cache).unwrap();
+        assert_eq!(r.captures, 1, "one functional execution for the whole space");
+        assert_eq!(r.points_total, space.points().len());
+        assert_eq!(r.points_scored, r.points_total);
+        assert_eq!(r.replays, space.replay_triples() as u64, "memoized per (P, lanes, mem)");
+        assert!(!r.front.is_empty());
+        // Warm-cache rerun captures nothing and scores identically.
+        let again = explore_system("transpose32", &space, &cache).unwrap();
+        assert_eq!(again.captures, 0);
+        assert_eq!(again.scored[0].cycles, r.scored[0].cycles);
+    }
+
+    #[test]
+    fn explore_system_empty_space_is_error() {
+        let cache = TraceCache::new();
+        assert!(explore_system("transpose32", &SystemSpace::new(), &cache).is_err());
+    }
+
+    #[test]
+    fn ranked_puts_best_throughput_first() {
+        let cache = TraceCache::new();
+        let r = explore_system("transpose32", &SystemSpace::parametric(8), &cache).unwrap();
+        let ranked = r.ranked();
+        for w in ranked.windows(2) {
+            let a = w[0].throughput_per_alm.unwrap_or(f64::NEG_INFINITY);
+            let b = w[1].throughput_per_alm.unwrap_or(f64::NEG_INFINITY);
+            assert!(a >= b);
+        }
+    }
+
+    #[test]
+    fn render_and_json_mention_system_points() {
+        let cache = TraceCache::new();
+        let space = SystemSpace::new()
+            .processors([1, 2])
+            .lanes([16, 32])
+            .archs([MemoryArchKind::banked(16), MemoryArchKind::mp_4r1w()])
+            .capacities_kb([8]);
+        let r = explore_system("transpose32", &space, &cache).unwrap();
+        let out = r.render();
+        assert!(out.contains("system explore: transpose32"));
+        assert!(out.contains("Pareto frontier (time × ALMs)"));
+        assert!(out.contains("p1x16:banked16@8"));
+        assert!(out.contains("1 functional execution"));
+        let j = r.to_json();
+        assert!(j.contains("\"system\": \"p2x32:banked16@8\""));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+}

@@ -119,11 +119,13 @@ pub mod prelude {
     };
     pub use crate::server::{Dispatcher, ListenAddr, Session, ShardedStore, SocketServer};
     pub use crate::service::{
-        ExploreStrategy, Request, Response, ServiceError, SimtEngine, StatsScope, TableKind,
+        ExploreObjective, ExploreSpec, ExploreStrategy, Request, Response, ServiceError,
+        SimtEngine, StatsScope, TableKind,
     };
     pub use crate::explore::{
-        explore, DesignPoint, DesignSpace, Exhaustive, ExploreResult, ParetoFront, SearchStrategy,
-        SuccessiveHalving,
+        explore, explore_system, DesignPoint, DesignSpace, Exhaustive, ExploreResult,
+        ParetoFront, SearchStrategy, SuccessiveHalving, SystemExploreResult, SystemPoint,
+        SystemSpace,
     };
     pub use crate::isa::{
         asm::{assemble, disassemble},

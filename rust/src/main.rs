@@ -79,9 +79,15 @@ USAGE:
   soft-simt run -p PROG -m MEM          run one benchmark cell
   soft-simt advise -p PROG              rank every memory for a workload
   soft-simt explore -p PROG [--strategy exhaustive|halving] [--json PATH]
-                                        search the parametric memory design
+                    [--spec PATH|JSON]  search the parametric memory design
                                         space (banks 2-32 x mappings x ports x
-                                        capacity); print the Pareto frontier
+                                        capacity); print the Pareto frontier.
+                                        --spec takes a typed space description
+                                        (inline JSON or a file); specs naming
+                                        processors/lanes (or the
+                                        throughput-per-alm objective) search
+                                        the system space (cores x lanes x
+                                        memory x capacity) instead
   soft-simt validate [--artifacts DIR]  golden validation (PJRT when built)
   soft-simt asm FILE [-m MEM]           assemble and run a custom .asm file
   soft-simt disasm PROG                 print a generated program's assembly
@@ -173,23 +179,54 @@ fn cmd_explore(engine: &SimtEngine, rest: &[String]) -> Result<i32, ServiceError
             ServiceError::BadRequest(format!("unknown strategy '{s}' (try: exhaustive, halving)"))
         })?,
     };
-    // Progress note: the engine exposes the exact space its dispatch
-    // will build, so the note can never drift from the search.
-    let space = engine.explore_space(&program)?;
-    eprintln!(
-        "exploring {} design points ({} architectures) for {program} on {} workers...",
-        space.points().len(),
-        space.arch_count(),
-        engine.runner().workers()
-    );
-    let resp = engine.handle(&Request::Explore { program, strategy })?;
-    let Response::Explore(result) = &resp else { unreachable!("explore answers explore") };
+    let spec = match flag_value(rest, &["--spec"]) {
+        None => None,
+        Some(arg) => {
+            // Inline JSON (starts with '{') or a path to a JSON file.
+            let text = if arg.trim_start().starts_with('{') {
+                arg.to_string()
+            } else {
+                std::fs::read_to_string(arg)
+                    .map_err(|e| ServiceError::io(format!("reading {arg}"), &e))?
+            };
+            Some(wire::explore_spec_from_json(&wire::parse_json(&text)?)?)
+        }
+    };
+    match &spec {
+        None => {
+            // Progress note: the engine exposes the exact space its
+            // dispatch will build, so the note can never drift from the
+            // search.
+            let space = engine.explore_space(&program)?;
+            eprintln!(
+                "exploring {} design points ({} architectures) for {program} on {} workers...",
+                space.points().len(),
+                space.arch_count(),
+                engine.runner().workers()
+            );
+        }
+        Some(s) => eprintln!(
+            "exploring a spec-defined {} space for {program}...",
+            if s.is_system() { "system (processors x lanes x memory)" } else { "memory" }
+        ),
+    }
+    let resp = engine.handle(&Request::Explore { program, strategy, spec })?;
     // The subsystem's guarantee, asserted where the user can see it: a
     // fresh CLI session serves the whole space from one execution.
-    assert_eq!(result.captures, 1, "explore must execute the workload exactly once");
+    let json = match &resp {
+        Response::Explore(result) => {
+            assert_eq!(result.captures, 1, "explore must execute the workload exactly once");
+            result.to_json()
+        }
+        Response::SystemExplore(result) => {
+            assert_eq!(result.captures, 1, "explore must execute the workload exactly once");
+            result.to_json()
+        }
+        _ => unreachable!("explore answers explore"),
+    };
     print!("{}", resp.render());
     if let Some(path) = flag_value(rest, &["--json"]) {
-        std::fs::write(path, result.to_json())
+        std::fs::write(path, json)
             .map_err(|e| ServiceError::io(format!("writing {path}"), &e))?;
         eprintln!("wrote {path}");
     }

@@ -12,7 +12,8 @@ use std::fmt;
 /// string, so the hint can never drift from the grammar.
 pub const PARSE_GRAMMAR: &str = "banked 2-32 banks x {lsb, offsetN, xor} mappings, multiport \
      {1,2,4,8}R x {1,2}W [-VB]; labels like 'banked8-offset3', '2r-1w' parse anywhere a memory \
-     is accepted";
+     is accepted; system points are 'p{procs}x{lanes}:{memory}@{capacity}' like \
+     'p4x32:banked16@64' (processors x lanes sharing one memory at a KB capacity)";
 
 /// Whether an operation reads or writes (controllers differ, §III-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -222,6 +223,29 @@ impl MemoryArchKind {
         kind.is_valid().then_some(kind)
     }
 
+    /// Compact dash-joined label (`banked16-offset2`, `banked8-xor`,
+    /// `2r-1w-vb`) — the form system-point labels embed, since the
+    /// paper-style label's spaces would collide with the `pPxL:mem@KB`
+    /// grammar. Always round-trips through [`Self::parse`] (the Offset
+    /// shift is emitted explicitly, so `Offset { shift: 2 }` prints as
+    /// `-offset2` rather than the bare `-offset` shorthand).
+    pub fn compact_label(&self) -> String {
+        match *self {
+            Self::MultiPort { read_ports, write_ports, vb } => {
+                if vb {
+                    format!("{read_ports}r-{write_ports}w-vb")
+                } else {
+                    format!("{read_ports}r-{write_ports}w")
+                }
+            }
+            Self::Banked { banks, mapping } => match mapping {
+                BankMapping::Lsb => format!("banked{banks}"),
+                BankMapping::Offset { shift } => format!("banked{banks}-offset{shift}"),
+                BankMapping::Xor => format!("banked{banks}-xor"),
+            },
+        }
+    }
+
     /// Parse the multiport family: `{R}r-{W}w` / `{R}r{W}w`, with an
     /// optional `vb` / `-vb` suffix.
     fn parse_multiport(t: &str) -> Option<Self> {
@@ -361,6 +385,20 @@ mod tests {
                 kind.label()
             );
         });
+    }
+
+    #[test]
+    fn compact_labels_roundtrip_and_stay_dashed() {
+        assert_eq!(MemoryArchKind::banked(16).compact_label(), "banked16");
+        assert_eq!(MemoryArchKind::banked_offset(8).compact_label(), "banked8-offset2");
+        assert_eq!(MemoryArchKind::banked_xor(4).compact_label(), "banked4-xor");
+        assert_eq!(MemoryArchKind::mp_4r2w().compact_label(), "4r-2w");
+        assert_eq!(MemoryArchKind::mp_4r1w_vb().compact_label(), "4r-1w-vb");
+        for k in MemoryArchKind::table3_nine() {
+            let c = k.compact_label();
+            assert!(!c.contains(' '), "compact label '{c}' must be space-free");
+            assert_eq!(MemoryArchKind::parse(&c), Some(k), "compact '{c}'");
+        }
     }
 
     #[test]

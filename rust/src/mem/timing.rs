@@ -64,6 +64,13 @@ pub const FMAX_4R2W_MHZ: f64 = 600.0;
 pub const FMAX_UNRESTRICTED_MHZ: f64 = 775.0;
 /// Tightly-constrained (node-locked 448 KB) compile (§IV-A).
 pub const FMAX_CONSTRAINED_MHZ: f64 = 738.0;
+/// Deep-pipeline ceiling for banked configurations — the 950 MHz the
+/// re-pipelined SIMT processor of arXiv:2504.07538 reaches on the same
+/// device family. The system-level Fmax model
+/// ([`crate::explore::system`]) scales wider-than-16-lane banked points
+/// from the paper's 771 MHz toward this ceiling; multiport points keep
+/// their mux-limited paper clocks.
+pub const DEEP_FMAX_MHZ: f64 = 950.0;
 
 #[cfg(test)]
 mod tests {
@@ -86,5 +93,11 @@ mod tests {
         assert_eq!(FMAX_MHZ, 771.0);
         assert_eq!(FMAX_4R2W_MHZ, 600.0);
         assert!(FMAX_UNRESTRICTED_MHZ > FMAX_MHZ);
+    }
+
+    #[test]
+    fn deep_pipeline_ceiling_above_paper_clock() {
+        assert_eq!(DEEP_FMAX_MHZ, 950.0);
+        assert!(DEEP_FMAX_MHZ > FMAX_UNRESTRICTED_MHZ);
     }
 }

@@ -249,8 +249,25 @@ impl SimtEngine {
                 let advice = advisor::advise_with(program, &self.runner, &self.cache)?;
                 Ok(Response::Advise(advice))
             }
-            Request::Explore { program, strategy } => {
-                let space = self.explore_space(program)?;
+            Request::Explore { program, strategy, spec } => {
+                // A system-shaped spec (processors/lanes axes, or the
+                // throughput-per-ALM objective) promotes the request to
+                // the system explorer; any other spec narrows the flat
+                // parametric space; no spec is the legacy request,
+                // answered byte-identically (parity-pinned).
+                if let Some(spec) = spec {
+                    if spec.is_system() {
+                        let space = spec.system_space(self.dataset_kb(program)?)?;
+                        let result =
+                            explore::explore_system(program, &space, &self.cache)?;
+                        debug_assert!(result.captures <= 1);
+                        return Ok(Response::SystemExplore(result));
+                    }
+                }
+                let space = match spec {
+                    Some(spec) => spec.design_space(self.dataset_kb(program)?)?,
+                    None => self.explore_space(program)?,
+                };
                 let halving = SuccessiveHalving::default();
                 let strategy: &dyn SearchStrategy = match strategy {
                     ExploreStrategy::Exhaustive => &Exhaustive,
@@ -315,14 +332,20 @@ impl SimtEngine {
         }
     }
 
-    /// The parametric design space an `Explore` request for `program`
-    /// will search — the single construction both the engine's dispatch
-    /// and clients announcing the space's size use, so the two can
-    /// never drift.
+    /// The parametric design space a spec-less `Explore` request for
+    /// `program` will search — the single construction both the
+    /// engine's dispatch and clients announcing the space's size use,
+    /// so the two can never drift.
     pub fn explore_space(&self, program: &str) -> Result<DesignSpace, ServiceError> {
-        let workload = library::program_by_name(program)
-            .ok_or_else(|| ServiceError::UnknownProgram(program.to_string()))?;
-        Ok(DesignSpace::parametric(workload.dataset_kb()))
+        Ok(DesignSpace::parametric(self.dataset_kb(program)?))
+    }
+
+    /// The workload's dataset size — the anchor every explore space's
+    /// default capacity axis scales from.
+    fn dataset_kb(&self, program: &str) -> Result<u32, ServiceError> {
+        library::program_by_name(program)
+            .map(|w| w.dataset_kb())
+            .ok_or_else(|| ServiceError::UnknownProgram(program.to_string()))
     }
 
     fn require_program(&self, name: &str) -> Result<(), ServiceError> {
@@ -460,6 +483,53 @@ mod tests {
     }
 
     #[test]
+    fn system_spec_explore_costs_one_functional_execution() {
+        use crate::service::request::ExploreSpec;
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        let resp = engine
+            .handle(&Request::Explore {
+                program: "transpose32".into(),
+                strategy: ExploreStrategy::Exhaustive,
+                spec: Some(ExploreSpec {
+                    processors: Some(vec![1, 2, 4]),
+                    lanes: Some(vec![16, 32, 64]),
+                    ..Default::default()
+                }),
+            })
+            .unwrap();
+        // The whole {1,2,4}-core × {16,32,64}-lane × 30-arch × 3-cap
+        // space scores from ONE functional execution of the workload.
+        assert_eq!(engine.functional_executions(), 1);
+        let Response::SystemExplore(result) = resp else { panic!("system response") };
+        assert_eq!(result.captures, 1);
+        assert_eq!(result.points_total, 3 * 3 * 30 * 3);
+        assert_eq!(result.points_scored, result.points_total);
+        assert!(!result.front.is_empty());
+    }
+
+    #[test]
+    fn flat_spec_narrows_the_flat_explorer() {
+        use crate::service::request::ExploreSpec;
+        let engine = SimtEngine::with_runner(SweepRunner::new(2));
+        let resp = engine
+            .handle(&Request::Explore {
+                program: "transpose32".into(),
+                strategy: ExploreStrategy::Exhaustive,
+                spec: Some(ExploreSpec {
+                    banks: Some(vec![4, 16]),
+                    mappings: Some(vec!["offset".into()]),
+                    multiport: Some(vec![]),
+                    capacities_kb: Some(vec![8]),
+                    ..Default::default()
+                }),
+            })
+            .unwrap();
+        let Response::Explore(result) = resp else { panic!("flat explore response") };
+        assert_eq!(result.points_total, 2);
+        assert_eq!(engine.functional_executions(), 1);
+    }
+
+    #[test]
     fn advise_and_explore_share_the_session_cache() {
         let engine = SimtEngine::with_runner(SweepRunner::new(2));
         engine.handle(&Request::Advise { program: "transpose32".into() }).unwrap();
@@ -468,6 +538,7 @@ mod tests {
             .handle(&Request::Explore {
                 program: "transpose32".into(),
                 strategy: ExploreStrategy::Halving,
+                spec: None,
             })
             .unwrap();
         assert_eq!(engine.functional_executions(), 1, "explore reuses the advisor's trace");

@@ -53,5 +53,5 @@ pub mod wire;
 
 pub use engine::SimtEngine;
 pub use error::{parse_arch, ServiceError};
-pub use request::{ExploreStrategy, Request, StatsScope, TableKind};
+pub use request::{ExploreObjective, ExploreSpec, ExploreStrategy, Request, StatsScope, TableKind};
 pub use response::{Listing, Response, SweepOutput, ValidationOutput};

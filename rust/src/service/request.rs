@@ -11,7 +11,55 @@
 //! pin or drop that field. The wire codec ([`crate::service::wire`])
 //! maps line-delimited JSON onto these types.
 
-use crate::mem::arch::MemoryArchKind;
+use crate::explore::system::SystemSpace;
+use crate::explore::DesignSpace;
+use crate::mem::arch::{MemoryArchKind, PARSE_GRAMMAR};
+use crate::mem::mapping::BankMapping;
+use crate::service::error::ServiceError;
+
+/// Generate a wire-facing selector enum with the shared name/parse
+/// idiom: a canonical wire name per variant (plus optional parse-only
+/// aliases), `name()`, `parse()` and an `ALL` listing. One macro instead
+/// of the three hand-rolled copies [`TableKind`], [`StatsScope`] and
+/// [`ExploreStrategy`] used to carry — and the contract every future
+/// selector ([`ExploreObjective`]) gets for free: `parse(name()) == id`,
+/// unknown strings parse to `None`.
+macro_rules! wire_enum {
+    (
+        $(#[$meta:meta])*
+        $vis:vis enum $name:ident {
+            $(
+                $(#[$vmeta:meta])*
+                $variant:ident = $canon:literal $(| $alias:literal)*
+            ),+ $(,)?
+        }
+    ) => {
+        $(#[$meta])*
+        $vis enum $name {
+            $( $(#[$vmeta])* $variant, )+
+        }
+
+        impl $name {
+            /// Every variant, in declaration order.
+            pub const ALL: &'static [$name] = &[ $( $name::$variant, )+ ];
+
+            /// Canonical wire / CLI name.
+            pub fn name(self) -> &'static str {
+                match self {
+                    $( $name::$variant => $canon, )+
+                }
+            }
+
+            /// Parse a canonical name or any of its aliases.
+            pub fn parse(s: &str) -> Option<Self> {
+                match s {
+                    $( $canon $(| $alias)* => Some($name::$variant), )+
+                    _ => None,
+                }
+            }
+        }
+    };
+}
 
 /// One operation for [`crate::service::SimtEngine::handle`]. Batches are
 /// just slices of these ([`crate::service::SimtEngine::handle_batch`]);
@@ -29,8 +77,12 @@ pub enum Request {
     Table(TableKind),
     /// Rank every candidate memory for a workload (paper nine + XOR).
     Advise { program: String },
-    /// Search the parametric memory design space for a workload.
-    Explore { program: String, strategy: ExploreStrategy },
+    /// Search a memory design space for a workload. `spec` describes
+    /// the space ([`ExploreSpec`]); `None` is the deprecated legacy
+    /// shape and means exactly today's parametric space
+    /// ([`crate::explore::DesignSpace::parametric`]) — every
+    /// pre-redesign wire line keeps answering byte-identically.
+    Explore { program: String, strategy: ExploreStrategy, spec: Option<ExploreSpec> },
     /// Golden validation. `artifacts_dir` points at the PJRT artifacts
     /// (`None` = the default `artifacts/`); without them (or on the
     /// stub build) validation degrades to host references.
@@ -70,103 +122,245 @@ impl Request {
     }
 }
 
-/// Which metrics registry a `Stats` request snapshots.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum StatsScope {
-    /// The engine-global registry shared by every client (the default,
-    /// and the wire behavior when no `scope` field is sent).
-    #[default]
-    Engine,
-    /// The caller's own per-session registry (DESIGN.md §Server). On
-    /// the engine directly — i.e. outside any [`crate::server::Session`]
-    /// — the engine registry *is* the session registry (single-session
-    /// adapter semantics), so the snapshot differs only in its reported
-    /// `scope` label.
-    Session,
-}
-
-impl StatsScope {
-    /// Wire name (the `"scope"` field of the JSON encoding, and the
-    /// snapshot's reported `scope`).
-    pub fn name(self) -> &'static str {
-        match self {
-            StatsScope::Engine => "engine",
-            StatsScope::Session => "session",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "engine" => Some(Self::Engine),
-            "session" => Some(Self::Session),
-            _ => None,
-        }
+wire_enum! {
+    /// Which metrics registry a `Stats` request snapshots. The wire name
+    /// is the `"scope"` field of the JSON encoding, and the snapshot's
+    /// reported `scope`.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+    pub enum StatsScope {
+        /// The engine-global registry shared by every client (the
+        /// default, and the wire behavior when no `scope` field is
+        /// sent).
+        #[default]
+        Engine = "engine",
+        /// The caller's own per-session registry (DESIGN.md §Server). On
+        /// the engine directly — i.e. outside any
+        /// [`crate::server::Session`] — the engine registry *is* the
+        /// session registry (single-session adapter semantics), so the
+        /// snapshot differs only in its reported `scope` label.
+        Session = "session",
     }
 }
 
-/// Which paper artifact a `Table` request renders.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TableKind {
-    /// Table I: resources + Fmax model (no simulation).
-    Table1,
-    /// Table II: transpose profiling.
-    Table2,
-    /// Table III: FFT profiling.
-    Table3,
-    /// Fig. 9: cost vs performance.
-    Fig9,
+wire_enum! {
+    /// Which paper artifact a `Table` request renders.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum TableKind {
+        /// Table I: resources + Fmax model (no simulation).
+        Table1 = "table1",
+        /// Table II: transpose profiling.
+        Table2 = "table2",
+        /// Table III: FFT profiling.
+        Table3 = "table3",
+        /// Fig. 9: cost vs performance.
+        Fig9 = "fig9",
+    }
 }
 
 impl TableKind {
-    pub const ALL: [TableKind; 4] =
-        [TableKind::Table1, TableKind::Table2, TableKind::Table3, TableKind::Fig9];
-
-    /// Wire / CLI name.
-    pub fn name(self) -> &'static str {
-        match self {
-            TableKind::Table1 => "table1",
-            TableKind::Table2 => "table2",
-            TableKind::Table3 => "table3",
-            TableKind::Fig9 => "fig9",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        Self::ALL.into_iter().find(|t| t.name() == s)
-    }
-
     /// Whether rendering needs sweep results (everything but Table I).
     pub fn needs_sweep(self) -> bool {
         !matches!(self, TableKind::Table1)
     }
 }
 
-/// Search strategy selector for `Explore` requests (mirrors
-/// [`crate::explore::strategy`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum ExploreStrategy {
-    /// Exhaustive grid search.
-    Exhaustive,
-    /// Dominance-based successive halving (frontier-exact; the default).
-    #[default]
-    Halving,
+wire_enum! {
+    /// Search strategy selector for `Explore` requests (mirrors
+    /// [`crate::explore::strategy`]). `grid` and `pruning` are accepted
+    /// CLI aliases.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+    pub enum ExploreStrategy {
+        /// Exhaustive grid search.
+        Exhaustive = "exhaustive" | "grid",
+        /// Dominance-based successive halving (frontier-exact; the
+        /// default).
+        #[default]
+        Halving = "halving" | "pruning",
+    }
 }
 
-impl ExploreStrategy {
-    pub fn name(self) -> &'static str {
-        match self {
-            ExploreStrategy::Exhaustive => "exhaustive",
-            ExploreStrategy::Halving => "halving",
+wire_enum! {
+    /// Ranking objective of an exploration ([`ExploreSpec::objective`]).
+    #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+    pub enum ExploreObjective {
+        /// The flat explorer's cycles × ALMs Pareto ranking (the
+        /// default, and the only pre-redesign behavior).
+        #[default]
+        TimeArea = "time-area" | "time",
+        /// The system explorer's `ops / (cycles/fmax) / alms` ranking.
+        /// Selecting it promotes a spec without explicit `processors` /
+        /// `lanes` to a system exploration over the single-core shapes.
+        ThroughputPerAlm = "throughput-per-alm" | "throughput",
+    }
+}
+
+/// A serializable description of the design space an `Explore` request
+/// searches — the typed replacement for the old hardwired parametric
+/// space. Every field is optional; an absent field means the parametric
+/// default, and an absent spec altogether means exactly the legacy
+/// behavior. The spec lowers onto the [`DesignSpace`] builder (flat
+/// memory × capacity exploration) or, when it names `processors`,
+/// `lanes` or the throughput objective, onto the system-space builder
+/// ([`SystemSpace`], [`crate::explore::system`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExploreSpec {
+    /// Banked bank counts (crossed with every mapping).
+    pub banks: Option<Vec<u32>>,
+    /// Bank mappings by name: `lsb`, `offset`, `offsetN`, `xor`.
+    pub mappings: Option<Vec<String>>,
+    /// Multiport configurations by compact label: `4r-1w`, `4r-2w`,
+    /// `4r-1w-vb`, … An explicit empty list drops multiport entirely.
+    pub multiport: Option<Vec<String>>,
+    /// Candidate shared-memory capacities in KB.
+    pub capacities_kb: Option<Vec<u32>>,
+    /// System dimension: candidate core counts. Present ⇒ system
+    /// exploration.
+    pub processors: Option<Vec<u32>>,
+    /// System dimension: candidate datapath widths in lanes. Present ⇒
+    /// system exploration.
+    pub lanes: Option<Vec<u32>>,
+    /// Ranking objective (default [`ExploreObjective::TimeArea`]).
+    pub objective: Option<ExploreObjective>,
+    /// Minimum modeled clock (MHz) a point must reach — filters 600 MHz
+    /// multiport points out of a 700 MHz design, say.
+    pub target_clock_mhz: Option<f64>,
+}
+
+impl ExploreSpec {
+    /// Whether this spec asks for the system-scale explorer: an explicit
+    /// `processors`/`lanes` axis, or the throughput-per-ALM objective.
+    pub fn is_system(&self) -> bool {
+        self.processors.is_some()
+            || self.lanes.is_some()
+            || self.objective == Some(ExploreObjective::ThroughputPerAlm)
+    }
+
+    fn bad(what: &str, value: &str) -> ServiceError {
+        ServiceError::BadRequest(format!(
+            "unknown {what} '{value}' in explore spec ({PARSE_GRAMMAR})"
+        ))
+    }
+
+    fn mapping_of(name: &str) -> Option<BankMapping> {
+        match name {
+            "lsb" => Some(BankMapping::Lsb),
+            "xor" => Some(BankMapping::Xor),
+            "offset" => Some(BankMapping::offset()),
+            _ => {
+                let shift = name.strip_prefix("offset")?.parse().ok()?;
+                let m = BankMapping::Offset { shift };
+                m.is_valid().then_some(m)
+            }
         }
     }
 
-    /// Accepts the CLI aliases (`grid`, `pruning`) too.
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "exhaustive" | "grid" => Some(Self::Exhaustive),
-            "halving" | "pruning" => Some(Self::Halving),
-            _ => None,
+    /// The spec's memory-architecture slate: banks × mappings plus the
+    /// multiport labels, parametric defaults for absent fields.
+    fn archs(&self) -> Result<Vec<MemoryArchKind>, ServiceError> {
+        let banks = self.banks.clone().unwrap_or_else(|| vec![2, 4, 8, 16, 32]);
+        for &b in &banks {
+            if !MemoryArchKind::banked(b).is_valid() {
+                return Err(Self::bad("bank count", &b.to_string()));
+            }
         }
+        let mappings: Vec<BankMapping> = match &self.mappings {
+            None => vec![
+                BankMapping::Lsb,
+                BankMapping::Offset { shift: 1 },
+                BankMapping::offset(),
+                BankMapping::Offset { shift: 3 },
+                BankMapping::Xor,
+            ],
+            Some(names) => names
+                .iter()
+                .map(|n| Self::mapping_of(n).ok_or_else(|| Self::bad("mapping", n)))
+                .collect::<Result<_, _>>()?,
+        };
+        let multiport: Vec<MemoryArchKind> = match &self.multiport {
+            None => vec![
+                MemoryArchKind::mp_4r1w(),
+                MemoryArchKind::mp_4r2w(),
+                MemoryArchKind::mp_4r1w_vb(),
+                MemoryArchKind::MultiPort { read_ports: 2, write_ports: 1, vb: false },
+                MemoryArchKind::MultiPort { read_ports: 8, write_ports: 1, vb: false },
+            ],
+            Some(labels) => labels
+                .iter()
+                .map(|l| {
+                    MemoryArchKind::parse(l)
+                        .filter(|m| matches!(m, MemoryArchKind::MultiPort { .. }))
+                        .ok_or_else(|| Self::bad("multiport config", l))
+                })
+                .collect::<Result<_, _>>()?,
+        };
+        let mut archs = Vec::new();
+        for &b in &banks {
+            for &m in &mappings {
+                let a = MemoryArchKind::Banked { banks: b, mapping: m };
+                if !archs.contains(&a) {
+                    archs.push(a);
+                }
+            }
+        }
+        for a in multiport {
+            if !archs.contains(&a) {
+                archs.push(a);
+            }
+        }
+        Ok(archs)
+    }
+
+    /// The spec's capacity slate (parametric default: dataset × 1/2/4).
+    fn capacities(&self, dataset_kb: u32) -> Vec<u32> {
+        let d = dataset_kb.max(1);
+        self.capacities_kb.clone().unwrap_or_else(|| vec![d, 2 * d, 4 * d])
+    }
+
+    /// Lower onto the flat [`DesignSpace`] builder, with the parametric
+    /// space's roofline and fits-dataset constraints and the optional
+    /// target-clock filter.
+    pub fn design_space(&self, dataset_kb: u32) -> Result<DesignSpace, ServiceError> {
+        let mut space = DesignSpace::new().capacities_kb(self.capacities(dataset_kb));
+        for a in self.archs()? {
+            space = space.arch(a);
+        }
+        space = space.with_capacity_roofline().fits_dataset(dataset_kb.max(1));
+        if let Some(t) = self.target_clock_mhz {
+            space = space.constraint("fmax >= target clock", move |p| p.arch.fmax_mhz() >= t);
+        }
+        Ok(space)
+    }
+
+    /// Lower onto the system-space builder ([`SystemSpace`]); absent
+    /// `processors`/`lanes` default to the {1,2,4} × {16,32,64} grid.
+    pub fn system_space(&self, dataset_kb: u32) -> Result<SystemSpace, ServiceError> {
+        use crate::explore::system::{MAX_LANES, MAX_PROCESSORS, SystemPoint};
+        let processors = self.processors.clone().unwrap_or_else(|| vec![1, 2, 4]);
+        let lanes = self.lanes.clone().unwrap_or_else(|| vec![16, 32, 64]);
+        let probe = MemoryArchKind::banked(16);
+        for &p in &processors {
+            let pt = SystemPoint { processors: p, lanes: 16, mem: probe, capacity_kb: 8 };
+            if !(p >= 1 && p <= MAX_PROCESSORS && pt.is_valid()) {
+                return Err(Self::bad("processor count", &p.to_string()));
+            }
+        }
+        for &l in &lanes {
+            let pt = SystemPoint { processors: 1, lanes: l, mem: probe, capacity_kb: 8 };
+            if !(l >= 1 && l <= MAX_LANES && pt.is_valid()) {
+                return Err(Self::bad("lane count", &l.to_string()));
+            }
+        }
+        let mut space = SystemSpace::new()
+            .processors(processors)
+            .lanes(lanes)
+            .capacities_kb(self.capacities(dataset_kb));
+        for a in self.archs()? {
+            space = space.arch(a);
+        }
+        if let Some(t) = self.target_clock_mhz {
+            space = space.target_clock_mhz(t);
+        }
+        Ok(space)
     }
 }
 
@@ -176,12 +370,117 @@ mod tests {
 
     #[test]
     fn table_kinds_roundtrip_names() {
-        for t in TableKind::ALL {
+        for &t in TableKind::ALL {
             assert_eq!(TableKind::parse(t.name()), Some(t));
         }
         assert_eq!(TableKind::parse("table4"), None);
         assert!(TableKind::Table2.needs_sweep());
         assert!(!TableKind::Table1.needs_sweep());
+    }
+
+    #[test]
+    fn wire_enums_share_the_roundtrip_contract() {
+        // The wire_enum! macro's invariant, over every generated enum:
+        // parse ∘ name = id, and unknown strings parse to None.
+        for &s in StatsScope::ALL {
+            assert_eq!(StatsScope::parse(s.name()), Some(s));
+        }
+        for &s in ExploreStrategy::ALL {
+            assert_eq!(ExploreStrategy::parse(s.name()), Some(s));
+        }
+        for &o in ExploreObjective::ALL {
+            assert_eq!(ExploreObjective::parse(o.name()), Some(o));
+        }
+        assert_eq!(ExploreObjective::parse("latency"), None);
+    }
+
+    #[test]
+    fn objective_parses_with_aliases_and_defaults_to_time_area() {
+        assert_eq!(ExploreObjective::parse("throughput"), Some(ExploreObjective::ThroughputPerAlm));
+        assert_eq!(ExploreObjective::parse("time"), Some(ExploreObjective::TimeArea));
+        assert_eq!(ExploreObjective::default(), ExploreObjective::TimeArea);
+    }
+
+    #[test]
+    fn default_spec_lowers_to_the_parametric_space() {
+        // An all-absent spec must describe exactly the legacy space.
+        let spec = ExploreSpec::default();
+        assert!(!spec.is_system());
+        let lowered = spec.design_space(8).unwrap();
+        let parametric = DesignSpace::parametric(8);
+        assert_eq!(lowered.points(), parametric.points());
+    }
+
+    #[test]
+    fn spec_axes_narrow_the_flat_space() {
+        let spec = ExploreSpec {
+            banks: Some(vec![4, 16]),
+            mappings: Some(vec!["offset2".into()]),
+            multiport: Some(vec![]), // explicit empty: banked only
+            capacities_kb: Some(vec![8, 16]),
+            ..Default::default()
+        };
+        let pts = spec.design_space(8).unwrap().points();
+        assert_eq!(pts.len(), 2 * 1 * 2);
+        assert!(pts.iter().all(|p| matches!(p.arch, MemoryArchKind::Banked { .. })));
+    }
+
+    #[test]
+    fn spec_system_promotion_rules() {
+        assert!(ExploreSpec { processors: Some(vec![1, 2]), ..Default::default() }.is_system());
+        assert!(ExploreSpec { lanes: Some(vec![32]), ..Default::default() }.is_system());
+        assert!(ExploreSpec {
+            objective: Some(ExploreObjective::ThroughputPerAlm),
+            ..Default::default()
+        }
+        .is_system());
+        assert!(!ExploreSpec {
+            objective: Some(ExploreObjective::TimeArea),
+            ..Default::default()
+        }
+        .is_system());
+    }
+
+    #[test]
+    fn spec_system_space_defaults_and_filters() {
+        let spec = ExploreSpec { processors: Some(vec![1, 2, 4]), ..Default::default() };
+        let space = spec.system_space(8).unwrap();
+        // Default lanes {16,32,64} × default 30-arch slate × 3 caps.
+        assert_eq!(space.points().len(), 3 * 3 * 30 * 3);
+        // A target clock above 600 MHz drops the 4R-2W points.
+        let clocked = ExploreSpec {
+            processors: Some(vec![1]),
+            lanes: Some(vec![16]),
+            target_clock_mhz: Some(700.0),
+            ..Default::default()
+        };
+        let pts = clocked.system_space(8).unwrap().points();
+        assert!(!pts.is_empty());
+        assert!(pts.iter().all(|p| p.fmax_mhz() >= 700.0));
+        assert!(!pts.iter().any(|p| p.mem == MemoryArchKind::mp_4r2w()));
+    }
+
+    #[test]
+    fn spec_errors_quote_the_grammar() {
+        let cases: Vec<ExploreSpec> = vec![
+            ExploreSpec { banks: Some(vec![7]), ..Default::default() },
+            ExploreSpec { mappings: Some(vec!["diagonal".into()]), ..Default::default() },
+            ExploreSpec { multiport: Some(vec!["9r-9w".into()]), ..Default::default() },
+        ];
+        for spec in cases {
+            let err = spec.design_space(8).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("explore spec"), "{msg}");
+            assert!(msg.contains("banked8-offset3"), "grammar quoted: {msg}");
+        }
+        let err = ExploreSpec { processors: Some(vec![3]), ..Default::default() }
+            .system_space(8)
+            .unwrap_err();
+        assert!(err.to_string().contains("processor count"), "{err}");
+        let err = ExploreSpec { lanes: Some(vec![48]), ..Default::default() }
+            .system_space(8)
+            .unwrap_err();
+        assert!(err.to_string().contains("lane count"), "{err}");
     }
 
     #[test]

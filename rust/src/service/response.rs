@@ -8,7 +8,7 @@ use crate::coordinator::advisor::Advice;
 use crate::coordinator::job::BenchResult;
 use crate::coordinator::report;
 use crate::coordinator::validate::Check;
-use crate::explore::ExploreResult;
+use crate::explore::{ExploreResult, SystemExploreResult};
 use crate::mem::arch::{self, MemoryArchKind};
 use crate::obs::MetricsSnapshot;
 use crate::programs::library;
@@ -32,6 +32,11 @@ pub enum Response {
     Advise(Advice),
     /// The explorer's scorecards + Pareto frontier.
     Explore(ExploreResult),
+    /// The system explorer's answer — an `Explore` request whose spec
+    /// spans processors/lanes (or asks for the throughput-per-ALM
+    /// objective) is served from the system model instead. Same wire op
+    /// as `Explore`, so clients pair it by request as usual.
+    SystemExplore(SystemExploreResult),
     /// Validation outcomes (a failing check is a *result*, not an
     /// error — see [`Response::exit_code`]).
     Validate(ValidationOutput),
@@ -53,6 +58,7 @@ impl Response {
             Response::Table { .. } => "table",
             Response::Advise(_) => "advise",
             Response::Explore(_) => "explore",
+            Response::SystemExplore(_) => "explore",
             Response::Validate(_) => "validate",
             Response::Disasm { .. } => "disasm",
             Response::List(_) => "list",
@@ -70,6 +76,7 @@ impl Response {
             Response::Table { text, .. } => text.clone(),
             Response::Advise(advice) => advice.render(),
             Response::Explore(result) => result.render(),
+            Response::SystemExplore(result) => result.render(),
             Response::Validate(v) => v.render(),
             Response::Disasm { text, .. } => text.clone(),
             Response::List(listing) => listing.render(),

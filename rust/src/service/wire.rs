@@ -31,7 +31,7 @@
 
 use super::engine::SimtEngine;
 use super::error::{parse_arch, ServiceError};
-use super::request::{ExploreStrategy, Request, StatsScope, TableKind};
+use super::request::{ExploreObjective, ExploreSpec, ExploreStrategy, Request, StatsScope, TableKind};
 use super::response::Response;
 use crate::obs::{Phase, Span};
 use crate::server::Dispatcher;
@@ -343,7 +343,16 @@ pub fn request_from_json(v: &Json) -> Result<Request, ServiceError> {
                     ))
                 })?,
             };
-            Ok(Request::Explore { program: program("program")?, strategy })
+            let spec = match v.get("spec") {
+                None | Some(Json::Null) => None,
+                Some(s @ Json::Obj(_)) => Some(explore_spec_from_json(s)?),
+                Some(_) => {
+                    return Err(ServiceError::BadRequest(
+                        "field 'spec' must be an object".into(),
+                    ))
+                }
+            };
+            Ok(Request::Explore { program: program("program")?, strategy, spec })
         }
         "validate" => Ok(Request::Validate {
             artifacts_dir: opt_str_field(v, "artifacts")?.map(String::from),
@@ -387,6 +396,108 @@ fn req_str_field(v: &Json, op: &str, field: &str) -> Result<String, ServiceError
     })
 }
 
+/// Decode the typed `"spec"` object of an explore request. Unknown keys
+/// are rejected — a typo'd axis name must not silently fall back to the
+/// full default slate — and every present field is type-checked, same
+/// policy as [`opt_str_field`]. An explicit `null` value reads as
+/// absent. Semantic validation (bank counts, mapping names, lane
+/// shapes) happens later, when the spec lowers onto a space
+/// ([`ExploreSpec::design_space`] / [`ExploreSpec::system_space`]), so
+/// decode errors are purely structural. Public because the CLI's
+/// `explore --spec` flag decodes the same document standalone.
+pub fn explore_spec_from_json(v: &Json) -> Result<ExploreSpec, ServiceError> {
+    let Json::Obj(pairs) = v else {
+        return Err(ServiceError::BadRequest("explore spec must be a JSON object".into()));
+    };
+    let mut spec = ExploreSpec::default();
+    for (key, val) in pairs {
+        if matches!(val, Json::Null) {
+            continue;
+        }
+        match key.as_str() {
+            "banks" => spec.banks = Some(u32_list(val, key)?),
+            "mappings" => spec.mappings = Some(str_list(val, key)?),
+            "multiport" => spec.multiport = Some(str_list(val, key)?),
+            "capacities_kb" => spec.capacities_kb = Some(u32_list(val, key)?),
+            "processors" => spec.processors = Some(u32_list(val, key)?),
+            "lanes" => spec.lanes = Some(u32_list(val, key)?),
+            "objective" => {
+                let s = val.as_str().ok_or_else(|| {
+                    ServiceError::BadRequest(
+                        "spec field 'objective' must be a string".into(),
+                    )
+                })?;
+                spec.objective = Some(ExploreObjective::parse(s).ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "unknown objective '{s}' (try: time-area, throughput-per-alm)"
+                    ))
+                })?);
+            }
+            "target_clock_mhz" => {
+                let n = val.as_f64().filter(|n| n.is_finite() && *n > 0.0).ok_or_else(
+                    || {
+                        ServiceError::BadRequest(
+                            "spec field 'target_clock_mhz' must be a positive number"
+                                .into(),
+                        )
+                    },
+                )?;
+                spec.target_clock_mhz = Some(n);
+            }
+            other => {
+                return Err(ServiceError::BadRequest(format!(
+                    "unknown explore spec field '{other}' (known: banks, mappings, \
+                     multiport, capacities_kb, processors, lanes, objective, \
+                     target_clock_mhz)"
+                )))
+            }
+        }
+    }
+    Ok(spec)
+}
+
+/// A spec axis holding small non-negative integers (bank counts, KB
+/// capacities, core counts, lane counts).
+fn u32_list(v: &Json, field: &str) -> Result<Vec<u32>, ServiceError> {
+    let Json::Arr(items) = v else {
+        return Err(ServiceError::BadRequest(format!(
+            "spec field '{field}' must be an array of integers"
+        )));
+    };
+    items
+        .iter()
+        .map(|item| {
+            item.as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= f64::from(u32::MAX))
+                .map(|n| n as u32)
+                .ok_or_else(|| {
+                    ServiceError::BadRequest(format!(
+                        "spec field '{field}' must hold non-negative integers"
+                    ))
+                })
+        })
+        .collect()
+}
+
+/// A spec axis holding names (bank mappings, multiport descriptors).
+fn str_list(v: &Json, field: &str) -> Result<Vec<String>, ServiceError> {
+    let Json::Arr(items) = v else {
+        return Err(ServiceError::BadRequest(format!(
+            "spec field '{field}' must be an array of strings"
+        )));
+    };
+    items
+        .iter()
+        .map(|item| {
+            item.as_str().map(String::from).ok_or_else(|| {
+                ServiceError::BadRequest(format!(
+                    "spec field '{field}' must hold strings"
+                ))
+            })
+        })
+        .collect()
+}
+
 /// Parse one wire line: a request object or a batch array of them.
 pub fn requests_from_line(line: &str) -> Result<Vec<Request>, ServiceError> {
     match parse_json(line)? {
@@ -415,11 +526,21 @@ pub fn request_to_json(req: &Request) -> String {
         Request::Advise { program } => {
             format!("{{\"op\":\"advise\",\"program\":{}}}", json_str(program))
         }
-        Request::Explore { program, strategy } => format!(
-            "{{\"op\":\"explore\",\"program\":{},\"strategy\":{}}}",
-            json_str(program),
-            json_str(strategy.name())
-        ),
+        // An absent spec encodes to the exact pre-redesign byte
+        // sequence (parity-pinned); a present spec appends only its
+        // `Some` fields, in declaration order.
+        Request::Explore { program, strategy, spec } => {
+            let mut out = format!(
+                "{{\"op\":\"explore\",\"program\":{},\"strategy\":{}",
+                json_str(program),
+                json_str(strategy.name())
+            );
+            if let Some(spec) = spec {
+                out.push_str(&format!(",\"spec\":{}", spec_to_json(spec)));
+            }
+            out.push('}');
+            out
+        }
         Request::Validate { artifacts_dir } => match artifacts_dir {
             Some(dir) => format!("{{\"op\":\"validate\",\"artifacts\":{}}}", json_str(dir)),
             None => "{\"op\":\"validate\"}".to_string(),
@@ -440,6 +561,43 @@ pub fn request_to_json(req: &Request) -> String {
             format!("{{\"op\":\"stats\",\"scope\":{}}}", json_str(scope.name()))
         }
     }
+}
+
+/// Encode an [`ExploreSpec`], `Some` fields only, declaration order
+/// (round-trips through [`spec_from_json`]).
+fn spec_to_json(spec: &ExploreSpec) -> String {
+    fn nums(items: &[u32]) -> String {
+        items.iter().map(u32::to_string).collect::<Vec<_>>().join(",")
+    }
+    fn strs(items: &[String]) -> String {
+        items.iter().map(String::as_str).map(json_str).collect::<Vec<_>>().join(",")
+    }
+    let mut fields = Vec::new();
+    if let Some(b) = &spec.banks {
+        fields.push(format!("\"banks\":[{}]", nums(b)));
+    }
+    if let Some(m) = &spec.mappings {
+        fields.push(format!("\"mappings\":[{}]", strs(m)));
+    }
+    if let Some(m) = &spec.multiport {
+        fields.push(format!("\"multiport\":[{}]", strs(m)));
+    }
+    if let Some(c) = &spec.capacities_kb {
+        fields.push(format!("\"capacities_kb\":[{}]", nums(c)));
+    }
+    if let Some(p) = &spec.processors {
+        fields.push(format!("\"processors\":[{}]", nums(p)));
+    }
+    if let Some(l) = &spec.lanes {
+        fields.push(format!("\"lanes\":[{}]", nums(l)));
+    }
+    if let Some(o) = spec.objective {
+        fields.push(format!("\"objective\":{}", json_str(o.name())));
+    }
+    if let Some(t) = spec.target_clock_mhz {
+        fields.push(format!("\"target_clock_mhz\":{t}"));
+    }
+    format!("{{{}}}", fields.join(","))
 }
 
 // ---------------------------------------------------------------------
@@ -522,6 +680,11 @@ pub fn response_to_json(resp: &Response) -> String {
             // The explorer's own JSON document, flattened to one line
             // (its newlines are structural; in-string newlines are
             // escaped by `json_str`).
+            out.push_str(&format!(",\"result\":{}", result.to_json().replace('\n', " ")));
+        }
+        Response::SystemExplore(result) => {
+            // Same shape as the flat explorer: the system explorer's own
+            // JSON document under "result", flattened to one line.
             out.push_str(&format!(",\"result\":{}", result.to_json().replace('\n', " ")));
         }
         Response::Validate(v) => {
@@ -840,6 +1003,107 @@ mod tests {
             requests_from_line("{\"op\":\"explore\",\"program\":\"transpose32\"}").unwrap();
         let Request::Explore { strategy, .. } = &reqs[0] else { panic!("explore request") };
         assert_eq!(*strategy, ExploreStrategy::Halving);
+    }
+
+    #[test]
+    fn explore_spec_decodes_typed_fields() {
+        let reqs = requests_from_line(
+            "{\"op\":\"explore\",\"program\":\"transpose32\",\"spec\":{\"banks\":[4,16],\
+             \"mappings\":[\"offset2\"],\"processors\":[1,2],\"lanes\":[32],\
+             \"objective\":\"throughput\",\"target_clock_mhz\":700}}",
+        )
+        .unwrap();
+        let Request::Explore { spec: Some(spec), .. } = &reqs[0] else {
+            panic!("explore with spec")
+        };
+        assert_eq!(spec.banks, Some(vec![4, 16]));
+        assert_eq!(spec.mappings, Some(vec!["offset2".to_string()]));
+        assert_eq!(spec.processors, Some(vec![1, 2]));
+        assert_eq!(spec.lanes, Some(vec![32]));
+        assert_eq!(spec.objective, Some(ExploreObjective::ThroughputPerAlm));
+        assert_eq!(spec.target_clock_mhz, Some(700.0));
+        assert!(spec.is_system());
+        // Explicit null spec reads as absent, like every optional field.
+        let reqs = requests_from_line(
+            "{\"op\":\"explore\",\"program\":\"transpose32\",\"spec\":null}",
+        )
+        .unwrap();
+        let Request::Explore { spec, .. } = &reqs[0] else { panic!("explore") };
+        assert_eq!(*spec, None);
+    }
+
+    #[test]
+    fn explore_spec_rejects_malformed_fields() {
+        for (line, needle) in [
+            ("{\"op\":\"explore\",\"program\":\"t\",\"spec\":3}", "'spec'"),
+            ("{\"op\":\"explore\",\"program\":\"t\",\"spec\":{\"banks\":4}}", "'banks'"),
+            (
+                "{\"op\":\"explore\",\"program\":\"t\",\"spec\":{\"banks\":[4.5]}}",
+                "'banks'",
+            ),
+            (
+                "{\"op\":\"explore\",\"program\":\"t\",\"spec\":{\"processors\":[-1]}}",
+                "'processors'",
+            ),
+            (
+                "{\"op\":\"explore\",\"program\":\"t\",\"spec\":{\"mappings\":[1]}}",
+                "'mappings'",
+            ),
+            (
+                "{\"op\":\"explore\",\"program\":\"t\",\"spec\":{\"objective\":\"x\"}}",
+                "objective",
+            ),
+            (
+                "{\"op\":\"explore\",\"program\":\"t\",\
+                 \"spec\":{\"target_clock_mhz\":\"fast\"}}",
+                "target_clock_mhz",
+            ),
+            (
+                "{\"op\":\"explore\",\"program\":\"t\",\"spec\":{\"bankz\":[4]}}",
+                "unknown explore spec field 'bankz'",
+            ),
+        ] {
+            let e = requests_from_line(line).unwrap_err();
+            assert!(matches!(e, ServiceError::BadRequest(_)), "{line}");
+            assert!(e.to_string().contains(needle), "'{needle}' not in: {e}");
+        }
+    }
+
+    #[test]
+    fn specless_explore_encodes_the_legacy_bytes() {
+        let req = Request::Explore {
+            program: "transpose32".into(),
+            strategy: ExploreStrategy::Halving,
+            spec: None,
+        };
+        assert_eq!(
+            request_to_json(&req),
+            "{\"op\":\"explore\",\"program\":\"transpose32\",\"strategy\":\"halving\"}"
+        );
+    }
+
+    #[test]
+    fn spec_encode_emits_some_fields_in_declaration_order() {
+        let req = Request::Explore {
+            program: "t".into(),
+            strategy: ExploreStrategy::Exhaustive,
+            spec: Some(ExploreSpec {
+                banks: Some(vec![4, 16]),
+                lanes: Some(vec![16, 32]),
+                objective: Some(ExploreObjective::ThroughputPerAlm),
+                target_clock_mhz: Some(700.0),
+                ..Default::default()
+            }),
+        };
+        let line = request_to_json(&req);
+        assert_eq!(
+            line,
+            "{\"op\":\"explore\",\"program\":\"t\",\"strategy\":\"exhaustive\",\
+             \"spec\":{\"banks\":[4,16],\"lanes\":[16,32],\
+             \"objective\":\"throughput-per-alm\",\"target_clock_mhz\":700}}"
+        );
+        // And the encoding round-trips.
+        assert_eq!(requests_from_line(&line).unwrap()[0], req);
     }
 
     #[test]

@@ -12,7 +12,8 @@
 use soft_simt::coordinator::job::{BenchJob, TraceCache};
 use soft_simt::coordinator::runner::SweepRunner;
 use soft_simt::explore::{
-    explore, DesignSpace, Evaluator, Exhaustive, ScoredPoint, SuccessiveHalving,
+    explore, explore_system, DesignSpace, Evaluator, Exhaustive, ScoredPoint,
+    SuccessiveHalving, SystemEvaluator, SystemPoint, SystemSpace,
 };
 use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::mem::mapping::BankMapping;
@@ -168,6 +169,56 @@ fn lower_bound_is_sound_property() {
         let exact = eval.replay_arch(arch).unwrap();
         assert!(lb <= exact, "{arch}: lower bound {lb} > exact {exact}");
     });
+}
+
+/// ISSUE 10 acceptance, at the public API: a single-processor,
+/// 16-lane system point is **bit-identical** to the flat explorer's
+/// replay for every paper-nine memory — the system contention model is
+/// a strict extension, never a perturbation.
+#[test]
+fn system_p1_replay_is_bit_identical_to_flat_replay() {
+    let cache = TraceCache::new();
+    for program in ["transpose32", "fft4096r8"] {
+        let sys = SystemEvaluator::new(program, &cache).unwrap();
+        for arch in MemoryArchKind::table3_nine() {
+            let flat = sys.flat().replay_arch(arch).unwrap();
+            let one = sys.replay(SystemPoint::single(arch, 8)).unwrap();
+            assert_eq!(one, flat, "{program} on {arch}: P=1 diverged from flat replay");
+        }
+    }
+    assert_eq!(cache.len(), 2, "one trace per workload for all eighteen comparisons");
+}
+
+/// The system parametric space — {1,2,4} cores × {16,32,64} lanes ×
+/// paper nine × 3 capacities — scores from ONE functional execution,
+/// and cycles are monotone non-decreasing in the core count.
+#[test]
+fn system_parametric_space_single_capture_and_monotone() {
+    let cache = TraceCache::new();
+    let space = SystemSpace::parametric(8);
+    let r = explore_system("transpose32", &space, &cache).unwrap();
+    assert_eq!(r.captures, 1, "one functional execution for the whole system space");
+    assert_eq!(r.points_total, 3 * 3 * 9 * 3);
+    assert_eq!(r.points_scored, r.points_total);
+    assert!(!r.front.is_empty());
+    // Monotonicity across the scored set: same lanes/memory/capacity,
+    // more processors never means fewer cycles.
+    for a in &r.scored {
+        for b in &r.scored {
+            if a.point.lanes == b.point.lanes
+                && a.point.mem == b.point.mem
+                && a.point.capacity_kb == b.point.capacity_kb
+                && a.point.processors < b.point.processors
+            {
+                assert!(
+                    a.cycles <= b.cycles,
+                    "{} has more cycles than {}",
+                    a.point.label(),
+                    b.point.label()
+                );
+            }
+        }
+    }
 }
 
 #[test]

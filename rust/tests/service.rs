@@ -9,7 +9,8 @@ use soft_simt::explore::{explore, DesignSpace, Exhaustive};
 use soft_simt::mem::arch::MemoryArchKind;
 use soft_simt::service::wire::{self, parse_json, Json};
 use soft_simt::service::{
-    ExploreStrategy, Request, Response, ServiceError, SimtEngine, StatsScope, TableKind,
+    ExploreObjective, ExploreSpec, ExploreStrategy, Request, Response, ServiceError, SimtEngine,
+    StatsScope, TableKind,
 };
 use soft_simt::sim::stats::RunReport;
 
@@ -29,6 +30,7 @@ fn every_variant() -> Vec<Request> {
         Request::Explore {
             program: "transpose32".into(),
             strategy: ExploreStrategy::Halving,
+            spec: None,
         },
         Request::Validate { artifacts_dir: Some("artifacts".into()) },
         Request::Asm { source: ASM_SRC.into(), mem: MemoryArchKind::banked(4) },
@@ -55,6 +57,30 @@ fn wire_roundtrip_every_request_variant() {
     variants.push(Request::Explore {
         program: "fft4096r16".into(),
         strategy: ExploreStrategy::Exhaustive,
+        spec: None,
+    });
+    // Spec-bearing explores: a full system spec and a partial flat one.
+    variants.push(Request::Explore {
+        program: "transpose32".into(),
+        strategy: ExploreStrategy::Exhaustive,
+        spec: Some(ExploreSpec {
+            banks: Some(vec![4, 16]),
+            mappings: Some(vec!["offset2".into()]),
+            multiport: Some(vec!["4r-1w".into()]),
+            capacities_kb: Some(vec![8, 32]),
+            processors: Some(vec![1, 2, 4]),
+            lanes: Some(vec![16, 32]),
+            objective: Some(ExploreObjective::ThroughputPerAlm),
+            target_clock_mhz: Some(700.0),
+        }),
+    });
+    variants.push(Request::Explore {
+        program: "fft4096r8".into(),
+        strategy: ExploreStrategy::Halving,
+        spec: Some(ExploreSpec {
+            banks: Some(vec![8]),
+            ..Default::default()
+        }),
     });
     variants.push(Request::Validate { artifacts_dir: None });
     variants.push(Request::Stats { scope: StatsScope::Session });
@@ -116,6 +142,7 @@ fn batch_shares_traces_across_sweep_explore_and_runs() {
         Request::Explore {
             program: "transpose32".into(),
             strategy: ExploreStrategy::Halving,
+            spec: None,
         },
     ];
     for i in 0..10 {
@@ -264,9 +291,57 @@ fn cli_explore_output_is_byte_identical_to_pre_redesign() {
         .handle(&Request::Explore {
             program: program.into(),
             strategy: ExploreStrategy::Exhaustive,
+            spec: None,
         })
         .unwrap();
     assert_eq!(resp.render(), legacy);
+}
+
+/// The redesign's byte-identity guarantee, end to end over the serve
+/// transport: a pre-redesign explore wire line (no `spec` field) must
+/// produce the exact response line it always did — i.e. the same bytes
+/// a from-source legacy pipeline renders.
+#[test]
+fn specless_explore_wire_line_answers_byte_identically() {
+    let program = "transpose32";
+    let workload = soft_simt::programs::library::program_by_name(program).unwrap();
+    let space = DesignSpace::parametric(workload.dataset_kb());
+    let legacy_result =
+        explore(program, &space, &Exhaustive, &SweepRunner::new(2), &TraceCache::new()).unwrap();
+    let legacy_line = format!(
+        "{{\"ok\":true,\"op\":\"explore\",\"result\":{},\"text\":{}}}",
+        legacy_result.to_json().replace('\n', " "),
+        soft_simt::util::fmt::json_str(&legacy_result.render()),
+    );
+
+    let engine = SimtEngine::with_runner(SweepRunner::new(2));
+    let input = "{\"op\":\"explore\",\"program\":\"transpose32\",\"strategy\":\"exhaustive\"}\n";
+    let mut output = Vec::new();
+    wire::serve(&engine, input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    assert_eq!(text.trim_end(), legacy_line);
+}
+
+/// A system-shaped spec over the wire: the engine answers with the
+/// system explorer's document under the same `explore` op, from one
+/// functional execution.
+#[test]
+fn system_spec_explore_over_the_wire() {
+    let engine = SimtEngine::with_runner(SweepRunner::new(2));
+    let input = "{\"op\":\"explore\",\"program\":\"transpose32\",\"strategy\":\"exhaustive\",\
+                 \"spec\":{\"banks\":[16],\"mappings\":[\"offset\"],\"multiport\":[],\
+                 \"capacities_kb\":[8],\"processors\":[1,2,4],\"lanes\":[16,32,64]}}\n";
+    let mut output = Vec::new();
+    wire::serve(&engine, input.as_bytes(), &mut output).unwrap();
+    let text = String::from_utf8(output).unwrap();
+    let v = parse_json(text.trim_end()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(v.get("op").and_then(Json::as_str), Some("explore"));
+    let result = v.get("result").expect("system result document");
+    assert_eq!(result.get("points_total").and_then(Json::as_f64), Some(9.0));
+    assert_eq!(result.get("captures").and_then(Json::as_f64), Some(1.0));
+    assert!(result.get("front").is_some() && result.get("scorecard").is_some());
+    assert_eq!(engine.functional_executions(), 1);
 }
 
 /// The acceptance batch over the actual stdin/stdout transport: one

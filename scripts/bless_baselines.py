@@ -35,6 +35,7 @@ PLAN = [
             "halving_median_ms",
             "replay_batched_archset_ms",
             "replay_packed_archset_ms",
+            "system_explore_median_ms",
         ],
     ),
     (

@@ -108,6 +108,13 @@ class FoldTests(BlessHarness):
             for suffix in ("p50_us", "p99_us", "throughput_rps"):
                 self.assertIn(f"concurrent_c{c}_{suffix}", serve[2])
 
+    def test_explore_plan_gates_the_system_explore_key(self):
+        # Drift guard for the ISSUE-10 system-explore median: the gate
+        # and the bless plan must stay in sync on the new key.
+        explore = next(e for e in bless_baselines.PLAN
+                       if e[1].endswith("BENCH_explore.json"))
+        self.assertIn("system_explore_median_ms", explore[2])
+
     def test_sweep_plan_gates_the_divergent_kernel_keys(self):
         # Same drift guard for the PR-9 divergent-kernel replay medians.
         sweep = next(e for e in bless_baselines.PLAN
